@@ -1,0 +1,62 @@
+//! Table 2 / 7 / 8 / 9 quick-look: Brownian Interval vs Virtual Brownian
+//! Tree over the paper's access patterns. (The full criterion-style sweep
+//! lives in `cargo bench --bench tab2_brownian_access`; this example is
+//! the interactive version.)
+//!
+//! ```sh
+//! cargo run --release --example brownian_bench -- [--batch 2560] [--intervals 100]
+//! ```
+
+use neuralsde::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
+use neuralsde::util::bench::BenchTable;
+use neuralsde::util::cli::Args;
+
+fn sequential<B: BrownianSource>(src: &mut B, n: usize, out: &mut [f32]) {
+    for k in 0..n {
+        src.increment(k as f64 / n as f64, (k + 1) as f64 / n as f64, out);
+    }
+}
+
+fn doubly_sequential<B: BrownianSource>(src: &mut B, n: usize, out: &mut [f32]) {
+    sequential(src, n, out);
+    for k in (0..n).rev() {
+        src.increment(k as f64 / n as f64, (k + 1) as f64 / n as f64, out);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let batch: usize = args.get_parse_or("batch", 2560);
+    let n: usize = args.get_parse_or("intervals", 100);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut table = BenchTable::new(
+        &format!("Brownian access, batch={batch}, {n} subintervals"),
+        32,
+        3,
+    );
+    let mut out = vec![0.0f32; batch];
+
+    table.bench("BrownianInterval/sequential", |i| {
+        let mut bi = BrownianInterval::new(0.0, 1.0, batch, i as u64);
+        sequential(&mut bi, n, &mut out);
+    });
+    table.bench("VirtualBrownianTree/sequential", |i| {
+        let mut vbt = VirtualBrownianTree::new(0.0, 1.0, batch, i as u64, 1e-5);
+        sequential(&mut vbt, n, &mut out);
+    });
+    table.bench("BrownianInterval/doubly_sequential", |i| {
+        let mut bi = BrownianInterval::new(0.0, 1.0, batch, i as u64);
+        doubly_sequential(&mut bi, n, &mut out);
+    });
+    table.bench("VirtualBrownianTree/doubly_sequential", |i| {
+        let mut vbt = VirtualBrownianTree::new(0.0, 1.0, batch, i as u64, 1e-5);
+        doubly_sequential(&mut vbt, n, &mut out);
+    });
+
+    println!("{}", table.render());
+    let bi = table.min_of("BrownianInterval/doubly_sequential");
+    let vbt = table.min_of("VirtualBrownianTree/doubly_sequential");
+    println!("doubly-sequential speedup (BI vs VBT): {:.1}x", vbt / bi);
+    Ok(())
+}

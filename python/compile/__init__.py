@@ -1,0 +1,3 @@
+"""Build-time Python package: Layer-1 Pallas kernels, the Layer-2 JAX model,
+and the AOT lowering driver. Never imported at runtime — `make artifacts`
+runs it once and the Rust coordinator consumes the HLO text it emits."""

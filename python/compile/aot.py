@@ -1,0 +1,230 @@
+"""AOT lowering: JAX entry points → HLO text + manifest.json.
+
+Run once by ``make artifacts``; afterwards Python is never needed. Each
+entry point of :mod:`.model` is lowered per (dataset, solver) configuration
+to **HLO text** (NOT ``.serialize()`` — jax ≥ 0.5 emits protos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly — see /opt/xla-example).
+
+The manifest records, for every executable, its input/output shapes and,
+for every model, the flat-parameter layout (consumed by ``rust/src/nn``)
+and the hyperparameters baked at lowering time.
+
+Usage: ``python -m compile.aot --out ../artifacts [--quick]``
+(``--quick`` lowers a reduced set for CI smoke tests).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Configurations (scaled-down Appendix-F hyperparameters; see DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+BATCH = 64
+EVAL_BATCH = 256
+
+GAN_SPECS = {
+    # dataset -> GanSpec (paper: OU len 32; weights len 50; widths 32/32).
+    "ou": model.GanSpec(data_dim=1, seq_len=32, state=16, hidden=32, noise=4,
+                        init_noise=4, disc_state=16, disc_hidden=32),
+    "weights": model.GanSpec(data_dim=1, seq_len=50, state=16, hidden=32,
+                             noise=4, init_noise=4, disc_state=16,
+                             disc_hidden=32),
+}
+
+LATENT_SPECS = {
+    # paper: air quality, bivariate, len 24, widths 84/63 (we use 32/16).
+    "air": model.LatentSpec(data_dim=2, seq_len=24, state=16, hidden=32,
+                            ctx=16, init_noise=4),
+}
+
+TRAIN_SOLVERS = ("reversible_heun", "midpoint")
+
+#: Figure-2 sweep: step sizes 2^0 … 2^-10 over T = 1.
+GRADERR_NS = (1, 4, 16, 64, 256, 1024)
+GRADERR_SOLVERS = ("reversible_heun", "midpoint", "heun")
+GRADERR_SPEC = model.GradErrSpec(state=32, noise=16, hidden=8, batch=32)
+
+
+def to_hlo_text(fn, in_specs):
+    """Lower ``fn`` at the given ShapeDtypeStructs and emit HLO text."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dtype_name(d):
+    return {"float32": "f32", "float64": "f64"}[jnp.dtype(d).name]
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.execs = {}
+        self.models = {}
+
+    def emit(self, name, fn, in_specs, in_names):
+        """Lower and write one executable; record it in the manifest."""
+        print(f"  lowering {name} ...", flush=True)
+        out_specs = jax.eval_shape(fn, *in_specs)
+        leaves = jax.tree_util.tree_leaves(out_specs)
+        text = to_hlo_text(fn, in_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.execs[name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": dtype_name(s.dtype)}
+                for n, s in zip(in_names, in_specs)
+            ],
+            "outputs": [
+                {"name": f"out{i}", "shape": list(s.shape),
+                 "dtype": dtype_name(s.dtype)}
+                for i, s in enumerate(leaves)
+            ],
+        }
+
+    def add_model(self, name, gen_layout, disc_layout, hyper):
+        self.models[name] = {
+            "gen_layout": gen_layout.manifest() if gen_layout else [],
+            "disc_layout": disc_layout.manifest() if disc_layout else [],
+            "hyper": hyper,
+        }
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "executables": self.execs,
+                       "models": self.models}, f, indent=1, sort_keys=True)
+        print(f"wrote {path}: {len(self.execs)} executables, "
+              f"{len(self.models)} models")
+
+
+def emit_gan(em, ds, s, quick):
+    L, n = s.seq_len, s.seq_len - 1
+    gl, dl = s.gen_layout(), s.disc_layout()
+    em.add_model(f"gan_{ds}", gl, dl,
+                 dict(batch=BATCH, eval_batch=EVAL_BATCH, **s.hyper(),
+                      gen_params=gl.total, disc_params=dl.total))
+    f32 = jnp.float32
+    ts_spec = spec((L,), f32)
+    solvers = TRAIN_SOLVERS if not quick else ("reversible_heun",)
+    for solver in solvers:
+        em.emit(
+            f"gan_{ds}_{solver}_gen_grad",
+            lambda th, ph, v, ts, dws, _s=s, _sol=solver:
+                model.gan_generator_grad(_s, _sol, th, ph, v, ts, dws),
+            [spec((gl.total,), f32), spec((dl.total,), f32),
+             spec((BATCH, s.v), f32), ts_spec, spec((n, BATCH, s.w), f32)],
+            ["theta", "phi", "v", "ts", "dws"])
+        em.emit(
+            f"gan_{ds}_{solver}_disc_grad",
+            lambda th, ph, v, ts, dws, yr, _s=s, _sol=solver:
+                model.gan_discriminator_grad(_s, _sol, th, ph, v, ts, dws, yr),
+            [spec((gl.total,), f32), spec((dl.total,), f32),
+             spec((BATCH, s.v), f32), ts_spec, spec((n, BATCH, s.w), f32),
+             spec((BATCH, L, s.y), f32)],
+            ["theta", "phi", "v", "ts", "dws", "y_real"])
+        em.emit(
+            f"gan_{ds}_{solver}_sample",
+            lambda th, v, ts, dws, _s=s, _sol=solver:
+                model.gan_sample(_s, _sol, th, v, ts, dws),
+            [spec((gl.total,), f32), spec((EVAL_BATCH, s.v), f32), ts_spec,
+             spec((n, EVAL_BATCH, s.w), f32)],
+            ["theta", "v", "ts", "dws"])
+    if ds == "ou" and not quick:
+        # The Table-11 gradient-penalty baseline (midpoint only, as in the
+        # paper — revheun's raison d'être is avoiding this entirely).
+        em.emit(
+            "gan_ou_midpoint_disc_grad_gp",
+            lambda th, ph, v, ts, dws, yr, _s=s:
+                model.gan_discriminator_grad_gp(_s, "midpoint", th, ph, v,
+                                                ts, dws, yr),
+            [spec((gl.total,), f32), spec((dl.total,), f32),
+             spec((BATCH, s.v), f32), ts_spec, spec((n, BATCH, s.w), f32),
+             spec((BATCH, L, s.y), f32)],
+            ["theta", "phi", "v", "ts", "dws", "y_real"])
+
+
+def emit_latent(em, ds, s, quick):
+    L, n = s.seq_len, s.seq_len - 1
+    lay = s.layout()
+    em.add_model(f"latent_{ds}", lay, None,
+                 dict(batch=BATCH, eval_batch=EVAL_BATCH, **s.hyper(),
+                      params=lay.total))
+    f32 = jnp.float32
+    ts_spec = spec((L,), f32)
+    solvers = TRAIN_SOLVERS if not quick else ("reversible_heun",)
+    for solver in solvers:
+        em.emit(
+            f"latent_{ds}_{solver}_grad",
+            lambda p, ts, dws, yr, eps, _s=s, _sol=solver:
+                model.latent_grad(_s, _sol, p, ts, dws, yr, eps),
+            [spec((lay.total,), f32), ts_spec, spec((n, BATCH, s.x), f32),
+             spec((BATCH, L, s.y), f32), spec((BATCH, s.v), f32)],
+            ["params", "ts", "dws", "y_real", "eps"])
+        em.emit(
+            f"latent_{ds}_{solver}_sample",
+            lambda p, v, ts, dws, _s=s, _sol=solver:
+                model.latent_sample(_s, _sol, p, v, ts, dws),
+            [spec((lay.total,), f32), spec((EVAL_BATCH, s.v), f32), ts_spec,
+             spec((n, EVAL_BATCH, s.x), f32)],
+            ["params", "v", "ts", "dws"])
+
+
+def emit_graderr(em, quick):
+    s = GRADERR_SPEC
+    lay = s.layout()
+    em.add_model("graderr", lay, None, dict(**s.hyper(), params=lay.total))
+    f64 = jnp.float64
+    ns = GRADERR_NS if not quick else (4, 16)
+    solvers = GRADERR_SOLVERS if not quick else ("reversible_heun", "midpoint")
+    for n in ns:
+        for solver in solvers:
+            em.emit(
+                f"graderr_{solver}_n{n}",
+                lambda p, z0, ts, dws, _sol=solver:
+                    model.gradient_error(s, _sol, p, z0, ts, dws),
+                [spec((lay.total,), f64), spec((s.b, s.x), f64),
+                 spec((n + 1,), f64), spec((n, s.b, s.w), f64)],
+                ["params", "z0", "ts", "dws"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced artifact set (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out)
+    for ds, s in GAN_SPECS.items():
+        if args.quick and ds != "ou":
+            continue
+        emit_gan(em, ds, s, args.quick)
+    for ds, s in LATENT_SPECS.items():
+        emit_latent(em, ds, s, args.quick)
+    emit_graderr(em, args.quick)
+    em.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the HLO artifacts).
+
+* :mod:`.mlp_field` — fused LipSwish-MLP vector-field evaluation;
+* :mod:`.revheun`   — fused reversible-Heun state update;
+* :mod:`.ref`       — pure-jnp oracles for both (the pytest ground truth).
+"""
+
+from . import ref  # noqa: F401
+from .mlp_field import mlp2_lipswish  # noqa: F401
+from .revheun import revheun_update  # noqa: F401

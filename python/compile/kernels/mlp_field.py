@@ -1,0 +1,110 @@
+"""Layer-1 Pallas kernel: fused LipSwish-MLP vector-field evaluation.
+
+The hot spot of a Neural SDE solve is evaluating the drift/diffusion MLPs
+for every batch element at every step. On GPU the paper's torchsde
+implementation leans on cuBLAS GEMMs with separate elementwise kernels; the
+TPU-minded rethink (DESIGN.md §Hardware-Adaptation) is a single Pallas
+kernel per MLP that
+
+* tiles the **batch** dimension into VMEM-resident blocks (``BlockSpec``
+  over axis 0), so a block's activations never round-trip to HBM between
+  the two layers;
+* feeds the MXU with the ``[block, in] @ [in, hidden]`` and
+  ``[block, hidden] @ [hidden, out]`` GEMMs;
+* fuses bias-add, LipSwish and the final nonlinearity into the same kernel.
+
+Weights are small (``in, hidden, out ≤ 64`` here) and are broadcast to every
+block (index map returns block 0), so the per-block VMEM working set is
+``block·(in + hidden + out) + in·hidden + hidden·out`` floats — a few tens
+of KiB, far below the ~16 MiB VMEM budget (see EXPERIMENTS.md §Perf for the
+footprint table).
+
+Lowering uses ``interpret=True`` — mandatory for CPU-PJRT execution; a real
+TPU build would drop the flag and compile to Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: Default batch block size. 128 rows keeps the MXU's 128-lane dimension
+#: full while the per-block VMEM footprint stays ≪ 1 MiB. See the block
+#: sweep in EXPERIMENTS.md §Perf.
+DEFAULT_BLOCK = 128
+
+_FINALS = ("none", "tanh", "sigmoid")
+
+
+def _kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, final):
+    x = x_ref[...]
+    # Layer 1 GEMM + bias + LipSwish, all in VMEM.
+    h = jnp.dot(x, w1_ref[...]) + b1_ref[...][None, :]
+    h = ref.LIPSWISH_SCALE * h * (1.0 / (1.0 + jnp.exp(-h)))
+    # Layer 2 GEMM + bias + final nonlinearity.
+    y = jnp.dot(h, w2_ref[...]) + b2_ref[...][None, :]
+    if final == "tanh":
+        y = jnp.tanh(y)
+    elif final == "sigmoid":
+        y = 1.0 / (1.0 + jnp.exp(-y))
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("final", "block", "use_pallas"))
+def mlp2_lipswish(x, w1, b1, w2, b2, final="none", block=DEFAULT_BLOCK,
+                  use_pallas=True):
+    """Fused two-layer LipSwish MLP.
+
+    Semantics match :func:`compile.kernels.ref.mlp2_lipswish`. ``x`` is
+    ``[B, in]``; the batch is padded up to a multiple of ``block`` (and
+    un-padded on return) so any batch size works.
+    """
+    if final not in _FINALS:
+        raise ValueError(f"final={final!r} not in {_FINALS}")
+    if not use_pallas:
+        return ref.mlp2_lipswish(x, w1, b1, w2, b2, final)
+    b, d_in = x.shape
+    d_h = w1.shape[1]
+    d_out = w2.shape[1]
+    blk = min(block, max(b, 1))
+    pad = (-b) % blk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d_in), x.dtype)], axis=0)
+    n_blocks = x.shape[0] // blk
+    out = pl.pallas_call(
+        functools.partial(_kernel, final=final),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((blk, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_h), lambda i: (0, 0)),
+            pl.BlockSpec((d_h,), lambda i: (0,)),
+            pl.BlockSpec((d_h, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], d_out), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+    return out[:b]
+
+
+def vmem_footprint_bytes(block, d_in, d_h, d_out, dtype_bytes=4):
+    """Estimated VMEM working set of one block invocation (for the perf
+    analysis in EXPERIMENTS.md — interpret mode cannot measure this)."""
+    acts = block * (d_in + d_h + d_out)
+    weights = d_in * d_h + d_h + d_h * d_out + d_out
+    return (acts + weights) * dtype_bytes
+
+
+def mxu_utilisation_estimate(block, d_in, d_h, d_out):
+    """Fraction of MXU (128×128 systolic array) lanes a block's GEMMs fill.
+
+    Small vector-field MLPs underfill the contraction dimension; batching
+    into 128-row blocks at least saturates the lane dimension. Returned as
+    ``(layer1, layer2)`` estimates in [0, 1].
+    """
+    lane = min(block, 128) / 128.0
+    return (lane * min(d_in, 128) / 128.0, lane * min(d_h, 128) / 128.0)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(``python/tests/test_kernels.py``) asserts ``allclose`` between the two over
+hypothesis-generated shapes and dtypes. The Layer-2 model can be switched
+between kernels and oracles with ``use_pallas=False`` (the lowered artifacts
+always use the kernels).
+"""
+
+import jax.numpy as jnp
+
+#: LipSwish scale: ``ρ(x) = 0.909 · x · sigmoid(x)`` has Lipschitz constant
+#: exactly 1 (Chen et al. 2019); the paper's Section-5 activation.
+LIPSWISH_SCALE = 0.909
+
+
+def sigmoid(x):
+    """Numerically standard sigmoid."""
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def lipswish(x):
+    """LipSwish activation (1-Lipschitz, smooth — paper Section 5)."""
+    return LIPSWISH_SCALE * x * sigmoid(x)
+
+
+def mlp2_lipswish(x, w1, b1, w2, b2, final="none"):
+    """Two-layer MLP with LipSwish hidden activation.
+
+    ``x: [B, in]``, ``w1: [in, h]``, ``b1: [h]``, ``w2: [h, out]``,
+    ``b2: [out]``. ``final`` ∈ {"none", "tanh", "sigmoid"} is the output
+    nonlinearity (the paper's σ_θ uses tanh to keep the diffusion bounded;
+    the gradient-error test problem uses sigmoid finals).
+    """
+    h = lipswish(x @ w1 + b1)
+    y = h @ w2 + b2
+    if final == "tanh":
+        y = jnp.tanh(y)
+    elif final == "sigmoid":
+        y = sigmoid(y)
+    elif final != "none":
+        raise ValueError(f"unknown final activation {final!r}")
+    return y
+
+
+def revheun_update(z, zh, mu, sdw, mu_next, sdw_next, dt):
+    """Fused reversible-Heun state update (the linear part of Algorithm 1).
+
+    Given the current state ``(z, ẑ)``, the cached field values applied to
+    the step (``mu = μ_n``, ``sdw = σ_n·ΔW``) and the new field values
+    (``mu_next = μ_{n+1}``, ``sdw_next = σ_{n+1}·ΔW``), produce
+    ``(z_{n+1}, ẑ_{n+1})``:
+
+    ``ẑ' = 2z − ẑ + μ_n Δt + σ_n ΔW``
+    ``z' = z + ½(μ_n + μ_{n+1}) Δt + ½(σ_n ΔW + σ_{n+1} ΔW)``
+
+    ``ẑ'`` is needed *before* the new fields can be evaluated, so the caller
+    computes it first (same formula) — the kernel recomputes it internally
+    rather than reading it from HBM, trading one FMA for a load. All tensors
+    are ``[B, d]``; ``dt`` is a scalar.
+    """
+    zh_next = 2.0 * z - zh + mu * dt + sdw
+    z_next = z + 0.5 * (mu + mu_next) * dt + 0.5 * (sdw + sdw_next)
+    return z_next, zh_next
+
+
+def batched_matvec(mat, vec):
+    """``[B, e, d] @ [B, d] -> [B, e]`` — applying σ(t, X) to ΔW."""
+    return jnp.einsum("bed,bd->be", mat, vec)

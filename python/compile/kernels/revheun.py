@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: fused reversible-Heun state update.
+
+The linear part of Algorithm 1 — given the cached and freshly-evaluated
+vector-field values, advance ``(z, ẑ)``:
+
+``ẑ' = 2z − ẑ + μ Δt + σΔW``
+``z' = z + ½(μ + μ') Δt + ½(σΔW + σ'ΔW)``
+
+Six ``[B, d]`` reads, two ``[B, d]`` writes, ~8 flops/element — purely
+bandwidth-bound, so the win is fusing what would otherwise be ~10 separate
+HLO elementwise ops (and their HBM round-trips) into one pass. Blocked over
+the batch like :mod:`.mlp_field`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: Elementwise kernel: bigger blocks amortise grid overhead.
+DEFAULT_BLOCK = 256
+
+
+def _kernel(z_ref, zh_ref, mu_ref, sdw_ref, mun_ref, sdwn_ref, dt_ref,
+            zn_ref, zhn_ref):
+    z = z_ref[...]
+    zh = zh_ref[...]
+    mu = mu_ref[...]
+    sdw = sdw_ref[...]
+    dt = dt_ref[0]
+    zhn_ref[...] = 2.0 * z - zh + mu * dt + sdw
+    zn_ref[...] = z + 0.5 * (mu + mun_ref[...]) * dt + 0.5 * (sdw + sdwn_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_pallas"))
+def revheun_update(z, zh, mu, sdw, mu_next, sdw_next, dt,
+                   block=DEFAULT_BLOCK, use_pallas=True):
+    """Fused update; semantics match :func:`compile.kernels.ref.revheun_update`.
+
+    All array args are ``[B, d]``; ``dt`` is a scalar (traced, so one
+    lowered artifact serves every step size).
+    """
+    if not use_pallas:
+        return ref.revheun_update(z, zh, mu, sdw, mu_next, sdw_next, dt)
+    b, d = z.shape
+    blk = min(block, max(b, 1))
+    pad = (-b) % blk
+    args = (z, zh, mu, sdw, mu_next, sdw_next)
+    if pad:
+        zpad = jnp.zeros((pad, d), z.dtype)
+        args = tuple(jnp.concatenate([a, zpad], axis=0) for a in args)
+    n_blocks = args[0].shape[0] // blk
+    dt_arr = jnp.reshape(jnp.asarray(dt, z.dtype), (1,))
+    spec = pl.BlockSpec((blk, d), lambda i: (i, 0))
+    z_next, zh_next = pl.pallas_call(
+        _kernel,
+        grid=(n_blocks,),
+        in_specs=[spec] * 6 + [pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((args[0].shape[0], d), z.dtype),
+            jax.ShapeDtypeStruct((args[0].shape[0], d), z.dtype),
+        ],
+        interpret=True,
+    )(*args, dt_arr)
+    return z_next[:b], zh_next[:b]

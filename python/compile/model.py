@@ -1,0 +1,388 @@
+"""Layer-2 models: the SDE-GAN (Kidger et al. 2021, Section 2.2), the
+Latent SDE (Li et al. 2020), and the Figure-2 gradient-error test problem.
+
+Each public ``*_grad`` / ``*_sample`` function below is an AOT entry point:
+``aot.py`` lowers it once per (dataset, solver) configuration to HLO text
+and the Rust coordinator calls it per training step. All gradients flow
+through the **optimise-then-discretise** backward passes of
+:mod:`.sdeint` — exact for the reversible Heun method, truncation-biased
+for midpoint (which is precisely the comparison the paper's training tables
+report).
+
+Shapes: ``theta``/``phi`` are flat f32 vectors matching the layouts in
+:mod:`.nets`; ``v [B, v]`` initial noise; ``dws [N, B, w]`` Brownian
+increments (from the Rust Brownian Interval); ``y_real [B, L, y]`` a data
+batch; ``ts [L]`` the (normalised) observation grid, with one solver step
+per observation interval, as in the paper's experiments.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import nets, sdeint
+from .nets import GanSpec, LatentSpec  # noqa: F401  (re-export for callers)
+
+
+# ---------------------------------------------------------------------------
+# SDE-GAN
+# ---------------------------------------------------------------------------
+
+
+def _gen_fields(spec, use_pallas=False):
+    def drift(p, t, z, u):
+        return nets.mlp_apply(p, "mu", nets.with_time(t, z), use_pallas=use_pallas)
+
+    def diffusion(p, t, z, u):
+        out = nets.mlp_apply(p, "sigma", nets.with_time(t, z), final="tanh",
+                             use_pallas=use_pallas)
+        return out.reshape(z.shape[0], spec.x, spec.w)
+
+    return drift, diffusion
+
+
+def _disc_fields(spec, use_pallas=False):
+    def drift(p, t, h, u):
+        return nets.mlp_apply(p, "f", nets.with_time(t, h), final="tanh",
+                              use_pallas=use_pallas)
+
+    def diffusion(p, t, h, u):
+        out = nets.mlp_apply(p, "g", nets.with_time(t, h), final="tanh",
+                             use_pallas=use_pallas)
+        return out.reshape(h.shape[0], spec.dh, spec.y)
+
+    return drift, diffusion
+
+
+def _gen_forward(spec, solver, gp, v, ts, dws, use_pallas=False):
+    """ζ then the generator SDE solve; returns (x_path, final_state, y_path)."""
+    z0 = nets.mlp_apply(gp, "zeta", v, use_pallas=use_pallas)
+    drift, diffusion = _gen_fields(spec, use_pallas)
+    x_path, fin = sdeint.forward(solver, drift, diffusion, gp, z0, ts, dws,
+                                 use_pallas=use_pallas)
+    y_path = nets.affine_apply(gp, "ell", x_path)  # [L, B, y]
+    return z0, x_path, fin, y_path
+
+
+def _disc_forward(spec, solver, dp, y_path, ts, use_pallas=False):
+    """Neural CDE discriminator over a path: returns (h_path, final, score).
+
+    ``y_path [L, B, y]``; the CDE is driven by the increments ΔY — the same
+    machinery as the SDE solve with ``dws = ΔY`` (equation (2)).
+    """
+    dys = y_path[1:] - y_path[:-1]  # [N, B, y]
+    h0 = nets.mlp_apply(dp, "xi", nets.with_time(ts[0], y_path[0]),
+                        use_pallas=use_pallas)
+    drift, diffusion = _disc_fields(spec, use_pallas)
+    h_path, fin = sdeint.forward(solver, drift, diffusion, dp, h0, ts, dys,
+                                 use_pallas=use_pallas)
+    hT = h_path[-1] if solver != "reversible_heun" else fin[0]
+    score = hT @ dp["m"]  # [B]
+    return h0, h_path, fin, score
+
+
+def _disc_backward(spec, solver, dp, y_path, ts, h_path, fin, hT_cot):
+    """Backward through the CDE; returns (gφ pytree, cotangent on y_path)."""
+    dys = y_path[1:] - y_path[:-1]
+    drift, diffusion = _disc_fields(spec)
+    cots = jnp.zeros_like(h_path).at[-1].set(hT_cot)
+    final_state = fin if solver == "reversible_heun" else (
+        fin if not isinstance(fin, tuple) else fin)
+    gh0, gphi, gdys, _ = sdeint.backward(solver, drift, diffusion, dp,
+                                      final_state, ts, dys, cots)
+    # Chain ΔY cotangents onto path points: ΔY_k = Y_{k+1} − Y_k.
+    y_cot = jnp.zeros_like(y_path)
+    y_cot = y_cot.at[1:].add(gdys)
+    y_cot = y_cot.at[:-1].add(-gdys)
+    # Initial condition h0 = ξ(t0, Y_0).
+    _, vjp = jax.vjp(
+        lambda p, y0: nets.mlp_apply(p, "xi", nets.with_time(ts[0], y0)),
+        dp, y_path[0])
+    gphi_xi, gy0 = vjp(gh0)
+    gphi = jax.tree_util.tree_map(jnp.add, gphi, gphi_xi)
+    y_cot = y_cot.at[0].add(gy0)
+    return gphi, y_cot
+
+
+def gan_generator_grad(spec, solver, theta, phi, v, ts, dws):
+    """One generator training step's loss and gradient (O-t-D throughout).
+
+    Returns ``(loss_g, grad_theta_flat)``. The generator minimises
+    ``E[F_φ(Y_fake)]`` (equation (3))."""
+    gl, dl = spec.gen_layout(), spec.disc_layout()
+    gp = gl.unflatten(theta)
+    dp = dl.unflatten(phi)
+    b = v.shape[0]
+    z0, x_path, fin, y_path = _gen_forward(spec, solver, gp, v, ts, dws)
+    _, h_path, hfin, score = _disc_forward(spec, solver, dp, y_path, ts)
+    loss_g = jnp.mean(score)
+    # dL/dH_T = m / B.
+    hT_cot = jnp.broadcast_to(dp["m"][None, :], (b, spec.dh)) / b
+    _, y_cot = _disc_backward(spec, solver, dp, y_path, ts, h_path, hfin, hT_cot)
+    # Through the affine readout ℓ: Y = X @ w + b.
+    x_cot = jnp.einsum("lby,xy->lbx", y_cot, gp["ell.w"])
+    g_ellw = jnp.einsum("lbx,lby->xy", x_path, y_cot)
+    g_ellb = jnp.sum(y_cot, axis=(0, 1))
+    # Backward through the generator SDE.
+    drift, diffusion = _gen_fields(spec)
+    gz0, gtheta, _, _ = sdeint.backward(solver, drift, diffusion, gp, fin, ts,
+                                     dws, x_cot)
+    # Through ζ.
+    _, vjp = jax.vjp(lambda p: nets.mlp_apply(p, "zeta", v), gp)
+    (gtheta_zeta,) = vjp(gz0)
+    gtheta = jax.tree_util.tree_map(jnp.add, gtheta, gtheta_zeta)
+    gtheta["ell.w"] = gtheta["ell.w"] + g_ellw
+    gtheta["ell.b"] = gtheta["ell.b"] + g_ellb
+    return loss_g, _flatten(gl, gtheta)
+
+
+def gan_discriminator_grad(spec, solver, theta, phi, v, ts, dws, y_real):
+    """One discriminator step: maximise ``E[F(fake)] − E[F(real)]``, i.e.
+    minimise its negation. Returns ``(loss_d, grad_phi_flat)``.
+
+    ``y_real [B, L, y]`` is transposed internally to the path layout."""
+    gl, dl = spec.gen_layout(), spec.disc_layout()
+    gp = gl.unflatten(theta)
+    dp = dl.unflatten(phi)
+    b = v.shape[0]
+    _, _, _, y_fake = _gen_forward(spec, solver, gp, v, ts, dws)
+    y_real_path = jnp.transpose(y_real, (1, 0, 2))  # [L, B, y]
+    _, hf_path, hf_fin, score_f = _disc_forward(spec, solver, dp, y_fake, ts)
+    _, hr_path, hr_fin, score_r = _disc_forward(spec, solver, dp, y_real_path, ts)
+    loss_d = jnp.mean(score_r) - jnp.mean(score_f)
+    # Fake side: d loss_d / dH_T^f = -m/B; real side: +m/B.
+    m_over_b = jnp.broadcast_to(dp["m"][None, :], (b, spec.dh)) / b
+    gphi_f, _ = _disc_backward(spec, solver, dp, y_fake, ts, hf_path, hf_fin,
+                               -m_over_b)
+    gphi_r, _ = _disc_backward(spec, solver, dp, y_real_path, ts, hr_path,
+                               hr_fin, m_over_b)
+    gphi = jax.tree_util.tree_map(jnp.add, gphi_f, gphi_r)
+    # m readout: d loss_d/dm = mean(h_T^r) − mean(h_T^f).
+    hf_T = hf_fin[0] if solver == "reversible_heun" else hf_path[-1]
+    hr_T = hr_fin[0] if solver == "reversible_heun" else hr_path[-1]
+    gphi["m"] = gphi["m"] + jnp.mean(hr_T, axis=0) - jnp.mean(hf_T, axis=0)
+    return loss_d, _flatten(dl, gphi)
+
+
+def gan_discriminator_grad_gp(spec, solver, theta, phi, v, ts, dws, y_real,
+                              gp_weight=10.0):
+    """Discriminator step with **gradient penalty** (the Table-11 baseline,
+    Gulrajani et al. 2017): a double backward through the CDE solve,
+    implemented discretise-then-optimise (``jax.grad`` through the scan; see
+    DESIGN.md §4 — the favourable version of the baseline)."""
+    gl, dl = spec.gen_layout(), spec.disc_layout()
+    gp_ = gl.unflatten(theta)
+    b = v.shape[0]
+    _, _, _, y_fake = _gen_forward(spec, solver, gp_, v, ts, dws)
+    y_real_path = jnp.transpose(y_real, (1, 0, 2))
+
+    def disc_score(phi_flat, y_path):
+        dp = dl.unflatten(phi_flat)
+        _, _, _, score = _disc_forward(spec, solver, dp, y_path, ts)
+        return jnp.mean(score)
+
+    def loss(phi_flat):
+        base = disc_score(phi_flat, y_real_path) - disc_score(phi_flat, y_fake)
+        # Penalty at interpolates between real and fake paths.
+        alpha = 0.5
+        y_mid = alpha * y_real_path + (1 - alpha) * y_fake
+        g_y = jax.grad(lambda yp: disc_score(phi_flat, yp))(y_mid)
+        gnorm = jnp.sqrt(jnp.sum(g_y ** 2, axis=(0, 2)) * b + 1e-12)
+        return base + gp_weight * jnp.mean((gnorm - 1.0) ** 2)
+
+    loss_d, gphi_flat = jax.value_and_grad(loss)(phi)
+    return loss_d, gphi_flat
+
+
+def gan_sample(spec, solver, theta, v, ts, dws, use_pallas=True):
+    """Generate ``[B, L, y]`` samples (forward-only → Pallas kernels)."""
+    gl = spec.gen_layout()
+    gp = gl.unflatten(theta)
+    _, _, _, y_path = _gen_forward(spec, solver, gp, v, ts, dws,
+                                   use_pallas=use_pallas)
+    return jnp.transpose(y_path, (1, 0, 2))
+
+
+# ---------------------------------------------------------------------------
+# Latent SDE
+# ---------------------------------------------------------------------------
+
+
+def _latent_context(spec, p, y_real_path):
+    """Reversed GRU over observations: ctx[k] summarises y[k:]."""
+
+    def step(h, yk):
+        h1 = nets.gru_cell(p, yk, h)
+        return h1, h1
+
+    b = y_real_path.shape[1]
+    h0 = jnp.zeros((b, spec.c), y_real_path.dtype)
+    _, ctx_rev = jax.lax.scan(step, h0, y_real_path[::-1])
+    return ctx_rev[::-1]  # [L, B, c]
+
+
+def _latent_fields(spec):
+    def drift(p, t, z, u):
+        inp = jnp.concatenate([nets.with_time(t, z), u], axis=1)
+        return nets.mlp_apply(p, "nu", inp)
+
+    def diffusion(p, t, z, u):
+        diag = nets.sigma_diag(p, t, z)
+        return jax.vmap(jnp.diag)(diag)
+
+    return drift, diffusion
+
+
+def _latent_loss_from_path(spec, p, x_path, ts, ctx, y_real_path, kl_scale):
+    """ELBO pieces that are functions of the solved path (equation (4))."""
+    y_hat = nets.affine_apply(p, "ell", x_path)  # [L, B, y]
+    recon = jnp.mean(jnp.sum((y_hat - y_real_path) ** 2, axis=(0, 2)))
+    dt = ts[1] - ts[0]
+
+    def kl_rate(t, x, u):
+        prior = nets.mlp_apply(p, "mu", nets.with_time(t, x))
+        post = nets.mlp_apply(p, "nu",
+                              jnp.concatenate([nets.with_time(t, x), u], axis=1))
+        sig = nets.sigma_diag(p, t, x)
+        return 0.5 * jnp.sum(((prior - post) / sig) ** 2, axis=1)
+
+    rates = jax.vmap(kl_rate)(ts, x_path, ctx)  # [L, B]
+    kl_path = jnp.mean(jnp.sum(rates[:-1], axis=0) * dt)
+    return recon + kl_scale * kl_path
+
+
+def latent_grad(spec, solver, params_flat, ts, dws, y_real, eps, kl_scale=1.0):
+    """One Latent SDE training step (θ and φ jointly, Adam in Rust).
+
+    ``eps [B, v]`` is the reparameterisation noise for V̂. Returns
+    ``(loss, grad_flat)``; the backward solve is O-t-D per ``solver``.
+    """
+    lay = spec.layout()
+    p = lay.unflatten(params_flat)
+    y_real_path = jnp.transpose(y_real, (1, 0, 2))
+    ctx = _latent_context(spec, p, y_real_path)
+
+    # Encoder / initial state.
+    enc = nets.mlp_apply(p, "xi", y_real_path[0])
+    v_mean, v_logstd = enc[:, :spec.v], jnp.clip(enc[:, spec.v:], -6.0, 3.0)
+    v_hat = v_mean + jnp.exp(v_logstd) * eps
+    z0 = nets.mlp_apply(p, "zeta", v_hat)
+
+    drift, diffusion = _latent_fields(spec)
+    x_path, fin = sdeint.forward(solver, drift, diffusion, p, z0, ts, dws, u=ctx)
+
+    kl_v = jnp.mean(jnp.sum(
+        0.5 * (v_mean ** 2 + jnp.exp(2 * v_logstd) - 1.0) - v_logstd, axis=1))
+
+    loss_path, (path_cot, direct_gp, ctx_cot) = jax.value_and_grad(
+        lambda xp, pp, cc: _latent_loss_from_path(spec, pp, xp, ts, cc,
+                                                  y_real_path, kl_scale),
+        argnums=(0, 1, 2))(x_path, p, ctx)
+
+    gz0, gp_solve, _, gu_solve = sdeint.backward(solver, drift, diffusion, p, fin, ts,
+                                       dws, path_cot, u=ctx)
+    gp_total = jax.tree_util.tree_map(jnp.add, direct_gp, gp_solve)
+    ctx_cot = ctx_cot + gu_solve  # the context also feeds the solve's drift
+
+    # Chain z0 → ζ → (v̂) → encoder ξ, plus the kl_v term, plus ctx → GRU.
+    def head(pp):
+        enc_ = nets.mlp_apply(pp, "xi", y_real_path[0])
+        m_, ls_ = enc_[:, :spec.v], jnp.clip(enc_[:, spec.v:], -6.0, 3.0)
+        vh = m_ + jnp.exp(ls_) * eps
+        z0_ = nets.mlp_apply(pp, "zeta", vh)
+        klv = jnp.mean(jnp.sum(
+            0.5 * (m_ ** 2 + jnp.exp(2 * ls_) - 1.0) - ls_, axis=1))
+        ctx_ = _latent_context(spec, pp, y_real_path)
+        return z0_, klv, ctx_
+
+    _, vjp = jax.vjp(head, p)
+    (gp_head,) = vjp((gz0, jnp.asarray(1.0, z0.dtype), ctx_cot))
+    gp_total = jax.tree_util.tree_map(jnp.add, gp_total, gp_head)
+    loss = loss_path + kl_v
+    return loss, _flatten(lay, gp_total)
+
+
+def latent_sample(spec, solver, params_flat, v, ts, dws, use_pallas=True):
+    """Sample from the *prior* generative SDE: ``dX = μ_θ dt + σ_θ ∘ dW``."""
+    lay = spec.layout()
+    p = lay.unflatten(params_flat)
+    z0 = nets.mlp_apply(p, "zeta", v, use_pallas=use_pallas)
+
+    def drift(pp, t, z, u):
+        return nets.mlp_apply(pp, "mu", nets.with_time(t, z),
+                              use_pallas=use_pallas)
+
+    def diffusion(pp, t, z, u):
+        return jax.vmap(jnp.diag)(nets.sigma_diag(pp, t, z, use_pallas=use_pallas))
+
+    x_path, _ = sdeint.forward(solver, drift, diffusion, p, z0, ts, dws,
+                               use_pallas=use_pallas)
+    y_path = nets.affine_apply(p, "ell", x_path)
+    return jnp.transpose(y_path, (1, 0, 2))
+
+
+# ---------------------------------------------------------------------------
+# Figure 2: gradient-error test problem
+# ---------------------------------------------------------------------------
+
+
+class GradErrSpec:
+    """The Appendix-F.5 test problem: X ∈ R^32, W ∈ R^16, hidden width 8,
+    LipSwish MLPs with sigmoid finals, batch 32."""
+
+    def __init__(self, state=32, noise=16, hidden=8, batch=32):
+        self.x = state
+        self.w = noise
+        self.h = hidden
+        self.b = batch
+
+    def layout(self):
+        lb = nets.LayoutBuilder()
+        nets.add_mlp(lb, "f", 1 + self.x, self.h, self.x)
+        nets.add_mlp(lb, "g", 1 + self.x, self.h, self.x * self.w)
+        return lb
+
+    def hyper(self):
+        return dict(x=self.x, w=self.w, h=self.h, b=self.b)
+
+
+def _graderr_fields(spec):
+    def drift(p, t, z, u):
+        return nets.mlp_apply(p, "f", nets.with_time(t, z), final="sigmoid")
+
+    def diffusion(p, t, z, u):
+        out = nets.mlp_apply(p, "g", nets.with_time(t, z), final="sigmoid")
+        return out.reshape(z.shape[0], spec.x, spec.w)
+
+    return drift, diffusion
+
+
+def gradient_error(spec, solver, params_flat, z0, ts, dws):
+    """Compute O-t-D and D-t-O gradients of ``L = Σ X_T`` on the test
+    problem; returns ``(otd_gz0, otd_gtheta, dto_gz0, dto_gtheta)``.
+
+    Lowered in f64 so the reversible-Heun error floor is the paper's ~1e-16,
+    not f32's ~1e-7."""
+    lay = spec.layout()
+    p = lay.unflatten(params_flat)
+    drift, diffusion = _graderr_fields(spec)
+
+    def fwd_loss(pp, z, w):
+        path, _ = sdeint.forward(solver, drift, diffusion, pp, z, ts, w)
+        return jnp.sum(path[-1])
+
+    # O-t-D.
+    path, fin = sdeint.forward(solver, drift, diffusion, p, z0, ts, dws)
+    cots = jnp.zeros_like(path).at[-1].set(1.0)
+    gz0, gp, _, _ = sdeint.backward(solver, drift, diffusion, p, fin, ts, dws, cots)
+    # D-t-O reference.
+    ref_gp, ref_gz0 = jax.grad(fwd_loss, argnums=(0, 1))(p, z0, dws)
+    return gz0, _flatten(lay, gp), ref_gz0, _flatten(lay, ref_gp)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _flatten(layout, tree):
+    """Flatten a named-parameter dict back to the layout's vector order."""
+    parts = [tree[e["name"]].reshape(-1) for e in layout.entries]
+    return jnp.concatenate(parts)

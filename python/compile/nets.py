@@ -1,0 +1,186 @@
+"""Layer-2 network definitions and the flat-parameter contract with Rust.
+
+Training state lives in Rust as one flat ``f32`` vector per network; this
+module defines the canonical layout (mirrored by ``rust/src/nn``'s
+``ParamLayout``) and the unflatten/apply functions used inside the lowered
+executables.
+
+Every MLP here is the paper's shape: one hidden layer, LipSwish activation
+(Appendix F.2: "the LipSwish activation function was used throughout"),
+optional bounded final nonlinearity.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import mlp_field, ref
+
+
+class LayoutBuilder:
+    """Accumulates (name, shape, fan_in, kind) entries with offsets."""
+
+    def __init__(self):
+        self.entries = []
+        self.total = 0
+
+    def add(self, name, shape, fan_in, kind):
+        size = 1
+        for d in shape:
+            size *= d
+        self.entries.append(
+            dict(name=name, shape=list(shape), offset=self.total,
+                 fan_in=int(fan_in), kind=kind)
+        )
+        self.total += size
+        return self
+
+    def manifest(self):
+        """JSON-ready layout list (consumed by rust ParamLayout)."""
+        return self.entries
+
+    def unflatten(self, flat):
+        """Flat vector -> dict of named arrays."""
+        out = {}
+        for e in self.entries:
+            size = 1
+            for d in e["shape"]:
+                size *= d
+            out[e["name"]] = flat[e["offset"]:e["offset"] + size].reshape(e["shape"])
+        return out
+
+
+def add_mlp(layout, prefix, in_dim, hidden, out_dim):
+    """Register a 2-layer MLP's tensors."""
+    layout.add(f"{prefix}.w1", (in_dim, hidden), in_dim, "weight")
+    layout.add(f"{prefix}.b1", (hidden,), in_dim, "bias")
+    layout.add(f"{prefix}.w2", (hidden, out_dim), hidden, "weight")
+    layout.add(f"{prefix}.b2", (out_dim,), hidden, "bias")
+    return layout
+
+
+def add_affine(layout, prefix, in_dim, out_dim):
+    """Register an affine map's tensors (the readout ℓ_θ)."""
+    layout.add(f"{prefix}.w", (in_dim, out_dim), in_dim, "weight")
+    layout.add(f"{prefix}.b", (out_dim,), in_dim, "bias")
+    return layout
+
+
+def mlp_apply(params, prefix, x, final="none", use_pallas=False):
+    """Apply a registered MLP. ``use_pallas=True`` routes through the
+    Layer-1 kernel (forward-only paths; reverse-mode AD does not traverse
+    ``pallas_call``, so differentiated paths use the jnp oracle — the two
+    are allclose-tested in ``test_kernels.py``)."""
+    w1, b1 = params[f"{prefix}.w1"], params[f"{prefix}.b1"]
+    w2, b2 = params[f"{prefix}.w2"], params[f"{prefix}.b2"]
+    if use_pallas:
+        return mlp_field.mlp2_lipswish(x, w1, b1, w2, b2, final=final)
+    return ref.mlp2_lipswish(x, w1, b1, w2, b2, final=final)
+
+
+def affine_apply(params, prefix, x):
+    """Apply a registered affine map."""
+    return x @ params[f"{prefix}.w"] + params[f"{prefix}.b"]
+
+
+def with_time(t, x):
+    """Concatenate a scalar time onto each batch row: ``[B, d] -> [B, d+1]``."""
+    b = x.shape[0]
+    tcol = jnp.full((b, 1), t, dtype=x.dtype)
+    return jnp.concatenate([tcol, x], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Model hyperparameter bundles
+# ---------------------------------------------------------------------------
+
+
+class GanSpec:
+    """SDE-GAN dimensions (scaled-down Appendix F.7 defaults)."""
+
+    def __init__(self, data_dim=1, seq_len=32, state=16, hidden=32, noise=4,
+                 init_noise=4, disc_state=16, disc_hidden=32):
+        self.y = data_dim
+        self.seq_len = seq_len
+        self.x = state
+        self.h = hidden
+        self.w = noise
+        self.v = init_noise
+        self.dh = disc_state
+        self.dhh = disc_hidden
+
+    def gen_layout(self):
+        lb = LayoutBuilder()
+        add_mlp(lb, "zeta", self.v, self.h, self.x)  # ζ_θ: V -> X_0
+        add_mlp(lb, "mu", 1 + self.x, self.h, self.x)  # μ_θ(t, X)
+        add_mlp(lb, "sigma", 1 + self.x, self.h, self.x * self.w)  # σ_θ(t, X)
+        add_affine(lb, "ell", self.x, self.y)  # ℓ_θ: X -> Y
+        return lb
+
+    def disc_layout(self):
+        lb = LayoutBuilder()
+        add_mlp(lb, "xi", 1 + self.y, self.dhh, self.dh)  # ξ_φ(t0, Y_0)
+        add_mlp(lb, "f", 1 + self.dh, self.dhh, self.dh)  # f_φ(t, H)
+        add_mlp(lb, "g", 1 + self.dh, self.dhh, self.dh * self.y)  # g_φ(t, H)
+        lb.add("m", (self.dh,), self.dh, "other")  # m_φ readout
+        return lb
+
+    def hyper(self):
+        return dict(y=self.y, seq_len=self.seq_len, x=self.x, h=self.h,
+                    w=self.w, v=self.v, dh=self.dh, dhh=self.dhh)
+
+
+class LatentSpec:
+    """Latent SDE dimensions (scaled-down Appendix F.4 defaults).
+
+    Diffusion is diagonal (as in torchsde's Latent SDE) so the KL term's
+    ``σ^{-1}`` is well-defined.
+    """
+
+    def __init__(self, data_dim=2, seq_len=24, state=16, hidden=32,
+                 ctx=16, init_noise=4):
+        self.y = data_dim
+        self.seq_len = seq_len
+        self.x = state
+        self.h = hidden
+        self.c = ctx
+        self.v = init_noise
+
+    def layout(self):
+        """Single joint layout: (θ = generative) + (φ = inference)."""
+        lb = LayoutBuilder()
+        # θ: prior drift, shared diffusion, initial map, readout.
+        add_mlp(lb, "zeta", self.v, self.h, self.x)
+        add_mlp(lb, "mu", 1 + self.x, self.h, self.x)
+        add_mlp(lb, "sigma", 1 + self.x, self.h, self.x)  # diagonal
+        add_affine(lb, "ell", self.x, self.y)
+        # φ: encoder to (mean, logstd) of V̂; posterior drift ν; GRU context.
+        add_mlp(lb, "xi", self.y, self.h, 2 * self.v)
+        add_mlp(lb, "nu", 1 + self.x + self.c, self.h, self.x)
+        # Reversed GRU over observations: input y, state c.
+        lb.add("gru.wi", (self.y, 3 * self.c), self.y, "weight")
+        lb.add("gru.wh", (self.c, 3 * self.c), self.c, "weight")
+        lb.add("gru.b", (3 * self.c,), self.y, "bias")
+        return lb
+
+    def hyper(self):
+        return dict(y=self.y, seq_len=self.seq_len, x=self.x, h=self.h,
+                    c=self.c, v=self.v)
+
+
+def sigma_diag(params, t, x, use_pallas=False):
+    """Diagonal diffusion for the Latent SDE: positive, bounded away from 0
+    so the KL's σ^{-1} stays finite: ``0.05 + 0.9·sigmoid(·)``."""
+    raw = mlp_apply(params, "sigma", with_time(t, x), final="sigmoid",
+                    use_pallas=use_pallas)
+    return 0.05 + 0.9 * raw
+
+
+def gru_cell(params, y, h):
+    """One (reversed-direction) GRU step: input ``y [B, y]``, state
+    ``h [B, c]`` -> new state."""
+    c = h.shape[1]
+    gi = y @ params["gru.wi"] + params["gru.b"]
+    gh = h @ params["gru.wh"]
+    r = ref.sigmoid(gi[:, :c] + gh[:, :c])
+    z = ref.sigmoid(gi[:, c:2 * c] + gh[:, c:2 * c])
+    n = jnp.tanh(gi[:, 2 * c:] + r * gh[:, 2 * c:])
+    return (1.0 - z) * n + z * h

@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ``ref.py``.
+
+Hypothesis sweeps shapes and dtypes; every property asserts allclose between
+the kernel (interpret mode) and the oracle, plus a handful of analytic
+sanity checks (Lipschitz bound of LipSwish, reversibility of the fused
+update).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp_field, ref, revheun
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+dims = st.integers(min_value=1, max_value=24)
+batches = st.integers(min_value=1, max_value=300)
+dtypes = st.sampled_from([np.float32, np.float64])
+finals = st.sampled_from(["none", "tanh", "sigmoid"])
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == np.float32 else dict(rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=batches, d_in=dims, d_h=dims, d_out=dims, final=finals, dtype=dtypes,
+       seed=st.integers(0, 2**31))
+def test_mlp_kernel_matches_ref(b, d_in, d_h, d_out, final, dtype, seed):
+    r = rng(seed)
+    x = r.normal(size=(b, d_in)).astype(dtype)
+    w1 = r.normal(size=(d_in, d_h)).astype(dtype) * 0.5
+    b1 = r.normal(size=(d_h,)).astype(dtype) * 0.1
+    w2 = r.normal(size=(d_h, d_out)).astype(dtype) * 0.5
+    b2 = r.normal(size=(d_out,)).astype(dtype) * 0.1
+    got = mlp_field.mlp2_lipswish(x, w1, b1, w2, b2, final=final)
+    want = ref.mlp2_lipswish(x, w1, b1, w2, b2, final=final)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
+    assert got.dtype == dtype
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=batches, block=st.sampled_from([1, 7, 64, 128, 256]))
+def test_mlp_kernel_block_size_invariant(b, block):
+    """Output must not depend on the block size (padding is stripped)."""
+    r = rng(b * 1000 + block)
+    x = r.normal(size=(b, 5)).astype(np.float32)
+    w1 = r.normal(size=(5, 9)).astype(np.float32)
+    b1 = np.zeros(9, np.float32)
+    w2 = r.normal(size=(9, 3)).astype(np.float32)
+    b2 = np.zeros(3, np.float32)
+    base = mlp_field.mlp2_lipswish(x, w1, b1, w2, b2, block=128)
+    got = mlp_field.mlp2_lipswish(x, w1, b1, w2, b2, block=block)
+    # f32 GEMMs may reassociate differently per block shape: allow a few ulp.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=batches, d=dims, dtype=dtypes, seed=st.integers(0, 2**31),
+       dt=st.floats(min_value=1e-4, max_value=2.0))
+def test_revheun_update_matches_ref(b, d, dtype, seed, dt):
+    r = rng(seed)
+    args = [r.normal(size=(b, d)).astype(dtype) for _ in range(6)]
+    dt = dtype(dt)
+    gz, gzh = revheun.revheun_update(*args, dt)
+    wz, wzh = ref.revheun_update(*args, dt)
+    np.testing.assert_allclose(np.asarray(gz), np.asarray(wz), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(gzh), np.asarray(wzh), **tol(dtype))
+
+
+def test_lipswish_is_one_lipschitz():
+    """Numerical check that sup |ρ'(x)| <= 1 (the Section-5 requirement)."""
+    x = jnp.linspace(-20.0, 20.0, 200001, dtype=jnp.float64)
+    g = jax.vmap(jax.grad(lambda v: ref.lipswish(v)))(x)
+    assert float(jnp.max(jnp.abs(g))) <= 1.0 + 1e-9
+
+
+def test_lipswish_smooth_at_zero():
+    g2 = jax.grad(jax.grad(lambda v: ref.lipswish(v)))(0.0)
+    assert np.isfinite(float(g2))
+
+
+def test_revheun_update_is_reversible_linear_algebra():
+    """The fused update, inverted per Algorithm 2, returns the old state."""
+    r = rng(7)
+    z, zh, mu, sdw, mun, sdwn = [r.normal(size=(4, 3)) for _ in range(6)]
+    dt = 0.125
+    zn, zhn = ref.revheun_update(z, zh, mu, sdw, mun, sdwn, dt)
+    # Inverse (with the *next* fields known, as the backward pass has them):
+    zh_rec = 2.0 * zn - zhn - mun * dt - sdwn
+    z_rec = zn - 0.5 * (mu + mun) * dt - 0.5 * (sdw + sdwn)
+    np.testing.assert_allclose(np.asarray(zh_rec), zh, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(z_rec), z, rtol=1e-12, atol=1e-12)
+
+
+def test_batched_matvec_matches_loop():
+    r = rng(3)
+    mat = r.normal(size=(5, 4, 3))
+    vec = r.normal(size=(5, 3))
+    got = np.asarray(ref.batched_matvec(jnp.asarray(mat), jnp.asarray(vec)))
+    for b in range(5):
+        np.testing.assert_allclose(got[b], mat[b] @ vec[b], rtol=1e-12)
+
+
+@pytest.mark.parametrize("block", [32, 128, 512])
+def test_vmem_footprint_under_budget(block):
+    """The perf-estimate helper: every configuration we lower stays far
+    below the 16 MiB VMEM budget."""
+    bytes_ = mlp_field.vmem_footprint_bytes(block, 64, 64, 64)
+    assert bytes_ < 16 * 2**20 * 0.1
+
+
+def test_mlp_rejects_unknown_final():
+    x = jnp.zeros((2, 3), jnp.float32)
+    w1 = jnp.zeros((3, 4), jnp.float32)
+    b1 = jnp.zeros(4, jnp.float32)
+    w2 = jnp.zeros((4, 2), jnp.float32)
+    b2 = jnp.zeros(2, jnp.float32)
+    with pytest.raises(ValueError):
+        mlp_field.mlp2_lipswish(x, w1, b1, w2, b2, final="relu")

@@ -1,0 +1,209 @@
+"""L2 model-level tests: GAN and Latent SDE losses/gradients/samples.
+
+The strongest checks ride on the reversible Heun method's exactness: for
+that solver the hand-assembled O-t-D gradient pipelines in ``model.py``
+must agree with ``jax.grad`` of the corresponding end-to-end forward
+computation to floating-point error.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, nets, sdeint
+
+jax.config.update("jax_enable_x64", True)
+
+SPEC = model.GanSpec(data_dim=1, seq_len=8, state=6, hidden=8, noise=3,
+                     init_noise=3, disc_state=5, disc_hidden=8)
+B = 4
+
+
+def rngs(seed):
+    return np.random.default_rng(seed)
+
+
+def gan_inputs(seed, dtype=jnp.float64):
+    r = rngs(seed)
+    n = SPEC.seq_len - 1
+    theta = jnp.asarray(r.normal(size=SPEC.gen_layout().total) * 0.3, dtype)
+    phi = jnp.asarray(r.normal(size=SPEC.disc_layout().total) * 0.3, dtype)
+    v = jnp.asarray(r.normal(size=(B, SPEC.v)), dtype)
+    ts = jnp.linspace(-0.5, 0.5, SPEC.seq_len, dtype=dtype)
+    dws = jnp.asarray(r.normal(size=(n, B, SPEC.w)) * np.sqrt(1.0 / n), dtype)
+    y_real = jnp.asarray(r.normal(size=(B, SPEC.seq_len, SPEC.y)), dtype)
+    return theta, phi, v, ts, dws, y_real
+
+
+def gen_loss_e2e(solver, theta, phi, v, ts, dws):
+    """End-to-end generator loss (pure forward, for jax.grad reference)."""
+    gl, dl = SPEC.gen_layout(), SPEC.disc_layout()
+    gp, dp = gl.unflatten(theta), dl.unflatten(phi)
+    _, _, _, y_path = model._gen_forward(SPEC, solver, gp, v, ts, dws)
+    _, _, _, score = model._disc_forward(SPEC, solver, dp, y_path, ts)
+    return jnp.mean(score)
+
+
+def disc_loss_e2e(solver, theta, phi, v, ts, dws, y_real):
+    gl, dl = SPEC.gen_layout(), SPEC.disc_layout()
+    gp, dp = gl.unflatten(theta), dl.unflatten(phi)
+    _, _, _, y_fake = model._gen_forward(SPEC, solver, gp, v, ts, dws)
+    y_real_path = jnp.transpose(y_real, (1, 0, 2))
+    _, _, _, sf = model._disc_forward(SPEC, solver, dp, y_fake, ts)
+    _, _, _, sr = model._disc_forward(SPEC, solver, dp, y_real_path, ts)
+    return jnp.mean(sr) - jnp.mean(sf)
+
+
+def rel_err(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return np.abs(a - b).sum() / max(np.abs(a).sum(), np.abs(b).sum(), 1e-300)
+
+
+def test_gan_generator_grad_exact_for_revheun():
+    theta, phi, v, ts, dws, _ = gan_inputs(0)
+    loss, g = model.gan_generator_grad(SPEC, "reversible_heun", theta, phi, v, ts, dws)
+    ref_loss = gen_loss_e2e("reversible_heun", theta, phi, v, ts, dws)
+    ref_g = jax.grad(lambda th: gen_loss_e2e("reversible_heun", th, phi, v, ts, dws))(theta)
+    assert abs(float(loss - ref_loss)) < 1e-10
+    assert rel_err(g, ref_g) < 1e-9, rel_err(g, ref_g)
+
+
+def test_gan_discriminator_grad_exact_for_revheun():
+    theta, phi, v, ts, dws, y_real = gan_inputs(1)
+    loss, g = model.gan_discriminator_grad(SPEC, "reversible_heun", theta, phi,
+                                           v, ts, dws, y_real)
+    ref_loss = disc_loss_e2e("reversible_heun", theta, phi, v, ts, dws, y_real)
+    ref_g = jax.grad(
+        lambda ph: disc_loss_e2e("reversible_heun", theta, ph, v, ts, dws, y_real))(phi)
+    assert abs(float(loss - ref_loss)) < 1e-10
+    assert rel_err(g, ref_g) < 1e-9, rel_err(g, ref_g)
+
+
+@pytest.mark.parametrize("which", ["gen", "disc"])
+def test_gan_grads_midpoint_biased_but_close(which):
+    """Midpoint O-t-D gradients carry truncation bias: nonzero but small."""
+    theta, phi, v, ts, dws, y_real = gan_inputs(2)
+    if which == "gen":
+        _, g = model.gan_generator_grad(SPEC, "midpoint", theta, phi, v, ts, dws)
+        ref_g = jax.grad(lambda th: gen_loss_e2e("midpoint", th, phi, v, ts, dws))(theta)
+    else:
+        _, g = model.gan_discriminator_grad(SPEC, "midpoint", theta, phi, v,
+                                            ts, dws, y_real)
+        ref_g = jax.grad(
+            lambda ph: disc_loss_e2e("midpoint", theta, ph, v, ts, dws, y_real))(phi)
+    e = rel_err(g, ref_g)
+    assert 1e-12 < e < 0.5, f"unexpected midpoint bias {e}"
+
+
+def test_gan_gp_grad_runs_and_differs_from_plain():
+    theta, phi, v, ts, dws, y_real = gan_inputs(3)
+    l1, g1 = model.gan_discriminator_grad(SPEC, "midpoint", theta, phi, v, ts,
+                                          dws, y_real)
+    l2, g2 = model.gan_discriminator_grad_gp(SPEC, "midpoint", theta, phi, v,
+                                             ts, dws, y_real)
+    assert np.isfinite(float(l2))
+    assert float(l2) != pytest.approx(float(l1))
+    assert g2.shape == g1.shape
+
+
+def test_gan_sample_shapes_and_pallas_consistency():
+    theta, phi, v, ts, dws, _ = gan_inputs(4)
+    theta32 = theta.astype(jnp.float32)
+    v32, ts32, dws32 = (a.astype(jnp.float32) for a in (v, ts, dws))
+    y_pallas = model.gan_sample(SPEC, "reversible_heun", theta32, v32, ts32,
+                                dws32, use_pallas=True)
+    y_ref = model.gan_sample(SPEC, "reversible_heun", theta32, v32, ts32,
+                             dws32, use_pallas=False)
+    assert y_pallas.shape == (B, SPEC.seq_len, SPEC.y)
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+LSPEC = model.LatentSpec(data_dim=2, seq_len=6, state=5, hidden=8, ctx=4,
+                         init_noise=3)
+
+
+def latent_inputs(seed, dtype=jnp.float64):
+    r = rngs(seed)
+    n = LSPEC.seq_len - 1
+    params = jnp.asarray(r.normal(size=LSPEC.layout().total) * 0.3, dtype)
+    ts = jnp.linspace(-0.5, 0.5, LSPEC.seq_len, dtype=dtype)
+    dws = jnp.asarray(r.normal(size=(n, B, LSPEC.x)) * np.sqrt(1.0 / n), dtype)
+    y_real = jnp.asarray(r.normal(size=(B, LSPEC.seq_len, LSPEC.y)), dtype)
+    eps = jnp.asarray(r.normal(size=(B, LSPEC.v)), dtype)
+    return params, ts, dws, y_real, eps
+
+
+def latent_loss_e2e(solver, params_flat, ts, dws, y_real, eps):
+    lay = LSPEC.layout()
+    p = lay.unflatten(params_flat)
+    y_real_path = jnp.transpose(y_real, (1, 0, 2))
+    ctx = model._latent_context(LSPEC, p, y_real_path)
+    enc = nets.mlp_apply(p, "xi", y_real_path[0])
+    v_mean, v_logstd = enc[:, :LSPEC.v], jnp.clip(enc[:, LSPEC.v:], -6.0, 3.0)
+    v_hat = v_mean + jnp.exp(v_logstd) * eps
+    z0 = nets.mlp_apply(p, "zeta", v_hat)
+    drift, diffusion = model._latent_fields(LSPEC)
+    x_path, _ = sdeint.forward(solver, drift, diffusion, p, z0, ts, dws, u=ctx)
+    kl_v = jnp.mean(jnp.sum(
+        0.5 * (v_mean ** 2 + jnp.exp(2 * v_logstd) - 1.0) - v_logstd, axis=1))
+    return model._latent_loss_from_path(LSPEC, p, x_path, ts, ctx,
+                                        y_real_path, 1.0) + kl_v
+
+
+def test_latent_grad_exact_for_revheun():
+    params, ts, dws, y_real, eps = latent_inputs(5)
+    loss, g = model.latent_grad(LSPEC, "reversible_heun", params, ts, dws,
+                                y_real, eps)
+    ref_loss = latent_loss_e2e("reversible_heun", params, ts, dws, y_real, eps)
+    ref_g = jax.grad(
+        lambda p: latent_loss_e2e("reversible_heun", p, ts, dws, y_real, eps))(params)
+    assert abs(float(loss - ref_loss)) < 1e-9
+    assert rel_err(g, ref_g) < 1e-8, rel_err(g, ref_g)
+
+
+def test_latent_grad_midpoint_runs():
+    params, ts, dws, y_real, eps = latent_inputs(6)
+    loss, g = model.latent_grad(LSPEC, "midpoint", params, ts, dws, y_real, eps)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_latent_training_reduces_loss():
+    """A few SGD steps on the ELBO must reduce it (end-to-end sanity)."""
+    params, ts, dws, y_real, eps = latent_inputs(7)
+    p = params
+    losses = []
+    for k in range(30):
+        loss, g = model.latent_grad(LSPEC, "reversible_heun", p, ts, dws,
+                                    y_real, eps)
+        losses.append(float(loss))
+        p = p - 0.02 * g / (jnp.abs(g).max() + 1e-8)
+    assert losses[-1] < losses[0], losses[:3] + losses[-3:]
+
+
+def test_latent_sample_shape():
+    params, ts, dws, y_real, eps = latent_inputs(8)
+    params32 = params.astype(jnp.float32)
+    v = eps.astype(jnp.float32)
+    y = model.latent_sample(LSPEC, "reversible_heun", params32, v,
+                            ts.astype(jnp.float32), dws.astype(jnp.float32))
+    assert y.shape == (B, LSPEC.seq_len, LSPEC.y)
+
+
+def test_gradient_error_revheun_exact_midpoint_not():
+    spec = model.GradErrSpec(state=8, noise=4, hidden=6, batch=4)
+    r = rngs(9)
+    params = jnp.asarray(r.normal(size=spec.layout().total) * 0.4)
+    z0 = jnp.asarray(r.normal(size=(spec.b, spec.x)))[:4]
+    n = 16
+    ts = jnp.linspace(0.0, 1.0, n + 1)
+    dws = jnp.asarray(r.normal(size=(n, 4, spec.w)) * np.sqrt(1.0 / n))
+    o_gz, o_gp, d_gz, d_gp = model.gradient_error(spec, "reversible_heun",
+                                                  params, z0, ts, dws)
+    assert rel_err(o_gp, d_gp) < 1e-11
+    assert rel_err(o_gz, d_gz) < 1e-11
+    o_gz, o_gp, d_gz, d_gp = model.gradient_error(spec, "midpoint", params,
+                                                  z0, ts, dws)
+    assert rel_err(o_gp, d_gp) > 1e-8

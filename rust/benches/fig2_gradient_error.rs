@@ -1,0 +1,39 @@
+//! Figure 2 / Table 6 as a bench target: regenerates the gradient-error
+//! table (the numbers, not just timings). Requires `make artifacts`.
+
+use neuralsde::coordinator::gradient_error;
+use neuralsde::runtime::{load_runtime, Runtime};
+
+fn main() {
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("skipping fig2_gradient_error: run `make artifacts` first");
+        return;
+    }
+    let mut rt = load_runtime("artifacts").expect("runtime");
+    let points = gradient_error::run(&mut rt, 2021).expect("gradient error");
+    println!("{}", gradient_error::render(&points));
+    // Hard assertions of the paper's claim, so `cargo bench` fails loudly
+    // if the reproduction regresses.
+    for p in &points {
+        match p.solver.as_str() {
+            "reversible_heun" => assert!(
+                p.rel_err < 1e-10,
+                "reversible Heun should be fp-exact, got {} at n={}",
+                p.rel_err,
+                p.n_steps
+            ),
+            _ => {
+                if p.n_steps <= 16 {
+                    assert!(
+                        p.rel_err > 1e-8,
+                        "{} should show truncation bias, got {} at n={}",
+                        p.solver,
+                        p.rel_err,
+                        p.n_steps
+                    );
+                }
+            }
+        }
+    }
+    println!("fig2 assertions OK (revheun fp-exact; baselines biased)");
+}

@@ -1,0 +1,69 @@
+//! Microbenchmarks of the Layer-3 hot paths, for the EXPERIMENTS.md §Perf
+//! iteration log: Brownian Interval query cost (hit/miss), bridge sampling,
+//! LRU ops, signature features, optimiser steps.
+
+use neuralsde::brownian::{box_muller_fill, BrownianInterval, BrownianSource, LruCache};
+use neuralsde::metrics::{series_features, signature};
+use neuralsde::nn::{Adadelta, Optimizer};
+use neuralsde::util::bench::{black_box, BenchTable};
+
+fn main() {
+    let mut table = BenchTable::new("hot-path micro", 32, 4);
+
+    // Brownian Interval sequential queries (the training fill pattern).
+    for &batch in &[256usize, 4096] {
+        let mut out = vec![0.0f32; batch];
+        table.bench(&format!("bi/seq_fill/batch={batch}/n=31"), |i| {
+            let mut bi = BrownianInterval::new(0.0, 1.0, batch, i as u64);
+            for k in 0..31 {
+                bi.increment(k as f64 / 31.0, (k + 1) as f64 / 31.0, &mut out);
+            }
+            black_box(&out);
+        });
+    }
+
+    // Raw Gaussian generation (the floor under every bridge sample).
+    let mut buf = vec![0.0f32; 4096];
+    table.bench("prng/box_muller/4096", |i| {
+        box_muller_fill(i as u64, 1.0, &mut buf);
+        black_box(&buf);
+    });
+
+    // LRU get/put mix.
+    table.bench("lru/get_put_mix/10k", |i| {
+        let mut c: LruCache<u32, u64> = LruCache::new(128);
+        let mut s = i as u64 + 1;
+        for k in 0..10_000u32 {
+            s = neuralsde::brownian::splitmix64(s);
+            if s & 1 == 0 {
+                c.put((s % 512) as u32, s);
+            } else {
+                black_box(c.get(&((s % 512) as u32)));
+            }
+            black_box(k);
+        }
+    });
+
+    // Signature features of one series (the metric hot path).
+    let series: Vec<f32> = (0..32).map(|k| (k as f32 * 0.3).sin()).collect();
+    table.bench("metrics/sig_features/len32_depth3", |_| {
+        black_box(series_features(&series, 32, 1, 3));
+    });
+    let path: Vec<f64> = (0..64).flat_map(|k| [k as f64, (k as f64).cos()]).collect();
+    table.bench("metrics/signature/len64_c2_depth5", |_| {
+        black_box(signature(&path, 64, 2, 5));
+    });
+
+    // Optimiser step on a training-sized parameter vector.
+    let n = 4834;
+    let mut params = vec![0.1f32; n];
+    let grad = vec![0.01f32; n];
+    let mut opt = Adadelta::new(1.0, n);
+    table.bench("optim/adadelta/4834", |_| {
+        opt.step(&mut params, &grad);
+    });
+
+    println!("{}", table.render());
+    std::fs::create_dir_all("results").ok();
+    table.write_json("results/bench_hotpath_micro.json").ok();
+}

@@ -1,0 +1,76 @@
+//! Tables 1 / 4 / 5: per-training-step wall time, reversible Heun vs
+//! midpoint, for the SDE-GAN (OU & weights datasets) and the Latent SDE
+//! (air dataset).
+//!
+//! The paper's headline speedups (1.98× on weights, 1.25× on air) come
+//! from the reversible Heun method's single vector-field evaluation per
+//! step; the same ratio should appear here in the gradient-executable
+//! time. Requires `make artifacts`.
+
+use neuralsde::brownian::SplitPrng;
+use neuralsde::config::{DatasetKind, SolverKind, TrainConfig};
+use neuralsde::coordinator::{GanTrainer, LatentTrainer};
+use neuralsde::data::{air, ou, weights};
+use neuralsde::runtime::{load_runtime, Runtime};
+use neuralsde::util::bench::BenchTable;
+
+fn main() {
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("skipping tab1_training_step: run `make artifacts` first");
+        return;
+    }
+    let mut rt = load_runtime("artifacts").expect("runtime");
+    let quick = std::env::var("QUICK").is_ok();
+    let repeats = if quick { 5 } else { 16 };
+    let mut table = BenchTable::new(
+        "Tables 1/4/5: training-step time (revheun vs midpoint)",
+        repeats,
+        2,
+    );
+
+    let datasets = [DatasetKind::Ou, DatasetKind::Weights];
+    for ds in datasets {
+        let mut data = match ds {
+            DatasetKind::Ou => ou::generate(256, 1, ou::OuParams::default()),
+            DatasetKind::Weights => weights::generate(256, 1, weights::WeightsParams::default()),
+            _ => unreachable!(),
+        };
+        data.normalise_initial();
+        for solver in [SolverKind::ReversibleHeun, SolverKind::Midpoint] {
+            let mut cfg = TrainConfig::default();
+            cfg.dataset = ds;
+            cfg.solver = solver;
+            let mut trainer = GanTrainer::new(&rt, &cfg, 1000).expect("trainer");
+            let mut rng = SplitPrng::new(7);
+            table.bench(
+                &format!("gan_{}/{}", ds.as_str(), solver.as_str()),
+                |_| {
+                    trainer.train_step(&mut rt, &data, &mut rng).expect("step");
+                },
+            );
+        }
+    }
+
+    // Latent SDE on air.
+    let mut data = air::generate(256, 1, air::AirParams::default());
+    data.normalise_initial();
+    for solver in [SolverKind::ReversibleHeun, SolverKind::Midpoint] {
+        let mut cfg = TrainConfig::default();
+        cfg.dataset = DatasetKind::Air;
+        cfg.solver = solver;
+        let mut trainer = LatentTrainer::new(&rt, &cfg).expect("trainer");
+        let mut rng = SplitPrng::new(7);
+        table.bench(&format!("latent_air/{}", solver.as_str()), |_| {
+            trainer.train_step(&mut rt, &data, &mut rng).expect("step");
+        });
+    }
+
+    println!("{}", table.render());
+    for model in ["gan_ou", "gan_weights", "latent_air"] {
+        let rh = table.min_of(&format!("{model}/reversible_heun"));
+        let mp = table.min_of(&format!("{model}/midpoint"));
+        println!("  {model:<12} revheun speedup over midpoint: {:.2}x", mp / rh);
+    }
+    std::fs::create_dir_all("results").ok();
+    table.write_json("results/bench_tab1_training_step.json").ok();
+}

@@ -1,0 +1,114 @@
+//! Tables 2, 7, 8 and 9: Brownian Interval vs Virtual Brownian Tree over
+//! the paper's three access patterns (sequential, doubly sequential,
+//! random), batch sizes (1 / 2560 / 32768) and subinterval counts
+//! (10 / 100 / 1000). Minimum over 32 runs, as in Appendix F.6.
+//!
+//! Expected shape: the Brownian Interval wins uniformly; on the
+//! doubly-sequential pattern (SDE solve + adjoint) by ~3–13×.
+//!
+//! Run the full sweep with `cargo bench --bench tab2_brownian_access`;
+//! set `QUICK=1` to trim the largest configurations.
+
+use neuralsde::brownian::{splitmix64, BrownianInterval, BrownianSource, VirtualBrownianTree};
+use neuralsde::util::bench::BenchTable;
+
+fn sequential<B: BrownianSource>(src: &mut B, n: usize, out: &mut [f32]) {
+    for k in 0..n {
+        src.increment(k as f64 / n as f64, (k + 1) as f64 / n as f64, out);
+    }
+}
+
+fn doubly<B: BrownianSource>(src: &mut B, n: usize, out: &mut [f32]) {
+    sequential(src, n, out);
+    for k in (0..n).rev() {
+        src.increment(k as f64 / n as f64, (k + 1) as f64 / n as f64, out);
+    }
+}
+
+fn random<B: BrownianSource>(src: &mut B, n: usize, seed: u64, out: &mut [f32]) {
+    // Query every interval exactly once, in a seeded pseudo-random order.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut state = seed;
+    for i in (1..n).rev() {
+        state = splitmix64(state);
+        order.swap(i, (state % (i as u64 + 1)) as usize);
+    }
+    for &k in &order {
+        src.increment(k as f64 / n as f64, (k + 1) as f64 / n as f64, out);
+    }
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let full = std::env::var("FULL").is_ok();
+    let batches: &[usize] = if quick { &[1, 2560] } else { &[1, 2560, 32768] };
+    let intervals: &[usize] = if quick { &[10, 100] } else { &[10, 100, 1000] };
+    let repeats = 32;
+
+    for &pattern in &["sequential", "doubly_sequential", "random"] {
+        let table_no = match pattern {
+            "sequential" => "Table 7",
+            "doubly_sequential" => "Table 8 (and Table 2 right)",
+            _ => "Table 9",
+        };
+        let mut table = BenchTable::new(
+            &format!("{table_no}: {pattern} access"),
+            repeats,
+            2,
+        );
+        for &b in batches {
+            let mut out = vec![0.0f32; b];
+            for &n in intervals {
+                // The (32768, 1000) cell takes minutes per VBT run (the
+                // paper reports 500 s); skip it unless FULL=1.
+                if b >= 32768 && n >= 1000 && !full {
+                    continue;
+                }
+                // Scale repeats down on the big cells (min-of-k is stable
+                // well before 32 runs there).
+                let reps = if b >= 32768 { 5 } else if b >= 2560 && n >= 1000 { 8 } else { repeats };
+                for src_kind in ["bi", "vbt"] {
+                    let name = format!("{src_kind}/batch={b}/n={n}");
+                    table.bench_n(&name, reps, |i| {
+                        let seed = i as u64 + 1;
+                        match src_kind {
+                            "bi" => {
+                                let mut s = BrownianInterval::new(0.0, 1.0, b, seed);
+                                match pattern {
+                                    "sequential" => sequential(&mut s, n, &mut out),
+                                    "doubly_sequential" => doubly(&mut s, n, &mut out),
+                                    _ => random(&mut s, n, seed, &mut out),
+                                }
+                            }
+                            _ => {
+                                let mut s =
+                                    VirtualBrownianTree::new(0.0, 1.0, b, seed, 1e-5);
+                                match pattern {
+                                    "sequential" => sequential(&mut s, n, &mut out),
+                                    "doubly_sequential" => doubly(&mut s, n, &mut out),
+                                    _ => random(&mut s, n, seed, &mut out),
+                                }
+                            }
+                        }
+                    });
+                }
+            }
+        }
+        println!("{}", table.render());
+        // Speedup summary per configuration.
+        for &b in batches {
+            for &n in intervals {
+                if b >= 32768 && n >= 1000 && !full {
+                    continue;
+                }
+                let bi = table.min_of(&format!("bi/batch={b}/n={n}"));
+                let vbt = table.min_of(&format!("vbt/batch={b}/n={n}"));
+                println!("  batch={b:<6} n={n:<5} BI speedup {:.2}x", vbt / bi);
+            }
+        }
+        std::fs::create_dir_all("results").ok();
+        table
+            .write_json(&format!("results/bench_{pattern}.json"))
+            .ok();
+    }
+}

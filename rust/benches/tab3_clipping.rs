@@ -1,0 +1,56 @@
+//! Tables 3 / 11: discriminator-step cost of Lipschitz **clipping**
+//! (Section 5) vs **gradient penalty** (the double-backward baseline), on
+//! the OU SDE-GAN.
+//!
+//! The paper's 1.41× speedup (midpoint+clip over midpoint+GP) comes from
+//! skipping the double backward; reversible Heun adds another 1.09×.
+//! Requires `make artifacts`.
+
+use neuralsde::brownian::SplitPrng;
+use neuralsde::config::{SolverKind, TrainConfig};
+use neuralsde::coordinator::GanTrainer;
+use neuralsde::data::ou;
+use neuralsde::runtime::{load_runtime, Runtime};
+use neuralsde::util::bench::BenchTable;
+
+fn main() {
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("skipping tab3_clipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = load_runtime("artifacts").expect("runtime");
+    let quick = std::env::var("QUICK").is_ok();
+    let repeats = if quick { 5 } else { 16 };
+    let mut data = ou::generate(256, 1, ou::OuParams::default());
+    data.normalise_initial();
+
+    let mut table = BenchTable::new(
+        "Tables 3/11: clipping vs gradient penalty (OU SDE-GAN step)",
+        repeats,
+        2,
+    );
+    let configs: [(&str, SolverKind, bool); 3] = [
+        ("midpoint+gradient_penalty", SolverKind::Midpoint, false),
+        ("midpoint+clipping", SolverKind::Midpoint, true),
+        ("reversible_heun+clipping", SolverKind::ReversibleHeun, true),
+    ];
+    for (name, solver, clip) in configs {
+        let mut cfg = TrainConfig::default();
+        cfg.solver = solver;
+        cfg.clip = clip;
+        let mut trainer = GanTrainer::new(&rt, &cfg, 1000).expect("trainer");
+        let mut rng = SplitPrng::new(7);
+        table.bench(name, |_| {
+            trainer.train_step(&mut rt, &data, &mut rng).expect("step");
+        });
+    }
+    println!("{}", table.render());
+    let gp = table.min_of("midpoint+gradient_penalty");
+    let clip = table.min_of("midpoint+clipping");
+    let rh = table.min_of("reversible_heun+clipping");
+    println!("  clipping speedup over GP      : {:.2}x", gp / clip);
+    println!("  revheun further speedup       : {:.2}x", clip / rh);
+    println!("  total (revheun+clip vs mp+GP) : {:.2}x", gp / rh);
+    std::fs::create_dir_all("results").ok();
+    table.write_json("results/bench_tab3_clipping.json").ok();
+}

@@ -1,0 +1,516 @@
+//! The Brownian Interval (paper Section 4, Appendix E).
+//!
+//! A binary tree whose nodes are `(interval, seed)` pairs. The tree starts
+//! as a stump holding the global interval `[t0, t1]` and a root seed; leaf
+//! nodes are created lazily as queries are made, so the tree's shape encodes
+//! the conditional structure of the queries actually performed. Node values
+//! (the Brownian increments `W_{a,b}`) are *not* stored in the tree — they
+//! are recomputed on demand from the seeds via Lévy's Brownian-bridge
+//! formula, with a fixed-size LRU cache over computed increments making the
+//! common sequential access pattern `O(1)` per query.
+//!
+//! Compared to the paper's Algorithm 3/4 pseudocode:
+//! * the tree is an index arena (`Vec<Node>`), not pointer-linked — queries
+//!   are iterative with an explicit stack, so deep trees cannot overflow the
+//!   call stack (the paper's "trampolining" remark);
+//! * the bridge sample at a split point is always drawn from the **left**
+//!   child's seed, whichever child is being queried — this is what makes
+//!   `W_left + W_right == W_parent` hold *exactly* (bit-equal), which the
+//!   paper's pseudocode leaves implicit;
+//! * `bisect` creates both children at once, so sibling seeds always exist.
+
+use super::lru::LruCache;
+use super::prng::{box_muller_fill, split_seed};
+use super::{check_interval, BrownianSource};
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    a: f64,
+    b: f64,
+    seed: u64,
+    parent: u32,
+    left: u32,
+    right: u32,
+}
+
+impl Node {
+    #[inline]
+    fn is_leaf(&self) -> bool {
+        self.left == NIL
+    }
+}
+
+/// Counters describing how a [`BrownianInterval`] has been exercised.
+///
+/// Used by the Table-2/7/8/9 benchmark harness to report cache behaviour and
+/// by tests asserting the access-pattern properties from Appendix E.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryStats {
+    /// Total `increment` queries served.
+    pub queries: u64,
+    /// Tree nodes created (excluding the root).
+    pub nodes_created: u64,
+    /// Bridge samples actually computed (cache misses resolved).
+    pub bridges_sampled: u64,
+    /// Longest ancestor walk needed to find a cached value.
+    pub max_recompute_depth: u32,
+    /// LRU cache hits.
+    pub cache_hits: u64,
+    /// LRU cache misses.
+    pub cache_misses: u64,
+}
+
+/// Tunables for [`BrownianInterval::with_options`].
+#[derive(Clone, Copy, Debug)]
+pub struct IntervalOptions {
+    /// LRU capacity, in cached increments. Each entry costs `size * 4` bytes.
+    pub cache_capacity: usize,
+    /// Pre-build a balanced dyadic tree of this depth (Appendix E,
+    /// "Backward pass"): guarantees `O(log)` worst-case recompute cost when
+    /// the backward pass crosses out of the cached window. Depth `d` creates
+    /// `2^(d+1) - 1` nodes. `0` disables pre-seeding.
+    pub preseed_depth: u32,
+}
+
+impl Default for IntervalOptions {
+    fn default() -> Self {
+        Self { cache_capacity: 128, preseed_depth: 0 }
+    }
+}
+
+/// Exact, `O(1)`-GPU-memory Brownian motion sampling (paper Section 4).
+pub struct BrownianInterval {
+    t0: f64,
+    t1: f64,
+    size: usize,
+    nodes: Vec<Node>,
+    cache: LruCache<u32, Vec<f32>>,
+    /// Recycled value buffers (evicted cache entries) — keeps the hot path
+    /// allocation-free once warm.
+    free: Vec<Vec<f32>>,
+    /// Most recent node touched; traversals start here (Appendix E,
+    /// "Search hints").
+    hint: u32,
+    /// Scratch stacks, retained across queries.
+    up_stack: Vec<u32>,
+    walk_stack: Vec<(u32, f64, f64)>,
+    out_nodes: Vec<u32>,
+    stats: QueryStats,
+    /// Endpoint snap tolerance (absolute, in time units).
+    tol: f64,
+}
+
+impl BrownianInterval {
+    /// Brownian motion over `[t0, t1]` with `size` channels and default
+    /// options.
+    pub fn new(t0: f64, t1: f64, size: usize, seed: u64) -> Self {
+        Self::with_options(t0, t1, size, seed, IntervalOptions::default())
+    }
+
+    /// Brownian motion with explicit cache capacity / dyadic pre-seeding.
+    pub fn with_options(
+        t0: f64,
+        t1: f64,
+        size: usize,
+        seed: u64,
+        opts: IntervalOptions,
+    ) -> Self {
+        assert!(t1 > t0, "need t1 > t0");
+        assert!(size >= 1, "need at least one channel");
+        let root = Node { a: t0, b: t1, seed, parent: NIL, left: NIL, right: NIL };
+        let mut bi = Self {
+            t0,
+            t1,
+            size,
+            nodes: vec![root],
+            cache: LruCache::new(opts.cache_capacity.max(2)),
+            free: Vec::new(),
+            hint: 0,
+            up_stack: Vec::new(),
+            walk_stack: Vec::new(),
+            out_nodes: Vec::new(),
+            stats: QueryStats::default(),
+            tol: (t1 - t0) * 1e-12,
+        };
+        if opts.preseed_depth > 0 {
+            bi.preseed(0, opts.preseed_depth);
+        }
+        bi
+    }
+
+    /// Query statistics accumulated so far.
+    pub fn stats(&self) -> QueryStats {
+        let (h, m) = self.cache.stats();
+        QueryStats { cache_hits: h, cache_misses: m, ..self.stats }
+    }
+
+    /// Number of tree nodes currently allocated (CPU-side metadata).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn preseed(&mut self, idx: u32, depth: u32) {
+        if depth == 0 {
+            return;
+        }
+        let (a, b) = {
+            let n = &self.nodes[idx as usize];
+            (n.a, n.b)
+        };
+        let mid = 0.5 * (a + b);
+        let (l, r) = self.bisect(idx, mid);
+        self.preseed(l, depth - 1);
+        self.preseed(r, depth - 1);
+    }
+
+    /// Split leaf `idx` at `x`, creating both children. Returns their ids.
+    fn bisect(&mut self, idx: u32, x: f64) -> (u32, u32) {
+        let node = self.nodes[idx as usize];
+        debug_assert!(node.is_leaf(), "bisect called on internal node");
+        debug_assert!(x > node.a && x < node.b, "split point outside node");
+        let (sl, sr) = split_seed(node.seed);
+        let l = self.nodes.len() as u32;
+        let r = l + 1;
+        self.nodes.push(Node { a: node.a, b: x, seed: sl, parent: idx, left: NIL, right: NIL });
+        self.nodes.push(Node { a: x, b: node.b, seed: sr, parent: idx, left: NIL, right: NIL });
+        self.nodes[idx as usize].left = l;
+        self.nodes[idx as usize].right = r;
+        self.stats.nodes_created += 2;
+        (l, r)
+    }
+
+    #[inline]
+    fn close(&self, x: f64, y: f64) -> bool {
+        (x - y).abs() <= self.tol
+    }
+
+    fn grab_buf(&mut self) -> Vec<f32> {
+        self.free.pop().unwrap_or_else(|| vec![0.0f32; self.size])
+    }
+
+    /// Ensure node `idx`'s increment is in the cache; returns nothing, the
+    /// caller re-reads through the cache (split to appease the borrow
+    /// checker without cloning values).
+    fn materialise(&mut self, idx: u32) {
+        if self.cache.peek(&idx).is_some() {
+            return;
+        }
+        // Walk up until we find a cached ancestor (or the root).
+        self.up_stack.clear();
+        let mut cur = idx;
+        loop {
+            if self.cache.peek(&cur).is_some() {
+                break;
+            }
+            self.up_stack.push(cur);
+            let parent = self.nodes[cur as usize].parent;
+            if parent == NIL {
+                break;
+            }
+            cur = parent;
+        }
+        self.stats.max_recompute_depth =
+            self.stats.max_recompute_depth.max(self.up_stack.len() as u32);
+
+        // If we stopped at the (uncached) root, sample it: W_{t0,t1} ~
+        // N(0, (t1 - t0) I) from the root seed.
+        if self.up_stack.last() == Some(&0) && self.cache.peek(&0).is_none() {
+            self.up_stack.pop();
+            let mut buf = self.grab_buf();
+            let scale = (self.t1 - self.t0).sqrt();
+            box_muller_fill(self.nodes[0].seed, scale, &mut buf);
+            self.stats.bridges_sampled += 1;
+            if let Some((_, old)) = self.cache.put(0, buf) {
+                self.free.push(old);
+            }
+        }
+
+        // Walk back down, bridging at every level. For a parent [a, b] split
+        // at x, the bridge W_{a,x} | W_{a,b} = N( (x-a)/(b-a) W_{a,b},
+        // (b-x)(x-a)/(b-a) I ) is *always* drawn from the left child's seed;
+        // the right child is the exact complement W_{a,b} - W_{a,x}.
+        while let Some(child) = self.up_stack.pop() {
+            let node = self.nodes[child as usize];
+            let parent = self.nodes[node.parent as usize];
+            let (left_id, right_id) = (parent.left, parent.right);
+            let left = self.nodes[left_id as usize];
+            let (a, b, x) = (parent.a, parent.b, left.b);
+            let frac = (x - a) / (b - a);
+            let sd = (((b - x) * (x - a)) / (b - a)).sqrt();
+
+            let mut wl = self.grab_buf();
+            box_muller_fill(left.seed, sd, &mut wl);
+            self.stats.bridges_sampled += 1;
+            {
+                let wp = self
+                    .cache
+                    .peek(&node.parent)
+                    .expect("parent increment must be cached during descent");
+                if child == left_id {
+                    for i in 0..self.size {
+                        wl[i] += (frac as f32) * wp[i];
+                    }
+                    // wl now holds W_left.
+                } else {
+                    for i in 0..self.size {
+                        wl[i] = wp[i] - (wl[i] + (frac as f32) * wp[i]);
+                    }
+                    // wl now holds W_right = W_parent - W_left.
+                }
+            }
+            let store_id = if child == left_id { left_id } else { right_id };
+            if let Some((_, old)) = self.cache.put(store_id, wl) {
+                self.free.push(old);
+            }
+        }
+    }
+
+    /// Find-or-create the list of nodes whose intervals partition `[s, t]`
+    /// (paper Algorithm 4), starting the search from the hint node.
+    fn traverse(&mut self, s: f64, t: f64) {
+        self.out_nodes.clear();
+        // Ascend from the hint until the query is contained.
+        let mut start = self.hint;
+        loop {
+            let n = &self.nodes[start as usize];
+            if (s >= n.a - self.tol && t <= n.b + self.tol) || n.parent == NIL {
+                break;
+            }
+            start = n.parent;
+        }
+        // Descend with an explicit stack. Intervals are processed
+        // left-to-right so `out_nodes` is ordered.
+        self.walk_stack.clear();
+        self.walk_stack.push((start, s, t));
+        while let Some((idx, c, d)) = self.walk_stack.pop() {
+            let node = self.nodes[idx as usize];
+            let c = if self.close(c, node.a) { node.a } else { c };
+            let d = if self.close(d, node.b) { node.b } else { d };
+            if c == node.a && d == node.b {
+                self.out_nodes.push(idx);
+                continue;
+            }
+            if node.is_leaf() {
+                if c == node.a {
+                    // Split at d; left child covers [a, d].
+                    let (l, _) = self.bisect(idx, d);
+                    self.out_nodes.push(l);
+                } else {
+                    // Split at c; the remainder [c, d] lives in the right
+                    // child (possibly needing another split there).
+                    let (_, r) = self.bisect(idx, c);
+                    self.walk_stack.push((r, c, d));
+                }
+            } else {
+                let m = self.nodes[node.left as usize].b;
+                if d <= m {
+                    self.walk_stack.push((node.left, c, d));
+                } else if c >= m {
+                    self.walk_stack.push((node.right, c, d));
+                } else {
+                    // Straddles the split: left part pushed LAST so it is
+                    // processed first (stack is LIFO).
+                    self.walk_stack.push((node.right, m, d));
+                    self.walk_stack.push((node.left, c, m));
+                }
+            }
+        }
+        if let Some(&last) = self.out_nodes.last() {
+            self.hint = last;
+        }
+    }
+}
+
+impl BrownianSource for BrownianInterval {
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f32]) {
+        check_interval((self.t0, self.t1), s, t);
+        assert_eq!(out.len(), self.size, "output buffer size mismatch");
+        self.stats.queries += 1;
+        self.traverse(s, t);
+        out.fill(0.0);
+        // Practically `out_nodes` has one or two elements (Appendix E,
+        // "Small intervals") — but arbitrary partitions are handled.
+        let parts = std::mem::take(&mut self.out_nodes);
+        for &idx in &parts {
+            self.materialise(idx);
+            let w = self
+                .cache
+                .get(&idx)
+                .expect("materialise() must have cached the node");
+            for i in 0..out.len() {
+                out[i] += w[i];
+            }
+        }
+        self.out_nodes = parts;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bi(seed: u64) -> BrownianInterval {
+        BrownianInterval::new(0.0, 1.0, 4, seed)
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = bi(7);
+        let mut b = bi(7);
+        for (s, t) in [(0.0, 0.25), (0.25, 0.5), (0.1, 0.9), (0.5, 1.0)] {
+            assert_eq!(a.increment_vec(s, t), b.increment_vec(s, t));
+        }
+    }
+
+    #[test]
+    fn repeat_query_identical() {
+        let mut a = bi(9);
+        let w1 = a.increment_vec(0.2, 0.7);
+        let w2 = a.increment_vec(0.2, 0.7);
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn chain_consistency_exact() {
+        // W(s, u) computed as one query equals the sum of sub-queries,
+        // bit-exactly, provided the coarse query comes first (so the fine
+        // queries refine its nodes).
+        let mut a = bi(11);
+        let whole = a.increment_vec(0.0, 1.0);
+        let mut sum = vec![0.0f32; 4];
+        for k in 0..10 {
+            let s = k as f64 / 10.0;
+            let t = (k + 1) as f64 / 10.0;
+            let w = a.increment_vec(s, t);
+            for i in 0..4 {
+                sum[i] += w[i];
+            }
+        }
+        for i in 0..4 {
+            assert!(
+                (whole[i] - sum[i]).abs() < 1e-4,
+                "channel {i}: {} vs {}",
+                whole[i],
+                sum[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sibling_sum_is_bit_exact() {
+        let mut a = bi(13);
+        let parent = a.increment_vec(0.0, 1.0);
+        let l = a.increment_vec(0.0, 0.5);
+        let r = a.increment_vec(0.5, 1.0);
+        for i in 0..4 {
+            assert_eq!(parent[i], l[i] + r[i], "channel {i}");
+        }
+    }
+
+    #[test]
+    fn cache_size_does_not_change_the_path() {
+        let opts_small = IntervalOptions { cache_capacity: 2, preseed_depth: 0 };
+        let opts_big = IntervalOptions { cache_capacity: 4096, preseed_depth: 0 };
+        let mut a = BrownianInterval::with_options(0.0, 1.0, 4, 5, opts_small);
+        let mut b = BrownianInterval::with_options(0.0, 1.0, 4, 5, opts_big);
+        let n = 64;
+        // Forward then backward sweep — the doubly-sequential pattern.
+        for k in 0..n {
+            let (s, t) = (k as f64 / n as f64, (k + 1) as f64 / n as f64);
+            assert_eq!(a.increment_vec(s, t), b.increment_vec(s, t));
+        }
+        for k in (0..n).rev() {
+            let (s, t) = (k as f64 / n as f64, (k + 1) as f64 / n as f64);
+            assert_eq!(a.increment_vec(s, t), b.increment_vec(s, t));
+        }
+    }
+
+    #[test]
+    fn preseeded_tree_same_law_shape() {
+        // Pre-seeding changes the realisation (different tree => different
+        // conditionals) but must still be deterministic and consistent.
+        let opts = IntervalOptions { cache_capacity: 64, preseed_depth: 4 };
+        let mut a = BrownianInterval::with_options(0.0, 1.0, 4, 5, opts);
+        let mut b = BrownianInterval::with_options(0.0, 1.0, 4, 5, opts);
+        let w1 = a.increment_vec(0.3, 0.6);
+        let w2 = b.increment_vec(0.3, 0.6);
+        assert_eq!(w1, w2);
+        let l = a.increment_vec(0.3, 0.45);
+        let r = a.increment_vec(0.45, 0.6);
+        for i in 0..4 {
+            assert!((w1[i] - (l[i] + r[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn increments_have_brownian_moments() {
+        // Var[W(s,t)] = t - s; check over many channels.
+        let mut a = BrownianInterval::new(0.0, 1.0, 50_000, 99);
+        let w = a.increment_vec(0.2, 0.45);
+        let n = w.len() as f64;
+        let mean = w.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = w.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 0.25).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn bridge_conditional_mean_is_linear() {
+        // Conditional on W(0,1), E[W(0,s)] = s * W(0,1). Check empirically
+        // across channels (each channel is an independent realisation).
+        let mut a = BrownianInterval::new(0.0, 1.0, 100_000, 3);
+        let whole = a.increment_vec(0.0, 1.0);
+        let part = a.increment_vec(0.0, 0.25);
+        // Regress part on whole: slope should be ~0.25.
+        let n = whole.len();
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            num += whole[i] as f64 * part[i] as f64;
+            den += (whole[i] as f64).powi(2);
+        }
+        let slope = num / den;
+        assert!((slope - 0.25).abs() < 0.01, "slope={slope}");
+    }
+
+    #[test]
+    fn doubly_sequential_hits_cache() {
+        let mut a = BrownianInterval::new(0.0, 1.0, 8, 17);
+        let n = 100;
+        for k in 0..n {
+            let _ = a.increment_vec(k as f64 / n as f64, (k + 1) as f64 / n as f64);
+        }
+        for k in (0..n).rev() {
+            let _ = a.increment_vec(k as f64 / n as f64, (k + 1) as f64 / n as f64);
+        }
+        let st = a.stats();
+        // The backward sweep re-reads nodes created on the forward sweep; the
+        // default cache (128) is large enough that most of them still live.
+        assert!(st.cache_hits > st.cache_misses, "stats: {st:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "s < t")]
+    fn rejects_degenerate_interval() {
+        let mut a = bi(1);
+        let mut out = vec![0.0; 4];
+        a.increment(0.5, 0.5, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside Brownian span")]
+    fn rejects_out_of_span() {
+        let mut a = bi(1);
+        let mut out = vec![0.0; 4];
+        a.increment(0.5, 1.5, &mut out);
+    }
+}

@@ -1,0 +1,181 @@
+//! Space–time Lévy area and approximate second iterated integrals
+//! (Appendix E, "Stochastic integrals").
+//!
+//! Higher-order SDE solvers (Rößler's SRK methods, the log-ODE method)
+//! consume, beyond the increment `W_{s,t}`, the *space–time Lévy area*
+//!
+//! ```text
+//! H_{s,t} = (1/(t-s)) ∫_s^t ( W_{s,r} - ((r-s)/(t-s)) W_{s,t} ) dr
+//! ```
+//!
+//! and (approximations to) the second iterated integral `𝕎_{s,t}`. For a
+//! single interval, `H_{s,t} ~ N(0, (t-s)/12)` independently of `W_{s,t}`
+//! (Lemma D.15 of the paper). Exact joint simulation of `(W, 𝕎)` is only
+//! known in dimensions 1–2, so we implement Davie's approximation
+//! (paper Appendix E, citing Davie 2014 / Foster 2020):
+//!
+//! ```text
+//! 𝕎̃_{s,t} = ½ W⊗W + H⊗W − W⊗H + λ,   λ antisymmetric,
+//!            λ_ij ~ N(0, (t-s)²/12)  for i < j.
+//! ```
+//!
+//! which matches the first two moments of the true Lévy area well enough
+//! for the O(1/N) 2-Wasserstein rates cited in the paper.
+
+use super::prng::{box_muller_fill, splitmix64};
+use super::{BrownianInterval, BrownianSource};
+
+/// Sample the space–time Lévy area `H_{s,t}` for `dim` channels.
+///
+/// Deterministic in `(seed, s, t, dim)`; independent of the increment by
+/// construction (separate stream).
+pub fn space_time_levy_area(seed: u64, s: f64, t: f64, dim: usize) -> Vec<f32> {
+    let mut h = vec![0.0f32; dim];
+    let sd = ((t - s) / 12.0).sqrt();
+    box_muller_fill(splitmix64(seed ^ 0x48_4C45_5659), sd, &mut h);
+    h
+}
+
+/// Davie's approximation to the second iterated (Stratonovich) integral.
+///
+/// Returns the `dim x dim` matrix `𝕎̃` in row-major order, built from the
+/// increment `w`, the space–time Lévy area `h`, and fresh antisymmetric
+/// bridge noise keyed by `seed`.
+pub fn davie_levy_area(seed: u64, s: f64, t: f64, w: &[f32], h: &[f32]) -> Vec<f32> {
+    assert_eq!(w.len(), h.len());
+    let d = w.len();
+    let mut out = vec![0.0f32; d * d];
+    // λ_ij for i<j, antisymmetric; N(0, (t-s)^2 / 12).
+    let n_upper = d * (d - 1) / 2;
+    let mut lam = vec![0.0f32; n_upper.max(1)];
+    let sd = (((t - s) * (t - s)) / 12.0).sqrt();
+    box_muller_fill(splitmix64(seed ^ 0x4441_5649_45), sd, &mut lam);
+    let mut k = 0;
+    for i in 0..d {
+        for j in 0..d {
+            let mut v = 0.5 * w[i] * w[j] + h[i] * w[j] - w[i] * h[j];
+            if i < j {
+                v += lam[k + (j - i - 1)];
+            } else if j < i {
+                // antisymmetric partner of (j, i)
+                let base = upper_index(j, i, d);
+                v -= lam[base];
+            }
+            out[i * d + j] = v;
+        }
+        if i + 1 < d {
+            k += d - i - 1;
+        }
+    }
+    out
+}
+
+/// Flat index of the strictly-upper-triangular entry `(i, j)`, `i < j`.
+fn upper_index(i: usize, j: usize, d: usize) -> usize {
+    // entries before row i: sum_{r<i} (d - r - 1)
+    let before: usize = (0..i).map(|r| d - r - 1).sum();
+    before + (j - i - 1)
+}
+
+/// A [`BrownianInterval`] augmented with space–time Lévy areas, for
+/// higher-order solvers. Increments come from the exact interval structure;
+/// `H` is sampled per queried interval from an independent stream keyed by
+/// the query endpoints (sufficient for the non-overlapping step queries an
+/// SDE solver makes, which is the supported access pattern).
+pub struct BrownianWithLevy {
+    inner: BrownianInterval,
+    seed: u64,
+}
+
+impl BrownianWithLevy {
+    /// Wrap a Brownian Interval; `seed` keys the Lévy-area stream.
+    pub fn new(inner: BrownianInterval, seed: u64) -> Self {
+        Self { inner, seed }
+    }
+
+    /// Increment and space–time Lévy area over `[s, t]`.
+    pub fn increment_and_levy(&mut self, s: f64, t: f64) -> (Vec<f32>, Vec<f32>) {
+        let w = self.inner.increment_vec(s, t);
+        let key = self.seed ^ (s.to_bits().rotate_left(17)) ^ t.to_bits();
+        let h = space_time_levy_area(key, s, t, w.len());
+        (w, h)
+    }
+
+    /// Increment, Lévy area, and Davie second-iterated-integral matrix.
+    pub fn increment_levy_and_area(
+        &mut self,
+        s: f64,
+        t: f64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (w, h) = self.increment_and_levy(s, t);
+        let key = self.seed ^ s.to_bits() ^ (t.to_bits().rotate_left(31));
+        let area = davie_levy_area(key, s, t, &w, &h);
+        (w, h, area)
+    }
+
+    /// Access the underlying interval source.
+    pub fn inner_mut(&mut self) -> &mut BrownianInterval {
+        &mut self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levy_area_moments() {
+        // H ~ N(0, h/12) with h = 0.3.
+        let h = space_time_levy_area(42, 0.0, 0.3, 100_000);
+        let n = h.len() as f64;
+        let var = h.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n;
+        assert!((var - 0.3 / 12.0).abs() < 0.002, "var={var}");
+    }
+
+    #[test]
+    fn levy_area_deterministic() {
+        assert_eq!(
+            space_time_levy_area(7, 0.1, 0.5, 16),
+            space_time_levy_area(7, 0.1, 0.5, 16)
+        );
+    }
+
+    #[test]
+    fn davie_diagonal_is_half_square() {
+        // 𝕎̃_ii = ½ W_i² exactly (H and λ cancel on the diagonal).
+        let w = vec![1.5f32, -0.5, 2.0];
+        let h = vec![0.3f32, 0.1, -0.2];
+        let a = davie_levy_area(3, 0.0, 1.0, &w, &h);
+        for i in 0..3 {
+            assert!((a[i * 3 + i] - 0.5 * w[i] * w[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn davie_satisfies_chen_symmetry() {
+        // 𝕎̃_ij + 𝕎̃_ji = W_i W_j (the symmetric part is exact).
+        let w = vec![0.7f32, -1.2, 0.4, 2.2];
+        let h = vec![0.2f32, 0.05, -0.3, 0.0];
+        let a = davie_levy_area(9, 0.0, 0.5, &w, &h);
+        for i in 0..4 {
+            for j in 0..4 {
+                let sym = a[i * 4 + j] + a[j * 4 + i];
+                assert!(
+                    (sym - w[i] * w[j]).abs() < 1e-5,
+                    "({i},{j}): {sym} vs {}",
+                    w[i] * w[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn with_levy_wrapper_runs() {
+        let bi = BrownianInterval::new(0.0, 1.0, 4, 11);
+        let mut bl = BrownianWithLevy::new(bi, 13);
+        let (w, h, a) = bl.increment_levy_and_area(0.0, 0.25);
+        assert_eq!(w.len(), 4);
+        assert_eq!(h.len(), 4);
+        assert_eq!(a.len(), 16);
+    }
+}

@@ -1,0 +1,269 @@
+//! Fixed-capacity least-recently-used cache.
+//!
+//! The Brownian Interval caches computed increments `W_{s,t}` per tree node
+//! (Section 4: "a fixed-size Least Recently Used (LRU) cache on the computed
+//! increments"). Capacity is what bounds the structure's *value* memory to
+//! `O(1)`; the tree itself stores only `(interval, seed)` metadata.
+//!
+//! Implementation: a `HashMap<K, slot>` into an arena of doubly-linked slots.
+//! All operations are O(1); the hot path (`get` on a hit) performs no
+//! allocation.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+const NIL: usize = usize::MAX;
+
+struct Slot<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// A fixed-capacity LRU cache.
+pub struct LruCache<K, V> {
+    map: HashMap<K, usize>,
+    slots: Vec<Slot<K, V>>,
+    head: usize, // most recently used
+    tail: usize, // least recently used
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// Create a cache holding at most `capacity` entries (`capacity >= 1`).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "LRU capacity must be >= 1");
+        Self {
+            map: HashMap::with_capacity(capacity + 1),
+            slots: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            capacity,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if no entries are cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Capacity this cache was created with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// (hits, misses) counters — used by the benchmark harness to report
+    /// cache effectiveness, and by tests to verify access patterns.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    fn detach(&mut self, idx: usize) {
+        let (prev, next) = (self.slots[idx].prev, self.slots[idx].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.slots[idx].prev = NIL;
+        self.slots[idx].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Look up `key`, marking it most-recently-used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        match self.map.get(key).copied() {
+            Some(idx) => {
+                self.hits += 1;
+                if self.head != idx {
+                    self.detach(idx);
+                    self.push_front(idx);
+                }
+                Some(&self.slots[idx].value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Check for `key` without touching recency or stats.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|&idx| &self.slots[idx].value)
+    }
+
+    /// Insert `key -> value`, evicting the least-recently-used entry when at
+    /// capacity. Returns the evicted `(key, value)`, if any.
+    pub fn put(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if let Some(&idx) = self.map.get(&key) {
+            // Overwrite in place, mark as MRU.
+            self.slots[idx].value = value;
+            if self.head != idx {
+                self.detach(idx);
+                self.push_front(idx);
+            }
+            return None;
+        }
+        if self.map.len() < self.capacity {
+            let idx = self.slots.len();
+            self.slots.push(Slot { key: key.clone(), value, prev: NIL, next: NIL });
+            self.map.insert(key, idx);
+            self.push_front(idx);
+            None
+        } else {
+            // Recycle the LRU slot.
+            let idx = self.tail;
+            self.detach(idx);
+            let old_key = std::mem::replace(&mut self.slots[idx].key, key.clone());
+            let old_val = std::mem::replace(&mut self.slots[idx].value, value);
+            self.map.remove(&old_key);
+            self.map.insert(key, idx);
+            self.push_front(idx);
+            Some((old_key, old_val))
+        }
+    }
+
+    /// Drop all entries (keeps allocated slots for reuse).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.slots.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_put_get() {
+        let mut c = LruCache::new(2);
+        c.put(1, "a");
+        c.put(2, "b");
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.get(&2), Some(&"b"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        c.get(&1); // 2 is now LRU
+        let evicted = c.put(3, 30);
+        assert_eq!(evicted, Some((2, 20)));
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.get(&3), Some(&30));
+    }
+
+    #[test]
+    fn overwrite_updates_value_and_recency() {
+        let mut c = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        c.put(1, 11); // 1 becomes MRU with new value
+        assert_eq!(c.put(3, 30), Some((2, 20)));
+        assert_eq!(c.get(&1), Some(&11));
+    }
+
+    #[test]
+    fn capacity_one_behaves() {
+        let mut c = LruCache::new(1);
+        assert!(c.put(1, 1).is_none());
+        assert_eq!(c.put(2, 2), Some((1, 1)));
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.get(&2), Some(&2));
+    }
+
+    #[test]
+    fn stats_count_hits_and_misses() {
+        let mut c = LruCache::new(2);
+        c.put(1, 1);
+        c.get(&1);
+        c.get(&9);
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn peek_does_not_change_recency() {
+        let mut c = LruCache::new(2);
+        c.put(1, 1);
+        c.put(2, 2);
+        c.peek(&1);
+        // 1 is still LRU despite the peek:
+        assert_eq!(c.put(3, 3), Some((1, 1)));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = LruCache::new(4);
+        for i in 0..4 {
+            c.put(i, i);
+        }
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&0), None);
+        c.put(7, 7);
+        assert_eq!(c.get(&7), Some(&7));
+    }
+
+    #[test]
+    fn stress_against_reference_model() {
+        // Compare against a simple Vec-based model under a pseudo-random
+        // workload.
+        let mut c = LruCache::new(8);
+        let mut model: Vec<(u32, u32)> = Vec::new(); // MRU-first
+        let mut state = 0x12345u64;
+        for step in 0..10_000u32 {
+            state = crate::brownian::splitmix64(state);
+            let key = (state % 24) as u32;
+            if state & 1 == 0 {
+                // put
+                model.retain(|&(k, _)| k != key);
+                model.insert(0, (key, step));
+                model.truncate(8);
+                c.put(key, step);
+            } else {
+                // get
+                let expect = model.iter().position(|&(k, _)| k == key);
+                let got = c.get(&key).copied();
+                match expect {
+                    Some(pos) => {
+                        let (k, v) = model.remove(pos);
+                        model.insert(0, (k, v));
+                        assert_eq!(got, Some(v));
+                    }
+                    None => assert_eq!(got, None),
+                }
+            }
+        }
+    }
+}

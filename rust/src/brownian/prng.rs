@@ -1,0 +1,180 @@
+//! Splittable counter-based PRNG.
+//!
+//! The Brownian Interval requires a *splittable* PRNG (Section 4 of the
+//! paper, citing Salmon et al. 2011 and Claessen & Pałka 2013): each tree
+//! node carries a seed, and a child's seed is derived deterministically from
+//! its parent's, so any node's noise can be regenerated without storing it.
+//!
+//! We use the SplitMix64 finalizer as the mixing function. It is invertible
+//! (hence a bijection on `u64`), passes BigCrush as a stream generator, and
+//! is what `rand`'s `SplitMix64` and JAX's internal seeding derive from.
+//! Splitting hashes the parent seed with a distinct odd constant per child,
+//! which is exactly the "dovetailing" construction of Claessen & Pałka.
+
+/// One round of the SplitMix64 output function (Stafford's Mix13 finalizer).
+///
+/// Bijective on `u64`; consecutive counters produce decorrelated outputs.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministically derive the two child seeds of `seed`.
+///
+/// Children of distinct parents never collide in practice: the map
+/// `seed -> (left, right)` is built from two independent bijective mixes.
+#[inline]
+pub fn split_seed(seed: u64) -> (u64, u64) {
+    // Hash with two distinct odd multipliers before mixing so that the left
+    // and right streams are decorrelated from each other *and* from the
+    // parent's own output stream.
+    let left = splitmix64(seed ^ 0xA5A5_A5A5_5A5A_5A5A);
+    let right = splitmix64(seed ^ 0x3C3C_C3C3_9696_6969);
+    (left, right)
+}
+
+/// A tiny counter-based stream generator seeded by a node seed.
+///
+/// `SplitPrng` is *stateless across queries*: output `i` of seed `s` is
+/// `splitmix64(splitmix64(s) + i)`, so any slice of the stream can be
+/// regenerated on demand — the property the Brownian Interval relies on to
+/// keep only `O(1)` memory.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitPrng {
+    base: u64,
+    ctr: u64,
+}
+
+impl SplitPrng {
+    /// Create a generator for the stream of `seed`.
+    #[inline]
+    pub fn new(seed: u64) -> Self {
+        Self { base: splitmix64(seed), ctr: 0 }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let out = splitmix64(self.base.wrapping_add(self.ctr));
+        self.ctr = self.ctr.wrapping_add(1);
+        out
+    }
+
+    /// Uniform in `(0, 1)` (never exactly 0, safe for `ln`).
+    #[inline]
+    pub fn next_uniform(&mut self) -> f64 {
+        // 53 random mantissa bits; add half an ulp to stay strictly positive.
+        let bits = self.next_u64() >> 11;
+        (bits as f64 + 0.5) * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Standard normal via Box–Muller (uses two uniforms per pair).
+    #[inline]
+    pub fn next_normal_pair(&mut self) -> (f64, f64) {
+        let u1 = self.next_uniform();
+        let u2 = self.next_uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = std::f64::consts::TAU * u2;
+        (r * theta.cos(), r * theta.sin())
+    }
+}
+
+/// Fill `out` with iid `N(0, scale^2)` samples from the stream of `seed`.
+///
+/// This is the single hot allocation-free primitive every Brownian source
+/// builds on. Deterministic in `(seed, out.len(), scale)`.
+pub fn box_muller_fill(seed: u64, scale: f64, out: &mut [f32]) {
+    let mut rng = SplitPrng::new(seed);
+    let mut i = 0;
+    while i + 1 < out.len() {
+        let (a, b) = rng.next_normal_pair();
+        out[i] = (a * scale) as f32;
+        out[i + 1] = (b * scale) as f32;
+        i += 2;
+    }
+    if i < out.len() {
+        let (a, _) = rng.next_normal_pair();
+        out[i] = (a * scale) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values_nonzero_and_distinct() {
+        let a = splitmix64(0);
+        let b = splitmix64(1);
+        let c = splitmix64(2);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a, 0);
+    }
+
+    #[test]
+    fn split_children_differ_from_parent_and_each_other() {
+        for seed in [0u64, 1, 42, u64::MAX, 0xDEADBEEF] {
+            let (l, r) = split_seed(seed);
+            assert_ne!(l, r);
+            assert_ne!(l, seed);
+            assert_ne!(r, seed);
+        }
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        assert_eq!(split_seed(99), split_seed(99));
+    }
+
+    #[test]
+    fn stream_is_replayable() {
+        let mut a = SplitPrng::new(7);
+        let mut b = SplitPrng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_open_unit_interval() {
+        let mut rng = SplitPrng::new(3);
+        for _ in 0..10_000 {
+            let u = rng.next_uniform();
+            assert!(u > 0.0 && u < 1.0);
+        }
+    }
+
+    #[test]
+    fn normals_have_unit_moments() {
+        let mut out = vec![0.0f32; 200_000];
+        box_muller_fill(12345, 1.0, &mut out);
+        let n = out.len() as f64;
+        let mean: f64 = out.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var: f64 =
+            out.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn box_muller_respects_scale() {
+        let mut out = vec![0.0f32; 100_000];
+        box_muller_fill(5, 0.5, &mut out);
+        let n = out.len() as f64;
+        let var: f64 = out.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n;
+        assert!((var - 0.25).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn different_seeds_give_different_streams() {
+        let mut a = vec![0.0f32; 16];
+        let mut b = vec![0.0f32; 16];
+        box_muller_fill(1, 1.0, &mut a);
+        box_muller_fill(2, 1.0, &mut b);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,108 @@
+//! The naive stored-path baseline: presample every increment on a fixed
+//! grid and keep all of them in memory (`O(T)` memory — the cost the paper's
+//! Section 4 opens with). Exact on grid-aligned queries; off-grid endpoints
+//! are snapped to the nearest grid point.
+
+use super::prng::box_muller_fill;
+use super::{check_interval, BrownianSource};
+
+/// Brownian motion stored as cumulative sums on a uniform grid.
+pub struct StoredPath {
+    t0: f64,
+    t1: f64,
+    size: usize,
+    steps: usize,
+    /// `cum[k * size + i]` = W_i(t0 + k*dt) - W_i(t0); length (steps+1)*size.
+    cum: Vec<f32>,
+}
+
+impl StoredPath {
+    /// Presample `steps` uniform increments over `[t0, t1]`.
+    pub fn new(t0: f64, t1: f64, size: usize, seed: u64, steps: usize) -> Self {
+        assert!(t1 > t0 && steps >= 1 && size >= 1);
+        let dt = (t1 - t0) / steps as f64;
+        let mut cum = vec![0.0f32; (steps + 1) * size];
+        let mut inc = vec![0.0f32; size];
+        for k in 0..steps {
+            box_muller_fill(seed.wrapping_add(k as u64 * 0x9E37_79B9), dt.sqrt(), &mut inc);
+            let (prev, next) = cum.split_at_mut((k + 1) * size);
+            let prev_row = &prev[k * size..];
+            for i in 0..size {
+                next[i] = prev_row[i] + inc[i];
+            }
+        }
+        Self { t0, t1, size, steps, cum }
+    }
+
+    /// Memory used by the stored values, in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.cum.len() * std::mem::size_of::<f32>()
+    }
+
+    fn grid_index(&self, t: f64) -> usize {
+        let dt = (self.t1 - self.t0) / self.steps as f64;
+        let k = ((t - self.t0) / dt).round() as i64;
+        k.clamp(0, self.steps as i64) as usize
+    }
+}
+
+impl BrownianSource for StoredPath {
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f32]) {
+        check_interval((self.t0, self.t1), s, t);
+        assert_eq!(out.len(), self.size);
+        let (ks, kt) = (self.grid_index(s), self.grid_index(t));
+        let a = &self.cum[ks * self.size..(ks + 1) * self.size];
+        let b = &self.cum[kt * self.size..(kt + 1) * self.size];
+        for i in 0..self.size {
+            out[i] = b[i] - a[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_consistency_exact_on_grid() {
+        let mut p = StoredPath::new(0.0, 1.0, 3, 42, 100);
+        let whole = p.increment_vec(0.0, 1.0);
+        let l = p.increment_vec(0.0, 0.37); // snaps to 0.37
+        let r = p.increment_vec(0.37, 1.0);
+        for i in 0..3 {
+            // Subtraction of cumulative sums: exact up to one f32 rounding.
+            assert!((whole[i] - (l[i] + r[i])).abs() <= 1e-6 * whole[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = StoredPath::new(0.0, 1.0, 3, 5, 64);
+        let mut b = StoredPath::new(0.0, 1.0, 3, 5, 64);
+        assert_eq!(a.increment_vec(0.25, 0.75), b.increment_vec(0.25, 0.75));
+    }
+
+    #[test]
+    fn memory_scales_with_steps() {
+        let small = StoredPath::new(0.0, 1.0, 2, 1, 10);
+        let big = StoredPath::new(0.0, 1.0, 2, 1, 1000);
+        assert!(big.memory_bytes() > 50 * small.memory_bytes());
+    }
+
+    #[test]
+    fn moments() {
+        let mut p = StoredPath::new(0.0, 1.0, 50_000, 9, 50);
+        let w = p.increment_vec(0.0, 1.0);
+        let n = w.len() as f64;
+        let var = w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n;
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+}

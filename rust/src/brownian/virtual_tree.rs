@@ -1,0 +1,186 @@
+//! The Virtual Brownian Tree baseline (Li et al. 2020, "Scalable Gradients
+//! for Stochastic Differential Equations"; paper Section 4's comparator).
+//!
+//! The real line is approximated by a *fixed* dyadic tree of depth
+//! `ceil(log2((t1 - t0) / eps))`. To evaluate `W(s)` the tree is descended
+//! from the root, bridging at each midpoint with noise derived from a
+//! splittable seed, until the containing dyadic interval is narrower than
+//! `eps`; the value at the nearest dyadic point is returned. Samples are
+//! therefore **approximate** (resolution `eps`) and every query costs
+//! `O(log(1/eps))` — both in contrast to the Brownian Interval. No state is
+//! kept between queries beyond the two endpoint values, which is the
+//! structure's selling point (O(1) memory) and its weakness (no reuse).
+
+use super::prng::{box_muller_fill, split_seed, splitmix64};
+use super::{check_interval, BrownianSource};
+
+/// Approximate Brownian motion via dyadic bisection to tolerance `eps`.
+pub struct VirtualBrownianTree {
+    t0: f64,
+    t1: f64,
+    size: usize,
+    seed: u64,
+    eps: f64,
+    depth: u32,
+    /// W(t1) - W(t0), fixed at construction (the root increment).
+    w_total: Vec<f32>,
+    /// Scratch buffers for the two bridge endpoints during descent.
+    scratch_a: Vec<f32>,
+    scratch_b: Vec<f32>,
+    scratch_mid: Vec<f32>,
+    scratch_noise: Vec<f32>,
+    /// Number of bridge evaluations performed (for benchmarks).
+    pub bridge_count: u64,
+}
+
+impl VirtualBrownianTree {
+    /// Create a tree over `[t0, t1]` with `size` channels and resolution
+    /// `eps` (the paper's experiments use the torchsde default `eps = 1e-5`).
+    pub fn new(t0: f64, t1: f64, size: usize, seed: u64, eps: f64) -> Self {
+        assert!(t1 > t0 && eps > 0.0);
+        let depth = (((t1 - t0) / eps).log2().ceil() as u32).max(1);
+        let mut w_total = vec![0.0f32; size];
+        box_muller_fill(splitmix64(seed), (t1 - t0).sqrt(), &mut w_total);
+        Self {
+            t0,
+            t1,
+            size,
+            seed,
+            eps,
+            depth,
+            w_total,
+            scratch_a: vec![0.0; size],
+            scratch_b: vec![0.0; size],
+            scratch_mid: vec![0.0; size],
+            scratch_noise: vec![0.0; size],
+            bridge_count: 0,
+        }
+    }
+
+    /// Resolution of the dyadic discretisation.
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Evaluate `W(t) - W(t0)` into `out` by descending the dyadic tree.
+    fn eval_at(&mut self, t: f64, out: &mut [f32]) {
+        // Descend [a, b] halving each level. Invariants: scratch_a = W(a),
+        // scratch_b = W(b) (as increments from t0); seed identifies [a, b].
+        let (mut a, mut b) = (self.t0, self.t1);
+        let mut seed = self.seed;
+        self.scratch_a.fill(0.0);
+        self.scratch_b.copy_from_slice(&self.w_total);
+        for _ in 0..self.depth {
+            if b - a <= self.eps {
+                break;
+            }
+            let m = 0.5 * (a + b);
+            // Bridge at the midpoint: W(m) | W(a), W(b) =
+            //   N( (W(a)+W(b))/2 , (b-a)/4 ).
+            let sd = (0.25 * (b - a)).sqrt();
+            // Midpoint noise is keyed off this interval's seed so it is
+            // identical no matter the query order.
+            box_muller_fill(splitmix64(seed ^ 0x5bf0_3635), sd, &mut self.scratch_noise);
+            self.bridge_count += 1;
+            for i in 0..self.size {
+                self.scratch_mid[i] =
+                    0.5 * (self.scratch_a[i] + self.scratch_b[i]) + self.scratch_noise[i];
+            }
+            let (sl, sr) = split_seed(seed);
+            if t < m {
+                b = m;
+                seed = sl;
+                self.scratch_b.copy_from_slice(&self.scratch_mid);
+            } else {
+                a = m;
+                seed = sr;
+                self.scratch_a.copy_from_slice(&self.scratch_mid);
+            }
+        }
+        // Nearest-endpoint approximation at the leaf (resolution eps).
+        if t - a <= b - t {
+            out.copy_from_slice(&self.scratch_a);
+        } else {
+            out.copy_from_slice(&self.scratch_b);
+        }
+    }
+}
+
+impl BrownianSource for VirtualBrownianTree {
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f32]) {
+        check_interval((self.t0, self.t1), s, t);
+        assert_eq!(out.len(), self.size);
+        // W(t) - W(s): two full descents per query.
+        let mut ws = vec![0.0f32; self.size];
+        self.eval_at(s, &mut ws);
+        self.eval_at(t, out);
+        for i in 0..self.size {
+            out[i] -= ws[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = VirtualBrownianTree::new(0.0, 1.0, 4, 3, 1e-5);
+        let mut b = VirtualBrownianTree::new(0.0, 1.0, 4, 3, 1e-5);
+        for (s, t) in [(0.0, 0.3), (0.3, 0.6), (0.1, 0.9)] {
+            assert_eq!(a.increment_vec(s, t), b.increment_vec(s, t));
+        }
+    }
+
+    #[test]
+    fn query_order_does_not_matter() {
+        let mut a = VirtualBrownianTree::new(0.0, 1.0, 4, 3, 1e-6);
+        let mut b = VirtualBrownianTree::new(0.0, 1.0, 4, 3, 1e-6);
+        let w_a1 = a.increment_vec(0.1, 0.2);
+        let w_a2 = a.increment_vec(0.7, 0.8);
+        let w_b2 = b.increment_vec(0.7, 0.8);
+        let w_b1 = b.increment_vec(0.1, 0.2);
+        assert_eq!(w_a1, w_b1);
+        assert_eq!(w_a2, w_b2);
+    }
+
+    #[test]
+    fn chain_consistency_within_tolerance() {
+        let mut a = VirtualBrownianTree::new(0.0, 1.0, 4, 5, 1e-7);
+        let whole = a.increment_vec(0.0, 1.0);
+        let l = a.increment_vec(0.0, 0.5);
+        let r = a.increment_vec(0.5, 1.0);
+        for i in 0..4 {
+            assert!((whole[i] - (l[i] + r[i])).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn increments_have_brownian_moments() {
+        let mut a = VirtualBrownianTree::new(0.0, 1.0, 50_000, 7, 1e-5);
+        let w = a.increment_vec(0.25, 0.5);
+        let n = w.len() as f64;
+        let mean = w.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = w.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 0.25).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn query_cost_grows_with_resolution() {
+        let mut coarse = VirtualBrownianTree::new(0.0, 1.0, 1, 7, 1e-2);
+        let mut fine = VirtualBrownianTree::new(0.0, 1.0, 1, 7, 1e-8);
+        let _ = coarse.increment_vec(0.4, 0.6);
+        let _ = fine.increment_vec(0.4, 0.6);
+        assert!(fine.bridge_count > 2 * coarse.bridge_count);
+    }
+}

@@ -1,0 +1,284 @@
+//! Experiment configuration.
+//!
+//! Configurations are JSON files (parsed with the in-tree [`crate::util::json`]
+//! module) with CLI overrides applied on top — see `configs/*.json` for the
+//! shipped presets matching the paper's experiments. Every trainer in
+//! [`crate::coordinator`] is driven by one of these structs.
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Which solver an experiment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// The paper's reversible Heun method (1 field evaluation / step).
+    ReversibleHeun,
+    /// The midpoint baseline (2 evaluations / step).
+    Midpoint,
+    /// Standard Heun (2 evaluations / step).
+    Heun,
+}
+
+impl SolverKind {
+    /// Parse from the manifest/CLI string form.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "reversible_heun" | "revheun" => Ok(Self::ReversibleHeun),
+            "midpoint" => Ok(Self::Midpoint),
+            "heun" => Ok(Self::Heun),
+            other => anyhow::bail!("unknown solver '{other}'"),
+        }
+    }
+
+    /// String form used in artifact names.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::ReversibleHeun => "reversible_heun",
+            Self::Midpoint => "midpoint",
+            Self::Heun => "heun",
+        }
+    }
+}
+
+/// Which dataset an experiment trains on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Time-dependent Ornstein–Uhlenbeck (Appendix F.7).
+    Ou,
+    /// SGD weight trajectories (Appendix F.3 substitute).
+    Weights,
+    /// Air-quality-like bivariate daily series (Appendix F.4 substitute).
+    Air,
+}
+
+impl DatasetKind {
+    /// Parse from string.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "ou" => Ok(Self::Ou),
+            "weights" => Ok(Self::Weights),
+            "air" => Ok(Self::Air),
+            other => anyhow::bail!("unknown dataset '{other}'"),
+        }
+    }
+
+    /// String form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Ou => "ou",
+            Self::Weights => "weights",
+            Self::Air => "air",
+        }
+    }
+
+    /// (seq_len, channels) of the dataset.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Self::Ou => (32, 1),
+            Self::Weights => (50, 1),
+            Self::Air => (24, 2),
+        }
+    }
+}
+
+/// Full training configuration (defaults are the scaled-down versions of the
+/// paper's hyperparameters — Appendix F — sized for CPU).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Dataset to train on.
+    pub dataset: DatasetKind,
+    /// SDE solver.
+    pub solver: SolverKind,
+    /// Training steps (generator steps for GANs).
+    pub steps: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// Number of dataset series to generate.
+    pub data_size: usize,
+    /// Learning rate for the "initial" parameter group (ζ_θ, ξ_φ).
+    pub lr_init: f32,
+    /// Learning rate for the vector-field parameter group.
+    pub lr_field: f32,
+    /// Whether the discriminator is Lipschitz-clipped (Section 5). When
+    /// false, an R1-style gradient penalty executable is used instead
+    /// (the Table-11 baseline).
+    pub clip: bool,
+    /// RNG seed.
+    pub seed: u64,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Per-step Brownian noise via the Brownian Interval (true) or the
+    /// Virtual Brownian Tree baseline (false) — the Table-10 toggle.
+    pub brownian_interval: bool,
+    /// Initialisation scale α for the initial-condition networks (eq. 33).
+    pub alpha: f32,
+    /// Initialisation scale β for the vector-field networks (eq. 33).
+    pub beta: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetKind::Ou,
+            solver: SolverKind::ReversibleHeun,
+            steps: 300,
+            batch: 128,
+            data_size: 1024,
+            lr_init: 1.6e-3,
+            lr_field: 2.0e-4,
+            clip: true,
+            seed: 42,
+            artifacts_dir: "artifacts".to_string(),
+            brownian_interval: true,
+            alpha: 1.0,
+            beta: 0.5,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a JSON file, then apply CLI overrides.
+    pub fn load(path: Option<&str>, args: &mut Args) -> anyhow::Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("reading config {p}: {e}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))?;
+            cfg.apply_json(&j)?;
+        }
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    /// Apply fields present in a JSON object.
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        if let Some(s) = j.get("dataset").and_then(Json::as_str) {
+            self.dataset = DatasetKind::parse(s)?;
+        }
+        if let Some(s) = j.get("solver").and_then(Json::as_str) {
+            self.solver = SolverKind::parse(s)?;
+        }
+        let num = |k: &str, dst: &mut f64| {
+            if let Some(v) = j.get(k).and_then(Json::as_f64) {
+                *dst = v;
+            }
+        };
+        let mut f = self.steps as f64;
+        num("steps", &mut f);
+        self.steps = f as usize;
+        f = self.batch as f64;
+        num("batch", &mut f);
+        self.batch = f as usize;
+        f = self.data_size as f64;
+        num("data_size", &mut f);
+        self.data_size = f as usize;
+        f = self.lr_init as f64;
+        num("lr_init", &mut f);
+        self.lr_init = f as f32;
+        f = self.lr_field as f64;
+        num("lr_field", &mut f);
+        self.lr_field = f as f32;
+        f = self.seed as f64;
+        num("seed", &mut f);
+        self.seed = f as u64;
+        f = self.alpha as f64;
+        num("alpha", &mut f);
+        self.alpha = f as f32;
+        f = self.beta as f64;
+        num("beta", &mut f);
+        self.beta = f as f32;
+        if let Some(Json::Bool(b)) = j.get("clip") {
+            self.clip = *b;
+        }
+        if let Some(Json::Bool(b)) = j.get("brownian_interval") {
+            self.brownian_interval = *b;
+        }
+        if let Some(s) = j.get("artifacts_dir").and_then(Json::as_str) {
+            self.artifacts_dir = s.to_string();
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (`--steps`, `--solver`, ...).
+    pub fn apply_args(&mut self, args: &mut Args) -> anyhow::Result<()> {
+        if let Some(s) = args.get("dataset") {
+            self.dataset = DatasetKind::parse(&s)?;
+        }
+        if let Some(s) = args.get("solver") {
+            self.solver = SolverKind::parse(&s)?;
+        }
+        self.steps = args.get_parse_or("steps", self.steps);
+        self.batch = args.get_parse_or("batch", self.batch);
+        self.data_size = args.get_parse_or("data-size", self.data_size);
+        self.seed = args.get_parse_or("seed", self.seed);
+        self.lr_init = args.get_parse_or("lr-init", self.lr_init);
+        self.lr_field = args.get_parse_or("lr-field", self.lr_field);
+        if args.flag("no-clip") {
+            self.clip = false;
+        }
+        if args.flag("virtual-brownian-tree") {
+            self.brownian_interval = false;
+        }
+        self.artifacts_dir = args.get_or("artifacts", &self.artifacts_dir);
+        self.alpha = args.get_parse_or("alpha", self.alpha);
+        self.beta = args.get_parse_or("beta", self.beta);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.dataset, DatasetKind::Ou);
+        assert_eq!(c.solver, SolverKind::ReversibleHeun);
+        assert!(c.clip);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{"dataset": "air", "solver": "midpoint", "steps": 50, "clip": false}"#,
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.dataset, DatasetKind::Air);
+        assert_eq!(c.solver, SolverKind::Midpoint);
+        assert_eq!(c.steps, 50);
+        assert!(!c.clip);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut args = Args::parse(
+            "train --solver heun --steps 9 --no-clip"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut c = TrainConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.solver, SolverKind::Heun);
+        assert_eq!(c.steps, 9);
+        assert!(!c.clip);
+        assert!(args.finish().is_ok());
+    }
+
+    #[test]
+    fn solver_roundtrip() {
+        for s in [SolverKind::ReversibleHeun, SolverKind::Midpoint, SolverKind::Heun] {
+            assert_eq!(SolverKind::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(SolverKind::parse("rk4").is_err());
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        assert_eq!(DatasetKind::Ou.shape(), (32, 1));
+        assert_eq!(DatasetKind::Air.shape(), (24, 2));
+        assert_eq!(DatasetKind::Weights.shape(), (50, 1));
+    }
+}

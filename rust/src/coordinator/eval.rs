@@ -1,0 +1,40 @@
+//! Model evaluation: the Appendix-F.1 metric battery.
+
+use crate::data::TimeSeriesDataset;
+use crate::metrics;
+
+/// Test metrics for a generative model (Appendix F.1).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalReport {
+    /// Real-vs-fake classification accuracy (0.5 = indistinguishable).
+    pub real_fake_acc: f64,
+    /// Train-on-synthetic-test-on-real forecasting MSE.
+    pub prediction_loss: f64,
+    /// Signature-feature MMD.
+    pub mmd: f64,
+}
+
+impl EvalReport {
+    /// Format like a paper table row.
+    pub fn row(&self) -> String {
+        format!(
+            "real/fake acc {:5.1}%   prediction {:8.4}   MMD {:9.4e}",
+            100.0 * self.real_fake_acc,
+            self.prediction_loss,
+            self.mmd
+        )
+    }
+}
+
+/// Score generated data against a held-out real test set.
+pub fn evaluate_generator(
+    real_test: &TimeSeriesDataset,
+    fake: &TimeSeriesDataset,
+    seed: u64,
+) -> EvalReport {
+    EvalReport {
+        real_fake_acc: metrics::real_fake_accuracy(real_test, fake, seed),
+        prediction_loss: metrics::prediction_loss_tstr(fake, real_test),
+        mmd: metrics::signature_mmd(real_test, fake, 3),
+    }
+}

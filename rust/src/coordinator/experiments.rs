@@ -1,0 +1,6 @@
+//! Experiment registry (placeholder — filled in with the trainers).
+
+/// Names of the paper experiments the CLI can run.
+pub const EXPERIMENTS: &[&str] = &[
+    "table2", "table4", "table5", "table11", "fig2", "fig5",
+];

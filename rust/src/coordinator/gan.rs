@@ -1,0 +1,246 @@
+//! The SDE-GAN trainer (paper Sections 2.2 and 5).
+//!
+//! Drives the AOT-compiled generator/discriminator gradient executables
+//! with noise from the Brownian Interval, updates both networks with
+//! Adadelta (Appendix F.2), enforces the discriminator's Lipschitz
+//! constraint by **weight clipping** after every discriminator step
+//! (Section 5) — or falls back to the gradient-penalty executable for the
+//! Table-11 baseline — and maintains a stochastic weight average of the
+//! generator over the latter half of training.
+
+use crate::config::{SolverKind, TrainConfig};
+use crate::coordinator::noise::{NoiseBackend, StepNoise};
+use crate::data::TimeSeriesDataset;
+use crate::nn::{Adadelta, Optimizer, StochasticWeightAverage};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// Per-step statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct GanStepStats {
+    /// Generator loss `E[F_φ(fake)]`.
+    pub loss_g: f32,
+    /// Discriminator (negated Wasserstein) loss.
+    pub loss_d: f32,
+}
+
+/// SDE-GAN training state.
+pub struct GanTrainer {
+    /// Model name in the manifest (e.g. `"gan_ou"`).
+    pub model: String,
+    solver: SolverKind,
+    clip: bool,
+    batch: usize,
+    seq_len: usize,
+    w: usize,
+    v_dim: usize,
+    y_dim: usize,
+    eval_batch: usize,
+    /// Generator parameters (flat).
+    pub theta: Vec<f32>,
+    /// Discriminator parameters (flat).
+    pub phi: Vec<f32>,
+    opt_g: Adadelta,
+    opt_d: Adadelta,
+    swa: StochasticWeightAverage,
+    noise: StepNoise,
+    ts: Vec<f32>,
+    steps_done: usize,
+    total_steps: usize,
+}
+
+impl GanTrainer {
+    /// Build from a runtime + config; initialises parameters with the
+    /// paper's α/β scaling (equation (33)).
+    pub fn new(rt: &Runtime, cfg: &TrainConfig, total_steps: usize) -> Result<Self> {
+        let model = format!("gan_{}", cfg.dataset.as_str());
+        let spec = rt.manifest.model(&model)?;
+        let model_name = model.clone();
+        let hy = move |k: &str| rt.manifest.hyper(&model_name, k);
+        let batch = hy("batch")? as usize;
+        let seq_len = hy("seq_len")? as usize;
+        let gl = spec.gen_layout.clone();
+        let dl = spec.disc_layout.clone();
+        let alpha = cfg.alpha;
+        let beta = cfg.beta;
+        // ζ (and ξ) get α; vector fields get β (Appendix F.2 eq. (33)).
+        let theta = gl.init(cfg.seed, |name| {
+            if name.starts_with("zeta") { alpha } else { beta }
+        });
+        let mut phi = dl.init(cfg.seed ^ 0x5555, |name| {
+            if name.starts_with("xi") { alpha } else { beta }
+        });
+        // Start inside the clipped region.
+        dl.clip_lipschitz(&mut phi, field_filter);
+        // Per-group learning rates via lr_scale over the flat vector.
+        let scale_of = |layout: &crate::nn::ParamLayout, init_group: &str| -> Vec<f32> {
+            let mut s = vec![1.0f32; layout.total];
+            for t in &layout.tensors {
+                let is_init = t.name.starts_with(init_group);
+                let v = if is_init { 1.0 } else { cfg.lr_field / cfg.lr_init };
+                s[t.offset..t.offset + t.len()].fill(v);
+            }
+            s
+        };
+        let opt_g = Adadelta::new(cfg.lr_init, gl.total)
+            .with_lr_scale(scale_of(&gl, "zeta"));
+        let opt_d = Adadelta::new(cfg.lr_init, dl.total)
+            .with_lr_scale(scale_of(&dl, "xi"));
+        // Times: normalised to mean 0, unit range (Appendix F.2).
+        let ts: Vec<f32> = (0..seq_len)
+            .map(|k| k as f32 / (seq_len - 1) as f32 - 0.5)
+            .collect();
+        let backend = if cfg.brownian_interval {
+            NoiseBackend::Interval
+        } else {
+            NoiseBackend::VirtualTree { eps: 1e-5 }
+        };
+        let w = hy("w")? as usize;
+        let noise = StepNoise::new(backend, -0.5, 0.5, batch * w, cfg.seed ^ 0x77);
+        Ok(Self {
+            model,
+            solver: cfg.solver,
+            clip: cfg.clip,
+            batch,
+            seq_len,
+            w,
+            v_dim: hy("v")? as usize,
+            y_dim: hy("y")? as usize,
+            eval_batch: hy("eval_batch")? as usize,
+            theta,
+            phi,
+            swa: StochasticWeightAverage::new(gl.total),
+            opt_g,
+            opt_d,
+            noise,
+            ts,
+            steps_done: 0,
+            total_steps,
+        })
+    }
+
+    fn exec_name(&self, kind: &str) -> String {
+        format!("{}_{}_{}", self.model, self.solver.as_str(), kind)
+    }
+
+    /// One adversarial round: a discriminator step then a generator step.
+    pub fn train_step(
+        &mut self,
+        rt: &mut Runtime,
+        data: &TimeSeriesDataset,
+        rng: &mut crate::brownian::SplitPrng,
+    ) -> Result<GanStepStats> {
+        let n = self.seq_len - 1;
+        let mut v = vec![0.0f32; self.batch * self.v_dim];
+        let mut dws = vec![0.0f32; n * self.batch * self.w];
+        let ts = self.ts.clone();
+
+        // ---- Discriminator step.
+        let (y_real, _) = data.sample_batch(self.batch, rng);
+        self.noise.fill_normals(&mut v);
+        self.noise.fill(&ts, &mut dws);
+        let disc_exec = if self.clip {
+            self.exec_name("disc_grad")
+        } else {
+            // Gradient-penalty baseline (only lowered for midpoint + OU).
+            format!("{}_midpoint_disc_grad_gp", self.model)
+        };
+        let out = rt.run_f32(
+            &disc_exec,
+            &[
+                (&self.theta, &[self.theta.len()]),
+                (&self.phi, &[self.phi.len()]),
+                (&v, &[self.batch, self.v_dim]),
+                (&ts, &[self.seq_len]),
+                (&dws, &[n, self.batch, self.w]),
+                (&y_real, &[self.batch, self.seq_len, self.y_dim]),
+            ],
+        )?;
+        let loss_d = out[0][0];
+        let gphi = &out[1];
+        anyhow::ensure!(gphi.len() == self.phi.len(), "disc grad shape");
+        self.opt_d.step(&mut self.phi, gphi);
+        if self.clip {
+            // Section 5: clip the CDE vector fields f_φ, g_φ to Lipschitz ≤ 1.
+            let dl = rt.manifest.model(&self.model)?.disc_layout.clone();
+            dl.clip_lipschitz(&mut self.phi, field_filter);
+        }
+
+        // ---- Generator step (fresh noise).
+        self.noise.fill_normals(&mut v);
+        self.noise.fill(&ts, &mut dws);
+        let out = rt.run_f32(
+            &self.exec_name("gen_grad"),
+            &[
+                (&self.theta, &[self.theta.len()]),
+                (&self.phi, &[self.phi.len()]),
+                (&v, &[self.batch, self.v_dim]),
+                (&ts, &[self.seq_len]),
+                (&dws, &[n, self.batch, self.w]),
+            ],
+        )?;
+        let loss_g = out[0][0];
+        let gtheta = &out[1];
+        anyhow::ensure!(gtheta.len() == self.theta.len(), "gen grad shape");
+        self.opt_g.step(&mut self.theta, gtheta);
+        self.steps_done += 1;
+        // SWA over the last 50% of training (Appendix F.2).
+        if self.steps_done * 2 >= self.total_steps {
+            self.swa.update(&self.theta);
+        }
+        Ok(GanStepStats { loss_g, loss_d })
+    }
+
+    /// Final generator weights: the stochastic weight average if available.
+    pub fn final_theta(&self) -> Vec<f32> {
+        if self.swa.count() > 0 {
+            self.swa.average()
+        } else {
+            self.theta.clone()
+        }
+    }
+
+    /// Generate `n_samples` series from the (averaged) generator.
+    pub fn sample(&mut self, rt: &mut Runtime, n_samples: usize) -> Result<TimeSeriesDataset> {
+        let theta = self.final_theta();
+        let n = self.seq_len - 1;
+        let eb = self.eval_batch;
+        let mut values = Vec::with_capacity(n_samples * self.seq_len * self.y_dim);
+        let mut v = vec![0.0f32; eb * self.v_dim];
+        let mut dws = vec![0.0f32; n * eb * self.w];
+        let ts = self.ts.clone();
+        let mut eval_noise =
+            StepNoise::new(NoiseBackend::Interval, -0.5, 0.5, eb * self.w, 0xE7A1);
+        let mut produced = 0;
+        while produced < n_samples {
+            eval_noise.fill_normals(&mut v);
+            eval_noise.fill(&ts, &mut dws);
+            let out = rt.run_f32(
+                &self.exec_name("sample"),
+                &[
+                    (&theta, &[theta.len()]),
+                    (&v, &[eb, self.v_dim]),
+                    (&ts, &[self.seq_len]),
+                    (&dws, &[n, eb, self.w]),
+                ],
+            )?;
+            let take = (n_samples - produced).min(eb);
+            values.extend_from_slice(&out[0][..take * self.seq_len * self.y_dim]);
+            produced += take;
+        }
+        Ok(TimeSeriesDataset {
+            n: n_samples,
+            seq_len: self.seq_len,
+            channels: self.y_dim,
+            values,
+            times: self.ts.iter().map(|&t| t as f64).collect(),
+            labels: None,
+        })
+    }
+}
+
+/// Clip filter: the discriminator's CDE vector fields (Section 5 applies
+/// the Lipschitz constraint to `f_φ` and `g_φ`).
+fn field_filter(name: &str) -> bool {
+    name.starts_with("f.") || name.starts_with("g.")
+}

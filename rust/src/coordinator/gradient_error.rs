@@ -1,0 +1,125 @@
+//! The Figure-2 / Table-6 gradient-error experiment.
+//!
+//! For each solver and step size, run the f64 `graderr_<solver>_n<N>`
+//! executable (which computes both the optimise-then-discretise and the
+//! discretise-then-optimise gradients of the Appendix-F.5 test problem on
+//! identical noise) and report the paper's relative L1 error
+//!
+//! ```text
+//! Σ|δ_otd − δ_dto| / max(Σ|δ_otd|, Σ|δ_dto|)
+//! ```
+//!
+//! over the concatenation of ∂L/∂X₀ and ∂L/∂θ.
+
+use crate::brownian::{box_muller_fill, splitmix64, SplitPrng};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// One (solver, step-size) measurement.
+#[derive(Clone, Debug)]
+pub struct GradErrPoint {
+    /// Solver name.
+    pub solver: String,
+    /// Number of steps over `[0, 1]` (step size `1/n`).
+    pub n_steps: usize,
+    /// Relative L1 gradient error.
+    pub rel_err: f64,
+}
+
+/// The paper's relative L1 metric (Appendix F.5).
+pub fn relative_l1(otd: &[f64], dto: &[f64]) -> f64 {
+    assert_eq!(otd.len(), dto.len());
+    let num: f64 = otd.iter().zip(dto).map(|(a, b)| (a - b).abs()).sum();
+    let da: f64 = otd.iter().map(|x| x.abs()).sum();
+    let db: f64 = dto.iter().map(|x| x.abs()).sum();
+    num / da.max(db).max(1e-300)
+}
+
+/// Run the experiment for every `graderr_*` executable in the manifest.
+pub fn run(rt: &mut Runtime, seed: u64) -> Result<Vec<GradErrPoint>> {
+    let spec = rt.manifest.model("graderr")?.clone();
+    let hy = |k: &str| -> usize { spec.hyper[k] as usize };
+    let (x, w, b, p_total) = (hy("x"), hy("w"), hy("b"), hy("params"));
+
+    // Fixed problem instance, shared across all solvers/step sizes.
+    let mut params = vec![0.0f32; p_total];
+    // Reuse the f32 initialiser then widen (keeps init identical to training).
+    box_muller_fill(splitmix64(seed), 0.2, &mut params);
+    let params64: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+    let mut rng = SplitPrng::new(seed ^ 0xF16);
+    let z0: Vec<f64> = (0..b * x)
+        .map(|_| rng.next_normal_pair().0)
+        .collect();
+
+    let names: Vec<String> = rt
+        .manifest
+        .execs
+        .keys()
+        .filter(|k| k.starts_with("graderr_"))
+        .cloned()
+        .collect();
+    let mut out = Vec::new();
+    for name in names {
+        // graderr_<solver>_n<N>
+        let rest = name.trim_start_matches("graderr_");
+        let (solver, n_str) = rest.rsplit_once("_n").unwrap();
+        let n: usize = n_str.parse()?;
+        let ts: Vec<f64> = (0..=n).map(|k| k as f64 / n as f64).collect();
+        // Brownian increments on this grid, identical path across solvers at
+        // the same n (seeded by n only).
+        let mut dws = vec![0.0f64; n * b * w];
+        let mut prng = SplitPrng::new(splitmix64(seed ^ (n as u64)));
+        let sd = (1.0 / n as f64).sqrt();
+        for v in dws.iter_mut() {
+            *v = prng.next_normal_pair().0 * sd;
+        }
+        let res = rt.run_f64(
+            &name,
+            &[
+                (&params64, &[p_total]),
+                (&z0, &[b, x]),
+                (&ts, &[n + 1]),
+                (&dws, &[n, b, w]),
+            ],
+        )?;
+        // Outputs: (otd_gz0, otd_gtheta, dto_gz0, dto_gtheta).
+        let mut otd = res[0].clone();
+        otd.extend_from_slice(&res[1]);
+        let mut dto = res[2].clone();
+        dto.extend_from_slice(&res[3]);
+        out.push(GradErrPoint {
+            solver: solver.to_string(),
+            n_steps: n,
+            rel_err: relative_l1(&otd, &dto),
+        });
+    }
+    out.sort_by(|a, b| a.solver.cmp(&b.solver).then(a.n_steps.cmp(&b.n_steps)));
+    Ok(out)
+}
+
+/// Render the Table-6-style text table.
+pub fn render(points: &[GradErrPoint]) -> String {
+    let mut s = String::from(
+        "\nFigure 2 / Table 6 — relative L1 gradient error (O-t-D vs D-t-O)\n",
+    );
+    s.push_str(&format!("{:<18} {:>8} {:>14}\n", "solver", "steps", "rel err"));
+    for p in points {
+        s.push_str(&format!(
+            "{:<18} {:>8} {:>14.3e}\n",
+            p.solver, p.n_steps, p.rel_err
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_l1_basics() {
+        assert_eq!(relative_l1(&[1.0, -1.0], &[1.0, -1.0]), 0.0);
+        let e = relative_l1(&[1.0, 0.0], &[0.0, 1.0]);
+        assert!((e - 2.0).abs() < 1e-12);
+    }
+}

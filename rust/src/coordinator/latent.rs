@@ -1,0 +1,154 @@
+//! The Latent SDE trainer (Li et al. 2020; paper Section 2.2 / Table 5).
+//!
+//! Joint θ/φ optimisation of the ELBO with Adam (Appendix F.2), driving
+//! the `latent_<ds>_<solver>_grad` executable; sampling draws from the
+//! learned prior SDE.
+
+use crate::config::{SolverKind, TrainConfig};
+use crate::coordinator::noise::{NoiseBackend, StepNoise};
+use crate::data::TimeSeriesDataset;
+use crate::nn::{Adam, Optimizer};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// Latent SDE training state.
+pub struct LatentTrainer {
+    /// Model name in the manifest (e.g. `"latent_air"`).
+    pub model: String,
+    solver: SolverKind,
+    batch: usize,
+    seq_len: usize,
+    x: usize,
+    v_dim: usize,
+    y_dim: usize,
+    eval_batch: usize,
+    /// Joint (θ, φ) parameters, flat.
+    pub params: Vec<f32>,
+    opt: Adam,
+    noise: StepNoise,
+    ts: Vec<f32>,
+}
+
+impl LatentTrainer {
+    /// Build from a runtime + config.
+    pub fn new(rt: &Runtime, cfg: &TrainConfig) -> Result<Self> {
+        let model = format!("latent_{}", cfg.dataset.as_str());
+        let spec = rt.manifest.model(&model)?;
+        let model_name = model.clone();
+        let hy = move |k: &str| rt.manifest.hyper(&model_name, k);
+        let batch = hy("batch")? as usize;
+        let seq_len = hy("seq_len")? as usize;
+        let lay = spec.gen_layout.clone();
+        let alpha = cfg.alpha;
+        let beta = cfg.beta;
+        let params = lay.init(cfg.seed, |name| {
+            if name.starts_with("zeta") || name.starts_with("xi") {
+                alpha
+            } else {
+                beta
+            }
+        });
+        let scale: Vec<f32> = {
+            let mut s = vec![1.0f32; lay.total];
+            for t in &lay.tensors {
+                let is_init = t.name.starts_with("zeta");
+                let v = if is_init { 1.0 } else { cfg.lr_field / cfg.lr_init };
+                s[t.offset..t.offset + t.len()].fill(v);
+            }
+            s
+        };
+        let opt = Adam::new(cfg.lr_init, lay.total).with_lr_scale(scale);
+        let ts: Vec<f32> = (0..seq_len)
+            .map(|k| k as f32 / (seq_len - 1) as f32 - 0.5)
+            .collect();
+        let backend = if cfg.brownian_interval {
+            NoiseBackend::Interval
+        } else {
+            NoiseBackend::VirtualTree { eps: 1e-5 }
+        };
+        let x = hy("x")? as usize;
+        Ok(Self {
+            model,
+            solver: cfg.solver,
+            batch,
+            seq_len,
+            x,
+            v_dim: hy("v")? as usize,
+            y_dim: hy("y")? as usize,
+            eval_batch: hy("eval_batch")? as usize,
+            params,
+            opt,
+            noise: StepNoise::new(backend, -0.5, 0.5, batch * x, cfg.seed ^ 0x99),
+            ts,
+        })
+    }
+
+    /// One ELBO descent step; returns the loss.
+    pub fn train_step(
+        &mut self,
+        rt: &mut Runtime,
+        data: &TimeSeriesDataset,
+        rng: &mut crate::brownian::SplitPrng,
+    ) -> Result<f32> {
+        let n = self.seq_len - 1;
+        let (y_real, _) = data.sample_batch(self.batch, rng);
+        let mut dws = vec![0.0f32; n * self.batch * self.x];
+        let mut eps = vec![0.0f32; self.batch * self.v_dim];
+        let ts = self.ts.clone();
+        self.noise.fill(&ts, &mut dws);
+        self.noise.fill_normals(&mut eps);
+        let name = format!("{}_{}_grad", self.model, self.solver.as_str());
+        let out = rt.run_f32(
+            &name,
+            &[
+                (&self.params, &[self.params.len()]),
+                (&ts, &[self.seq_len]),
+                (&dws, &[n, self.batch, self.x]),
+                (&y_real, &[self.batch, self.seq_len, self.y_dim]),
+                (&eps, &[self.batch, self.v_dim]),
+            ],
+        )?;
+        let loss = out[0][0];
+        anyhow::ensure!(out[1].len() == self.params.len(), "latent grad shape");
+        self.opt.step(&mut self.params, &out[1]);
+        Ok(loss)
+    }
+
+    /// Generate samples from the learned prior SDE.
+    pub fn sample(&mut self, rt: &mut Runtime, n_samples: usize) -> Result<TimeSeriesDataset> {
+        let n = self.seq_len - 1;
+        let eb = self.eval_batch;
+        let mut values = Vec::with_capacity(n_samples * self.seq_len * self.y_dim);
+        let mut v = vec![0.0f32; eb * self.v_dim];
+        let mut dws = vec![0.0f32; n * eb * self.x];
+        let ts = self.ts.clone();
+        let mut eval_noise =
+            StepNoise::new(NoiseBackend::Interval, -0.5, 0.5, eb * self.x, 0x1A7E);
+        let name = format!("{}_{}_sample", self.model, self.solver.as_str());
+        let mut produced = 0;
+        while produced < n_samples {
+            eval_noise.fill_normals(&mut v);
+            eval_noise.fill(&ts, &mut dws);
+            let out = rt.run_f32(
+                &name,
+                &[
+                    (&self.params, &[self.params.len()]),
+                    (&v, &[eb, self.v_dim]),
+                    (&ts, &[self.seq_len]),
+                    (&dws, &[n, eb, self.x]),
+                ],
+            )?;
+            let take = (n_samples - produced).min(eb);
+            values.extend_from_slice(&out[0][..take * self.seq_len * self.y_dim]);
+            produced += take;
+        }
+        Ok(TimeSeriesDataset {
+            n: n_samples,
+            seq_len: self.seq_len,
+            channels: self.y_dim,
+            values,
+            times: self.ts.iter().map(|&t| t as f64).collect(),
+            labels: None,
+        })
+    }
+}

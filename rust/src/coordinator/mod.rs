@@ -1,0 +1,19 @@
+//! Training orchestration — the Layer-3 event loop.
+//!
+//! * [`gan::GanTrainer`] — adversarial training of SDE-GANs with Adadelta,
+//!   weight clipping (Section 5) or the gradient-penalty baseline, and SWA;
+//! * [`latent::LatentTrainer`] — ELBO training of Latent SDEs with Adam;
+//! * [`noise`] — Brownian-Interval/Virtual-Tree noise plumbing into the
+//!   PJRT executables;
+//! * [`gradient_error`] — the Figure-2/Table-6 experiment driver;
+//! * [`eval`] — the Appendix-F.1 metric battery over trained models.
+
+pub mod eval;
+pub mod gan;
+pub mod gradient_error;
+pub mod latent;
+pub mod noise;
+
+pub use eval::{evaluate_generator, EvalReport};
+pub use gan::{GanStepStats, GanTrainer};
+pub use latent::LatentTrainer;

@@ -1,0 +1,123 @@
+//! Noise plumbing between the Brownian sources and the PJRT executables.
+//!
+//! A training step needs the increment tensor ``dws [N, B, w]`` for the
+//! solver grid; this module fills it by querying a [`BrownianSource`]
+//! sequentially over the observation intervals — the access pattern the
+//! Brownian Interval's hint/cache design targets. The same source (same
+//! seed) refilled over the same grid reproduces identical noise, which is
+//! how eval reuses training noise when needed.
+
+use crate::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
+use crate::brownian::{box_muller_fill, splitmix64};
+
+/// Fill `dws` (`[n_steps][batch * w]` flattened) by sequential queries.
+pub fn fill_increments<B: BrownianSource>(src: &mut B, ts: &[f32], dws: &mut [f32]) {
+    let n = ts.len() - 1;
+    let size = src.size();
+    assert_eq!(dws.len(), n * size);
+    for k in 0..n {
+        src.increment(ts[k] as f64, ts[k + 1] as f64, &mut dws[k * size..(k + 1) * size]);
+    }
+}
+
+/// Which Brownian backend fills the increments (the Table-10 toggle).
+pub enum NoiseBackend {
+    /// The paper's Brownian Interval (exact, O(1) amortised).
+    Interval,
+    /// The Virtual Brownian Tree baseline (approximate, O(log 1/eps)).
+    VirtualTree {
+        /// Dyadic resolution (torchsde default 1e-5).
+        eps: f64,
+    },
+}
+
+/// Per-step noise generator for a fixed time grid.
+pub struct StepNoise {
+    backend: NoiseBackend,
+    t0: f64,
+    t1: f64,
+    size: usize,
+    counter: u64,
+    base_seed: u64,
+}
+
+impl StepNoise {
+    /// `size = batch * noise_channels`; spans the (normalised) time grid.
+    pub fn new(backend: NoiseBackend, t0: f64, t1: f64, size: usize, seed: u64) -> Self {
+        Self { backend, t0, t1, size, counter: 0, base_seed: seed }
+    }
+
+    /// Fill `dws` for a fresh Brownian sample (new seed each call).
+    pub fn fill(&mut self, ts: &[f32], dws: &mut [f32]) {
+        let seed = splitmix64(self.base_seed ^ self.counter.wrapping_mul(0x9E37_79B9));
+        self.counter += 1;
+        match self.backend {
+            NoiseBackend::Interval => {
+                let mut bi = BrownianInterval::new(self.t0, self.t1, self.size, seed);
+                fill_increments(&mut bi, ts, dws);
+            }
+            NoiseBackend::VirtualTree { eps } => {
+                let mut vbt =
+                    VirtualBrownianTree::new(self.t0, self.t1, self.size, seed, eps);
+                fill_increments(&mut vbt, ts, dws);
+            }
+        }
+    }
+
+    /// Fill a buffer with standard normals (initial noise V, encoder ε).
+    pub fn fill_normals(&mut self, out: &mut [f32]) {
+        let seed = splitmix64(self.base_seed ^ 0xABCD ^ self.counter.wrapping_mul(31));
+        self.counter += 1;
+        box_muller_fill(seed, 1.0, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_covers_grid_consistently() {
+        let mut bi = BrownianInterval::new(-0.5, 0.5, 3, 7);
+        let ts: Vec<f32> = (0..5).map(|k| -0.5 + 0.25 * k as f32).collect();
+        let mut dws = vec![0.0f32; 4 * 3];
+        fill_increments(&mut bi, &ts, &mut dws);
+        // Sum over steps equals the whole increment.
+        let whole = bi.increment_vec(-0.5, 0.5);
+        for c in 0..3 {
+            let sum: f32 = (0..4).map(|k| dws[k * 3 + c]).sum();
+            assert!((sum - whole[c]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn step_noise_fresh_samples_differ() {
+        let mut sn = StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 4, 1);
+        let ts = [0.0f32, 0.5, 1.0];
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        sn.fill(&ts, &mut a);
+        sn.fill(&ts, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn step_noise_deterministic_across_instances() {
+        let ts = [0.0f32, 0.5, 1.0];
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 4, 9).fill(&ts, &mut a);
+        StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 4, 9).fill(&ts, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn vbt_backend_works() {
+        let mut sn =
+            StepNoise::new(NoiseBackend::VirtualTree { eps: 1e-5 }, 0.0, 1.0, 2, 3);
+        let ts = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+        let mut dws = vec![0.0f32; 8];
+        sn.fill(&ts, &mut dws);
+        assert!(dws.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,98 @@
+//! The time-dependent Ornstein–Uhlenbeck dataset (Appendix F.7):
+//! univariate length-32 samples of
+//!
+//! ```text
+//! dY = (ρ t − κ Y) dt + χ dW,   ρ = 0.02, κ = 0.1, χ = 0.4,  t ∈ [0, 31].
+//! ```
+//!
+//! Generated exactly as the paper specifies (this dataset is itself
+//! synthetic in the paper). Integration uses Euler–Maruyama with 16
+//! substeps per observation, from `Y_0 ~ N(0, 1)`.
+
+use super::TimeSeriesDataset;
+use crate::brownian::SplitPrng;
+
+/// OU process parameters (paper defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct OuParams {
+    /// Linear-in-time drift coefficient.
+    pub rho: f64,
+    /// Mean-reversion rate.
+    pub kappa: f64,
+    /// Noise level.
+    pub chi: f64,
+    /// Observations per series.
+    pub seq_len: usize,
+    /// Euler substeps between observations.
+    pub substeps: usize,
+}
+
+impl Default for OuParams {
+    fn default() -> Self {
+        Self { rho: 0.02, kappa: 0.1, chi: 0.4, seq_len: 32, substeps: 16 }
+    }
+}
+
+/// Generate `n` OU sample paths.
+pub fn generate(n: usize, seed: u64, p: OuParams) -> TimeSeriesDataset {
+    let mut rng = SplitPrng::new(seed);
+    let mut values = Vec::with_capacity(n * p.seq_len);
+    let dt_obs = 1.0; // t ∈ [0, seq_len - 1], unit spacing as in the paper
+    let dt = dt_obs / p.substeps as f64;
+    for _ in 0..n {
+        let (y0, _) = rng.next_normal_pair();
+        let mut y = y0;
+        values.push(y as f32);
+        let mut t = 0.0f64;
+        for _ in 1..p.seq_len {
+            for _ in 0..p.substeps {
+                let (z, _) = rng.next_normal_pair();
+                y += (p.rho * t - p.kappa * y) * dt + p.chi * dt.sqrt() * z;
+                t += dt;
+            }
+            values.push(y as f32);
+        }
+    }
+    TimeSeriesDataset {
+        n,
+        seq_len: p.seq_len,
+        channels: 1,
+        values,
+        times: (0..p.seq_len).map(|k| k as f64).collect(),
+        labels: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let d = generate(10, 1, OuParams::default());
+        assert_eq!(d.n, 10);
+        assert_eq!(d.seq_len, 32);
+        assert_eq!(d.channels, 1);
+        assert_eq!(d.values.len(), 320);
+    }
+
+    #[test]
+    fn stationary_spread_reasonable() {
+        // Stationary std of the (κ, χ) OU core is χ/√(2κ) ≈ 0.894; with the
+        // ρt drift the late-time mean trends up toward ρt/κ.
+        let d = generate(2000, 7, OuParams::default());
+        let last: Vec<f64> = (0..d.n).map(|i| d.series(i)[31] as f64).collect();
+        let mean = crate::util::stats::mean(&last);
+        let sd = crate::util::stats::std_dev(&last);
+        // E[Y_t] = ρ(t/κ − (1 − e^{−κt})/κ²) ≈ 4.29 at t = 31.
+        assert!((mean - 4.29).abs() < 0.3, "mean={mean}");
+        assert!((sd - 0.894).abs() < 0.2, "sd={sd}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(3, 9, OuParams::default());
+        let b = generate(3, 9, OuParams::default());
+        assert_eq!(a.values, b.values);
+    }
+}

@@ -1,0 +1,108 @@
+//! SGD weight-trajectory dataset (substitute for Appendix F.3).
+//!
+//! The paper records every weight of a small CNN across 50 epochs of SGD on
+//! MNIST, over 10 training runs, and treats each weight's trajectory as a
+//! univariate time series. We reproduce the *law-level* structure without
+//! MNIST: each trajectory is a weight coordinate relaxing under SGD on a
+//! random quadratic with gradient noise,
+//!
+//! ```text
+//! w_{k+1} = w_k − lr · (curv · (w_k − w*) + noise_k),
+//! ```
+//!
+//! with per-run random curvature/targets and per-weight random
+//! initialisation — producing the decaying-toward-a-random-limit,
+//! noise-perturbed curves the real dataset consists of, over the same
+//! length (50).
+
+use super::TimeSeriesDataset;
+use crate::brownian::SplitPrng;
+
+/// Generation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct WeightsParams {
+    /// Trajectory length (paper: 50 epochs).
+    pub seq_len: usize,
+    /// Simulated training runs (paper: 10).
+    pub runs: usize,
+    /// SGD learning rate in the simulated quadratic.
+    pub lr: f64,
+    /// Gradient-noise scale.
+    pub noise: f64,
+}
+
+impl Default for WeightsParams {
+    fn default() -> Self {
+        Self { seq_len: 50, runs: 10, lr: 0.15, noise: 0.35 }
+    }
+}
+
+/// Generate `n` weight trajectories (distributed round-robin over runs).
+pub fn generate(n: usize, seed: u64, p: WeightsParams) -> TimeSeriesDataset {
+    let mut rng = SplitPrng::new(seed);
+    // Per-run curvature scale and noise floor (training runs differ).
+    let run_curv: Vec<f64> = (0..p.runs)
+        .map(|_| 0.3 + 0.5 * rng.next_uniform())
+        .collect();
+    let run_noise: Vec<f64> = (0..p.runs)
+        .map(|_| p.noise * (0.5 + rng.next_uniform()))
+        .collect();
+    let mut values = Vec::with_capacity(n * p.seq_len);
+    for i in 0..n {
+        let run = i % p.runs;
+        let (z0, z1) = rng.next_normal_pair();
+        let w_star = 0.8 * z1; // this weight's limit
+        let mut w = z0; // init ~ N(0, 1)
+        let curv = run_curv[run] * (0.5 + rng.next_uniform());
+        let noise = run_noise[run];
+        for _ in 0..p.seq_len {
+            values.push(w as f32);
+            let (g, _) = rng.next_normal_pair();
+            // Noise anneals over training, as empirically in SGD traces.
+            let anneal = 1.0 / (1.0 + 0.04 * values.len() as f64 / n as f64);
+            w -= p.lr * (curv * (w - w_star) + noise * anneal * g);
+        }
+    }
+    TimeSeriesDataset {
+        n,
+        seq_len: p.seq_len,
+        channels: 1,
+        values,
+        times: (0..p.seq_len).map(|k| k as f64).collect(),
+        labels: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let d = generate(20, 3, WeightsParams::default());
+        assert_eq!((d.n, d.seq_len, d.channels), (20, 50, 1));
+    }
+
+    #[test]
+    fn trajectories_contract_toward_limits() {
+        // Spread of |w_t - w_50| should shrink over time on average.
+        let d = generate(500, 5, WeightsParams::default());
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for i in 0..d.n {
+            let s = d.series(i);
+            let limit = s[49];
+            early += (s[1] - limit).abs() as f64;
+            late += (s[40] - limit).abs() as f64;
+        }
+        assert!(late < early * 0.8, "early={early}, late={late}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            generate(5, 11, WeightsParams::default()).values,
+            generate(5, 11, WeightsParams::default()).values
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! # neural-sde
+//!
+//! A Rust + JAX + Pallas reproduction of *Efficient and Accurate Gradients
+//! for Neural SDEs* (Kidger, Foster, Li, Lyons — NeurIPS 2021).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * Layer 1 (build time): Pallas kernels for the fused LipSwish-MLP vector
+//!   fields and the reversible-Heun state update (`python/compile/kernels/`).
+//! * Layer 2 (build time): the Neural SDE / Neural CDE / Latent SDE models
+//!   and their optimise-then-discretise adjoints in JAX, AOT-lowered to HLO
+//!   text (`python/compile/`).
+//! * Layer 3 (this crate, runtime): the paper's coordination contributions —
+//!   the [`brownian::BrownianInterval`] noise data structure, the
+//!   [`solvers::ReversibleHeun`] algebraically-reversible solver, training
+//!   orchestration ([`coordinator`]) driving PJRT executables, optimisers
+//!   with the paper's weight-clipping scheme ([`nn`]), datasets ([`data`]),
+//!   and evaluation metrics ([`metrics`]).
+//!
+//! Python never runs on the training path: `make artifacts` lowers the JAX
+//! programs once, and the Rust binary is self-contained afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use neuralsde::brownian::{BrownianInterval, BrownianSource};
+//!
+//! // An exact, O(1)-memory Brownian motion over [0, 1] with 8 channels.
+//! let mut bm = BrownianInterval::new(0.0, 1.0, 8, 42);
+//! let w = bm.increment_vec(0.0, 0.5); // W(0.5) - W(0.0), exact
+//! assert_eq!(w.len(), 8);
+//! ```
+
+pub mod brownian;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod solvers;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

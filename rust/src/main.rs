@@ -1,0 +1,115 @@
+//! `neural-sde` — CLI launcher for the Neural SDE reproduction.
+//!
+//! Subcommands map onto the paper's experiments (see DESIGN.md §3):
+//!
+//! * `train`          — train an SDE-GAN or Latent SDE (per `--dataset`)
+//! * `gradient-error` — Figure 2 / Table 6
+//! * `info`           — list loaded artifacts
+//!
+//! The table/figure *benchmarks* live under `cargo bench`; the runnable
+//! experiment drivers under `examples/`.
+
+use neuralsde::brownian::SplitPrng;
+use neuralsde::config::{DatasetKind, TrainConfig};
+use neuralsde::coordinator::{evaluate_generator, gradient_error, GanTrainer, LatentTrainer};
+use neuralsde::data::{air, ou, weights};
+use neuralsde::runtime::load_runtime;
+use neuralsde::util::cli::Args;
+
+const USAGE: &str = "\
+neural-sde — Efficient and Accurate Gradients for Neural SDEs (NeurIPS 2021)
+
+USAGE:
+  neural-sde <subcommand> [options]
+
+SUBCOMMANDS:
+  train            Train a model: --dataset ou|weights|air  --solver
+                   reversible_heun|midpoint  --steps N  [--no-clip]
+                   [--virtual-brownian-tree] [--seed N]
+  gradient-error   Reproduce Figure 2 / Table 6
+  info             Show runtime/artifact status
+  help             This message
+";
+
+fn build_dataset(cfg: &TrainConfig) -> neuralsde::data::TimeSeriesDataset {
+    let mut data = match cfg.dataset {
+        DatasetKind::Ou => ou::generate(cfg.data_size, cfg.seed, ou::OuParams::default()),
+        DatasetKind::Weights => {
+            weights::generate(cfg.data_size, cfg.seed, weights::WeightsParams::default())
+        }
+        DatasetKind::Air => air::generate(cfg.data_size, cfg.seed, air::AirParams::default()),
+    };
+    data.normalise_initial();
+    data
+}
+
+fn cmd_train(mut args: Args) -> anyhow::Result<()> {
+    let config_path = args.get("config");
+    let mut cfg = TrainConfig::load(config_path.as_deref(), &mut args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let mut rt = load_runtime(&cfg.artifacts_dir)?;
+    let data = build_dataset(&cfg);
+    let (train, _val, test) = data.split();
+    let mut rng = SplitPrng::new(cfg.seed);
+    println!(
+        "training {} / {} for {} steps (clip={}, noise={})",
+        cfg.dataset.as_str(),
+        cfg.solver.as_str(),
+        cfg.steps,
+        cfg.clip,
+        if cfg.brownian_interval { "brownian-interval" } else { "virtual-tree" },
+    );
+    match cfg.dataset {
+        DatasetKind::Air => {
+            cfg.lr_init = 4e-3;
+            let mut tr = LatentTrainer::new(&rt, &cfg)?;
+            for step in 0..cfg.steps {
+                let loss = tr.train_step(&mut rt, &train, &mut rng)?;
+                if step % 25 == 0 {
+                    println!("step {step:>4}  loss {loss:+.4}");
+                }
+            }
+            let fake = tr.sample(&mut rt, test.n)?;
+            println!("{}", evaluate_generator(&test, &fake, 7).row());
+        }
+        _ => {
+            let mut tr = GanTrainer::new(&rt, &cfg, cfg.steps)?;
+            for step in 0..cfg.steps {
+                let s = tr.train_step(&mut rt, &train, &mut rng)?;
+                if step % 25 == 0 {
+                    println!("step {step:>4}  loss_g {:+.4}  loss_d {:+.4}", s.loss_g, s.loss_d);
+                }
+            }
+            let fake = tr.sample(&mut rt, test.n)?;
+            println!("{}", evaluate_generator(&test, &fake, 7).row());
+        }
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args)?,
+        Some("gradient-error") => {
+            let mut rt = load_runtime("artifacts")?;
+            let points = gradient_error::run(&mut rt, 2021)?;
+            println!("{}", gradient_error::render(&points));
+        }
+        Some("info") => {
+            println!("neural-sde v{}", env!("CARGO_PKG_VERSION"));
+            if neuralsde::runtime::Runtime::artifacts_present("artifacts") {
+                let rt = load_runtime("artifacts")?;
+                println!("platform: {}", rt.platform());
+                println!("{} executables:", rt.manifest.execs.len());
+                for name in rt.manifest.execs.keys() {
+                    println!("  {name}");
+                }
+            } else {
+                println!("no artifacts (run `make artifacts`)");
+            }
+        }
+        _ => print!("{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,479 @@
+//! Train-on-synthetic-test-on-real metric models (Appendix F.1) and the
+//! real-vs-fake classifier, over signature features.
+//!
+//! * [`LogisticRegression`] — binary or softmax-multiclass, full-batch
+//!   gradient descent with L2 regularisation;
+//! * [`RidgeRegression`] — closed-form (Cholesky) ridge, used for the
+//!   forecasting metric (predict the last 20% of a series from the
+//!   signature of the first 80%).
+
+use super::series_features;
+use crate::brownian::SplitPrng;
+use crate::data::TimeSeriesDataset;
+
+/// Standardise columns of an `[n][d]` feature matrix in place; returns the
+/// `(mean, std)` per column so test features can reuse the fit.
+pub fn fit_standardise(x: &mut [f64], n: usize, d: usize) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut mean = 0.0;
+        for i in 0..n {
+            mean += x[i * d + j];
+        }
+        mean /= n as f64;
+        let mut var = 0.0;
+        for i in 0..n {
+            var += (x[i * d + j] - mean).powi(2);
+        }
+        let sd = (var / n as f64).sqrt().max(1e-9);
+        for i in 0..n {
+            x[i * d + j] = (x[i * d + j] - mean) / sd;
+        }
+        out.push((mean, sd));
+    }
+    out
+}
+
+/// Apply a previously-fitted standardisation.
+pub fn apply_standardise(x: &mut [f64], n: usize, d: usize, fit: &[(f64, f64)]) {
+    for j in 0..d {
+        let (m, s) = fit[j];
+        for i in 0..n {
+            x[i * d + j] = (x[i * d + j] - m) / s;
+        }
+    }
+}
+
+/// Multinomial logistic regression (binary is the 2-class case).
+pub struct LogisticRegression {
+    /// Number of classes.
+    pub classes: usize,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Weights `[classes][dim]` + biases `[classes]`.
+    w: Vec<f64>,
+    b: Vec<f64>,
+}
+
+impl LogisticRegression {
+    /// Train on `[n][d]` features with labels in `0..classes`.
+    pub fn train(
+        x: &[f64],
+        y: &[u32],
+        n: usize,
+        d: usize,
+        classes: usize,
+        epochs: usize,
+        lr: f64,
+        l2: f64,
+    ) -> Self {
+        assert_eq!(x.len(), n * d);
+        assert_eq!(y.len(), n);
+        let mut w = vec![0.0f64; classes * d];
+        let mut b = vec![0.0f64; classes];
+        let mut probs = vec![0.0f64; classes];
+        let mut gw = vec![0.0f64; classes * d];
+        let mut gb = vec![0.0f64; classes];
+        for _ in 0..epochs {
+            gw.fill(0.0);
+            gb.fill(0.0);
+            for i in 0..n {
+                let xi = &x[i * d..(i + 1) * d];
+                softmax_logits(&w, &b, xi, classes, d, &mut probs);
+                for c in 0..classes {
+                    let err = probs[c] - if y[i] as usize == c { 1.0 } else { 0.0 };
+                    gb[c] += err;
+                    for j in 0..d {
+                        gw[c * d + j] += err * xi[j];
+                    }
+                }
+            }
+            let inv = 1.0 / n as f64;
+            for k in 0..w.len() {
+                w[k] -= lr * (gw[k] * inv + l2 * w[k]);
+            }
+            for c in 0..classes {
+                b[c] -= lr * gb[c] * inv;
+            }
+        }
+        Self { classes, dim: d, w, b }
+    }
+
+    /// Predicted class of one feature vector.
+    pub fn predict(&self, xi: &[f64]) -> u32 {
+        let mut probs = vec![0.0f64; self.classes];
+        softmax_logits(&self.w, &self.b, xi, self.classes, self.dim, &mut probs);
+        probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u32
+    }
+
+    /// Accuracy over `[n][d]` test features.
+    pub fn accuracy(&self, x: &[f64], y: &[u32], n: usize) -> f64 {
+        let d = self.dim;
+        let correct = (0..n)
+            .filter(|&i| self.predict(&x[i * d..(i + 1) * d]) == y[i])
+            .count();
+        correct as f64 / n as f64
+    }
+}
+
+fn softmax_logits(w: &[f64], b: &[f64], xi: &[f64], classes: usize, d: usize, out: &mut [f64]) {
+    for c in 0..classes {
+        let mut z = b[c];
+        let row = &w[c * d..(c + 1) * d];
+        for j in 0..d {
+            z += row[j] * xi[j];
+        }
+        out[c] = z;
+    }
+    let m = out.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for o in out.iter_mut() {
+        *o = (*o - m).exp();
+        sum += *o;
+    }
+    for o in out.iter_mut() {
+        *o /= sum;
+    }
+}
+
+/// Ridge regression solved in closed form via Cholesky.
+pub struct RidgeRegression {
+    /// Feature dimension (including the implicit bias term appended).
+    pub dim: usize,
+    /// Output dimension.
+    pub out_dim: usize,
+    /// Weights `[dim + 1][out_dim]` (last row = bias).
+    w: Vec<f64>,
+}
+
+impl RidgeRegression {
+    /// Fit `y ≈ x W` with L2 penalty `lambda` (bias unpenalised).
+    pub fn fit(x: &[f64], y: &[f64], n: usize, d: usize, out_dim: usize, lambda: f64) -> Self {
+        assert_eq!(x.len(), n * d);
+        assert_eq!(y.len(), n * out_dim);
+        let da = d + 1; // augmented with bias column
+        // Normal equations: (Xᵀ X + λI) W = Xᵀ Y.
+        let mut xtx = vec![0.0f64; da * da];
+        let mut xty = vec![0.0f64; da * out_dim];
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            for a in 0..da {
+                let va = if a < d { xi[a] } else { 1.0 };
+                for b_ in a..da {
+                    let vb = if b_ < d { xi[b_] } else { 1.0 };
+                    xtx[a * da + b_] += va * vb;
+                }
+                for o in 0..out_dim {
+                    xty[a * out_dim + o] += va * y[i * out_dim + o];
+                }
+            }
+        }
+        for a in 0..da {
+            for b_ in 0..a {
+                xtx[a * da + b_] = xtx[b_ * da + a];
+            }
+        }
+        for a in 0..d {
+            xtx[a * da + a] += lambda;
+        }
+        xtx[(da - 1) * da + (da - 1)] += 1e-9; // keep bias row SPD
+        let chol = cholesky(&xtx, da).expect("XtX + λI must be SPD");
+        let mut w = vec![0.0f64; da * out_dim];
+        let mut rhs = vec![0.0f64; da];
+        let mut sol = vec![0.0f64; da];
+        for o in 0..out_dim {
+            for a in 0..da {
+                rhs[a] = xty[a * out_dim + o];
+            }
+            chol_solve(&chol, da, &rhs, &mut sol);
+            for a in 0..da {
+                w[a * out_dim + o] = sol[a];
+            }
+        }
+        Self { dim: d, out_dim, w }
+    }
+
+    /// Predict outputs for one feature vector.
+    pub fn predict(&self, xi: &[f64], out: &mut [f64]) {
+        assert_eq!(xi.len(), self.dim);
+        assert_eq!(out.len(), self.out_dim);
+        let da = self.dim + 1;
+        for o in 0..self.out_dim {
+            let mut acc = self.w[(da - 1) * self.out_dim + o]; // bias
+            for j in 0..self.dim {
+                acc += xi[j] * self.w[j * self.out_dim + o];
+            }
+            out[o] = acc;
+        }
+    }
+
+    /// Mean squared error over `[n][d]` features / `[n][out]` targets.
+    pub fn mse(&self, x: &[f64], y: &[f64], n: usize) -> f64 {
+        let mut pred = vec![0.0; self.out_dim];
+        let mut acc = 0.0;
+        for i in 0..n {
+            self.predict(&x[i * self.dim..(i + 1) * self.dim], &mut pred);
+            for o in 0..self.out_dim {
+                acc += (pred[o] - y[i * self.out_dim + o]).powi(2);
+            }
+        }
+        acc / (n * self.out_dim) as f64
+    }
+}
+
+/// Lower-triangular Cholesky factor of an SPD matrix (row-major `n×n`).
+fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L Lᵀ x = b` given the Cholesky factor.
+fn chol_solve(l: &[f64], n: usize, b: &[f64], x: &mut [f64]) {
+    // Forward: L y = b.
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    // Backward: Lᵀ x = y.
+    for i in (0..n).rev() {
+        let mut sum = x[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// High-level metric entry points
+// ---------------------------------------------------------------------------
+
+const SIG_DEPTH: usize = 3;
+
+/// Real-vs-fake classification accuracy (Appendix F.1).
+///
+/// Combines real and fake series, takes an 80/20 split, trains a classifier
+/// on the 80%, reports accuracy on the 20%. `0.5` means indistinguishable
+/// (best possible generator); `1.0` means trivially separable.
+pub fn real_fake_accuracy(real: &TimeSeriesDataset, fake: &TimeSeriesDataset, seed: u64) -> f64 {
+    assert_eq!(real.channels, fake.channels);
+    assert_eq!(real.seq_len, fake.seq_len);
+    let d = super::sig_dim(real.channels + 1, SIG_DEPTH);
+    let n = real.n + fake.n;
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..real.n {
+        x.extend(series_features(real.series(i), real.seq_len, real.channels, SIG_DEPTH));
+        y.push(1u32);
+    }
+    for i in 0..fake.n {
+        x.extend(series_features(fake.series(i), fake.seq_len, fake.channels, SIG_DEPTH));
+        y.push(0u32);
+    }
+    // Shuffle.
+    let mut rng = SplitPrng::new(seed);
+    for i in (1..n).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        for k in 0..d {
+            x.swap(i * d + k, j * d + k);
+        }
+        y.swap(i, j);
+    }
+    let n_train = (n * 4) / 5;
+    let fit = fit_standardise(&mut x[..n_train * d], n_train, d);
+    apply_standardise(&mut x[n_train * d..], n - n_train, d, &fit);
+    let model =
+        LogisticRegression::train(&x[..n_train * d], &y[..n_train], n_train, d, 2, 300, 0.5, 1e-3);
+    model.accuracy(&x[n_train * d..], &y[n_train..], n - n_train)
+}
+
+/// Label-classification TSTR accuracy (Appendix F.1): train a classifier on
+/// *generated* labelled data, evaluate on *real* test data. Higher = better.
+pub fn label_accuracy_tstr(
+    fake: &TimeSeriesDataset,
+    real_test: &TimeSeriesDataset,
+    classes: usize,
+) -> f64 {
+    let d = super::sig_dim(fake.channels + 1, SIG_DEPTH);
+    let yl = fake.labels.as_ref().expect("fake data must carry labels");
+    let mut x = Vec::with_capacity(fake.n * d);
+    for i in 0..fake.n {
+        x.extend(series_features(fake.series(i), fake.seq_len, fake.channels, SIG_DEPTH));
+    }
+    let fit = fit_standardise(&mut x, fake.n, d);
+    let model = LogisticRegression::train(&x, yl, fake.n, d, classes, 400, 0.5, 1e-3);
+    let yt = real_test.labels.as_ref().expect("real data must carry labels");
+    let mut xt = Vec::with_capacity(real_test.n * d);
+    for i in 0..real_test.n {
+        xt.extend(series_features(
+            real_test.series(i),
+            real_test.seq_len,
+            real_test.channels,
+            SIG_DEPTH,
+        ));
+    }
+    apply_standardise(&mut xt, real_test.n, d, &fit);
+    model.accuracy(&xt, yt, real_test.n)
+}
+
+/// Prediction TSTR loss (Appendix F.1): fit a forecaster on generated data —
+/// signature of the first 80% of each series → values of the last 20% —
+/// and evaluate its MSE on real test data. Lower = better.
+pub fn prediction_loss_tstr(fake: &TimeSeriesDataset, real_test: &TimeSeriesDataset) -> f64 {
+    assert_eq!(fake.channels, real_test.channels);
+    assert_eq!(fake.seq_len, real_test.seq_len);
+    let head = (fake.seq_len * 4) / 5;
+    let tail = fake.seq_len - head;
+    let d = super::sig_dim(fake.channels + 1, SIG_DEPTH);
+    let out_dim = tail * fake.channels;
+    let build = |ds: &TimeSeriesDataset| -> (Vec<f64>, Vec<f64>) {
+        let mut x = Vec::with_capacity(ds.n * d);
+        let mut y = Vec::with_capacity(ds.n * out_dim);
+        for i in 0..ds.n {
+            let s = ds.series(i);
+            x.extend(series_features(&s[..head * ds.channels], head, ds.channels, SIG_DEPTH));
+            for v in &s[head * ds.channels..] {
+                y.push(*v as f64);
+            }
+        }
+        (x, y)
+    };
+    let (mut xf, yf) = build(fake);
+    let fit = fit_standardise(&mut xf, fake.n, d);
+    let model = RidgeRegression::fit(&xf, &yf, fake.n, d, out_dim, 1e-2);
+    let (mut xr, yr) = build(real_test);
+    apply_standardise(&mut xr, real_test.n, d, &fit);
+    model.mse(&xr, &yr, real_test.n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::air::{self, AirParams};
+    use crate::data::ou::{self, OuParams};
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = M Mᵀ + I for random-ish M.
+        let m = [1.0, 2.0, 0.0, 3.0, 1.0, 4.0, 2.0, 2.0, 5.0];
+        let n = 3;
+        let mut a = vec![0.0; 9];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    a[i * n + j] += m[i * n + k] * m[j * n + k];
+                }
+            }
+            a[i * n + i] += 1.0;
+        }
+        let l = cholesky(&a, n).unwrap();
+        let b = [1.0, -2.0, 0.5];
+        let mut x = [0.0; 3];
+        chol_solve(&l, n, &b, &mut x);
+        // Check A x = b.
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += a[i * n + j] * x[j];
+            }
+            assert!((acc - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logistic_separates_linearly_separable() {
+        // Two Gaussian blobs.
+        let mut rng = SplitPrng::new(3);
+        let n = 200;
+        let d = 2;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let (a, b) = rng.next_normal_pair();
+            let cls = (i % 2) as u32;
+            let shift = if cls == 1 { 3.0 } else { -3.0 };
+            x.push(a + shift);
+            x.push(b);
+            y.push(cls);
+        }
+        let model = LogisticRegression::train(&x, &y, n, d, 2, 200, 0.5, 1e-4);
+        assert!(model.accuracy(&x, &y, n) > 0.95);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map() {
+        let mut rng = SplitPrng::new(5);
+        let n = 100;
+        let d = 3;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let (a, b) = rng.next_normal_pair();
+            let (c, _) = rng.next_normal_pair();
+            x.extend([a, b, c]);
+            y.push(2.0 * a - b + 0.5 * c + 1.0);
+        }
+        let model = RidgeRegression::fit(&x, &y, n, d, 1, 1e-6);
+        assert!(model.mse(&x, &y, n) < 1e-6);
+    }
+
+    #[test]
+    fn real_fake_near_half_for_same_law() {
+        let a = ou::generate(300, 1, OuParams::default());
+        let b = ou::generate(300, 2, OuParams::default());
+        let acc = real_fake_accuracy(&a, &b, 7);
+        assert!(acc < 0.68, "same-law accuracy {acc}");
+    }
+
+    #[test]
+    fn real_fake_high_for_different_law() {
+        let a = ou::generate(300, 1, OuParams::default());
+        let mut p = OuParams::default();
+        p.chi = 1.5;
+        let b = ou::generate(300, 2, p);
+        let acc = real_fake_accuracy(&a, &b, 7);
+        assert!(acc > 0.8, "different-law accuracy {acc}");
+    }
+
+    #[test]
+    fn label_tstr_beats_chance_on_separable_data() {
+        let train = air::generate(600, 1, AirParams::default());
+        let test = air::generate(240, 2, AirParams::default());
+        let acc = label_accuracy_tstr(&train, &test, 12);
+        assert!(acc > 0.3, "12-class accuracy {acc} (chance = 0.083)");
+    }
+
+    #[test]
+    fn prediction_tstr_sane() {
+        let train = ou::generate(400, 1, OuParams::default());
+        let test = ou::generate(150, 2, OuParams::default());
+        let mse = prediction_loss_tstr(&train, &test);
+        // OU tails are predictable to within the stationary variance (~0.8).
+        assert!(mse < 1.5, "mse={mse}");
+        assert!(mse > 0.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! Evaluation metrics (Appendix F.1).
+//!
+//! The paper scores generative quality with four metrics; all are
+//! implemented here over **signature features** (the same feature family
+//! the paper's MMD uses — Appendix F.1 cites Kiraly & Oberhauser):
+//!
+//! * real-vs-fake classification accuracy (lower = better generator),
+//! * label classification accuracy, train-on-synthetic-test-on-real
+//!   (higher = better),
+//! * prediction (forecasting) loss, train-on-synthetic-test-on-real
+//!   (lower = better),
+//! * maximum mean discrepancy with a truncated-signature feature map
+//!   (lower = better).
+//!
+//! The paper's TSTR models are Neural CDEs trained for 5000 GPU steps; per
+//! DESIGN.md §4 we substitute logistic/ridge models over depth-`m`
+//! signature features — same protocol, CPU-trainable in milliseconds.
+
+mod classify;
+mod mmd;
+mod signature;
+
+pub use classify::{
+    label_accuracy_tstr, prediction_loss_tstr, real_fake_accuracy, LogisticRegression,
+    RidgeRegression,
+};
+pub use mmd::{mean_signature, signature_mmd};
+pub use signature::{sig_dim, signature, time_augment};
+
+use crate::data::TimeSeriesDataset;
+
+/// Feature vector for one series: truncated signature of the time-augmented
+/// path. `depth` 3–4 is plenty for the series lengths here.
+pub fn series_features(series: &[f32], seq_len: usize, channels: usize, depth: usize) -> Vec<f64> {
+    let path = time_augment(series, seq_len, channels);
+    signature(&path, seq_len, channels + 1, depth)
+}
+
+/// Feature matrix for a whole dataset, `[n][sig_dim]` flattened.
+pub fn dataset_features(ds: &TimeSeriesDataset, depth: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(ds.n * sig_dim(ds.channels + 1, depth));
+    for i in 0..ds.n {
+        out.extend(series_features(ds.series(i), ds.seq_len, ds.channels, depth));
+    }
+    out
+}

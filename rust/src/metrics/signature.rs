@@ -1,0 +1,199 @@
+//! Truncated path signature (the feature map of Appendix F.1).
+//!
+//! For a path `X: [0, T] → R^c` the depth-`m` signature is the collection of
+//! iterated integrals `∫ dX^{i1} ⋯ dX^{ik}` for `k ≤ m` — a `c + c² + … +
+//! c^m`-dimensional feature vector characterising the path up to
+//! reparameterisation. For piecewise-linear paths it is computed exactly by
+//! Chen's identity: the signature of a concatenation is the tensor product
+//! of signatures, and the signature of a straight segment with increment `d`
+//! is `exp⊗(d) = (1, d, d⊗d/2!, …)`.
+
+/// Dimension of the depth-`m` signature over `R^c` (levels 1..=m).
+pub fn sig_dim(c: usize, depth: usize) -> usize {
+    let mut total = 0;
+    let mut level = 1;
+    for _ in 0..depth {
+        level *= c;
+        total += level;
+    }
+    total
+}
+
+/// Augment a `[seq_len][channels]` series (f32) with a leading time channel
+/// (f64 output, `[seq_len][channels + 1]`).
+///
+/// Time augmentation makes the signature injective on the actual series
+/// values (otherwise it only sees the path's image) and is standard practice
+/// — torchcde/signatory do the same.
+pub fn time_augment(series: &[f32], seq_len: usize, channels: usize) -> Vec<f64> {
+    assert_eq!(series.len(), seq_len * channels);
+    let mut out = Vec::with_capacity(seq_len * (channels + 1));
+    for k in 0..seq_len {
+        out.push(k as f64 / (seq_len.max(2) - 1) as f64);
+        for c in 0..channels {
+            out.push(series[k * channels + c] as f64);
+        }
+    }
+    out
+}
+
+/// Depth-`m` signature of a piecewise-linear path `[seq_len][c]` (f64,
+/// row-major). Returns levels 1..=m concatenated (length [`sig_dim`]).
+pub fn signature(path: &[f64], seq_len: usize, c: usize, depth: usize) -> Vec<f64> {
+    assert!(depth >= 1);
+    assert_eq!(path.len(), seq_len * c);
+    // sig[k] is the level-(k+1) tensor, flattened (c^(k+1) long).
+    let mut sig: Vec<Vec<f64>> = (0..depth).map(|k| vec![0.0; c.pow(k as u32 + 1)]).collect();
+    let mut exp: Vec<Vec<f64>> = sig.clone();
+    let mut new_sig = sig.clone();
+    let mut d = vec![0.0f64; c];
+    for step in 1..seq_len {
+        for i in 0..c {
+            d[i] = path[step * c + i] - path[(step - 1) * c + i];
+        }
+        // exp levels: e[0] = d, e[k] = e[k-1] ⊗ d / (k+1).
+        exp[0].copy_from_slice(&d);
+        for k in 1..depth {
+            let (lo, hi) = exp.split_at_mut(k);
+            let prev = &lo[k - 1];
+            let cur = &mut hi[0];
+            let inv = 1.0 / (k as f64 + 1.0);
+            for (a, &pa) in prev.iter().enumerate() {
+                for (b, &db) in d.iter().enumerate() {
+                    cur[a * c + b] = pa * db * inv;
+                }
+            }
+        }
+        // Chen: new_sig[k] = sig[k] + e[k] + Σ_{j=1}^{k-1} sig[j-1] ⊗ e[k-j-1]
+        for k in 0..depth {
+            let dst = &mut new_sig[k];
+            dst.copy_from_slice(&sig[k]);
+            for (x, &e) in dst.iter_mut().zip(&exp[k]) {
+                *x += e;
+            }
+            for j in 0..k {
+                // sig level (j+1) ⊗ exp level (k-j-1+1): c^(j+1) x c^(k-j-1+1)
+                let a_t = &sig[j];
+                let b_t = &exp[k - j - 1];
+                let bn = b_t.len();
+                for (ai, &av) in a_t.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let base = ai * bn;
+                    for (bi, &bv) in b_t.iter().enumerate() {
+                        dst[base + bi] += av * bv;
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut sig, &mut new_sig);
+    }
+    sig.concat()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sig_dims() {
+        assert_eq!(sig_dim(2, 3), 2 + 4 + 8);
+        assert_eq!(sig_dim(3, 2), 3 + 9);
+        assert_eq!(sig_dim(1, 4), 4);
+    }
+
+    #[test]
+    fn straight_line_signature_is_exp() {
+        // One segment with increment d: level k = d^{⊗k}/k!.
+        let path = [0.0, 0.0, 2.0, 3.0]; // c=2, 2 points, d = (2,3)
+        let s = signature(&path, 2, 2, 3);
+        // level 1
+        assert_eq!(&s[0..2], &[2.0, 3.0]);
+        // level 2: outer(d,d)/2
+        let l2 = &s[2..6];
+        let expect2 = [2.0, 3.0, 3.0, 4.5];
+        for (a, b) in l2.iter().zip(expect2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // level 3 entry (0,0,0): 8/6
+        assert!((s[6] - 8.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn level1_is_total_increment() {
+        let path = [0.0, 1.0, -0.5, 2.0, 3.0, 0.0]; // c=2, 3 points
+        let s = signature(&path, 3, 2, 2);
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chen_identity_concatenation() {
+        // signature(path) computed in one go equals combining the signature
+        // over two halves with the tensor (Chen) product.
+        let c = 2;
+        let depth = 3;
+        let pts: Vec<f64> = vec![
+            0.0, 0.0, 1.0, 0.5, 0.3, -0.2, 0.8, 0.8, 1.5, 0.1, 2.0, 2.0, 1.0, 2.5,
+        ];
+        let n = pts.len() / c;
+        let full = signature(&pts, n, c, depth);
+        let split = 4;
+        let first = signature(&pts[..split * c], split, c, depth);
+        // Second half shares the boundary point.
+        let second = signature(&pts[(split - 1) * c..], n - split + 1, c, depth);
+        // Chen combine with levels (including level 0 = 1).
+        let levels = |s: &[f64]| -> Vec<Vec<f64>> {
+            let mut out = vec![vec![1.0]];
+            let mut off = 0;
+            for k in 1..=depth {
+                let n = c.pow(k as u32);
+                out.push(s[off..off + n].to_vec());
+                off += n;
+            }
+            out
+        };
+        let a = levels(&first);
+        let b = levels(&second);
+        let mut combined: Vec<f64> = Vec::new();
+        for k in 1..=depth {
+            let mut lvl = vec![0.0; c.pow(k as u32)];
+            for j in 0..=k {
+                let (x, y) = (&a[j], &b[k - j]);
+                let yn = y.len();
+                for (xi, &xv) in x.iter().enumerate() {
+                    for (yi, &yv) in y.iter().enumerate() {
+                        lvl[xi * yn + yi] += xv * yv;
+                    }
+                }
+            }
+            combined.extend(lvl);
+        }
+        for (f, g) in full.iter().zip(&combined) {
+            assert!((f - g).abs() < 1e-10, "{f} vs {g}");
+        }
+    }
+
+    #[test]
+    fn invariant_to_time_reparameterisation() {
+        // Inserting a repeated point (zero increment) changes nothing.
+        let base = [0.0, 0.0, 1.0, 1.0, 2.0, 0.5];
+        let repeated = [0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 2.0, 0.5];
+        let a = signature(&base, 3, 2, 3);
+        let b = signature(&repeated, 4, 2, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn time_augment_shapes_and_range() {
+        let series = [5.0f32, 6.0, 7.0];
+        let p = time_augment(&series, 3, 1);
+        assert_eq!(p.len(), 6);
+        assert_eq!(p[0], 0.0);
+        assert_eq!(p[4], 1.0);
+        assert_eq!(p[5], 7.0);
+    }
+}

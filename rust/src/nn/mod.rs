@@ -1,0 +1,268 @@
+//! Neural-network parameter management on the Rust side.
+//!
+//! Training state lives in Rust as **flat `f32` vectors**; the JAX side
+//! (Layer 2) unflattens them inside the AOT-compiled executables. The
+//! contract between the two is the parameter layout recorded in
+//! `artifacts/manifest.json` by `python/compile/aot.py`: an ordered list of
+//! `(name, shape, offset, fan_in, kind)` entries. This module parses that
+//! layout, initialises parameters to match the JAX reference initialisation,
+//! and implements the optimisers the paper trains with (Adam for Latent
+//! SDEs, Adadelta for SDE-GANs — Appendix F.2) plus the paper's third
+//! contribution: **hard Lipschitz enforcement by weight clipping**
+//! (Section 5) and stochastic weight averaging.
+
+mod optim;
+
+pub use optim::{Adadelta, Adam, Optimizer, Sgd, StochasticWeightAverage};
+
+use crate::brownian::SplitPrng;
+use crate::util::json::Json;
+
+/// Kind of a parameter tensor — decides initialisation and clipping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// A linear-layer weight matrix (clipped in Lipschitz-constrained nets).
+    Weight,
+    /// A bias vector (never clipped: adding a bias is 1-Lipschitz).
+    Bias,
+    /// Anything else (readout vectors, initial values, ...).
+    Other,
+}
+
+/// One tensor inside a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamTensor {
+    /// Dotted path, e.g. `"disc.f.layers.0.w"`.
+    pub name: String,
+    /// Shape (row-major).
+    pub shape: Vec<usize>,
+    /// Offset into the flat vector.
+    pub offset: usize,
+    /// Fan-in of the linear map this tensor belongs to (for init/clipping).
+    pub fan_in: usize,
+    /// Tensor kind.
+    pub kind: ParamKind,
+}
+
+impl ParamTensor {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True if the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The layout of a flat parameter vector.
+#[derive(Clone, Debug, Default)]
+pub struct ParamLayout {
+    /// Ordered tensors; offsets are contiguous and ascending.
+    pub tensors: Vec<ParamTensor>,
+    /// Total number of scalars.
+    pub total: usize,
+}
+
+impl ParamLayout {
+    /// Parse from the manifest JSON produced by `aot.py`:
+    /// `[{"name": ..., "shape": [...], "offset": n, "fan_in": n,
+    ///    "kind": "weight"|"bias"|"other"}, ...]`.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("layout: expected array"))?;
+        let mut tensors = Vec::with_capacity(arr.len());
+        let mut total = 0usize;
+        for item in arr {
+            let name = item
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("layout entry missing name"))?
+                .to_string();
+            let shape: Vec<usize> = item
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            let offset = item
+                .get("offset")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing offset"))?;
+            let fan_in = item.get("fan_in").and_then(Json::as_usize).unwrap_or(1);
+            let kind = match item.get("kind").and_then(Json::as_str) {
+                Some("weight") => ParamKind::Weight,
+                Some("bias") => ParamKind::Bias,
+                _ => ParamKind::Other,
+            };
+            let t = ParamTensor { name, shape, offset, fan_in, kind };
+            anyhow::ensure!(t.offset == total, "{}: non-contiguous offset", t.name);
+            total += t.len();
+            tensors.push(t);
+        }
+        Ok(Self { tensors, total })
+    }
+
+    /// Look up a tensor by name.
+    pub fn find(&self, name: &str) -> Option<&ParamTensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Initialise a flat parameter vector:
+    /// weights `~ U(-1/√fan_in, 1/√fan_in)` (PyTorch `nn.Linear` default,
+    /// which the paper's torchsde implementation uses), biases likewise,
+    /// `Other` tensors to zero. `scale(name) -> f32` multiplies each
+    /// tensor's draw — this is the paper's α/β initialisation-scaling
+    /// hyperparameter (Appendix F.2, equation (33)).
+    pub fn init<F: Fn(&str) -> f32>(&self, seed: u64, scale: F) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.total];
+        let mut rng = SplitPrng::new(seed);
+        for t in &self.tensors {
+            let s = scale(&t.name);
+            let bound = 1.0 / (t.fan_in.max(1) as f64).sqrt();
+            let dst = &mut out[t.offset..t.offset + t.len()];
+            match t.kind {
+                ParamKind::Weight | ParamKind::Bias => {
+                    for v in dst.iter_mut() {
+                        let u = rng.next_uniform() * 2.0 - 1.0;
+                        *v = (u * bound) as f32 * s;
+                    }
+                }
+                ParamKind::Other => {
+                    for v in dst.iter_mut() {
+                        let u = rng.next_uniform() * 2.0 - 1.0;
+                        *v = (u * 0.1) as f32 * s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The paper's hard Lipschitz constraint (Section 5, "Clipping"):
+    /// after each optimiser step, clip every **weight** tensor entry to
+    /// `[-1/fan_in, 1/fan_in]`, which enforces `‖Ax‖∞ ≤ ‖x‖∞` per linear
+    /// map and hence vector fields of Lipschitz constant ≤ 1 (with
+    /// 1-Lipschitz activations such as LipSwish).
+    ///
+    /// `filter` selects which tensors participate (the discriminator's
+    /// vector fields `f_φ`, `g_φ` — the generator is unconstrained).
+    pub fn clip_lipschitz<F: Fn(&str) -> bool>(&self, params: &mut [f32], filter: F) {
+        for t in &self.tensors {
+            if t.kind != ParamKind::Weight || !filter(&t.name) {
+                continue;
+            }
+            let bound = 1.0 / t.fan_in.max(1) as f32;
+            for v in &mut params[t.offset..t.offset + t.len()] {
+                *v = v.clamp(-bound, bound);
+            }
+        }
+    }
+}
+
+/// Build a layout programmatically (used by tests and the pure-Rust
+/// experiment paths that don't go through the JAX manifest).
+pub fn layout_from_specs(specs: &[(&str, Vec<usize>, usize, ParamKind)]) -> ParamLayout {
+    let mut tensors = Vec::new();
+    let mut total = 0;
+    for (name, shape, fan_in, kind) in specs {
+        let t = ParamTensor {
+            name: name.to_string(),
+            shape: shape.clone(),
+            offset: total,
+            fan_in: *fan_in,
+            kind: *kind,
+        };
+        total += t.len();
+        tensors.push(t);
+    }
+    ParamLayout { tensors, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_layout() -> ParamLayout {
+        layout_from_specs(&[
+            ("f.w1", vec![4, 8], 4, ParamKind::Weight),
+            ("f.b1", vec![8], 4, ParamKind::Bias),
+            ("f.w2", vec![8, 2], 8, ParamKind::Weight),
+            ("readout", vec![2], 1, ParamKind::Other),
+        ])
+    }
+
+    #[test]
+    fn layout_offsets_contiguous() {
+        let l = demo_layout();
+        assert_eq!(l.total, 32 + 8 + 16 + 2);
+        assert_eq!(l.find("f.w2").unwrap().offset, 40);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"[
+            {"name": "a.w", "shape": [2, 3], "offset": 0, "fan_in": 2, "kind": "weight"},
+            {"name": "a.b", "shape": [3], "offset": 6, "fan_in": 2, "kind": "bias"}
+        ]"#;
+        let l = ParamLayout::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(l.total, 9);
+        assert_eq!(l.tensors[0].kind, ParamKind::Weight);
+        assert_eq!(l.tensors[1].kind, ParamKind::Bias);
+    }
+
+    #[test]
+    fn json_rejects_gaps() {
+        let src = r#"[
+            {"name": "a.w", "shape": [2], "offset": 1, "fan_in": 1, "kind": "weight"}
+        ]"#;
+        assert!(ParamLayout::from_json(&Json::parse(src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn init_respects_bounds_and_scale() {
+        let l = demo_layout();
+        let p = l.init(42, |name| if name.starts_with("f.w1") { 2.0 } else { 1.0 });
+        let w1 = &p[0..32];
+        let bound1 = 2.0 / (4.0f32).sqrt();
+        assert!(w1.iter().all(|v| v.abs() <= bound1));
+        assert!(w1.iter().any(|v| v.abs() > 0.5 / (4.0f32).sqrt()));
+        let w2 = &p[40..56];
+        assert!(w2.iter().all(|v| v.abs() <= 1.0 / (8.0f32).sqrt()));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let l = demo_layout();
+        assert_eq!(l.init(7, |_| 1.0), l.init(7, |_| 1.0));
+        assert_ne!(l.init(7, |_| 1.0), l.init(8, |_| 1.0));
+    }
+
+    #[test]
+    fn clipping_bounds_weights_only() {
+        let l = demo_layout();
+        let mut p = vec![10.0f32; l.total];
+        l.clip_lipschitz(&mut p, |name| name.starts_with("f."));
+        // f.w1 clipped to 1/4, f.b1 untouched, f.w2 clipped to 1/8,
+        // readout untouched.
+        assert!(p[0..32].iter().all(|&v| v == 0.25));
+        assert!(p[32..40].iter().all(|&v| v == 10.0));
+        assert!(p[40..56].iter().all(|&v| v == 0.125));
+        assert!(p[56..58].iter().all(|&v| v == 10.0));
+    }
+
+    #[test]
+    fn clipping_enforces_inf_norm_contraction() {
+        // ‖Ax‖∞ ≤ ‖x‖∞ after clipping, for the worst-case x = sign pattern.
+        let l = layout_from_specs(&[("w", vec![6, 5], 6, ParamKind::Weight)]);
+        let mut p: Vec<f32> = (0..30).map(|i| (i as f32 - 15.0) * 0.3).collect();
+        l.clip_lipschitz(&mut p, |_| true);
+        // Worst-case output coordinate: sum of |entries| down a column
+        // (x multiplies along fan-in = rows here; row-major [in=6, out=5]).
+        for j in 0..5 {
+            let col_abs_sum: f32 = (0..6).map(|i| p[i * 5 + j].abs()).sum();
+            assert!(col_abs_sum <= 1.0 + 1e-6, "column {j}: {col_abs_sum}");
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! The artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes it) and the Rust coordinator (which consumes it).
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "executables": {
+//!     "gan_ou_revheun_fwd_step": {
+//!       "file": "gan_ou_revheun_fwd_step.hlo.txt",
+//!       "inputs":  [{"name": "state_z", "shape": [128, 32], "dtype": "f32"}, ...],
+//!       "outputs": [{"name": "state_z", "shape": [128, 32], "dtype": "f32"}, ...]
+//!     }, ...
+//!   },
+//!   "models": {
+//!     "gan_ou": {
+//!       "gen_layout": [...], "disc_layout": [...],
+//!       "hyper": {"hidden": 32, "state": 32, "noise": 4, ...}
+//!     }, ...
+//!   }
+//! }
+//! ```
+
+use crate::nn::ParamLayout;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    /// Argument name (documentation only; order is what matters).
+    pub name: String,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"f64"`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True for zero-sized tensors.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("<anon>")
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Ordered input tensors.
+    pub inputs: Vec<TensorSpec>,
+    /// Ordered output tensors.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Per-model metadata (parameter layouts + hyperparameters).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Generator parameter layout.
+    pub gen_layout: ParamLayout,
+    /// Discriminator / auxiliary-network layout (empty for plain models).
+    pub disc_layout: ParamLayout,
+    /// Free-form numeric hyperparameters recorded at lowering time.
+    pub hyper: BTreeMap<String, f64>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Executables by name.
+    pub execs: BTreeMap<String, ExecSpec>,
+    /// Models by name.
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    /// Load and parse `path`.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading manifest {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut out = Manifest::default();
+        if let Some(execs) = j.get("executables").and_then(Json::as_obj) {
+            for (name, spec) in execs {
+                let file = spec
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: missing file"))?
+                    .to_string();
+                let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                    spec.get(key)
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                out.execs.insert(
+                    name.clone(),
+                    ExecSpec { file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")? },
+                );
+            }
+        }
+        if let Some(models) = j.get("models").and_then(Json::as_obj) {
+            for (name, spec) in models {
+                let gen_layout = match spec.get("gen_layout") {
+                    Some(l) => ParamLayout::from_json(l)?,
+                    None => ParamLayout::default(),
+                };
+                let disc_layout = match spec.get("disc_layout") {
+                    Some(l) => ParamLayout::from_json(l)?,
+                    None => ParamLayout::default(),
+                };
+                let mut hyper = BTreeMap::new();
+                if let Some(h) = spec.get("hyper").and_then(Json::as_obj) {
+                    for (k, v) in h {
+                        if let Some(x) = v.as_f64() {
+                            hyper.insert(k.clone(), x);
+                        }
+                    }
+                }
+                out.models.insert(name.clone(), ModelSpec { gen_layout, disc_layout, hyper });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fetch a model spec or error.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no model '{name}' in manifest"))
+    }
+
+    /// Hyperparameter lookup with error context.
+    pub fn hyper(&self, model: &str, key: &str) -> Result<f64> {
+        self.model(model)?
+            .hyper
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("model '{model}': missing hyper '{key}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "executables": {
+            "fwd": {
+                "file": "fwd.hlo.txt",
+                "inputs": [
+                    {"name": "z", "shape": [4, 8], "dtype": "f32"},
+                    {"name": "params", "shape": [100], "dtype": "f32"}
+                ],
+                "outputs": [{"name": "z_next", "shape": [4, 8], "dtype": "f32"}]
+            }
+        },
+        "models": {
+            "gan_ou": {
+                "gen_layout": [
+                    {"name": "w", "shape": [2, 3], "offset": 0, "fan_in": 2, "kind": "weight"}
+                ],
+                "hyper": {"hidden": 32, "dt": 0.03125}
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let e = &m.execs["fwd"];
+        assert_eq!(e.file, "fwd.hlo.txt");
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].len(), 32);
+        assert_eq!(m.hyper("gan_ou", "hidden").unwrap(), 32.0);
+        assert_eq!(m.model("gan_ou").unwrap().gen_layout.total, 6);
+        assert!(m.model("nope").is_err());
+        assert!(m.hyper("gan_ou", "nope").is_err());
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let m = Manifest::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(m.execs.is_empty());
+    }
+}

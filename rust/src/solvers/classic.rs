@@ -1,0 +1,159 @@
+//! Baseline fixed-step solvers: Euler–Maruyama (Itô), the midpoint method
+//! and Heun's method (both Stratonovich). Midpoint and Heun each make two
+//! vector-field evaluations per step — the cost the reversible Heun method
+//! halves (paper Section 3, "Computational efficiency").
+
+use super::{apply_diffusion, FixedStepSolver, Sde};
+
+/// Euler–Maruyama: `y' = y + f(t, y) dt + g(t, y) dW` (converges to the
+/// **Itô** solution; used for the Table-10 benchmark whose test SDE is Itô).
+pub struct EulerMaruyama {
+    f: Vec<f64>,
+    g: Vec<f64>,
+}
+
+impl EulerMaruyama {
+    /// Allocate scratch for an SDE of the given dimensions.
+    pub fn new(dim: usize, noise_dim: usize) -> Self {
+        Self { f: vec![0.0; dim], g: vec![0.0; dim * noise_dim] }
+    }
+}
+
+impl FixedStepSolver for EulerMaruyama {
+    const FIELD_EVALS_PER_STEP: usize = 1;
+
+    fn step<S: Sde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64], y: &mut [f64]) {
+        self.f.fill(0.0);
+        sde.drift(t, y, &mut self.f);
+        sde.diffusion(t, y, &mut self.g);
+        for i in 0..y.len() {
+            y[i] += self.f[i] * dt;
+        }
+        apply_diffusion(&self.g, dw, y);
+    }
+}
+
+/// Midpoint method (Stratonovich, strong order 0.5):
+/// `ỹ = y + ½ f dt + ½ g dW` evaluated at `(t, y)`, then a full step with
+/// the fields evaluated at `(t + dt/2, ỹ)`.
+pub struct Midpoint {
+    f: Vec<f64>,
+    g: Vec<f64>,
+    mid: Vec<f64>,
+}
+
+impl Midpoint {
+    /// Allocate scratch for an SDE of the given dimensions.
+    pub fn new(dim: usize, noise_dim: usize) -> Self {
+        Self { f: vec![0.0; dim], g: vec![0.0; dim * noise_dim], mid: vec![0.0; dim] }
+    }
+}
+
+impl FixedStepSolver for Midpoint {
+    const FIELD_EVALS_PER_STEP: usize = 2;
+
+    fn step<S: Sde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64], y: &mut [f64]) {
+        // Half step.
+        sde.drift(t, y, &mut self.f);
+        sde.diffusion(t, y, &mut self.g);
+        self.mid.copy_from_slice(y);
+        for i in 0..y.len() {
+            self.mid[i] += 0.5 * self.f[i] * dt;
+        }
+        let half_dw: Vec<f64> = dw.iter().map(|&x| 0.5 * x).collect();
+        apply_diffusion(&self.g, &half_dw, &mut self.mid);
+        // Full step with midpoint fields.
+        sde.drift(t + 0.5 * dt, &self.mid, &mut self.f);
+        sde.diffusion(t + 0.5 * dt, &self.mid, &mut self.g);
+        for i in 0..y.len() {
+            y[i] += self.f[i] * dt;
+        }
+        apply_diffusion(&self.g, dw, y);
+    }
+}
+
+/// Heun's method / trapezoidal rule (Stratonovich, strong order 0.5; weak
+/// order 2.0 for additive noise — Appendix D.4).
+pub struct Heun {
+    f0: Vec<f64>,
+    g0: Vec<f64>,
+    f1: Vec<f64>,
+    g1: Vec<f64>,
+    pred: Vec<f64>,
+}
+
+impl Heun {
+    /// Allocate scratch for an SDE of the given dimensions.
+    pub fn new(dim: usize, noise_dim: usize) -> Self {
+        Self {
+            f0: vec![0.0; dim],
+            g0: vec![0.0; dim * noise_dim],
+            f1: vec![0.0; dim],
+            g1: vec![0.0; dim * noise_dim],
+            pred: vec![0.0; dim],
+        }
+    }
+}
+
+impl FixedStepSolver for Heun {
+    const FIELD_EVALS_PER_STEP: usize = 2;
+
+    fn step<S: Sde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64], y: &mut [f64]) {
+        sde.drift(t, y, &mut self.f0);
+        sde.diffusion(t, y, &mut self.g0);
+        // Euler predictor.
+        self.pred.copy_from_slice(y);
+        for i in 0..y.len() {
+            self.pred[i] += self.f0[i] * dt;
+        }
+        apply_diffusion(&self.g0, dw, &mut self.pred);
+        // Trapezoidal corrector.
+        sde.drift(t + dt, &self.pred, &mut self.f1);
+        sde.diffusion(t + dt, &self.pred, &mut self.g1);
+        for i in 0..y.len() {
+            y[i] += 0.5 * (self.f0[i] + self.f1[i]) * dt;
+        }
+        let d = dw.len();
+        for i in 0..y.len() {
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += 0.5 * (self.g0[i * d + j] + self.g1[i * d + j]) * dw[j];
+            }
+            y[i] += acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::systems::ScalarLinear;
+    use super::super::{integrate, FineBrownianGrid};
+    use super::*;
+
+    /// With zero noise all solvers must integrate the ODE y' = a y.
+    fn ode_error<M: FixedStepSolver>(solver: &mut M) -> f64 {
+        let sde = ScalarLinear { a: 1.0, b: 0.0 };
+        let mut noise = FineBrownianGrid::new(1, 1024, 1.0, 7);
+        let traj = integrate(&sde, solver, &mut noise, &[1.0], 0.0, 1.0, 256);
+        let last = traj[traj.len() - 1];
+        (last - 1.0f64.exp()).abs()
+    }
+
+    #[test]
+    fn solvers_integrate_odes() {
+        assert!(ode_error(&mut EulerMaruyama::new(1, 1)) < 1e-2);
+        assert!(ode_error(&mut Midpoint::new(1, 1)) < 1e-4);
+        assert!(ode_error(&mut Heun::new(1, 1)) < 1e-4);
+    }
+
+    #[test]
+    fn midpoint_and_heun_agree_to_leading_order() {
+        let sde = ScalarLinear { a: 0.5, b: 0.4 };
+        let mut noise1 = FineBrownianGrid::new(1, 4096, 1.0, 11);
+        let mut noise2 = FineBrownianGrid::new(1, 4096, 1.0, 11);
+        let t1 = integrate(&sde, &mut Midpoint::new(1, 1), &mut noise1, &[1.0], 0.0, 1.0, 512);
+        let t2 = integrate(&sde, &mut Heun::new(1, 1), &mut noise2, &[1.0], 0.0, 1.0, 512);
+        let (a, b) = (t1[t1.len() - 1], t2[t2.len() - 1]);
+        assert!((a - b).abs() < 5e-3, "midpoint {a} vs heun {b}");
+    }
+}

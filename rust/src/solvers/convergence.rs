@@ -1,0 +1,264 @@
+//! Strong/weak convergence-order estimation (Appendix D.4, Figures 5 & 6).
+//!
+//! The protocol follows the paper: integrate the scalar anharmonic
+//! oscillator `dy = sin(y) dt + dW` over `[0, 1]` with step `h = T/N`, and
+//! compare against a reference solution computed by Heun's method on the
+//! *same Brownian sample paths* at a 10× finer step. Report
+//!
+//! ```text
+//! S_N = sqrt( E[ |Y_N - Y^fine| ] )          (strong error estimator)
+//! E_N = | E[Y_N]  - E[Y^fine]  |             (weak, first moment)
+//! V_N = | E[Y_N²] - E[(Y^fine)²] |           (weak, second moment)
+//! ```
+//!
+//! Shared paths across all step sizes come from [`FineBrownianGrid`]: `f64`
+//! increments generated once on the finest grid and *summed* for coarser
+//! steps, so every solver/step-size sees the same underlying path.
+
+use super::{FixedStepSolver, NoiseF64, Sde};
+use crate::brownian::{splitmix64, SplitPrng};
+use crate::util::stats;
+
+/// Brownian increments pre-generated on a uniform fine grid in `f64`.
+pub struct FineBrownianGrid {
+    dim: usize,
+    fine_steps: usize,
+    t1: f64,
+    /// increments, `[fine_steps][dim]` flattened.
+    inc: Vec<f64>,
+}
+
+impl FineBrownianGrid {
+    /// Generate `fine_steps` iid `N(0, T/fine_steps)` increments per channel.
+    pub fn new(dim: usize, fine_steps: usize, t1: f64, seed: u64) -> Self {
+        let dt = t1 / fine_steps as f64;
+        let sd = dt.sqrt();
+        let mut rng = SplitPrng::new(splitmix64(seed));
+        let mut inc = Vec::with_capacity(fine_steps * dim);
+        let mut pending: Option<f64> = None;
+        for _ in 0..fine_steps * dim {
+            let v = match pending.take() {
+                Some(v) => v,
+                None => {
+                    let (a, b) = rng.next_normal_pair();
+                    pending = Some(b);
+                    a
+                }
+            };
+            inc.push(v * sd);
+        }
+        Self { dim, fine_steps, t1, inc }
+    }
+
+    /// Number of fine steps.
+    pub fn fine_steps(&self) -> usize {
+        self.fine_steps
+    }
+}
+
+impl NoiseF64 for FineBrownianGrid {
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f64]) {
+        let dt = self.t1 / self.fine_steps as f64;
+        let ks = ((s / dt).round() as usize).min(self.fine_steps);
+        let kt = ((t / dt).round() as usize).min(self.fine_steps);
+        assert!(kt > ks, "coarse step must cover >= 1 fine step (s={s}, t={t})");
+        out.fill(0.0);
+        for k in ks..kt {
+            let row = &self.inc[k * self.dim..(k + 1) * self.dim];
+            for i in 0..self.dim {
+                out[i] += row[i];
+            }
+        }
+    }
+}
+
+/// Errors measured at one step size.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorPoint {
+    /// Step size `h = T / n`.
+    pub h: f64,
+    /// Strong error estimator `S_N` (see module docs).
+    pub strong: f64,
+    /// Weak first-moment error `E_N`.
+    pub weak_mean: f64,
+    /// Weak second-moment error `V_N`.
+    pub weak_second: f64,
+}
+
+/// A full convergence study for one solver.
+#[derive(Clone, Debug)]
+pub struct ConvergenceReport {
+    /// Solver label.
+    pub solver: String,
+    /// Per-step-size error estimators.
+    pub points: Vec<ErrorPoint>,
+    /// Fitted strong order (slope of `log2 S_N²` vs `log2 h`, i.e. of the
+    /// mean absolute error — matching how the paper plots orders).
+    pub strong_order: f64,
+    /// Fitted weak order (slope of `log2 E_N` vs `log2 h`).
+    pub weak_order: f64,
+}
+
+/// Integrate to `t1` and return the terminal scalar value (dim-1 systems).
+fn terminal<S: Sde, M: FixedStepSolver>(
+    sde: &S,
+    solver: &mut M,
+    noise: &mut FineBrownianGrid,
+    y0: f64,
+    t1: f64,
+    n_steps: usize,
+) -> f64 {
+    let mut y = [y0];
+    let mut dw = [0.0f64];
+    let dt = t1 / n_steps as f64;
+    for k in 0..n_steps {
+        let s = k as f64 * dt;
+        let t = (k + 1) as f64 * dt;
+        noise.increment(s, t, &mut dw);
+        solver.step(sde, s, dt, &dw, &mut y);
+    }
+    y[0]
+}
+
+/// Compute the paper's `(S_N, E_N, V_N)` estimators for one solver at the
+/// given step counts, over `n_paths` Monte-Carlo sample paths.
+///
+/// `mk_solver` builds a fresh stepper per path/step-size; the reference is
+/// Heun at `10 × max(step_counts)` steps on the same path.
+pub fn strong_weak_errors<S, M, F>(
+    sde: &S,
+    mk_solver: F,
+    step_counts: &[usize],
+    n_paths: usize,
+    y0: f64,
+    t1: f64,
+    seed: u64,
+) -> Vec<ErrorPoint>
+where
+    S: Sde,
+    M: FixedStepSolver,
+    F: Fn(&S, f64, &[f64]) -> M,
+{
+    let max_n = *step_counts.iter().max().unwrap();
+    let fine_n = 10 * max_n;
+    let mut abs_err = vec![0.0f64; step_counts.len()];
+    let mut mean_coarse = vec![0.0f64; step_counts.len()];
+    let mut sq_coarse = vec![0.0f64; step_counts.len()];
+    let mut mean_fine = 0.0f64;
+    let mut sq_fine = 0.0f64;
+
+    for p in 0..n_paths {
+        let mut grid = FineBrownianGrid::new(1, fine_n, t1, seed.wrapping_add(p as u64));
+        // Reference: standard Heun on the fine grid (as in the paper).
+        let mut heun = super::Heun::new(1, 1);
+        let y_fine = terminal(sde, &mut heun, &mut grid, y0, t1, fine_n);
+        mean_fine += y_fine;
+        sq_fine += y_fine * y_fine;
+        for (i, &n) in step_counts.iter().enumerate() {
+            let mut solver = mk_solver(sde, 0.0, &[y0]);
+            let y_n = terminal(sde, &mut solver, &mut grid, y0, t1, n);
+            abs_err[i] += (y_n - y_fine).abs();
+            mean_coarse[i] += y_n;
+            sq_coarse[i] += y_n * y_n;
+        }
+    }
+
+    let np = n_paths as f64;
+    mean_fine /= np;
+    sq_fine /= np;
+    step_counts
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| ErrorPoint {
+            h: t1 / n as f64,
+            strong: (abs_err[i] / np).sqrt(),
+            weak_mean: (mean_coarse[i] / np - mean_fine).abs(),
+            weak_second: (sq_coarse[i] / np - sq_fine).abs(),
+        })
+        .collect()
+}
+
+/// Fit convergence orders from error points.
+pub fn estimate_orders(solver: &str, points: Vec<ErrorPoint>) -> ConvergenceReport {
+    let xs: Vec<f64> = points.iter().map(|p| p.h.log2()).collect();
+    // S_N = sqrt(E|err|): E|err| ~ h^q  =>  log2 S_N² = q log2 h + c.
+    let ys_strong: Vec<f64> = points.iter().map(|p| (p.strong * p.strong).log2()).collect();
+    let ys_weak: Vec<f64> = points.iter().map(|p| p.weak_mean.max(1e-300).log2()).collect();
+    let (_, strong_order) = stats::linear_fit(&xs, &ys_strong);
+    let (_, weak_order) = stats::linear_fit(&xs, &ys_weak);
+    ConvergenceReport { solver: solver.to_string(), points, strong_order, weak_order }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::systems::Anharmonic;
+    use super::super::{Heun, ReversibleHeun};
+    use super::*;
+
+    #[test]
+    fn fine_grid_increments_sum_consistently() {
+        let mut g = FineBrownianGrid::new(2, 100, 1.0, 3);
+        let mut whole = [0.0f64; 2];
+        g.increment(0.0, 1.0, &mut whole);
+        let mut acc = [0.0f64; 2];
+        let mut part = [0.0f64; 2];
+        for k in 0..10 {
+            g.increment(k as f64 / 10.0, (k + 1) as f64 / 10.0, &mut part);
+            acc[0] += part[0];
+            acc[1] += part[1];
+        }
+        assert!((whole[0] - acc[0]).abs() < 1e-12);
+        assert!((whole[1] - acc[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fine_grid_variance() {
+        let mut g = FineBrownianGrid::new(20_000, 64, 1.0, 11);
+        let mut w = vec![0.0f64; 20_000];
+        g.increment(0.0, 1.0, &mut w);
+        let var = w.iter().map(|x| x * x).sum::<f64>() / w.len() as f64;
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    // The full-size order studies live in `examples/convergence.rs` and the
+    // fig5 bench; here we sanity-check with a small budget.
+    #[test]
+    fn revheun_additive_noise_strong_order_near_one() {
+        let sde = Anharmonic { sigma: 1.0 };
+        let pts = strong_weak_errors(
+            &sde,
+            |s, t0, y0| ReversibleHeun::new(s, t0, y0),
+            &[8, 16, 32, 64],
+            400,
+            1.0,
+            1.0,
+            42,
+        );
+        let rep = estimate_orders("revheun", pts);
+        assert!(
+            rep.strong_order > 0.75 && rep.strong_order < 1.4,
+            "strong order {}",
+            rep.strong_order
+        );
+    }
+
+    #[test]
+    fn heun_additive_noise_strong_order_near_one() {
+        let sde = Anharmonic { sigma: 1.0 };
+        let pts = strong_weak_errors(
+            &sde,
+            |_s, _t0, _y0| Heun::new(1, 1),
+            &[8, 16, 32, 64],
+            400,
+            1.0,
+            1.0,
+            43,
+        );
+        let rep = estimate_orders("heun", pts);
+        assert!(
+            rep.strong_order > 0.75 && rep.strong_order < 1.4,
+            "strong order {}",
+            rep.strong_order
+        );
+    }
+}

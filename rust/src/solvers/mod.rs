@@ -1,0 +1,139 @@
+//! Numerical SDE solvers in pure Rust.
+//!
+//! These implement the paper's solver contribution — the **reversible Heun
+//! method** (Section 3, Algorithms 1 and 2) — alongside the baselines it is
+//! compared against (Euler–Maruyama, the midpoint method, standard Heun).
+//! They operate on plain `f64` state over user-supplied vector fields, and
+//! power the numerical experiments that don't involve neural networks:
+//! convergence order studies (Figures 5/6), the absolute-stability analysis
+//! (Appendix D.5), and the Table-10 solve-speed benchmark. The *neural*
+//! (batched, trained) solves run through the AOT-compiled JAX twins of
+//! these steppers (`python/compile/sdeint.py`) driven by
+//! [`crate::coordinator`]; pytest cross-checks the two implementations.
+
+mod classic;
+mod convergence;
+mod reversible_heun;
+mod stability;
+pub mod systems;
+
+pub use classic::{EulerMaruyama, Heun, Midpoint};
+pub use convergence::{
+    estimate_orders, strong_weak_errors, ConvergenceReport, FineBrownianGrid,
+};
+pub use reversible_heun::{ReversibleHeun, RevHeunState};
+pub use stability::{revheun_stability_bounded, Complex};
+
+/// A (Stratonovich, unless a solver documents otherwise) SDE
+/// `dY = f(t, Y) dt + g(t, Y) dW` with `Y ∈ R^dim`, `W ∈ R^noise_dim`.
+pub trait Sde {
+    /// State dimension `e`.
+    fn dim(&self) -> usize;
+    /// Brownian dimension `d`.
+    fn noise_dim(&self) -> usize;
+    /// Drift `f(t, y)` into `out` (`dim` long).
+    fn drift(&self, t: f64, y: &[f64], out: &mut [f64]);
+    /// Diffusion matrix `g(t, y)` into `out`, row-major `dim x noise_dim`.
+    fn diffusion(&self, t: f64, y: &[f64], out: &mut [f64]);
+}
+
+/// Apply a diffusion matrix to a noise increment: `out += mat · dw`.
+#[inline]
+pub fn apply_diffusion(mat: &[f64], dw: &[f64], out: &mut [f64]) {
+    let d = dw.len();
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = &mat[i * d..(i + 1) * d];
+        let mut acc = 0.0;
+        for j in 0..d {
+            acc += row[j] * dw[j];
+        }
+        *o += acc;
+    }
+}
+
+/// `f64` Brownian increments for the solver layer.
+///
+/// Implemented by [`FineBrownianGrid`] natively and by any
+/// [`crate::brownian::BrownianSource`] via [`NoiseFromSource`].
+pub trait NoiseF64 {
+    /// Write `W(t) - W(s)` into `out`.
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f64]);
+}
+
+/// Adapter: use an `f32` Brownian source (e.g. the Brownian Interval) as
+/// solver noise.
+pub struct NoiseFromSource<'a, B: crate::brownian::BrownianSource> {
+    src: &'a mut B,
+    buf: Vec<f32>,
+}
+
+impl<'a, B: crate::brownian::BrownianSource> NoiseFromSource<'a, B> {
+    /// Wrap a Brownian source.
+    pub fn new(src: &'a mut B) -> Self {
+        let n = src.size();
+        Self { src, buf: vec![0.0; n] }
+    }
+}
+
+impl<'a, B: crate::brownian::BrownianSource> NoiseF64 for NoiseFromSource<'a, B> {
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f64]) {
+        self.src.increment(s, t, &mut self.buf);
+        for (o, &x) in out.iter_mut().zip(self.buf.iter()) {
+            *o = x as f64;
+        }
+    }
+}
+
+/// A fixed-step solver: advances `(t, y)` by `dt` given the Brownian
+/// increment for the step.
+pub trait FixedStepSolver {
+    /// Vector-field evaluations per step (the quantity the paper's speedups
+    /// are measured in — reversible Heun costs 1, midpoint/Heun cost 2).
+    const FIELD_EVALS_PER_STEP: usize;
+
+    /// Advance `y` in place from `t` to `t + dt` using increment `dw`.
+    fn step<S: Sde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64], y: &mut [f64]);
+}
+
+/// Integrate `sde` from `y0` over `[t0, t1]` in `n_steps` fixed steps,
+/// returning the state at every grid point (including `y0`), flattened
+/// `[(n_steps + 1) * dim]`.
+pub fn integrate<S: Sde, M: FixedStepSolver, N: NoiseF64>(
+    sde: &S,
+    solver: &mut M,
+    noise: &mut N,
+    y0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+) -> Vec<f64> {
+    assert_eq!(y0.len(), sde.dim());
+    let dt = (t1 - t0) / n_steps as f64;
+    let mut traj = Vec::with_capacity((n_steps + 1) * sde.dim());
+    traj.extend_from_slice(y0);
+    let mut y = y0.to_vec();
+    let mut dw = vec![0.0f64; sde.noise_dim()];
+    for k in 0..n_steps {
+        let s = t0 + k as f64 * dt;
+        let t = t0 + (k + 1) as f64 * dt;
+        noise.increment(s, t, &mut dw);
+        solver.step(sde, s, t - s, &dw, &mut y);
+        traj.extend_from_slice(&y);
+    }
+    traj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_diffusion_matches_matvec() {
+        // 2x3 matrix.
+        let mat = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let dw = [1.0, 0.0, -1.0];
+        let mut out = [10.0, 20.0];
+        apply_diffusion(&mat, &dw, &mut out);
+        assert_eq!(out, [10.0 + (1.0 - 3.0), 20.0 + (4.0 - 6.0)]);
+    }
+}

@@ -1,0 +1,272 @@
+//! The reversible Heun method (paper Section 3, Algorithms 1 and 2).
+//!
+//! State is the 4-tuple `(z, ẑ, μ, σ)`; a step costs a **single** evaluation
+//! of each vector field (half the cost of midpoint/Heun), and the update is
+//! *algebraically invertible*: [`ReversibleHeun::reverse_step`] reconstructs
+//! the previous state from the next one in closed form. That reversibility
+//! is what makes the continuous-adjoint gradients exactly equal to the
+//! discretise-then-optimise gradients of the forward pass (the paper's
+//! headline Figure 2; reproduced through the JAX twin of this stepper by
+//! `examples/gradient_error.rs`).
+
+use super::{apply_diffusion, FixedStepSolver, Sde};
+
+/// Full reversible-Heun solver state `(z, ẑ, μ, σ)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RevHeunState {
+    /// The solution estimate `z_n ≈ Z_{t_n}`.
+    pub z: Vec<f64>,
+    /// The auxiliary estimate `ẑ_n` (propagated by a leapfrog/midpoint rule).
+    pub zh: Vec<f64>,
+    /// Cached drift evaluation `μ_n = μ(t_n, ẑ_n)`.
+    pub mu: Vec<f64>,
+    /// Cached diffusion evaluation `σ_n = σ(t_n, ẑ_n)` (row-major `e×d`).
+    pub sigma: Vec<f64>,
+}
+
+impl RevHeunState {
+    /// Initial state per Algorithm 1: `z_0 = ẑ_0 = y0`, `μ_0 = μ(t0, y0)`,
+    /// `σ_0 = σ(t0, y0)`.
+    pub fn init<S: Sde>(sde: &S, t0: f64, y0: &[f64]) -> Self {
+        let mut mu = vec![0.0; sde.dim()];
+        let mut sigma = vec![0.0; sde.dim() * sde.noise_dim()];
+        sde.drift(t0, y0, &mut mu);
+        sde.diffusion(t0, y0, &mut sigma);
+        Self { z: y0.to_vec(), zh: y0.to_vec(), mu, sigma }
+    }
+
+    /// Max-abs difference to another state (for reversibility tests).
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        let d = |a: &[f64], b: &[f64]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
+        };
+        d(&self.z, &other.z)
+            .max(d(&self.zh, &other.zh))
+            .max(d(&self.mu, &other.mu))
+            .max(d(&self.sigma, &other.sigma))
+    }
+}
+
+/// The reversible Heun stepper.
+pub struct ReversibleHeun {
+    state: RevHeunState,
+    scratch_zh: Vec<f64>,
+    scratch_mu: Vec<f64>,
+    scratch_sigma: Vec<f64>,
+}
+
+impl ReversibleHeun {
+    /// Initialise at `(t0, y0)`.
+    pub fn new<S: Sde>(sde: &S, t0: f64, y0: &[f64]) -> Self {
+        let state = RevHeunState::init(sde, t0, y0);
+        let e = sde.dim();
+        let d = sde.noise_dim();
+        Self {
+            state,
+            scratch_zh: vec![0.0; e],
+            scratch_mu: vec![0.0; e],
+            scratch_sigma: vec![0.0; e * d],
+        }
+    }
+
+    /// Borrow the current full state.
+    pub fn state(&self) -> &RevHeunState {
+        &self.state
+    }
+
+    /// Replace the full state (used when starting a backward pass from the
+    /// retained terminal state).
+    pub fn set_state(&mut self, state: RevHeunState) {
+        self.state = state;
+    }
+
+    /// Algorithm 1: advance `(z, ẑ, μ, σ)` from `t_n` to `t_{n+1}`.
+    ///
+    /// ```text
+    /// ẑ' = 2 z − ẑ + μ Δt + σ ΔW
+    /// μ' = μ(t', ẑ'),  σ' = σ(t', ẑ')
+    /// z' = z + ½ (μ + μ') Δt + ½ (σ + σ') ΔW
+    /// ```
+    pub fn forward_step<S: Sde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64]) {
+        let st = &mut self.state;
+        let e = st.z.len();
+        // ẑ_{n+1}
+        for i in 0..e {
+            self.scratch_zh[i] = 2.0 * st.z[i] - st.zh[i] + st.mu[i] * dt;
+        }
+        apply_diffusion(&st.sigma, dw, &mut self.scratch_zh);
+        // μ_{n+1}, σ_{n+1}
+        sde.drift(t + dt, &self.scratch_zh, &mut self.scratch_mu);
+        sde.diffusion(t + dt, &self.scratch_zh, &mut self.scratch_sigma);
+        // z_{n+1}
+        let d = dw.len();
+        for i in 0..e {
+            let mut acc = st.z[i] + 0.5 * (st.mu[i] + self.scratch_mu[i]) * dt;
+            for j in 0..d {
+                acc += 0.5 * (st.sigma[i * d + j] + self.scratch_sigma[i * d + j]) * dw[j];
+            }
+            st.z[i] = acc;
+        }
+        std::mem::swap(&mut st.zh, &mut self.scratch_zh);
+        std::mem::swap(&mut st.mu, &mut self.scratch_mu);
+        std::mem::swap(&mut st.sigma, &mut self.scratch_sigma);
+    }
+
+    /// Algorithm 2's "reverse step": reconstruct the state at `t_n` from the
+    /// state at `t_{n+1} = t_n + dt`, in closed form:
+    ///
+    /// ```text
+    /// ẑ  = 2 z' − ẑ' − μ' Δt − σ' ΔW
+    /// μ  = μ(t, ẑ),  σ = σ(t, ẑ)
+    /// z  = z' − ½ (μ + μ') Δt − ½ (σ + σ') ΔW
+    /// ```
+    ///
+    /// `dw` must be the same Brownian increment used by the forward step —
+    /// supplied by the deterministic Brownian Interval.
+    pub fn reverse_step<S: Sde>(&mut self, sde: &S, t_next: f64, dt: f64, dw: &[f64]) {
+        let st = &mut self.state;
+        let e = st.z.len();
+        let d = dw.len();
+        // ẑ_n
+        for i in 0..e {
+            let mut acc = 2.0 * st.z[i] - st.zh[i] - st.mu[i] * dt;
+            for j in 0..d {
+                acc -= st.sigma[i * d + j] * dw[j];
+            }
+            self.scratch_zh[i] = acc;
+        }
+        // μ_n, σ_n at t_n = t_next - dt.
+        sde.drift(t_next - dt, &self.scratch_zh, &mut self.scratch_mu);
+        sde.diffusion(t_next - dt, &self.scratch_zh, &mut self.scratch_sigma);
+        // z_n
+        for i in 0..e {
+            let mut acc = st.z[i] - 0.5 * (st.mu[i] + self.scratch_mu[i]) * dt;
+            for j in 0..d {
+                acc -= 0.5 * (st.sigma[i * d + j] + self.scratch_sigma[i * d + j]) * dw[j];
+            }
+            st.z[i] = acc;
+        }
+        std::mem::swap(&mut st.zh, &mut self.scratch_zh);
+        std::mem::swap(&mut st.mu, &mut self.scratch_mu);
+        std::mem::swap(&mut st.sigma, &mut self.scratch_sigma);
+    }
+}
+
+impl FixedStepSolver for ReversibleHeun {
+    const FIELD_EVALS_PER_STEP: usize = 1;
+
+    fn step<S: Sde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64], y: &mut [f64]) {
+        // Re-seed the internal state if the driver's `y` diverged from ours
+        // (e.g. first call, or the driver mutated y). Detected cheaply by
+        // comparing pointers-worth of values.
+        if self.state.z != *y {
+            self.state = RevHeunState::init(sde, t, y);
+        }
+        self.forward_step(sde, t, dt, dw);
+        y.copy_from_slice(&self.state.z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::systems::{Anharmonic, ScalarLinear, TanhDiagonal};
+    use super::super::{integrate, FineBrownianGrid, NoiseF64};
+    use super::*;
+
+    #[test]
+    fn ode_accuracy_second_order() {
+        // With σ = 0 the method is a (leapfrog/trapezoidal) second-order ODE
+        // integrator: halving dt should cut error ~4x.
+        let sde = ScalarLinear { a: 1.0, b: 0.0 };
+        let mut err = Vec::new();
+        for n in [64usize, 128, 256] {
+            let mut solver = ReversibleHeun::new(&sde, 0.0, &[1.0]);
+            let mut noise = FineBrownianGrid::new(1, 1024, 1.0, 1);
+            let traj = integrate(&sde, &mut solver, &mut noise, &[1.0], 0.0, 1.0, n);
+            err.push((traj[traj.len() - 1] - 1.0f64.exp()).abs());
+        }
+        assert!(err[0] / err[1] > 3.0, "ratios: {err:?}");
+        assert!(err[1] / err[2] > 3.0, "ratios: {err:?}");
+    }
+
+    #[test]
+    fn algebraic_reversibility_bit_tight() {
+        // Forward N steps then reverse N steps recovers the initial state to
+        // floating-point roundoff — the property gradient exactness rests on.
+        let sde = Anharmonic { sigma: 1.0 };
+        let n = 200;
+        let dt = 1.0 / n as f64;
+        let mut noise = FineBrownianGrid::new(1, 4096, 1.0, 33);
+        let mut dws = Vec::new();
+        let mut dw = [0.0f64];
+        let mut solver = ReversibleHeun::new(&sde, 0.0, &[1.0]);
+        let init = solver.state().clone();
+        for k in 0..n {
+            let (s, t) = (k as f64 * dt, (k + 1) as f64 * dt);
+            noise.increment(s, t, &mut dw);
+            dws.push(dw[0]);
+            solver.forward_step(&sde, s, dt, &dw);
+        }
+        for k in (0..n).rev() {
+            let t_next = (k + 1) as f64 * dt;
+            solver.reverse_step(&sde, t_next, dt, &[dws[k]]);
+        }
+        let diff = solver.state().max_abs_diff(&init);
+        assert!(diff < 1e-10, "round-trip error {diff}");
+    }
+
+    #[test]
+    fn reversibility_multidimensional() {
+        let sde = TanhDiagonal::new(10, 99);
+        let n = 100;
+        let dt = 1.0 / n as f64;
+        let y0 = vec![0.1; 10];
+        let mut solver = ReversibleHeun::new(&sde, 0.0, &y0);
+        let init = solver.state().clone();
+        let mut noise = FineBrownianGrid::new(10, 2048, 1.0, 5);
+        let mut dws = vec![vec![0.0f64; 10]; n];
+        for k in 0..n {
+            let (s, t) = (k as f64 * dt, (k + 1) as f64 * dt);
+            noise.increment(s, t, &mut dws[k]);
+            solver.forward_step(&sde, s, dt, &dws[k]);
+        }
+        for k in (0..n).rev() {
+            solver.reverse_step(&sde, (k + 1) as f64 * dt, dt, &dws[k]);
+        }
+        assert!(solver.state().max_abs_diff(&init) < 1e-9);
+    }
+
+    #[test]
+    fn matches_heun_to_leading_order_on_sde() {
+        let sde = ScalarLinear { a: 0.3, b: 0.5 };
+        let n = 1024;
+        let mut noise1 = FineBrownianGrid::new(1, 4096, 1.0, 21);
+        let mut noise2 = FineBrownianGrid::new(1, 4096, 1.0, 21);
+        let mut rh = ReversibleHeun::new(&sde, 0.0, &[1.0]);
+        let t1 = integrate(&sde, &mut rh, &mut noise1, &[1.0], 0.0, 1.0, n);
+        let mut h = super::super::Heun::new(1, 1);
+        let t2 = integrate(&sde, &mut h, &mut noise2, &[1.0], 0.0, 1.0, n);
+        let (a, b) = (t1[t1.len() - 1], t2[t2.len() - 1]);
+        assert!((a - b).abs() < 1e-2, "revheun {a} vs heun {b}");
+    }
+
+    #[test]
+    fn z_and_zh_stay_close() {
+        // Theorem D.6: E||Y_n - Z_n||_4 = O(sqrt(h)).
+        let sde = Anharmonic { sigma: 0.5 };
+        let n = 512;
+        let dt = 1.0 / n as f64;
+        let mut solver = ReversibleHeun::new(&sde, 0.0, &[1.0]);
+        let mut noise = FineBrownianGrid::new(1, 4096, 1.0, 8);
+        let mut dw = [0.0f64];
+        let mut max_gap = 0.0f64;
+        for k in 0..n {
+            let (s, t) = (k as f64 * dt, (k + 1) as f64 * dt);
+            noise.increment(s, t, &mut dw);
+            solver.forward_step(&sde, s, dt, &dw);
+            let st = solver.state();
+            max_gap = max_gap.max((st.z[0] - st.zh[0]).abs());
+        }
+        assert!(max_gap < 0.5, "z and ẑ diverged: {max_gap}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Absolute stability of the reversible Heun method in the ODE setting
+//! (Appendix D.5).
+//!
+//! Theorem D.19: applied to the linear test equation `y' = λy` with
+//! `Re(λ) ≤ 0`, the iterates `{Y_n, Z_n}` are bounded **iff** `λh ∈ [-i, i]`
+//! — the same region as the (reversible) asynchronous leapfrog integrator
+//! of Zhuang et al. (2021). [`revheun_stability_bounded`] checks
+//! boundedness empirically for a given `λh`; tests map the region.
+
+/// Minimal complex arithmetic (kept local — no external deps).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Complex {
+    /// Real part.
+    pub re: f64,
+    /// Imaginary part.
+    pub im: f64,
+}
+
+impl Complex {
+    /// Construct from parts.
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// Modulus.
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+impl std::ops::Add for Complex {
+    type Output = Complex;
+    fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl std::ops::Sub for Complex {
+    type Output = Complex;
+    fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl std::ops::Mul for Complex {
+    type Output = Complex;
+    fn mul(self, o: Complex) -> Complex {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+}
+
+impl std::ops::Mul<f64> for Complex {
+    type Output = Complex;
+    fn mul(self, s: f64) -> Complex {
+        Complex::new(self.re * s, self.im * s)
+    }
+}
+
+/// Run the reversible Heun method on `y' = λy` for `n_steps` with the given
+/// `λh`, reporting whether `max(|Y_n|, |Z_n|)` stayed below `bound`.
+///
+/// Per Theorem D.19 this returns `true` iff `λh` lies on the imaginary
+/// segment `[-i, i]` (up to the finite horizon and tolerance of the check).
+pub fn revheun_stability_bounded(lambda_h: Complex, n_steps: usize, bound: f64) -> bool {
+    // Reversible Heun on an autonomous linear ODE, dt absorbed into λh:
+    //   ẑ' = 2z − ẑ + λh ẑ
+    //   z' = z + ½ λh (ẑ + ẑ')
+    let mut z = Complex::new(1.0, 0.0);
+    let mut zh = Complex::new(1.0, 0.0);
+    for _ in 0..n_steps {
+        let zh_next = z * 2.0 - zh + lambda_h * zh;
+        let z_next = z + lambda_h * (zh + zh_next) * 0.5;
+        z = z_next;
+        zh = zh_next;
+        if z.abs() > bound || zh.abs() > bound {
+            return false;
+        }
+        if !z.re.is_finite() || !zh.re.is_finite() {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 20_000;
+    const BOUND: f64 = 1e4;
+
+    #[test]
+    fn stable_on_imaginary_segment() {
+        for im in [0.0, 0.1, 0.5, 0.9, 0.99] {
+            assert!(
+                revheun_stability_bounded(Complex::new(0.0, im), N, BOUND),
+                "λh = {im}i should be stable"
+            );
+            assert!(
+                revheun_stability_bounded(Complex::new(0.0, -im), N, BOUND),
+                "λh = -{im}i should be stable"
+            );
+        }
+    }
+
+    #[test]
+    fn unstable_beyond_unit_imaginary() {
+        for im in [1.05, 1.5, 2.0] {
+            assert!(
+                !revheun_stability_bounded(Complex::new(0.0, im), N, BOUND),
+                "λh = {im}i should be unstable"
+            );
+        }
+    }
+
+    #[test]
+    fn unstable_off_axis_negative_real() {
+        // Not A-stable (Remark D.20): negative real parts blow up.
+        for (re, im) in [(-0.5, 0.0), (-0.2, 0.5), (-1.0, 0.0), (-0.05, 0.9)] {
+            assert!(
+                !revheun_stability_bounded(Complex::new(re, im), N, BOUND),
+                "λh = {re}+{im}i should be unstable"
+            );
+        }
+    }
+
+    #[test]
+    fn region_boundary_matches_theorem() {
+        // Sweep a grid over [-1.2, 0.2] x [-1.3, 1.3]; the stable set should
+        // be exactly the points with |re| ~ 0 and |im| <= 1.
+        let mut mismatches = 0;
+        for i in 0..25 {
+            for j in 0..27 {
+                let re = -1.2 + 1.4 * (i as f64) / 24.0;
+                let im = -1.3 + 2.6 * (j as f64) / 26.0;
+                let expected = re.abs() < 1e-9 && im.abs() <= 1.0 + 1e-9;
+                let got = revheun_stability_bounded(Complex::new(re, im), 5_000, BOUND);
+                if got != expected {
+                    mismatches += 1;
+                }
+            }
+        }
+        // Allow a couple of borderline grid points (|λh| = 1 exactly etc.).
+        assert!(mismatches <= 3, "{mismatches} grid points disagree with Theorem D.19");
+    }
+}

@@ -1,0 +1,180 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Follows the paper's measurement protocol (Appendix F.6): each benchmark
+//! is repeated `repeats` times and the **minimum** wall time is reported —
+//! "errors in speed benchmarks are one-sided, and so the minimum time
+//! represents the least noisy measurement". Mean and standard deviation are
+//! also recorded for context.
+//!
+//! Results print as an aligned table and can be dumped to JSON so the
+//! benchmark binaries regenerate the paper's tables as machine-readable
+//! artifacts.
+
+use super::json::{obj, Json};
+use super::stats;
+use std::time::Instant;
+
+/// A single benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Identifier, e.g. `"bi/seq/batch=2560/n=100"`.
+    pub name: String,
+    /// Minimum over repeats, seconds (headline number, as in the paper).
+    pub min_s: f64,
+    /// Mean over repeats, seconds.
+    pub mean_s: f64,
+    /// Standard deviation over repeats, seconds.
+    pub std_s: f64,
+    /// Number of timed repeats.
+    pub repeats: usize,
+}
+
+/// A group of measurements forming one results table.
+pub struct BenchTable {
+    /// Table title (e.g. `"Table 8: doubly sequential access"`).
+    pub title: String,
+    /// Collected measurements in insertion order.
+    pub rows: Vec<Measurement>,
+    repeats: usize,
+    warmup: usize,
+}
+
+impl BenchTable {
+    /// New table; `repeats` timed runs per benchmark after `warmup`
+    /// untimed runs. The paper uses `repeats = 32`.
+    pub fn new(title: &str, repeats: usize, warmup: usize) -> Self {
+        Self { title: title.to_string(), rows: Vec::new(), repeats, warmup }
+    }
+
+    /// Time `f` (which should perform one complete workload run).
+    ///
+    /// `f` receives the run index; use it to vary seeds if the workload
+    /// must not be trivially cacheable.
+    pub fn bench<F: FnMut(usize)>(&mut self, name: &str, f: F) -> &Measurement {
+        let reps = self.repeats;
+        self.bench_n(name, reps, f)
+    }
+
+    /// Like [`bench`](Self::bench) with an explicit repeat count — used to
+    /// trim very large workload cells (the paper's 32768-batch columns).
+    pub fn bench_n<F: FnMut(usize)>(
+        &mut self,
+        name: &str,
+        repeats: usize,
+        mut f: F,
+    ) -> &Measurement {
+        for i in 0..self.warmup {
+            f(i);
+        }
+        let mut times = Vec::with_capacity(repeats);
+        for i in 0..repeats {
+            let t0 = Instant::now();
+            f(self.warmup + i);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            min_s: stats::min(&times),
+            mean_s: stats::mean(&times),
+            std_s: stats::std_dev(&times),
+            repeats,
+        };
+        eprintln!(
+            "  {:<44} min {:>10}   mean {:>10} ± {}",
+            m.name,
+            stats::fmt_seconds(m.min_s),
+            stats::fmt_seconds(m.mean_s),
+            stats::fmt_seconds(m.std_s),
+        );
+        self.rows.push(m);
+        self.rows.last().unwrap()
+    }
+
+    /// Minimum time of a previously-recorded row (panics if absent).
+    pub fn min_of(&self, name: &str) -> f64 {
+        self.rows
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("no measurement named {name}"))
+            .min_s
+    }
+
+    /// Render the table with an optional speed-up column computed between
+    /// row-name pairs `(baseline, candidate)`.
+    pub fn render(&self) -> String {
+        let mut out = format!("\n== {} (min over {} runs) ==\n", self.title, self.repeats);
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<48} {:>12}\n",
+                r.name,
+                stats::fmt_seconds(r.min_s)
+            ));
+        }
+        out
+    }
+
+    /// Serialise all rows to JSON.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("repeats", Json::Num(self.repeats as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("min_s", Json::Num(r.min_s)),
+                                ("mean_s", Json::Num(r.mean_s)),
+                                ("std_s", Json::Num(r.std_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Append this table's JSON to `path` (one JSON document per file).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+}
+
+/// Black-box helper to stop the optimiser deleting benchmark work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_measurements() {
+        let mut t = BenchTable::new("test", 3, 1);
+        t.bench("sleepless", |_| {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            black_box(s);
+        });
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.rows[0].min_s >= 0.0);
+        assert!(t.rows[0].min_s <= t.rows[0].mean_s + 1e-12);
+        assert!(t.min_of("sleepless") == t.rows[0].min_s);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = BenchTable::new("test", 2, 0);
+        t.bench("a", |_| {});
+        let j = t.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str(), Some("test"));
+    }
+}

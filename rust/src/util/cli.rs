@@ -1,0 +1,138 @@
+//! Tiny CLI argument parser (offline stand-in for `clap`).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] [--key=value] ...`.
+//! Unknown keys are collected and reported by [`Args::finish`] so typos
+//! fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional argument, conventionally the subcommand.
+    pub subcommand: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping the binary name).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (for tests).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.kv.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.kv.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    /// String option.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.kv.get(key).cloned()
+    }
+
+    /// String option with default.
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn get_parse_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={s}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present or absent).
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any `--key` that no call consumed.
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown arguments: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let mut a = parse("train --steps 100 --lr=0.01 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_parse_or("steps", 0usize), 100);
+        assert_eq!(a.get_parse_or("lr", 0.0f64), 0.01);
+        assert!(a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse("bench");
+        assert_eq!(a.get_or("out", "results.json"), "results.json");
+        assert_eq!(a.get_parse_or("batch", 32usize), 32);
+        assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn unknown_args_detected() {
+        let mut a = parse("train --oops 3");
+        let _ = a.get("steps");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run file1 file2");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

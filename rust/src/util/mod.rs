@@ -1,0 +1,14 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline, so instead of pulling `serde_json`,
+//! `clap` and `criterion` we implement the slivers of them we need:
+//! a JSON value type + parser/writer ([`json`]), a flag-style CLI argument
+//! parser ([`cli`]), summary statistics and least-squares fits ([`stats`]),
+//! and a minimum-of-`k`-runs micro-benchmark harness ([`bench`]) matching
+//! the paper's measurement protocol (Appendix F.6 reports the *minimum*
+//! over 32 repeats, "errors in speed benchmarks are one-sided").
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod stats;

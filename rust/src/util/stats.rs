@@ -1,0 +1,118 @@
+//! Summary statistics and least-squares helpers used across the
+//! experiment harness (convergence-order fits, result tables).
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Ordinary least squares `y ≈ a + b x`; returns `(a, b)`.
+///
+/// Used to estimate convergence orders from log-log error curves
+/// (Figures 5 and 6): the slope `b` of `log2(err)` against `log2(h)` is the
+/// empirical order.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..x.len() {
+        num += (x[i] - mx) * (y[i] - my);
+        den += (x[i] - mx) * (x[i] - mx);
+    }
+    let b = num / den;
+    (my - b * mx, b)
+}
+
+/// Pearson correlation coefficient.
+pub fn correlation(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mx = mean(x);
+    let my = mean(y);
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for i in 0..x.len() {
+        sxy += (x[i] - mx) * (y[i] - my);
+        sxx += (x[i] - mx).powi(2);
+        syy += (y[i] - my).powi(2);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Minimum of a slice (NaN-propagating).
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().fold(f64::INFINITY, |a, &b| a.min(b))
+}
+
+/// Maximum of a slice.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+}
+
+/// Format seconds human-readably (`412 µs`, `3.2 ms`, `1.7 s`).
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935299395).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_recovers_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 3.0 - 0.5 * v).collect();
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-12);
+        assert!((b + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_of_line_is_one() {
+        let x: Vec<f64> = (1..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 2.0 * v + 1.0).collect();
+        assert!((correlation(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max() {
+        let xs = [3.0, -1.0, 2.0];
+        assert_eq!(min(&xs), -1.0);
+        assert_eq!(max(&xs), 3.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_seconds(2.0), "2.00 s");
+        assert!(fmt_seconds(0.002).contains("ms"));
+        assert!(fmt_seconds(2e-7).contains("ns"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Property-based tests over the Layer-3 invariants (hand-rolled
+//! generative testing — seeded random cases with shrink-free assertion
+//! messages; the offline build has no proptest crate).
+
+use neuralsde::brownian::{
+    splitmix64, BrownianInterval, BrownianSource, IntervalOptions, LruCache, SplitPrng,
+    StoredPath, VirtualBrownianTree,
+};
+use neuralsde::metrics::{sig_dim, signature};
+use neuralsde::solvers::systems::{Anharmonic, ScalarLinear, TanhDiagonal};
+use neuralsde::solvers::{ReversibleHeun, Sde};
+
+fn cases(seed: u64, n: usize) -> impl Iterator<Item = u64> {
+    (0..n as u64).map(move |i| splitmix64(seed.wrapping_add(i)))
+}
+
+/// Random query sequences never violate chain additivity within fp error.
+#[test]
+fn prop_brownian_interval_chain_additivity() {
+    for case in cases(1, 30) {
+        let mut rng = SplitPrng::new(case);
+        let mut bi = BrownianInterval::new(0.0, 1.0, 3, case);
+        for _ in 0..20 {
+            let a = rng.next_uniform();
+            let b = rng.next_uniform();
+            let (s, t) = if a < b { (a, b) } else { (b, a) };
+            if t - s < 1e-6 {
+                continue;
+            }
+            let m = 0.5 * (s + t);
+            let whole = bi.increment_vec(s, t);
+            let l = bi.increment_vec(s, m);
+            let r = bi.increment_vec(m, t);
+            for c in 0..3 {
+                assert!(
+                    (whole[c] - (l[c] + r[c])).abs() < 1e-4,
+                    "case {case}: [{s},{t}] channel {c}: {} vs {}",
+                    whole[c],
+                    l[c] + r[c]
+                );
+            }
+        }
+    }
+}
+
+/// The LRU capacity must never change query *values*, only speed.
+#[test]
+fn prop_cache_capacity_invariance_random_queries() {
+    for case in cases(2, 15) {
+        let small = IntervalOptions { cache_capacity: 2, preseed_depth: 0 };
+        let big = IntervalOptions { cache_capacity: 1 << 14, preseed_depth: 0 };
+        let mut a = BrownianInterval::with_options(0.0, 1.0, 2, case, small);
+        let mut b = BrownianInterval::with_options(0.0, 1.0, 2, case, big);
+        let mut rng = SplitPrng::new(case ^ 0xC0);
+        for _ in 0..40 {
+            let s = rng.next_uniform() * 0.98;
+            let t = s + 0.005 + rng.next_uniform() * (0.99 - s);
+            assert_eq!(a.increment_vec(s, t), b.increment_vec(s, t), "case {case}");
+        }
+    }
+}
+
+/// Querying the same (seeded) source twice is idempotent for every backend.
+#[test]
+fn prop_all_sources_deterministic() {
+    for case in cases(3, 10) {
+        let queries: Vec<(f64, f64)> = {
+            let mut rng = SplitPrng::new(case);
+            (0..10)
+                .map(|_| {
+                    let s = rng.next_uniform() * 0.9;
+                    (s, s + 0.01 + rng.next_uniform() * (0.99 - s) * 0.5)
+                })
+                .collect()
+        };
+        let run = |src: &mut dyn BrownianSource| -> Vec<Vec<f32>> {
+            queries.iter().map(|&(s, t)| src.increment_vec(s, t)).collect()
+        };
+        let mut bi1 = BrownianInterval::new(0.0, 1.0, 2, case);
+        let mut bi2 = BrownianInterval::new(0.0, 1.0, 2, case);
+        assert_eq!(run(&mut bi1), run(&mut bi2));
+        let mut vt1 = VirtualBrownianTree::new(0.0, 1.0, 2, case, 1e-5);
+        let mut vt2 = VirtualBrownianTree::new(0.0, 1.0, 2, case, 1e-5);
+        assert_eq!(run(&mut vt1), run(&mut vt2));
+        let mut sp1 = StoredPath::new(0.0, 1.0, 2, case, 128);
+        let mut sp2 = StoredPath::new(0.0, 1.0, 2, case, 128);
+        assert_eq!(run(&mut sp1), run(&mut sp2));
+    }
+}
+
+/// Reversible Heun: forward∘reverse == identity across random SDEs, step
+/// counts and dimensions.
+#[test]
+fn prop_revheun_roundtrip_random_systems() {
+    for case in cases(4, 12) {
+        let dim = 1 + (case % 7) as usize;
+        let n = 16 + (case % 64) as usize;
+        let sde = TanhDiagonal::new(dim, case);
+        let y0: Vec<f64> = (0..dim).map(|i| 0.1 * i as f64 - 0.2).collect();
+        let mut solver = ReversibleHeun::new(&sde, 0.0, &y0);
+        let init = solver.state().clone();
+        let mut rng = SplitPrng::new(case ^ 0xABC);
+        let dt = 1.0 / n as f64;
+        let sd = dt.sqrt();
+        let dws: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_normal_pair().0 * sd).collect())
+            .collect();
+        for (k, dw) in dws.iter().enumerate() {
+            solver.forward_step(&sde, k as f64 * dt, dt, dw);
+        }
+        for (k, dw) in dws.iter().enumerate().rev() {
+            solver.reverse_step(&sde, (k + 1) as f64 * dt, dt, dw);
+        }
+        let err = solver.state().max_abs_diff(&init);
+        assert!(err < 1e-8, "case {case} (dim {dim}, n {n}): round-trip {err}");
+    }
+}
+
+/// Linear-SDE strong error vs the exact solution decreases with step count.
+#[test]
+fn prop_revheun_converges_to_exact_solution() {
+    let sde = ScalarLinear { a: 0.4, b: 0.3 };
+    let mut errs = Vec::new();
+    for n in [16usize, 64, 256] {
+        let mut total = 0.0;
+        for case in cases(5, 40) {
+            let mut rng = SplitPrng::new(case);
+            let dt = 1.0 / n as f64;
+            let mut solver = ReversibleHeun::new(&sde, 0.0, &[1.0]);
+            let mut w = 0.0;
+            let mut y = [1.0f64];
+            for k in 0..n {
+                let dw = rng.next_normal_pair().0 * dt.sqrt();
+                w += dw;
+                neuralsde::solvers::FixedStepSolver::step(
+                    &mut solver, &sde, k as f64 * dt, dt, &[dw], &mut y,
+                );
+            }
+            let exact = (sde.a * 1.0 + sde.b * w).exp();
+            total += (y[0] - exact).abs();
+        }
+        errs.push(total / 40.0);
+    }
+    assert!(errs[2] < errs[0], "no convergence: {errs:?}");
+}
+
+/// Signature shuffle identity at depth 2: S⁽ⁱ⁾S⁽ʲ⁾ = S⁽ⁱʲ⁾ + S⁽ʲⁱ⁾.
+#[test]
+fn prop_signature_shuffle_identity() {
+    for case in cases(6, 20) {
+        let mut rng = SplitPrng::new(case);
+        let c = 2 + (case % 2) as usize;
+        let len = 4 + (case % 8) as usize;
+        let path: Vec<f64> = (0..len * c).map(|_| rng.next_normal_pair().0).collect();
+        let sig = signature(&path, len, c, 2);
+        for i in 0..c {
+            for j in 0..c {
+                let lhs = sig[i] * sig[j];
+                let rhs = sig[c + i * c + j] + sig[c + j * c + i];
+                assert!(
+                    (lhs - rhs).abs() < 1e-9,
+                    "case {case}: shuffle identity failed at ({i},{j}): {lhs} vs {rhs}"
+                );
+            }
+        }
+    }
+}
+
+/// sig_dim matches the produced feature length for random (c, depth).
+#[test]
+fn prop_sig_dim_consistent() {
+    for case in cases(7, 12) {
+        let c = 1 + (case % 4) as usize;
+        let depth = 1 + (case % 4) as usize;
+        let path = vec![0.5; 6 * c];
+        assert_eq!(signature(&path, 6, c, depth).len(), sig_dim(c, depth));
+    }
+}
+
+/// Anharmonic drift is bounded by 1, so solutions grow at most linearly —
+/// solver must not blow up over long horizons.
+#[test]
+fn prop_solver_stability_long_horizon() {
+    let sde = Anharmonic { sigma: 0.5 };
+    for case in cases(8, 6) {
+        let n = 2048;
+        let mut solver = ReversibleHeun::new(&sde, 0.0, &[0.0]);
+        let mut rng = SplitPrng::new(case);
+        let dt = 8.0 / n as f64;
+        let mut y = [0.0f64];
+        for k in 0..n {
+            let dw = rng.next_normal_pair().0 * dt.sqrt();
+            neuralsde::solvers::FixedStepSolver::step(
+                &mut solver, &sde, k as f64 * dt, dt, &[dw], &mut y,
+            );
+        }
+        assert!(y[0].abs() < 8.0 + 6.0, "case {case}: |y| = {}", y[0].abs());
+    }
+}
+
+/// LRU under adversarial key reuse still honours capacity and recency.
+#[test]
+fn prop_lru_capacity_respected() {
+    for case in cases(9, 10) {
+        let cap = 1 + (case % 16) as usize;
+        let mut c: LruCache<u64, u64> = LruCache::new(cap);
+        let mut rng = SplitPrng::new(case);
+        for _ in 0..1000 {
+            let k = rng.next_u64() % 64;
+            c.put(k, k * 2);
+            assert!(c.len() <= cap, "case {case}: len {} > cap {cap}", c.len());
+        }
+    }
+}
