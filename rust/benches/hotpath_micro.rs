@@ -1,10 +1,14 @@
 //! Microbenchmarks of the Layer-3 hot paths, for the EXPERIMENTS.md §Perf
 //! iteration log: Brownian Interval query cost (hit/miss), bridge sampling,
-//! LRU ops, signature features, optimiser steps.
+//! persistent-vs-rebuilt noise fills, batched stepping, LRU ops, signature
+//! features, optimiser steps.
 
 use neuralsde::brownian::{box_muller_fill, BrownianInterval, BrownianSource, LruCache};
+use neuralsde::coordinator::noise::{NoiseBackend, StepNoise};
 use neuralsde::metrics::{series_features, signature};
 use neuralsde::nn::{Adadelta, Optimizer};
+use neuralsde::solvers::systems::TanhDiagonal;
+use neuralsde::solvers::{integrate_batched, BatchOptions, BatchReversibleHeun, CounterGridNoise};
 use neuralsde::util::bench::{black_box, BenchTable};
 
 fn main() {
@@ -19,6 +23,49 @@ fn main() {
                 bi.increment(k as f64 / 31.0, (k + 1) as f64 / 31.0, &mut out);
             }
             black_box(&out);
+        });
+    }
+
+    // Persistent interval: reseed + bulk grid fill per "training step",
+    // keeping tree/cache/buffers across steps (vs the rebuild above).
+    let grid: Vec<f64> = (0..=31).map(|k| k as f64 / 31.0).collect();
+    for &batch in &[256usize, 4096] {
+        let mut out = vec![0.0f32; 31 * batch];
+        let mut bi = BrownianInterval::new(0.0, 1.0, batch, 1);
+        table.bench(&format!("bi/reseed_fill_grid/batch={batch}/n=31"), |i| {
+            bi.reseed(i as u64 + 1);
+            bi.fill_grid(&grid, &mut out);
+            black_box(&out);
+        });
+    }
+
+    // StepNoise end-to-end — what GanTrainer::train_step calls per step.
+    {
+        let ts32: Vec<f32> = (0..32).map(|k| k as f32 / 31.0).collect();
+        let mut sn = StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 4096, 7);
+        let mut dws = vec![0.0f32; 31 * 4096];
+        table.bench("noise/step_noise_fill/batch=4096/n=31", |_| {
+            sn.fill(&ts32, &mut dws);
+            black_box(&dws);
+        });
+    }
+
+    // Batched reversible Heun over SoA state (diagonal fast path).
+    {
+        let sde = TanhDiagonal::new(16, 3);
+        let y0 = vec![0.1f64; 16 * 256];
+        table.bench("batch/revheun_solve/d=16/batch=256/n=32", |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
+            black_box(integrate_batched::<BatchReversibleHeun, _, _>(
+                &sde,
+                &noise,
+                &y0,
+                256,
+                0.0,
+                1.0,
+                32,
+                &BatchOptions { threads: 1, chunk: 64 },
+            ));
         });
     }
 

@@ -1,17 +1,28 @@
 //! Table 10: solving + backpropagating an SDE with the Brownian Interval
-//! vs the Virtual Brownian Tree as the noise source.
+//! vs the Virtual Brownian Tree as the noise source — plus the batched
+//! structure-of-arrays engine vs the per-path seed loop.
 //!
 //! The workload is the paper's Itô test SDE with diagonal noise,
 //! `dX^i = tanh((AX)^i) dt + tanh((BX)^i) dW^i`, solved by Euler–Maruyama
 //! forwards over [0, 1] and then re-queried backwards (the adjoint's
 //! doubly-sequential access), for d ∈ {1, 10, 16} and 10/100/1000 steps.
 //!
-//! Expected shape: BI ~2× faster on small problems, up to ~10× on large.
+//! Expected shape: BI ~2× faster on small problems, up to ~10× on large;
+//! the batched engine ≥2× over the per-path loop at batch 1024 on a
+//! multi-core host (diagonal fast path + chunked thread fan-out).
+//!
+//! Results are written to `results/bench_tab10_sde_solve.json` and, for the
+//! perf trajectory, `BENCH_pr1.json` (override the directory with
+//! `BENCH_DIR`).
 
 use neuralsde::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
 use neuralsde::solvers::systems::TanhDiagonal;
-use neuralsde::solvers::{integrate, EulerMaruyama, NoiseF64, NoiseFromSource};
-use neuralsde::util::bench::{black_box, BenchTable};
+use neuralsde::solvers::{
+    integrate, integrate_batched, BatchEulerMaruyama, BatchOptions, BatchReversibleHeun,
+    CounterGridNoise, EulerMaruyama, NoiseF64, NoiseFromSource, ReversibleHeun,
+};
+use neuralsde::util::bench::{black_box, write_bench_json, BenchTable};
+use neuralsde::util::json::Json;
 
 fn solve_and_backward<B: BrownianSource>(src: &mut B, sde: &TanhDiagonal, n: usize) {
     let d = neuralsde::solvers::Sde::dim(sde);
@@ -60,6 +71,101 @@ fn main() {
             println!("  d={d:<3} n={n:<5} BI speedup {:.2}x", vbt / bi);
         }
     }
+
+    // ---- Batched SoA engine vs the per-path seed loop (PR1 headline).
+    //
+    // The per-path baseline is exactly what the seed repo did: `batch`
+    // separate `integrate` calls, one trajectory allocation and one dense
+    // e×d diffusion mat-vec per path per step. The batched rows solve the
+    // same 1024 paths (same per-path noise streams, bit-identical results)
+    // through `integrate_batched` with the diagonal fast path, single- and
+    // multi-threaded.
+    let batch = if quick { 128 } else { 1024 };
+    let (d, n) = (16usize, 100usize);
+    let sde = TanhDiagonal::new(d, 99);
+    let y0p = vec![0.1f64; d];
+    let y0b = vec![0.1f64; d * batch]; // same start state, SoA
+    let hw = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let thread_counts: Vec<usize> = if hw > 1 { vec![1, hw] } else { vec![1] };
+    let reps = if quick { 3 } else { 8 };
+    let mut btable = BenchTable::new(
+        "Batched SoA engine vs per-path loop (TanhDiagonal d=16, n=100)",
+        reps,
+        1,
+    );
+
+    btable.bench_n(&format!("per_path/euler/batch={batch}"), reps, |i| {
+        let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+        for p in 0..batch {
+            let mut pn = noise.path(p);
+            let mut solver = EulerMaruyama::new(d, d);
+            black_box(integrate(&sde, &mut solver, &mut pn, &y0p, 0.0, 1.0, n));
+        }
+    });
+    for &threads in &thread_counts {
+        btable.bench_n(&format!("batched/euler/threads={threads}/batch={batch}"), reps, |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+            let opts = BatchOptions { threads, chunk: 64 };
+            black_box(integrate_batched::<BatchEulerMaruyama, _, _>(
+                &sde, &noise, &y0b, batch, 0.0, 1.0, n, &opts,
+            ));
+        });
+    }
+
+    btable.bench_n(&format!("per_path/revheun/batch={batch}"), reps, |i| {
+        let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+        for p in 0..batch {
+            let mut pn = noise.path(p);
+            let mut solver = ReversibleHeun::new(&sde, 0.0, &y0p);
+            black_box(integrate(&sde, &mut solver, &mut pn, &y0p, 0.0, 1.0, n));
+        }
+    });
+    for &threads in &thread_counts {
+        btable.bench_n(
+            &format!("batched/revheun/threads={threads}/batch={batch}"),
+            reps,
+            |i| {
+                let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+                let opts = BatchOptions { threads, chunk: 64 };
+                black_box(integrate_batched::<BatchReversibleHeun, _, _>(
+                    &sde, &noise, &y0b, batch, 0.0, 1.0, n, &opts,
+                ));
+            },
+        );
+    }
+
+    println!("{}", btable.render());
+    let mut headline: Vec<(&str, Json)> = vec![
+        ("batch", Json::Num(batch as f64)),
+        ("hw_threads", Json::Num(hw as f64)),
+    ];
+    let mut speedups = Vec::new();
+    for solver in ["euler", "revheun"] {
+        let per_path = btable.min_of(&format!("per_path/{solver}/batch={batch}"));
+        for &threads in &thread_counts {
+            let b = btable.min_of(&format!("batched/{solver}/threads={threads}/batch={batch}"));
+            let s = per_path / b;
+            println!("  {solver:<8} threads={threads:<3} batched speedup {s:.2}x");
+            speedups.push((format!("speedup/{solver}/threads={threads}"), s));
+        }
+    }
+    let speedup_json: Vec<(String, f64)> = speedups;
+    let extras: Vec<Json> = speedup_json
+        .iter()
+        .map(|(k, v)| {
+            neuralsde::util::json::obj(vec![
+                ("name", Json::Str(k.clone())),
+                ("speedup", Json::Num(*v)),
+            ])
+        })
+        .collect();
+    headline.push(("speedups", Json::Arr(extras)));
+
     std::fs::create_dir_all("results").ok();
     table.write_json("results/bench_tab10_sde_solve.json").ok();
+    let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
+    match write_bench_json(&bench_dir, "pr1", &[&table, &btable], headline) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write BENCH json: {e}"),
+    }
 }

@@ -151,6 +151,34 @@ impl BrownianInterval {
         self.nodes.len()
     }
 
+    /// Re-seed in place: draw a fresh Brownian sample while **keeping the
+    /// node arena, the LRU slot arena and the recycled value buffers**.
+    ///
+    /// The tree's *shape* encodes the query pattern, which for a training
+    /// loop is the same fixed grid every step — so instead of rebuilding the
+    /// tree (and reallocating every buffer) per step, the trainer holds one
+    /// persistent interval and calls `reseed(seed)` between steps. Node
+    /// seeds are recomputed from the new root seed in one forward pass
+    /// (children always live at larger arena indices than their parent),
+    /// cached values are invalidated with their buffers recycled, and the
+    /// search hint is reset. Queries after `reseed(s)` return bit-identical
+    /// values to a fresh `BrownianInterval` seeded with `s` and driven with
+    /// the same query sequence that built this tree's shape.
+    pub fn reseed(&mut self, seed: u64) {
+        self.nodes[0].seed = seed;
+        for idx in 0..self.nodes.len() {
+            let node = self.nodes[idx];
+            if !node.is_leaf() {
+                let (sl, sr) = split_seed(node.seed);
+                self.nodes[node.left as usize].seed = sl;
+                self.nodes[node.right as usize].seed = sr;
+            }
+        }
+        let recycled = self.cache.take_values();
+        self.free.extend(recycled);
+        self.hint = 0;
+    }
+
     fn preseed(&mut self, idx: u32, depth: u32) {
         if depth == 0 {
             return;
@@ -321,20 +349,11 @@ impl BrownianInterval {
             self.hint = last;
         }
     }
-}
 
-impl BrownianSource for BrownianInterval {
-    fn size(&self) -> usize {
-        self.size
-    }
-
-    fn span(&self) -> (f64, f64) {
-        (self.t0, self.t1)
-    }
-
-    fn increment(&mut self, s: f64, t: f64, out: &mut [f32]) {
-        check_interval((self.t0, self.t1), s, t);
-        assert_eq!(out.len(), self.size, "output buffer size mismatch");
+    /// One validated query: partition `[s, t]`, materialise each part, sum.
+    /// Shared by [`BrownianSource::increment`] and the bulk
+    /// [`BrownianSource::fill_grid`] override.
+    fn query(&mut self, s: f64, t: f64, out: &mut [f32]) {
         self.stats.queries += 1;
         self.traverse(s, t);
         out.fill(0.0);
@@ -352,6 +371,39 @@ impl BrownianSource for BrownianInterval {
             }
         }
         self.out_nodes = parts;
+    }
+}
+
+impl BrownianSource for BrownianInterval {
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f32]) {
+        check_interval((self.t0, self.t1), s, t);
+        assert_eq!(out.len(), self.size, "output buffer size mismatch");
+        self.query(s, t, out);
+    }
+
+    /// Single hint-guided sweep over the grid: the span is validated once
+    /// and each step's partition starts its search at the previous step's
+    /// node, so a training-grid fill touches each tree level once.
+    fn fill_grid(&mut self, ts: &[f64], out: &mut [f32]) {
+        let n = ts.len().saturating_sub(1);
+        assert_eq!(out.len(), n * self.size, "fill_grid: need {} values", n * self.size);
+        if n == 0 {
+            return;
+        }
+        check_interval((self.t0, self.t1), ts[0], ts[n]);
+        for k in 0..n {
+            assert!(ts[k] < ts[k + 1], "fill_grid: grid must be strictly increasing");
+            let row = &mut out[k * self.size..(k + 1) * self.size];
+            self.query(ts[k], ts[k + 1], row);
+        }
     }
 }
 
@@ -496,6 +548,61 @@ mod tests {
         // The backward sweep re-reads nodes created on the forward sweep; the
         // default cache (128) is large enough that most of them still live.
         assert!(st.cache_hits > st.cache_misses, "stats: {st:?}");
+    }
+
+    #[test]
+    fn reseed_matches_fresh_instance() {
+        // A persistent, reseeded interval must reproduce a fresh instance
+        // bit-for-bit over the same (grid) query sequence.
+        let grid: Vec<(f64, f64)> =
+            (0..16).map(|k| (k as f64 / 16.0, (k + 1) as f64 / 16.0)).collect();
+        let mut persistent = bi(111);
+        for &(s, t) in &grid {
+            let _ = persistent.increment_vec(s, t); // build the tree shape
+        }
+        for new_seed in [222u64, 333, 111] {
+            persistent.reseed(new_seed);
+            let mut fresh = bi(new_seed);
+            for &(s, t) in &grid {
+                assert_eq!(
+                    persistent.increment_vec(s, t),
+                    fresh.increment_vec(s, t),
+                    "seed {new_seed} [{s},{t}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reseed_keeps_node_arena() {
+        let mut a = bi(5);
+        for k in 0..32 {
+            let _ = a.increment_vec(k as f64 / 32.0, (k + 1) as f64 / 32.0);
+        }
+        let nodes_before = a.node_count();
+        a.reseed(6);
+        assert_eq!(a.node_count(), nodes_before, "reseed must keep the arena");
+        // Refill over the same grid creates no new nodes.
+        for k in 0..32 {
+            let _ = a.increment_vec(k as f64 / 32.0, (k + 1) as f64 / 32.0);
+        }
+        assert_eq!(a.node_count(), nodes_before);
+    }
+
+    #[test]
+    fn fill_grid_matches_sequential_increments() {
+        let ts: Vec<f64> = (0..=20).map(|k| k as f64 / 20.0).collect();
+        let mut a = bi(77);
+        let mut b = bi(77);
+        let mut bulk = vec![0.0f32; 20 * 4];
+        a.fill_grid(&ts, &mut bulk);
+        for k in 0..20 {
+            assert_eq!(
+                &bulk[k * 4..(k + 1) * 4],
+                b.increment_vec(ts[k], ts[k + 1]).as_slice(),
+                "step {k}"
+            );
+        }
     }
 
     #[test]

@@ -148,6 +148,18 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         }
     }
 
+    /// Remove every entry and hand back the owned values.
+    ///
+    /// Used by [`crate::brownian::BrownianInterval::reseed`] to recycle the
+    /// cached increment buffers instead of dropping and reallocating them —
+    /// the hot refill path stays allocation-free across training steps.
+    pub fn take_values(&mut self) -> Vec<V> {
+        self.map.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.slots.drain(..).map(|s| s.value).collect()
+    }
+
     /// Drop all entries (keeps allocated slots for reuse).
     pub fn clear(&mut self) {
         self.map.clear();
@@ -220,6 +232,21 @@ mod tests {
         c.peek(&1);
         // 1 is still LRU despite the peek:
         assert_eq!(c.put(3, 3), Some((1, 1)));
+    }
+
+    #[test]
+    fn take_values_drains_and_resets() {
+        let mut c = LruCache::new(4);
+        for i in 0..3 {
+            c.put(i, i * 10);
+        }
+        let mut vals = c.take_values();
+        vals.sort_unstable();
+        assert_eq!(vals, vec![0, 10, 20]);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&1), None);
+        c.put(5, 50);
+        assert_eq!(c.get(&5), Some(&50));
     }
 
     #[test]

@@ -30,7 +30,7 @@ mod virtual_tree;
 pub use interval::{BrownianInterval, IntervalOptions, QueryStats};
 pub use levy::{davie_levy_area, space_time_levy_area, BrownianWithLevy};
 pub use lru::LruCache;
-pub use prng::{box_muller_fill, split_seed, splitmix64, SplitPrng};
+pub use prng::{box_muller_fill, normal_at, split_seed, splitmix64, SplitPrng};
 pub use stored::StoredPath;
 pub use virtual_tree::VirtualBrownianTree;
 
@@ -59,6 +59,24 @@ pub trait BrownianSource {
         let mut out = vec![0.0; self.size()];
         self.increment(s, t, &mut out);
         out
+    }
+
+    /// Bulk fill: write the increment over every consecutive interval of the
+    /// strictly-increasing observation grid `ts` into `out`, step-major
+    /// (`out[k * size() .. (k + 1) * size()]` holds `W(ts[k+1]) - W(ts[k])`).
+    ///
+    /// Equivalent to `ts.len() - 1` sequential [`increment`](Self::increment)
+    /// calls (bit-identically so), but sources may override it to walk the
+    /// grid in a single traversal — [`BrownianInterval`] skips per-query
+    /// revalidation, [`VirtualBrownianTree`] halves its tree descents by
+    /// evaluating each grid point once.
+    fn fill_grid(&mut self, ts: &[f64], out: &mut [f32]) {
+        let n = ts.len().saturating_sub(1);
+        let size = self.size();
+        assert_eq!(out.len(), n * size, "fill_grid: need {} values", n * size);
+        for k in 0..n {
+            self.increment(ts[k], ts[k + 1], &mut out[k * size..(k + 1) * size]);
+        }
     }
 }
 

@@ -82,6 +82,34 @@ impl SplitPrng {
     }
 }
 
+#[inline]
+fn uniform_from_bits(word: u64) -> f64 {
+    let bits = word >> 11;
+    (bits as f64 + 0.5) * (1.0 / 9_007_199_254_740_992.0)
+}
+
+/// Random access into a seed's normal stream: the `m`-th standard normal of
+/// `SplitPrng::new(seed)` — i.e. exactly `box_muller_fill(seed, 1.0, out)`'s
+/// `out[m]` — computed in O(1) without generating the prefix.
+///
+/// This is what lets the batched solve engine hand each *path* its own
+/// deterministic noise stream and fill any `(step, channel)` slice of it
+/// from any worker thread, with results independent of the work partition.
+#[inline]
+pub fn normal_at(seed: u64, m: u64) -> f64 {
+    let base = splitmix64(seed);
+    let pair = m / 2;
+    let u1 = uniform_from_bits(splitmix64(base.wrapping_add(2 * pair)));
+    let u2 = uniform_from_bits(splitmix64(base.wrapping_add(2 * pair + 1)));
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = std::f64::consts::TAU * u2;
+    if m % 2 == 0 {
+        r * theta.cos()
+    } else {
+        r * theta.sin()
+    }
+}
+
 /// Fill `out` with iid `N(0, scale^2)` samples from the stream of `seed`.
 ///
 /// This is the single hot allocation-free primitive every Brownian source
@@ -167,6 +195,15 @@ mod tests {
         let n = out.len() as f64;
         let var: f64 = out.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n;
         assert!((var - 0.25).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn normal_at_matches_box_muller_stream() {
+        let mut out = vec![0.0f32; 33]; // odd length: exercises the tail
+        box_muller_fill(987, 1.0, &mut out);
+        for (m, &v) in out.iter().enumerate() {
+            assert_eq!(v, normal_at(987, m as u64) as f32, "index {m}");
+        }
     }
 
     #[test]

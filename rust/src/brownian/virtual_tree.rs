@@ -29,6 +29,10 @@ pub struct VirtualBrownianTree {
     scratch_b: Vec<f32>,
     scratch_mid: Vec<f32>,
     scratch_noise: Vec<f32>,
+    /// Endpoint buffers retained across `fill_grid` calls so the per-step
+    /// training fill is allocation-free once warm.
+    grid_prev: Vec<f32>,
+    grid_cur: Vec<f32>,
     /// Number of bridge evaluations performed (for benchmarks).
     pub bridge_count: u64,
 }
@@ -53,6 +57,8 @@ impl VirtualBrownianTree {
             scratch_b: vec![0.0; size],
             scratch_mid: vec![0.0; size],
             scratch_noise: vec![0.0; size],
+            grid_prev: vec![0.0; size],
+            grid_cur: vec![0.0; size],
             bridge_count: 0,
         }
     }
@@ -60,6 +66,15 @@ impl VirtualBrownianTree {
     /// Resolution of the dyadic discretisation.
     pub fn eps(&self) -> f64 {
         self.eps
+    }
+
+    /// Re-seed in place, keeping all scratch buffers. Queries afterwards are
+    /// bit-identical to a fresh tree built with the new seed (the structure
+    /// keeps no per-query state, so only the seed and the root increment
+    /// need refreshing).
+    pub fn reseed(&mut self, seed: u64) {
+        self.seed = seed;
+        box_muller_fill(splitmix64(seed), (self.t1 - self.t0).sqrt(), &mut self.w_total);
     }
 
     /// Evaluate `W(t) - W(t0)` into `out` by descending the dyadic tree.
@@ -126,6 +141,37 @@ impl BrownianSource for VirtualBrownianTree {
             out[i] -= ws[i];
         }
     }
+
+    /// Grid fill evaluating each grid point **once**: the per-increment
+    /// default would descend the dyadic tree twice per step (once for each
+    /// endpoint); walking the grid keeps the previous endpoint's value and
+    /// halves the descents. Bit-identical to sequential `increment` calls.
+    fn fill_grid(&mut self, ts: &[f64], out: &mut [f32]) {
+        let n = ts.len().saturating_sub(1);
+        assert_eq!(out.len(), n * self.size, "fill_grid: need {} values", n * self.size);
+        if n == 0 {
+            return;
+        }
+        check_interval((self.t0, self.t1), ts[0], ts[n]);
+        // Take the retained endpoint buffers out of `self` so `eval_at` can
+        // borrow `self` mutably; restored below (steady state: zero allocs).
+        let mut prev = std::mem::take(&mut self.grid_prev);
+        let mut cur = std::mem::take(&mut self.grid_cur);
+        prev.resize(self.size, 0.0);
+        cur.resize(self.size, 0.0);
+        self.eval_at(ts[0], &mut prev);
+        for k in 0..n {
+            assert!(ts[k] < ts[k + 1], "fill_grid: grid must be strictly increasing");
+            self.eval_at(ts[k + 1], &mut cur);
+            let row = &mut out[k * self.size..(k + 1) * self.size];
+            for i in 0..self.size {
+                row[i] = cur[i] - prev[i];
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        self.grid_prev = prev;
+        self.grid_cur = cur;
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +219,33 @@ mod tests {
         let var = w.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
         assert!(mean.abs() < 0.01, "mean={mean}");
         assert!((var - 0.25).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn reseed_matches_fresh_instance() {
+        let mut persistent = VirtualBrownianTree::new(0.0, 1.0, 4, 1, 1e-5);
+        let _ = persistent.increment_vec(0.2, 0.4);
+        persistent.reseed(9);
+        let mut fresh = VirtualBrownianTree::new(0.0, 1.0, 4, 9, 1e-5);
+        for (s, t) in [(0.0, 0.3), (0.3, 0.6), (0.1, 0.9)] {
+            assert_eq!(persistent.increment_vec(s, t), fresh.increment_vec(s, t));
+        }
+    }
+
+    #[test]
+    fn fill_grid_matches_sequential_increments() {
+        let ts: Vec<f64> = (0..=10).map(|k| k as f64 / 10.0).collect();
+        let mut a = VirtualBrownianTree::new(0.0, 1.0, 3, 8, 1e-5);
+        let mut b = VirtualBrownianTree::new(0.0, 1.0, 3, 8, 1e-5);
+        let mut bulk = vec![0.0f32; 10 * 3];
+        a.fill_grid(&ts, &mut bulk);
+        for k in 0..10 {
+            assert_eq!(
+                &bulk[k * 3..(k + 1) * 3],
+                b.increment_vec(ts[k], ts[k + 1]).as_slice(),
+                "step {k}"
+            );
+        }
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct GanTrainer {
     swa: StochasticWeightAverage,
     noise: StepNoise,
     ts: Vec<f32>,
+    /// Discriminator layout, cached at construction — `train_step` clips
+    /// after every discriminator update and must not re-fetch (and clone)
+    /// the layout from the manifest each time.
+    disc_layout: crate::nn::ParamLayout,
     steps_done: usize,
     total_steps: usize,
 }
@@ -114,6 +118,7 @@ impl GanTrainer {
             opt_d,
             noise,
             ts,
+            disc_layout: dl,
             steps_done: 0,
             total_steps,
         })
@@ -133,12 +138,11 @@ impl GanTrainer {
         let n = self.seq_len - 1;
         let mut v = vec![0.0f32; self.batch * self.v_dim];
         let mut dws = vec![0.0f32; n * self.batch * self.w];
-        let ts = self.ts.clone();
 
         // ---- Discriminator step.
         let (y_real, _) = data.sample_batch(self.batch, rng);
         self.noise.fill_normals(&mut v);
-        self.noise.fill(&ts, &mut dws);
+        self.noise.fill(&self.ts, &mut dws);
         let disc_exec = if self.clip {
             self.exec_name("disc_grad")
         } else {
@@ -151,7 +155,7 @@ impl GanTrainer {
                 (&self.theta, &[self.theta.len()]),
                 (&self.phi, &[self.phi.len()]),
                 (&v, &[self.batch, self.v_dim]),
-                (&ts, &[self.seq_len]),
+                (&self.ts, &[self.seq_len]),
                 (&dws, &[n, self.batch, self.w]),
                 (&y_real, &[self.batch, self.seq_len, self.y_dim]),
             ],
@@ -161,21 +165,21 @@ impl GanTrainer {
         anyhow::ensure!(gphi.len() == self.phi.len(), "disc grad shape");
         self.opt_d.step(&mut self.phi, gphi);
         if self.clip {
-            // Section 5: clip the CDE vector fields f_φ, g_φ to Lipschitz ≤ 1.
-            let dl = rt.manifest.model(&self.model)?.disc_layout.clone();
-            dl.clip_lipschitz(&mut self.phi, field_filter);
+            // Section 5: clip the CDE vector fields f_φ, g_φ to Lipschitz ≤ 1
+            // (layout cached at construction — no per-step manifest clone).
+            self.disc_layout.clip_lipschitz(&mut self.phi, field_filter);
         }
 
         // ---- Generator step (fresh noise).
         self.noise.fill_normals(&mut v);
-        self.noise.fill(&ts, &mut dws);
+        self.noise.fill(&self.ts, &mut dws);
         let out = rt.run_f32(
             &self.exec_name("gen_grad"),
             &[
                 (&self.theta, &[self.theta.len()]),
                 (&self.phi, &[self.phi.len()]),
                 (&v, &[self.batch, self.v_dim]),
-                (&ts, &[self.seq_len]),
+                (&self.ts, &[self.seq_len]),
                 (&dws, &[n, self.batch, self.w]),
             ],
         )?;
@@ -208,19 +212,18 @@ impl GanTrainer {
         let mut values = Vec::with_capacity(n_samples * self.seq_len * self.y_dim);
         let mut v = vec![0.0f32; eb * self.v_dim];
         let mut dws = vec![0.0f32; n * eb * self.w];
-        let ts = self.ts.clone();
         let mut eval_noise =
             StepNoise::new(NoiseBackend::Interval, -0.5, 0.5, eb * self.w, 0xE7A1);
         let mut produced = 0;
         while produced < n_samples {
             eval_noise.fill_normals(&mut v);
-            eval_noise.fill(&ts, &mut dws);
+            eval_noise.fill(&self.ts, &mut dws);
             let out = rt.run_f32(
                 &self.exec_name("sample"),
                 &[
                     (&theta, &[theta.len()]),
                     (&v, &[eb, self.v_dim]),
-                    (&ts, &[self.seq_len]),
+                    (&self.ts, &[self.seq_len]),
                     (&dws, &[n, eb, self.w]),
                 ],
             )?;

@@ -13,6 +13,7 @@
 
 use crate::brownian::{box_muller_fill, splitmix64, SplitPrng};
 use crate::runtime::Runtime;
+use crate::solvers::CounterGridNoise;
 use anyhow::Result;
 
 /// One (solver, step-size) measurement.
@@ -65,13 +66,17 @@ pub fn run(rt: &mut Runtime, seed: u64) -> Result<Vec<GradErrPoint>> {
         let (solver, n_str) = rest.rsplit_once("_n").unwrap();
         let n: usize = n_str.parse()?;
         let ts: Vec<f64> = (0..=n).map(|k| k as f64 / n as f64).collect();
-        // Brownian increments on this grid, identical path across solvers at
-        // the same n (seeded by n only).
+        // Brownian increments on this grid from the batch engine's per-path
+        // counter streams: identical across solvers at the same n (seeded by
+        // n only), and path p's noise is independent of the batch layout.
+        let noise = CounterGridNoise::new(splitmix64(seed ^ (n as u64)), w, 0.0, 1.0, n);
         let mut dws = vec![0.0f64; n * b * w];
-        let mut prng = SplitPrng::new(splitmix64(seed ^ (n as u64)));
-        let sd = (1.0 / n as f64).sqrt();
-        for v in dws.iter_mut() {
-            *v = prng.next_normal_pair().0 * sd;
+        for k in 0..n {
+            for p in 0..b {
+                for j in 0..w {
+                    dws[(k * b + p) * w + j] = noise.value(p, k, j);
+                }
+            }
         }
         let res = rt.run_f64(
             &name,

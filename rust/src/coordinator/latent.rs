@@ -94,15 +94,14 @@ impl LatentTrainer {
         let (y_real, _) = data.sample_batch(self.batch, rng);
         let mut dws = vec![0.0f32; n * self.batch * self.x];
         let mut eps = vec![0.0f32; self.batch * self.v_dim];
-        let ts = self.ts.clone();
-        self.noise.fill(&ts, &mut dws);
+        self.noise.fill(&self.ts, &mut dws);
         self.noise.fill_normals(&mut eps);
         let name = format!("{}_{}_grad", self.model, self.solver.as_str());
         let out = rt.run_f32(
             &name,
             &[
                 (&self.params, &[self.params.len()]),
-                (&ts, &[self.seq_len]),
+                (&self.ts, &[self.seq_len]),
                 (&dws, &[n, self.batch, self.x]),
                 (&y_real, &[self.batch, self.seq_len, self.y_dim]),
                 (&eps, &[self.batch, self.v_dim]),
@@ -121,20 +120,19 @@ impl LatentTrainer {
         let mut values = Vec::with_capacity(n_samples * self.seq_len * self.y_dim);
         let mut v = vec![0.0f32; eb * self.v_dim];
         let mut dws = vec![0.0f32; n * eb * self.x];
-        let ts = self.ts.clone();
         let mut eval_noise =
             StepNoise::new(NoiseBackend::Interval, -0.5, 0.5, eb * self.x, 0x1A7E);
         let name = format!("{}_{}_sample", self.model, self.solver.as_str());
         let mut produced = 0;
         while produced < n_samples {
             eval_noise.fill_normals(&mut v);
-            eval_noise.fill(&ts, &mut dws);
+            eval_noise.fill(&self.ts, &mut dws);
             let out = rt.run_f32(
                 &name,
                 &[
                     (&self.params, &[self.params.len()]),
                     (&v, &[eb, self.v_dim]),
-                    (&ts, &[self.seq_len]),
+                    (&self.ts, &[self.seq_len]),
                     (&dws, &[n, eb, self.x]),
                 ],
             )?;

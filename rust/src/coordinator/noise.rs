@@ -1,11 +1,18 @@
 //! Noise plumbing between the Brownian sources and the PJRT executables.
 //!
 //! A training step needs the increment tensor ``dws [N, B, w]`` for the
-//! solver grid; this module fills it by querying a [`BrownianSource`]
-//! sequentially over the observation intervals — the access pattern the
+//! solver grid; this module fills it by bulk-querying a [`BrownianSource`]
+//! over the observation grid (`fill_grid`) — the access pattern the
 //! Brownian Interval's hint/cache design targets. The same source (same
 //! seed) refilled over the same grid reproduces identical noise, which is
 //! how eval reuses training noise when needed.
+//!
+//! [`StepNoise`] holds a **persistent** source: instead of rebuilding a
+//! Brownian Interval tree + LRU cache from scratch on every training step
+//! (the pre-batch-engine behaviour), it keeps one source alive and
+//! [`BrownianInterval::reseed`]s it per step — the node arena, LRU arena
+//! and recycled value buffers survive, so the steady-state fill path is
+//! allocation-free.
 
 use crate::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
 use crate::brownian::{box_muller_fill, splitmix64};
@@ -31,35 +38,54 @@ pub enum NoiseBackend {
     },
 }
 
+/// The persistent source behind [`StepNoise`].
+enum Source {
+    Interval(BrownianInterval),
+    VirtualTree(VirtualBrownianTree),
+}
+
 /// Per-step noise generator for a fixed time grid.
 pub struct StepNoise {
-    backend: NoiseBackend,
-    t0: f64,
-    t1: f64,
-    size: usize,
+    src: Source,
     counter: u64,
     base_seed: u64,
+    /// Reused f64 copy of the f32 observation grid.
+    ts64: Vec<f64>,
 }
 
 impl StepNoise {
     /// `size = batch * noise_channels`; spans the (normalised) time grid.
     pub fn new(backend: NoiseBackend, t0: f64, t1: f64, size: usize, seed: u64) -> Self {
-        Self { backend, t0, t1, size, counter: 0, base_seed: seed }
+        let src = match backend {
+            NoiseBackend::Interval => {
+                Source::Interval(BrownianInterval::new(t0, t1, size, seed))
+            }
+            NoiseBackend::VirtualTree { eps } => {
+                Source::VirtualTree(VirtualBrownianTree::new(t0, t1, size, seed, eps))
+            }
+        };
+        Self { src, counter: 0, base_seed: seed, ts64: Vec::new() }
     }
 
     /// Fill `dws` for a fresh Brownian sample (new seed each call).
+    ///
+    /// The persistent source is reseeded in place and bulk-filled over the
+    /// grid; with a fixed grid across calls (the training case) this is
+    /// bit-identical to building a fresh source per call, without the
+    /// per-step tree/cache/buffer construction.
     pub fn fill(&mut self, ts: &[f32], dws: &mut [f32]) {
         let seed = splitmix64(self.base_seed ^ self.counter.wrapping_mul(0x9E37_79B9));
         self.counter += 1;
-        match self.backend {
-            NoiseBackend::Interval => {
-                let mut bi = BrownianInterval::new(self.t0, self.t1, self.size, seed);
-                fill_increments(&mut bi, ts, dws);
+        self.ts64.clear();
+        self.ts64.extend(ts.iter().map(|&t| t as f64));
+        match &mut self.src {
+            Source::Interval(bi) => {
+                bi.reseed(seed);
+                bi.fill_grid(&self.ts64, dws);
             }
-            NoiseBackend::VirtualTree { eps } => {
-                let mut vbt =
-                    VirtualBrownianTree::new(self.t0, self.t1, self.size, seed, eps);
-                fill_increments(&mut vbt, ts, dws);
+            Source::VirtualTree(vbt) => {
+                vbt.reseed(seed);
+                vbt.fill_grid(&self.ts64, dws);
             }
         }
     }
@@ -109,6 +135,26 @@ mod tests {
         StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 4, 9).fill(&ts, &mut a);
         StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 4, 9).fill(&ts, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn step_noise_persistent_matches_fresh_each_step() {
+        // The persistent-source optimisation must not change the noise: the
+        // k-th fill of one StepNoise equals the k-th fill of a fresh
+        // StepNoise driven to the same counter.
+        let ts: Vec<f32> = (0..9).map(|k| k as f32 / 8.0).collect();
+        let mut persistent = StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 6, 33);
+        let mut scratch = vec![0.0f32; 8 * 6];
+        let mut third_persistent = vec![0.0f32; 8 * 6];
+        persistent.fill(&ts, &mut scratch);
+        persistent.fill(&ts, &mut scratch);
+        persistent.fill(&ts, &mut third_persistent);
+        let mut fresh = StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 6, 33);
+        let mut third_fresh = vec![0.0f32; 8 * 6];
+        fresh.fill(&ts, &mut scratch);
+        fresh.fill(&ts, &mut scratch);
+        fresh.fill(&ts, &mut third_fresh);
+        assert_eq!(third_persistent, third_fresh);
     }
 
     #[test]

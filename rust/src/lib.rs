@@ -11,14 +11,33 @@
 //!   and their optimise-then-discretise adjoints in JAX, AOT-lowered to HLO
 //!   text (`python/compile/`).
 //! * Layer 3 (this crate, runtime): the paper's coordination contributions —
-//!   the [`brownian::BrownianInterval`] noise data structure, the
-//!   [`solvers::ReversibleHeun`] algebraically-reversible solver, training
-//!   orchestration ([`coordinator`]) driving PJRT executables, optimisers
-//!   with the paper's weight-clipping scheme ([`nn`]), datasets ([`data`]),
-//!   and evaluation metrics ([`metrics`]).
+//!   the [`brownian::BrownianInterval`] noise data structure (persistent and
+//!   [`brownian::BrownianInterval::reseed`]-able across training steps), the
+//!   [`solvers::ReversibleHeun`] algebraically-reversible solver and its
+//!   batched structure-of-arrays twin ([`solvers::BatchReversibleHeun`]),
+//!   the multi-threaded batch solve engine ([`solvers::integrate_batched`]),
+//!   training orchestration ([`coordinator`]) driving PJRT executables,
+//!   optimisers with the paper's weight-clipping scheme ([`nn`]), datasets
+//!   ([`data`]), and evaluation metrics ([`metrics`]).
 //!
 //! Python never runs on the training path: `make artifacts` lowers the JAX
-//! programs once, and the Rust binary is self-contained afterwards.
+//! programs once, and the Rust binary is self-contained afterwards. The
+//! PJRT execution layer sits behind the off-by-default `pjrt` cargo
+//! feature; the default build substitutes a manifest-only stub runtime so
+//! the crate builds and tests offline.
+//!
+//! ## The batch engine
+//!
+//! The paper's headline numbers are all measured on *batched* solves
+//! (SDE-GAN / Latent SDE training integrates 1024+ paths per step), so the
+//! pure-Rust hot path is batch-native: [`solvers::BatchSde`] evaluates a
+//! whole `[dim × batch]` structure-of-arrays state per call (every per-path
+//! [`solvers::Sde`] adapts automatically), diagonal-noise systems skip the
+//! dense `e×d` mat-vec, and [`solvers::integrate_batched`] fans fixed-size
+//! path chunks across a `std::thread` worker pool. Per-path noise comes
+//! from counter-based streams ([`solvers::CounterGridNoise`]), so results
+//! are bit-identical for every thread count, chunk size, and to per-path
+//! [`solvers::integrate`].
 //!
 //! ## Quickstart
 //!
@@ -29,6 +48,20 @@
 //! let mut bm = BrownianInterval::new(0.0, 1.0, 8, 42);
 //! let w = bm.increment_vec(0.0, 0.5); // W(0.5) - W(0.0), exact
 //! assert_eq!(w.len(), 8);
+//!
+//! // Batched solve: 256 paths of a 4-dim SDE, SoA state, 2 worker threads.
+//! use neuralsde::solvers::{
+//!     integrate_batched, systems::TanhDiagonal, BatchOptions, BatchReversibleHeun,
+//!     CounterGridNoise,
+//! };
+//! let sde = TanhDiagonal::new(4, 7);
+//! let noise = CounterGridNoise::new(1, 4, 0.0, 1.0, 32);
+//! let y0 = vec![0.1; 4 * 256];
+//! let opts = BatchOptions { threads: 2, chunk: 64 };
+//! let traj = integrate_batched::<BatchReversibleHeun, _, _>(
+//!     &sde, &noise, &y0, 256, 0.0, 1.0, 32, &opts,
+//! );
+//! assert_eq!(traj.len(), 33 * 4 * 256);
 //! ```
 
 pub mod brownian;

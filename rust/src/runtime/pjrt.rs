@@ -1,0 +1,123 @@
+//! PJRT runtime backend (`pjrt` feature): loading and executing the
+//! AOT-compiled JAX programs through the `xla` crate.
+
+use super::Manifest;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// A loaded PJRT runtime over a directory of HLO-text artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// Parsed manifest.
+    pub manifest: Manifest,
+    dir: std::path::PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `dir/manifest.json`.
+    pub fn new(dir: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let manifest = Manifest::load(&format!("{dir}/manifest.json"))?;
+        Ok(Self { client, manifest, dir: dir.into(), cache: HashMap::new() })
+    }
+
+    /// Platform string (e.g. `"cpu"`), for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable named in the manifest.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .execs
+                .get(name)
+                .ok_or_else(|| anyhow!("no executable '{name}' in manifest"))?;
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute `name` on f32 inputs with the given shapes; returns the
+    /// flattened f32 outputs (the executables are lowered with
+    /// `return_tuple=True`, so outputs arrive as a tuple).
+    ///
+    /// Shapes are `[dims...]`; an empty dims list is a scalar.
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let tuple = out_lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing tuple of {name}: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute with f64 inputs/outputs (the gradient-error experiment runs
+    /// in double precision, matching the paper's Figure-2 error floor).
+    pub fn run_f64(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f64], &[usize])],
+    ) -> Result<Vec<Vec<f64>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let tuple = out_lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing tuple of {name}: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Check whether the artifact directory exists and contains a manifest —
+    /// used by binaries to emit a friendly "run `make artifacts`" error.
+    pub fn artifacts_present(dir: &str) -> bool {
+        std::path::Path::new(dir).join("manifest.json").exists()
+    }
+}

@@ -1,0 +1,57 @@
+//! Stub runtime backend (default build, no `pjrt` feature).
+//!
+//! Loads the manifest so metadata-only paths (trainer construction, `info`,
+//! layout queries) work, but refuses to execute: running the AOT artifacts
+//! needs the XLA/PJRT runtime, which the offline build does not link.
+
+use super::Manifest;
+use anyhow::Result;
+
+/// Manifest-only runtime; `run_f32`/`run_f64` always error.
+pub struct Runtime {
+    /// Parsed manifest.
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Read `dir/manifest.json`; no PJRT client is created.
+    pub fn new(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(&format!("{dir}/manifest.json"))?;
+        Ok(Self { manifest })
+    }
+
+    /// Platform string (e.g. for logs).
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Execution is unavailable in the stub backend.
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        _inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!(
+            "cannot execute '{name}': built without the `pjrt` feature \
+             (rebuild with `cargo build --features pjrt` and real xla bindings)"
+        )
+    }
+
+    /// Execution is unavailable in the stub backend.
+    pub fn run_f64(
+        &mut self,
+        name: &str,
+        _inputs: &[(&[f64], &[usize])],
+    ) -> Result<Vec<Vec<f64>>> {
+        anyhow::bail!(
+            "cannot execute '{name}': built without the `pjrt` feature \
+             (rebuild with `cargo build --features pjrt` and real xla bindings)"
+        )
+    }
+
+    /// Check whether the artifact directory exists and contains a manifest —
+    /// used by binaries to emit a friendly "run `make artifacts`" error.
+    pub fn artifacts_present(dir: &str) -> bool {
+        std::path::Path::new(dir).join("manifest.json").exists()
+    }
+}

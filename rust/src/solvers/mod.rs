@@ -10,13 +10,27 @@
 //! (batched, trained) solves run through the AOT-compiled JAX twins of
 //! these steppers (`python/compile/sdeint.py`) driven by
 //! [`crate::coordinator`]; pytest cross-checks the two implementations.
+//!
+//! Two driver APIs share the same steppers' arithmetic:
+//!
+//! * [`integrate`] — one path at a time over `Vec<f64>` state;
+//! * [`integrate_batched`] (the batch engine) — a structure-of-arrays
+//!   `[dim × batch]` solve with a diagonal-noise fast path and a chunked
+//!   worker pool, bit-for-bit equal to per-path integration for every
+//!   solver and thread count.
 
+mod batch;
 mod classic;
 mod convergence;
 mod reversible_heun;
 mod stability;
 pub mod systems;
 
+pub use batch::{
+    aos_to_soa, integrate_batched, soa_to_aos, BatchEulerMaruyama, BatchHeun, BatchMidpoint,
+    BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper, CounterGridNoise,
+    PathNoiseF64,
+};
 pub use classic::{EulerMaruyama, Heun, Midpoint};
 pub use convergence::{
     estimate_orders, strong_weak_errors, ConvergenceReport, FineBrownianGrid,
@@ -35,6 +49,30 @@ pub trait Sde {
     fn drift(&self, t: f64, y: &[f64], out: &mut [f64]);
     /// Diffusion matrix `g(t, y)` into `out`, row-major `dim x noise_dim`.
     fn diffusion(&self, t: f64, y: &[f64], out: &mut [f64]);
+
+    /// True when `noise_dim() == dim()` and [`diffusion`](Self::diffusion)
+    /// is diagonal (`g[i][j] == 0` for `i != j`) — the dominant case in the
+    /// paper's models. The batched engine then skips the dense `e×d`
+    /// mat-vec in favour of an elementwise product with
+    /// [`diffusion_diag`](Self::diffusion_diag).
+    fn diffusion_is_diagonal(&self) -> bool {
+        false
+    }
+
+    /// The diagonal of the diffusion matrix into `out` (`dim` long). Only
+    /// meaningful when [`diffusion_is_diagonal`](Self::diffusion_is_diagonal)
+    /// returns true; the default extracts it from the dense matrix, so
+    /// diagonal SDEs should override it to avoid the dense evaluation.
+    fn diffusion_diag(&self, t: f64, y: &[f64], out: &mut [f64]) {
+        let e = self.dim();
+        let d = self.noise_dim();
+        debug_assert_eq!(e, d, "diffusion_diag requires noise_dim == dim");
+        let mut dense = vec![0.0; e * d];
+        self.diffusion(t, y, &mut dense);
+        for i in 0..e {
+            out[i] = dense[i * d + i];
+        }
+    }
 }
 
 /// Apply a diffusion matrix to a noise increment: `out += mat · dw`.

@@ -80,6 +80,18 @@ impl ReversibleHeun {
         self.state = state;
     }
 
+    /// Re-initialise the `(z, ẑ, μ, σ)` state at `(t, y)`.
+    ///
+    /// [`FixedStepSolver::step`] trusts the internal state to track the
+    /// driver's `y` (which holds whenever `y` is only advanced through
+    /// `step` from the `y0` this solver was constructed with). A driver
+    /// that mutates `y` externally must call `resync` before stepping
+    /// again — the old implicit `state.z != y` detection cost an O(dim)
+    /// vector compare on every step of the hot loop.
+    pub fn resync<S: Sde>(&mut self, sde: &S, t: f64, y: &[f64]) {
+        self.state = RevHeunState::init(sde, t, y);
+    }
+
     /// Algorithm 1: advance `(z, ẑ, μ, σ)` from `t_n` to `t_{n+1}`.
     ///
     /// ```text
@@ -156,12 +168,10 @@ impl FixedStepSolver for ReversibleHeun {
     const FIELD_EVALS_PER_STEP: usize = 1;
 
     fn step<S: Sde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64], y: &mut [f64]) {
-        // Re-seed the internal state if the driver's `y` diverged from ours
-        // (e.g. first call, or the driver mutated y). Detected cheaply by
-        // comparing pointers-worth of values.
-        if self.state.z != *y {
-            self.state = RevHeunState::init(sde, t, y);
-        }
+        // The state is authoritative: `new`/`resync`/`set_state` establish
+        // it and each step advances it, so the driver loop pays no per-step
+        // O(dim) comparison. Callers that mutate `y` between steps must
+        // `resync` (see that method's docs).
         self.forward_step(sde, t, dt, dw);
         y.copy_from_slice(&self.state.z);
     }
@@ -248,6 +258,21 @@ mod tests {
         let t2 = integrate(&sde, &mut h, &mut noise2, &[1.0], 0.0, 1.0, n);
         let (a, b) = (t1[t1.len() - 1], t2[t2.len() - 1]);
         assert!((a - b).abs() < 1e-2, "revheun {a} vs heun {b}");
+    }
+
+    #[test]
+    fn resync_restarts_from_external_state() {
+        // After the driver mutates y, resync must behave like a fresh solver.
+        let sde = Anharmonic { sigma: 0.5 };
+        let mut a = ReversibleHeun::new(&sde, 0.0, &[1.0]);
+        let dw = [0.02f64];
+        a.forward_step(&sde, 0.0, 0.1, &dw);
+        // Driver jumps to a new state externally:
+        a.resync(&sde, 0.0, &[2.0]);
+        let mut fresh = ReversibleHeun::new(&sde, 0.0, &[2.0]);
+        a.forward_step(&sde, 0.0, 0.1, &dw);
+        fresh.forward_step(&sde, 0.0, 0.1, &dw);
+        assert_eq!(a.state().max_abs_diff(fresh.state()), 0.0);
     }
 
     #[test]

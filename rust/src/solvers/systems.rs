@@ -26,6 +26,12 @@ impl Sde for ScalarLinear {
     fn diffusion(&self, _t: f64, y: &[f64], out: &mut [f64]) {
         out[0] = self.b * y[0];
     }
+    fn diffusion_is_diagonal(&self) -> bool {
+        true // 1×1: trivially diagonal
+    }
+    fn diffusion_diag(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+        out[0] = self.b * y[0];
+    }
 }
 
 /// The scalar anharmonic oscillator of Appendix D.4, equation (28):
@@ -47,6 +53,12 @@ impl Sde for Anharmonic {
         out[0] = y[0].sin();
     }
     fn diffusion(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+        out[0] = self.sigma;
+    }
+    fn diffusion_is_diagonal(&self) -> bool {
+        true // 1×1: trivially diagonal
+    }
+    fn diffusion_diag(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
         out[0] = self.sigma;
     }
 }
@@ -121,6 +133,17 @@ impl Sde for TanhDiagonal {
             out[i * d + i] = diag[i].tanh();
         }
     }
+    fn diffusion_is_diagonal(&self) -> bool {
+        true
+    }
+    fn diffusion_diag(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+        // The batched fast path: the diagonal only, straight into `out` —
+        // no d×d zero-fill, no per-call scratch allocation.
+        Self::matvec(&self.b, y, out);
+        for o in out.iter_mut() {
+            *o = o.tanh();
+        }
+    }
 }
 
 /// The time-dependent Ornstein–Uhlenbeck process of Appendix F.7:
@@ -153,6 +176,12 @@ impl Sde for TimeDependentOu {
     fn diffusion(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
         out[0] = self.chi;
     }
+    fn diffusion_is_diagonal(&self) -> bool {
+        true // 1×1: trivially diagonal
+    }
+    fn diffusion_diag(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+        out[0] = self.chi;
+    }
 }
 
 #[cfg(test)]
@@ -181,6 +210,19 @@ mod tests {
                     assert_eq!(g[i * 4 + j], 0.0);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn diffusion_diag_matches_dense_diagonal() {
+        let sde = TanhDiagonal::new(5, 3);
+        let y: Vec<f64> = (0..5).map(|i| 0.3 * i as f64 - 0.6).collect();
+        let mut dense = vec![0.0; 25];
+        let mut diag = vec![0.0; 5];
+        sde.diffusion(0.0, &y, &mut dense);
+        sde.diffusion_diag(0.0, &y, &mut diag);
+        for i in 0..5 {
+            assert_eq!(dense[i * 5 + i], diag[i], "component {i}");
         }
     }
 

@@ -143,6 +143,32 @@ impl BenchTable {
     }
 }
 
+/// Write one or more tables as a machine-tracked `BENCH_<tag>.json` under
+/// `dir`, returning the path written.
+///
+/// This is the perf-trajectory format committed per PR (e.g.
+/// `BENCH_pr1.json` at the repo root): one document per tag holding every
+/// table's rows, so regressions are diffable across the PR history. `extra`
+/// lets a bench attach derived headline numbers (speedups, thread counts).
+pub fn write_bench_json(
+    dir: &str,
+    tag: &str,
+    tables: &[&BenchTable],
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<String> {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("tag", Json::Str(tag.to_string())),
+        (
+            "tables",
+            Json::Arr(tables.iter().map(|t| t.to_json()).collect()),
+        ),
+    ];
+    fields.extend(extra);
+    let path = format!("{}/BENCH_{}.json", dir.trim_end_matches('/'), tag);
+    std::fs::write(&path, obj(fields).to_string_pretty())?;
+    Ok(path)
+}
+
 /// Black-box helper to stop the optimiser deleting benchmark work.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -176,5 +202,22 @@ mod tests {
         let j = t.to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("title").unwrap().as_str(), Some("test"));
+    }
+
+    #[test]
+    fn bench_json_document_written() {
+        let mut t = BenchTable::new("tab", 2, 0);
+        t.bench("row", |_| {});
+        let dir = std::env::temp_dir().join("neuralsde_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir = dir.to_str().unwrap().to_string();
+        let path =
+            write_bench_json(&dir, "test", &[&t], vec![("speedup", Json::Num(2.0))]).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("tag").unwrap().as_str(), Some("test"));
+        assert_eq!(parsed.get("speedup").unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.get("tables").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,159 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so instead of pulling the
+//! real `anyhow` we vendor the sliver of its API this workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros and
+//! the [`Context`] extension trait. Errors are flat strings — no source
+//! chains or backtraces — which is all the coordinator ever formats.
+
+use std::fmt;
+
+/// A string-backed error value (stand-in for `anyhow::Error`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend context, anyhow-style (`"context: original"`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` (and the
+// second `Context` impl below) coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        Error::msg(err)
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension trait (stand-in for `anyhow::Context`).
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 1 + 1)
+    }
+
+    fn checks(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        Ok(x)
+    }
+
+    fn parses(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // exercises From<ParseIntError>
+        Ok(n)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 2");
+        assert_eq!(checks(3).unwrap(), 3);
+        assert!(checks(-1).is_err());
+        let e: Result<()> = fails().context("outer");
+        assert_eq!(e.unwrap_err().to_string(), "outer: boom 2");
+        assert!(parses("12").is_ok());
+        let e = parses("nope").context("parsing").unwrap_err();
+        assert!(e.to_string().starts_with("parsing: "));
+        let single = anyhow!(String::from("plain"));
+        assert_eq!(single.to_string(), "plain");
+    }
+}

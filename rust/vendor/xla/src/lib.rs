@@ -1,0 +1,114 @@
+//! Compile-only stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment cannot link the real XLA/PJRT runtime, but
+//! the `pjrt` feature of the `neuralsde` crate still has to type-check. This
+//! stub mirrors the subset of the real crate's API the runtime layer uses;
+//! every entry point returns an [`XlaError`] explaining how to swap in the
+//! real bindings. Replace this directory with the actual `xla` crate (or
+//! point the `xla` path dependency at it) to execute AOT artifacts.
+
+use std::borrow::Borrow;
+
+const STUB_MSG: &str =
+    "stub xla crate: replace rust/vendor/xla with the real xla/PJRT bindings to execute artifacts";
+
+/// Error type matching the real crate's `{e:?}`-formatted usage.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+fn stub_err<T>() -> Result<T, XlaError> {
+    Err(XlaError(STUB_MSG.to_string()))
+}
+
+/// Element types transferable to/from literals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real crate builds a CPU PJRT client; the stub always errors.
+    pub fn cpu() -> Result<Self, XlaError> {
+        stub_err()
+    }
+
+    /// Platform string for logs.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile an HLO computation (stub: unreachable, `cpu()` errors first).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        stub_err()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        stub_err()
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A host-side literal (stub).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Self {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        stub_err()
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, XlaError> {
+        stub_err()
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        stub_err()
+    }
+}
+
+/// A device buffer returned by execution (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to the host.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        stub_err()
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute on the given argument literals.
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        stub_err()
+    }
+}
