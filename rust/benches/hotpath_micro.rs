@@ -7,8 +7,10 @@ use neuralsde::brownian::{box_muller_fill, BrownianInterval, BrownianSource, Lru
 use neuralsde::coordinator::noise::{NoiseBackend, StepNoise};
 use neuralsde::metrics::{series_features, signature};
 use neuralsde::nn::{Adadelta, Optimizer};
-use neuralsde::solvers::systems::TanhDiagonal;
-use neuralsde::solvers::{integrate_batched, BatchOptions, BatchReversibleHeun, CounterGridNoise};
+use neuralsde::solvers::systems::{TanhDiagonal, TanhDiagonalBatch};
+use neuralsde::solvers::{
+    integrate_batched, simd, BatchOptions, BatchReversibleHeun, CounterGridNoise,
+};
 use neuralsde::util::bench::{black_box, BenchTable};
 
 fn main() {
@@ -50,7 +52,9 @@ fn main() {
         });
     }
 
-    // Batched reversible Heun over SoA state (diagonal fast path).
+    // Batched reversible Heun over SoA state (diagonal fast path), through
+    // the blanket per-path adapter and through the native hand-batched
+    // system — the adapter/native gap is the gather/scatter cost.
     {
         let sde = TanhDiagonal::new(16, 3);
         let y0 = vec![0.1f64; 16 * 256];
@@ -66,6 +70,43 @@ fn main() {
                 32,
                 &BatchOptions { threads: 1, chunk: 64 },
             ));
+        });
+        let nsde = TanhDiagonalBatch::new(16, 3);
+        table.bench("batch/revheun_native/d=16/batch=256/n=32", |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
+            black_box(integrate_batched::<BatchReversibleHeun, _, _>(
+                &nsde,
+                &noise,
+                &y0,
+                256,
+                0.0,
+                1.0,
+                32,
+                &BatchOptions { threads: 1, chunk: 64 },
+            ));
+        });
+    }
+
+    // SIMD kernel floor: the fused SoA primitives the batched steppers are
+    // built from, at the d=16 × batch=256 lane size the solve rows use.
+    {
+        let n = 16 * 256;
+        let f = vec![0.37f64; n];
+        let g0 = vec![0.21f64; n];
+        let g1 = vec![0.19f64; n];
+        let w = vec![0.023f64; n];
+        let mut y = vec![0.1f64; n];
+        table.bench("simd/axpy/4096", |_| {
+            simd::axpy(1.0e-3, &f, &mut y);
+            black_box(&y);
+        });
+        table.bench("simd/avg_mul_add/4096", |_| {
+            simd::avg_mul_add(&g0, &g1, &w, &mut y);
+            black_box(&y);
+        });
+        table.bench("simd/matvec_row/d=16/batch=256", |_| {
+            simd::matvec_row(&f[..16 * 256], &g0[..16 * 256], &mut y[..256], 16);
+            black_box(&y);
         });
     }
 

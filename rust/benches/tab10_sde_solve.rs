@@ -9,14 +9,17 @@
 //!
 //! Expected shape: BI ~2× faster on small problems, up to ~10× on large;
 //! the batched engine ≥2× over the per-path loop at batch 1024 on a
-//! multi-core host (diagonal fast path + chunked thread fan-out).
+//! multi-core host (diagonal fast path + work-stealing thread fan-out),
+//! and the `batched_native/` rows (SIMD kernels + hand-batched SoA
+//! vector fields, no gather/scatter) beating the `batched/` adapter rows.
 //!
 //! Results are written to `results/bench_tab10_sde_solve.json` and, for the
-//! perf trajectory, `BENCH_pr1.json` (override the directory with
-//! `BENCH_DIR`).
+//! perf trajectory, `BENCH_pr2.json` (override the directory with
+//! `BENCH_DIR`). Pass `--smoke` (or set `QUICK=1`) for the trimmed CI
+//! perf-smoke workload.
 
 use neuralsde::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
-use neuralsde::solvers::systems::TanhDiagonal;
+use neuralsde::solvers::systems::{TanhDiagonal, TanhDiagonalBatch};
 use neuralsde::solvers::{
     integrate, integrate_batched, BatchEulerMaruyama, BatchOptions, BatchReversibleHeun,
     CounterGridNoise, EulerMaruyama, NoiseF64, NoiseFromSource, ReversibleHeun,
@@ -46,7 +49,9 @@ fn solve_and_backward<B: BrownianSource>(src: &mut B, sde: &TanhDiagonal, n: usi
 }
 
 fn main() {
-    let quick = std::env::var("QUICK").is_ok();
+    // `--smoke` (CI perf smoke job) and QUICK=1 both select the trimmed
+    // workload: kernels still execute, wall time stays in seconds.
+    let quick = std::env::var("QUICK").is_ok() || std::env::args().any(|a| a == "--smoke");
     let dims: &[usize] = if quick { &[1, 10] } else { &[1, 10, 16] };
     let steps: &[usize] = if quick { &[10, 100] } else { &[10, 100, 1000] };
     let mut table = BenchTable::new("Table 10: SDE solve + adjoint sweep", 32, 2);
@@ -134,6 +139,38 @@ fn main() {
         );
     }
 
+    // Native hand-batched kernels (this PR's headline): the same solves
+    // through `TanhDiagonalBatch`, whose SoA mat-vecs skip the blanket
+    // adapter's gather/scatter. Same seed, bit-identical trajectories —
+    // only the wall clock may differ from the `batched/` rows above.
+    let nsde = TanhDiagonalBatch::new(d, 99);
+    for &threads in &thread_counts {
+        btable.bench_n(
+            &format!("batched_native/euler/threads={threads}/batch={batch}"),
+            reps,
+            |i| {
+                let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+                let opts = BatchOptions { threads, chunk: 64 };
+                black_box(integrate_batched::<BatchEulerMaruyama, _, _>(
+                    &nsde, &noise, &y0b, batch, 0.0, 1.0, n, &opts,
+                ));
+            },
+        );
+    }
+    for &threads in &thread_counts {
+        btable.bench_n(
+            &format!("batched_native/revheun/threads={threads}/batch={batch}"),
+            reps,
+            |i| {
+                let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+                let opts = BatchOptions { threads, chunk: 64 };
+                black_box(integrate_batched::<BatchReversibleHeun, _, _>(
+                    &nsde, &noise, &y0b, batch, 0.0, 1.0, n, &opts,
+                ));
+            },
+        );
+    }
+
     println!("{}", btable.render());
     let mut headline: Vec<(&str, Json)> = vec![
         ("batch", Json::Num(batch as f64)),
@@ -143,10 +180,20 @@ fn main() {
     for solver in ["euler", "revheun"] {
         let per_path = btable.min_of(&format!("per_path/{solver}/batch={batch}"));
         for &threads in &thread_counts {
-            let b = btable.min_of(&format!("batched/{solver}/threads={threads}/batch={batch}"));
-            let s = per_path / b;
-            println!("  {solver:<8} threads={threads:<3} batched speedup {s:.2}x");
+            let adapter =
+                btable.min_of(&format!("batched/{solver}/threads={threads}/batch={batch}"));
+            let native = btable
+                .min_of(&format!("batched_native/{solver}/threads={threads}/batch={batch}"));
+            let s = per_path / adapter;
+            let sn = per_path / native;
+            let rel = adapter / native;
+            println!(
+                "  {solver:<8} threads={threads:<3} batched {s:.2}x  native {sn:.2}x  \
+                 native-vs-adapter {rel:.2}x"
+            );
             speedups.push((format!("speedup/{solver}/threads={threads}"), s));
+            speedups.push((format!("speedup_native/{solver}/threads={threads}"), sn));
+            speedups.push((format!("native_vs_adapter/{solver}/threads={threads}"), rel));
         }
     }
     let speedup_json: Vec<(String, f64)> = speedups;
@@ -163,8 +210,14 @@ fn main() {
 
     std::fs::create_dir_all("results").ok();
     table.write_json("results/bench_tab10_sde_solve.json").ok();
+    if quick {
+        // Trimmed workloads are not comparable to the tracked trajectory —
+        // never let a smoke run overwrite BENCH_pr2.json.
+        println!("smoke/QUICK run: skipping BENCH_pr2.json (full run required)");
+        return;
+    }
     let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
-    match write_bench_json(&bench_dir, "pr1", &[&table, &btable], headline) {
+    match write_bench_json(&bench_dir, "pr2", &[&table, &btable], headline) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write BENCH json: {e}"),
     }

@@ -54,6 +54,10 @@ pub struct QueryStats {
     pub nodes_created: u64,
     /// Bridge samples actually computed (cache misses resolved).
     pub bridges_sampled: u64,
+    /// Nodes popped during tree descents (`traverse` and the bulk
+    /// `fill_grid` descent) — the traversal-work metric the grid-fill
+    /// optimisation is measured by.
+    pub node_visits: u64,
     /// Longest ancestor walk needed to find a cached value.
     pub max_recompute_depth: u32,
     /// LRU cache hits.
@@ -97,6 +101,10 @@ pub struct BrownianInterval {
     up_stack: Vec<u32>,
     walk_stack: Vec<(u32, f64, f64)>,
     out_nodes: Vec<u32>,
+    /// Scratch for the bulk grid descent: pending `(node, span, step range)`
+    /// work items and the resulting `(node, step)` partition.
+    grid_stack: Vec<(u32, f64, f64, usize, usize)>,
+    grid_parts: Vec<(u32, usize)>,
     stats: QueryStats,
     /// Endpoint snap tolerance (absolute, in time units).
     tol: f64,
@@ -131,6 +139,8 @@ impl BrownianInterval {
             up_stack: Vec::new(),
             walk_stack: Vec::new(),
             out_nodes: Vec::new(),
+            grid_stack: Vec::new(),
+            grid_parts: Vec::new(),
             stats: QueryStats::default(),
             tol: (t1 - t0) * 1e-12,
         };
@@ -313,6 +323,7 @@ impl BrownianInterval {
         self.walk_stack.clear();
         self.walk_stack.push((start, s, t));
         while let Some((idx, c, d)) = self.walk_stack.pop() {
+            self.stats.node_visits += 1;
             let node = self.nodes[idx as usize];
             let c = if self.close(c, node.a) { node.a } else { c };
             let d = if self.close(d, node.b) { node.b } else { d };
@@ -346,6 +357,111 @@ impl BrownianInterval {
             }
         }
         if let Some(&last) = self.out_nodes.last() {
+            self.hint = last;
+        }
+    }
+
+    /// Partition **every** interval of the grid `ts` in a single tree
+    /// descent (the bulk counterpart of [`Self::traverse`]): one DFS from
+    /// the root distributes the grid's boundary points down the tree, so
+    /// each node on the partition frontier is visited exactly once —
+    /// instead of once per covering step via per-step hint-guided
+    /// traverses. Fills `grid_parts` with ordered `(node, step)` pairs.
+    ///
+    /// Splits happen at the same points, in the same left-to-right order,
+    /// as `ts.len() - 1` sequential [`Self::traverse`] calls would produce,
+    /// so the tree shape (hence every sampled value) is bit-identical to
+    /// the per-step path.
+    fn traverse_grid(&mut self, ts: &[f64]) {
+        let n = ts.len() - 1;
+        self.grid_parts.clear();
+        self.grid_stack.clear();
+        self.grid_stack.push((0, ts[0], ts[n], 0, n));
+        while let Some((idx, c, d, lo, hi)) = self.grid_stack.pop() {
+            self.stats.node_visits += 1;
+            let node = self.nodes[idx as usize];
+            let c = if self.close(c, node.a) { node.a } else { c };
+            let d = if self.close(d, node.b) { node.b } else { d };
+            if hi - lo == 1 {
+                // Single grid step left: exactly `traverse`'s logic.
+                if c == node.a && d == node.b {
+                    self.grid_parts.push((idx, lo));
+                    continue;
+                }
+                if node.is_leaf() {
+                    if c == node.a {
+                        let (l, _) = self.bisect(idx, d);
+                        self.grid_parts.push((l, lo));
+                    } else {
+                        let (_, r) = self.bisect(idx, c);
+                        self.grid_stack.push((r, c, d, lo, hi));
+                    }
+                } else {
+                    let m = self.nodes[node.left as usize].b;
+                    if d <= m {
+                        self.grid_stack.push((node.left, c, d, lo, hi));
+                    } else if c >= m {
+                        self.grid_stack.push((node.right, c, d, lo, hi));
+                    } else {
+                        self.grid_stack.push((node.right, m, d, lo, hi));
+                        self.grid_stack.push((node.left, c, m, lo, hi));
+                    }
+                }
+                continue;
+            }
+            // Multiple steps overlap [c, d]: interior grid boundaries exist
+            // (ts[lo+1] .. ts[hi-1] all lie strictly inside), so this node
+            // must split even if it covers [c, d] exactly.
+            if node.is_leaf() {
+                if c > node.a {
+                    // Trim the left part that belongs to the previous node.
+                    let (_, r) = self.bisect(idx, c);
+                    self.grid_stack.push((r, c, d, lo, hi));
+                } else {
+                    // Split off step `lo` at the first interior boundary —
+                    // the same split the sequential step-`lo` query makes.
+                    let x = ts[lo + 1];
+                    let (l, r) = self.bisect(idx, x);
+                    self.grid_stack.push((r, x, d, lo + 1, hi));
+                    self.grid_parts.push((l, lo));
+                }
+            } else {
+                let m = self.nodes[node.left as usize].b;
+                if d <= m {
+                    self.grid_stack.push((node.left, c, d, lo, hi));
+                } else if c >= m {
+                    self.grid_stack.push((node.right, c, d, lo, hi));
+                } else {
+                    // The split point falls on step boundary `k` (m snaps to
+                    // ts[k]) or strictly inside step `k - 1`; route the
+                    // overlapping step ranges to each child accordingly.
+                    let rel = ts[lo + 1..hi].partition_point(|&x| x < m - self.tol);
+                    let k = lo + 1 + rel;
+                    let (left_hi, right_lo) = if k < hi && (ts[k] - m).abs() <= self.tol {
+                        // Bit-identity with per-step queries requires grid
+                        // points to coincide *exactly* with existing split
+                        // points (per-step snapping is node-relative, so a
+                        // tol-close-but-unequal point would diverge there
+                        // too, sliver by sliver). Reject such grids loudly
+                        // in debug builds instead of silently differing.
+                        debug_assert!(
+                            ts[k] == m,
+                            "fill_grid: grid point {} lies within the snap \
+                             tolerance of node boundary {} without equalling \
+                             it; reuse the exact boundary value",
+                            ts[k],
+                            m
+                        );
+                        (k, k)
+                    } else {
+                        (k, k - 1)
+                    };
+                    self.grid_stack.push((node.right, m, d, right_lo, hi));
+                    self.grid_stack.push((node.left, c, m, lo, left_hi));
+                }
+            }
+        }
+        if let Some(&(last, _)) = self.grid_parts.last() {
             self.hint = last;
         }
     }
@@ -389,9 +505,17 @@ impl BrownianSource for BrownianInterval {
         self.query(s, t, out);
     }
 
-    /// Single hint-guided sweep over the grid: the span is validated once
-    /// and each step's partition starts its search at the previous step's
-    /// node, so a training-grid fill touches each tree level once.
+    /// Bulk fill in **one tree descent**: the whole grid is partitioned by a
+    /// single DFS from the root ([`Self::traverse_grid`]) instead of one
+    /// hint-guided traverse per step, so each partition-frontier node is
+    /// visited once (`2n - 1` pops for an `n`-step comb) rather than re-read
+    /// through its ancestors step after step. Values are bit-identical to
+    /// `n` sequential [`BrownianSource::increment`] calls — the descent
+    /// splits leaves at the same points in the same order. (Precondition,
+    /// debug-asserted: grid points must either equal existing split points
+    /// exactly or lie further than the snap tolerance from them — true for
+    /// any reused `ts` array and for real grid spacings, which dwarf the
+    /// `1e-12 · span` tolerance.)
     fn fill_grid(&mut self, ts: &[f64], out: &mut [f32]) {
         let n = ts.len().saturating_sub(1);
         assert_eq!(out.len(), n * self.size, "fill_grid: need {} values", n * self.size);
@@ -401,9 +525,23 @@ impl BrownianSource for BrownianInterval {
         check_interval((self.t0, self.t1), ts[0], ts[n]);
         for k in 0..n {
             assert!(ts[k] < ts[k + 1], "fill_grid: grid must be strictly increasing");
-            let row = &mut out[k * self.size..(k + 1) * self.size];
-            self.query(ts[k], ts[k + 1], row);
         }
+        self.stats.queries += n as u64;
+        self.traverse_grid(ts);
+        out.fill(0.0);
+        let parts = std::mem::take(&mut self.grid_parts);
+        for &(idx, k) in &parts {
+            self.materialise(idx);
+            let w = self
+                .cache
+                .get(&idx)
+                .expect("materialise() must have cached the node");
+            let row = &mut out[k * self.size..(k + 1) * self.size];
+            for i in 0..self.size {
+                row[i] += w[i];
+            }
+        }
+        self.grid_parts = parts;
     }
 }
 
@@ -603,6 +741,83 @@ mod tests {
                 "step {k}"
             );
         }
+    }
+
+    #[test]
+    fn fill_grid_matches_sequential_after_reseed() {
+        // The warm-tree path (the training loop's pattern): same shape,
+        // fresh seeds — bulk fill must still equal per-step queries bitwise.
+        let ts: Vec<f64> = (0..=20).map(|k| k as f64 / 20.0).collect();
+        let mut a = bi(55);
+        let mut b = bi(55);
+        let mut bulk = vec![0.0f32; 20 * 4];
+        a.fill_grid(&ts, &mut bulk); // build the shape
+        for k in 0..20 {
+            let _ = b.increment_vec(ts[k], ts[k + 1]);
+        }
+        for seed in [56u64, 1234] {
+            a.reseed(seed);
+            b.reseed(seed);
+            a.fill_grid(&ts, &mut bulk);
+            for k in 0..20 {
+                assert_eq!(
+                    &bulk[k * 4..(k + 1) * 4],
+                    b.increment_vec(ts[k], ts[k + 1]).as_slice(),
+                    "seed {seed} step {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fill_grid_node_visit_counts_pinned() {
+        // A uniform n-step grid drives the tree into a right-leaning comb of
+        // 2n - 1 nodes. Node pops ("visits") per full grid pass:
+        //
+        //            cold (building)   warm (reseeded, shape exists)
+        //  fill_grid       n                2n - 1   (each node once)
+        //  per-step     2n - 1              3n - 2   (ancestors re-popped)
+        //
+        // Cold fill: the root plus each comb tail is popped once (n pops);
+        // bisected-off left children are emitted without a pop. Warm fill:
+        // one DFS pops each of the 2n - 1 nodes exactly once. Warm per-step:
+        // step 0 pops root + leaf, interior steps pop parent tail + tail +
+        // leaf (3 each), the last step pops tail + leaf.
+        let n = 16usize;
+        let ts: Vec<f64> = (0..=n).map(|k| k as f64 / n as f64).collect();
+
+        let mut bulk_src = BrownianInterval::new(0.0, 1.0, 2, 9);
+        let mut out = vec![0.0f32; n * 2];
+        bulk_src.fill_grid(&ts, &mut out);
+        assert_eq!(bulk_src.node_count(), 2 * n - 1);
+        assert_eq!(bulk_src.stats().node_visits, n as u64, "cold bulk fill");
+        bulk_src.reseed(10);
+        bulk_src.fill_grid(&ts, &mut out);
+        assert_eq!(
+            bulk_src.stats().node_visits,
+            (n + 2 * n - 1) as u64,
+            "warm bulk fill must pop each partition node exactly once"
+        );
+
+        let mut step_src = BrownianInterval::new(0.0, 1.0, 2, 9);
+        for k in 0..n {
+            let _ = step_src.increment_vec(ts[k], ts[k + 1]);
+        }
+        assert_eq!(step_src.stats().node_visits, (2 * n - 1) as u64, "cold per-step");
+        step_src.reseed(10);
+        for k in 0..n {
+            let _ = step_src.increment_vec(ts[k], ts[k + 1]);
+        }
+        assert_eq!(
+            step_src.stats().node_visits,
+            (2 * n - 1 + 3 * n - 2) as u64,
+            "warm per-step re-pops ancestors every step"
+        );
+
+        // The headline: a warm grid fill does strictly less traversal work.
+        let warm_fill = 2 * n - 1;
+        let warm_steps = 3 * n - 2;
+        assert!(warm_fill < warm_steps);
     }
 
     #[test]

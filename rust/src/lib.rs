@@ -26,18 +26,38 @@
 //! feature; the default build substitutes a manifest-only stub runtime so
 //! the crate builds and tests offline.
 //!
-//! ## The batch engine
+//! ## Performance architecture
 //!
 //! The paper's headline numbers are all measured on *batched* solves
 //! (SDE-GAN / Latent SDE training integrates 1024+ paths per step), so the
-//! pure-Rust hot path is batch-native: [`solvers::BatchSde`] evaluates a
-//! whole `[dim × batch]` structure-of-arrays state per call (every per-path
-//! [`solvers::Sde`] adapts automatically), diagonal-noise systems skip the
-//! dense `e×d` mat-vec, and [`solvers::integrate_batched`] fans fixed-size
-//! path chunks across a `std::thread` worker pool. Per-path noise comes
-//! from counter-based streams ([`solvers::CounterGridNoise`]), so results
-//! are bit-identical for every thread count, chunk size, and to per-path
-//! [`solvers::integrate`].
+//! pure-Rust hot path is batch-native and built as three layers that share
+//! one invariant:
+//!
+//! * **SoA layout** — [`solvers::BatchSde`] evaluates a whole
+//!   `[dim × batch]` structure-of-arrays state per call (every per-path
+//!   [`solvers::Sde`] adapts automatically; the benchmark systems also ship
+//!   native hand-batched twins), and diagonal-noise systems skip the dense
+//!   `e×d` mat-vec. Component `i`'s values for all paths are contiguous
+//!   (`y[i * batch + p]`), so every inner loop is a unit-stride sweep.
+//! * **SIMD kernels** — those sweeps run on the 4-wide unrolled fused
+//!   kernels of [`solvers::simd`]. Vectorisation is *across paths*, never
+//!   within one path's arithmetic: each path's expression tree (operand
+//!   order, association, reduction order over noise channels) is exactly
+//!   the scalar steppers', so batched results are **bit-for-bit equal** to
+//!   per-path [`solvers::integrate`] — the SoA-lane invariant the whole
+//!   stack rests on.
+//! * **Work-stealing fan-out** — [`solvers::integrate_batched`] spreads
+//!   path chunks over a `std::thread` pool with per-worker deques (steal
+//!   from the most-loaded peer when idle). Per-path noise comes from
+//!   counter-based streams ([`solvers::CounterGridNoise`]) keyed by path
+//!   index alone, so results are bit-identical for every thread count,
+//!   chunk size and steal schedule.
+//!
+//! The same discipline applies to noise: the Brownian Interval partitions a
+//! whole training grid in one tree descent
+//! ([`brownian::BrownianSource::fill_grid`]) while producing the exact bits
+//! of per-step queries, and [`brownian::BrownianInterval::reseed`] redraws
+//! a persistent tree without reallocating it.
 //!
 //! ## Quickstart
 //!

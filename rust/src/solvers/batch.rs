@@ -16,9 +16,10 @@
 //!   per-path integration agree bit-for-bit (and the batched reversible
 //!   Heun keeps its algebraic reversibility per path);
 //! * [`integrate_batched`] — a chunked `std::thread` worker pool fanning
-//!   fixed-size path chunks across cores. Each path's noise and arithmetic
+//!   fixed-size path chunks across cores with work-stealing deques, so
+//!   skewed per-chunk costs rebalance. Each path's noise and arithmetic
 //!   are independent of the partition, so results are **deterministic and
-//!   identical for any thread count**;
+//!   identical for any thread count or steal schedule**;
 //! * [`CounterGridNoise`] — O(1)-memory, random-access per-path Gaussian
 //!   grid noise built on [`crate::brownian::normal_at`], with a
 //!   [`PathNoiseF64`] adapter exposing any single path's stream to the
@@ -27,9 +28,16 @@
 //! SoA layout conventions: state `y[i * batch + p]` (component `i`, path
 //! `p`), noise `dw[j * batch + p]`, dense diffusion
 //! `g[(i * noise_dim + j) * batch + p]`, diagonal diffusion `g[i * batch + p]`.
+//!
+//! The per-component inner loops run on the 4-wide unit-stride kernels of
+//! [`super::simd`]; vectorisation is across paths only, so batched results
+//! stay bit-for-bit equal to per-path integration (see that module's docs
+//! for the exact invariants).
 
-use super::{NoiseF64, Sde};
+use super::{simd, NoiseF64, Sde};
 use crate::brownian::{normal_at, splitmix64};
+use std::collections::VecDeque;
+use std::sync::Mutex;
 
 /// A batched SDE over structure-of-arrays state (see module docs for the
 /// layout conventions). `Sync` so chunks can be solved on worker threads.
@@ -272,21 +280,16 @@ fn eval_diffusion<S: BatchSde>(
 /// same order as the scalar mat-vec, so per-path results are bit-identical.
 fn add_matvec(g: &[f64], diag: bool, dw: &[f64], y: &mut [f64], e: usize, d: usize, batch: usize) {
     if diag {
-        for i in 0..e {
-            for p in 0..batch {
-                let acc = g[i * batch + p] * dw[i * batch + p];
-                y[i * batch + p] += acc;
-            }
-        }
+        // Diagonal: `d == e`, one fused elementwise pass over all lanes.
+        simd::mul_add(&g[..e * batch], &dw[..e * batch], &mut y[..e * batch]);
     } else {
         for i in 0..e {
-            for p in 0..batch {
-                let mut acc = 0.0;
-                for j in 0..d {
-                    acc += g[(i * d + j) * batch + p] * dw[j * batch + p];
-                }
-                y[i * batch + p] += acc;
-            }
+            simd::matvec_row(
+                &g[i * d * batch..(i + 1) * d * batch],
+                dw,
+                &mut y[i * batch..(i + 1) * batch],
+                d,
+            );
         }
     }
 }
@@ -318,9 +321,7 @@ impl BatchStepper for BatchEulerMaruyama {
         self.f.resize(e * batch, 0.0);
         sde.drift_batch(t, y, &mut self.f, batch);
         let diag = eval_diffusion(sde, t, y, &mut self.g, batch);
-        for idx in 0..e * batch {
-            y[idx] += self.f[idx] * dt;
-        }
+        simd::axpy(dt, &self.f, y);
         add_matvec(&self.g, diag, dw, y, e, d, batch);
     }
 }
@@ -358,19 +359,13 @@ impl BatchStepper for BatchMidpoint {
         sde.drift_batch(t, y, &mut self.f, batch);
         let diag = eval_diffusion(sde, t, y, &mut self.g, batch);
         self.mid.copy_from_slice(y);
-        for idx in 0..e * batch {
-            self.mid[idx] += 0.5 * self.f[idx] * dt;
-        }
-        for idx in 0..d * batch {
-            self.half_dw[idx] = 0.5 * dw[idx];
-        }
+        simd::axpy_half(dt, &self.f, &mut self.mid);
+        simd::scale_half(dw, &mut self.half_dw);
         add_matvec(&self.g, diag, &self.half_dw, &mut self.mid, e, d, batch);
         // Full step with midpoint fields.
         sde.drift_batch(t + 0.5 * dt, &self.mid, &mut self.f, batch);
         let diag = eval_diffusion(sde, t + 0.5 * dt, &self.mid, &mut self.g, batch);
-        for idx in 0..e * batch {
-            y[idx] += self.f[idx] * dt;
-        }
+        simd::axpy(dt, &self.f, y);
         add_matvec(&self.g, diag, dw, y, e, d, batch);
     }
 }
@@ -415,35 +410,24 @@ impl BatchStepper for BatchHeun {
         let diag0 = eval_diffusion(sde, t, y, &mut self.g0, batch);
         // Euler predictor.
         self.pred.copy_from_slice(y);
-        for idx in 0..e * batch {
-            self.pred[idx] += self.f0[idx] * dt;
-        }
+        simd::axpy(dt, &self.f0, &mut self.pred);
         add_matvec(&self.g0, diag0, dw, &mut self.pred, e, d, batch);
         // Trapezoidal corrector.
         sde.drift_batch(t + dt, &self.pred, &mut self.f1, batch);
         let diag1 = eval_diffusion(sde, t + dt, &self.pred, &mut self.g1, batch);
         debug_assert_eq!(diag0, diag1);
-        for idx in 0..e * batch {
-            y[idx] += 0.5 * (self.f0[idx] + self.f1[idx]) * dt;
-        }
+        simd::avg_axpy(&self.f0, &self.f1, dt, y);
         if diag0 {
-            for i in 0..e {
-                for p in 0..batch {
-                    let acc = 0.5 * (self.g0[i * batch + p] + self.g1[i * batch + p])
-                        * dw[i * batch + p];
-                    y[i * batch + p] += acc;
-                }
-            }
+            simd::avg_mul_add(&self.g0, &self.g1, &dw[..e * batch], &mut y[..e * batch]);
         } else {
             for i in 0..e {
-                for p in 0..batch {
-                    let mut acc = 0.0;
-                    for j in 0..d {
-                        let r = (i * d + j) * batch + p;
-                        acc += 0.5 * (self.g0[r] + self.g1[r]) * dw[j * batch + p];
-                    }
-                    y[i * batch + p] += acc;
-                }
+                simd::matvec_row_avg(
+                    &self.g0[i * d * batch..(i + 1) * d * batch],
+                    &self.g1[i * d * batch..(i + 1) * d * batch],
+                    dw,
+                    &mut y[i * batch..(i + 1) * batch],
+                    d,
+                );
             }
         }
     }
@@ -505,9 +489,7 @@ impl BatchReversibleHeun {
     pub fn forward_step<S: BatchSde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64]) {
         let (e, d, b) = (self.dim, self.noise_dim, self.batch);
         // ẑ_{n+1} = 2 z − ẑ + μ Δt + σ ΔW.
-        for idx in 0..e * b {
-            self.s_zh[idx] = 2.0 * self.z[idx] - self.zh[idx] + self.mu[idx] * dt;
-        }
+        simd::leapfrog(&self.z, &self.zh, &self.mu, dt, &mut self.s_zh);
         add_matvec(&self.sigma, self.diag, dw, &mut self.s_zh, e, d, b);
         // μ_{n+1}, σ_{n+1}.
         sde.drift_batch(t + dt, &self.s_zh, &mut self.s_mu, b);
@@ -517,26 +499,18 @@ impl BatchReversibleHeun {
             sde.diffusion_batch(t + dt, &self.s_zh, &mut self.s_sigma, b);
         }
         // z_{n+1} = z + ½ (μ + μ') Δt + ½ (σ + σ') ΔW.
+        simd::avg_axpy(&self.mu, &self.s_mu, dt, &mut self.z);
         if self.diag {
-            for i in 0..e {
-                for p in 0..b {
-                    let idx = i * b + p;
-                    let mut acc = self.z[idx] + 0.5 * (self.mu[idx] + self.s_mu[idx]) * dt;
-                    acc += 0.5 * (self.sigma[idx] + self.s_sigma[idx]) * dw[idx];
-                    self.z[idx] = acc;
-                }
-            }
+            simd::avg_mul_add(&self.sigma, &self.s_sigma, dw, &mut self.z);
         } else {
             for i in 0..e {
-                for p in 0..b {
-                    let idx = i * b + p;
-                    let mut acc = self.z[idx] + 0.5 * (self.mu[idx] + self.s_mu[idx]) * dt;
-                    for j in 0..d {
-                        let r = (i * d + j) * b + p;
-                        acc += 0.5 * (self.sigma[r] + self.s_sigma[r]) * dw[j * b + p];
-                    }
-                    self.z[idx] = acc;
-                }
+                simd::matvec_row_avg_seeded(
+                    &self.sigma[i * d * b..(i + 1) * d * b],
+                    &self.s_sigma[i * d * b..(i + 1) * d * b],
+                    dw,
+                    &mut self.z[i * b..(i + 1) * b],
+                    d,
+                );
             }
         }
         std::mem::swap(&mut self.zh, &mut self.s_zh);
@@ -550,25 +524,17 @@ impl BatchReversibleHeun {
     pub fn reverse_step<S: BatchSde>(&mut self, sde: &S, t_next: f64, dt: f64, dw: &[f64]) {
         let (e, d, b) = (self.dim, self.noise_dim, self.batch);
         // ẑ_n = 2 z' − ẑ' − μ' Δt − σ' ΔW.
+        simd::leapfrog_sub(&self.z, &self.zh, &self.mu, dt, &mut self.s_zh);
         if self.diag {
-            for i in 0..e {
-                for p in 0..b {
-                    let idx = i * b + p;
-                    let mut acc = 2.0 * self.z[idx] - self.zh[idx] - self.mu[idx] * dt;
-                    acc -= self.sigma[idx] * dw[idx];
-                    self.s_zh[idx] = acc;
-                }
-            }
+            simd::mul_sub(&self.sigma, dw, &mut self.s_zh);
         } else {
             for i in 0..e {
-                for p in 0..b {
-                    let idx = i * b + p;
-                    let mut acc = 2.0 * self.z[idx] - self.zh[idx] - self.mu[idx] * dt;
-                    for j in 0..d {
-                        acc -= self.sigma[(i * d + j) * b + p] * dw[j * b + p];
-                    }
-                    self.s_zh[idx] = acc;
-                }
+                simd::matvec_row_sub_seeded(
+                    &self.sigma[i * d * b..(i + 1) * d * b],
+                    dw,
+                    &mut self.s_zh[i * b..(i + 1) * b],
+                    d,
+                );
             }
         }
         // μ_n, σ_n at t_n = t_next - dt.
@@ -579,26 +545,18 @@ impl BatchReversibleHeun {
             sde.diffusion_batch(t_next - dt, &self.s_zh, &mut self.s_sigma, b);
         }
         // z_n = z' − ½ (μ + μ') Δt − ½ (σ + σ') ΔW.
+        simd::avg_axpy_sub(&self.mu, &self.s_mu, dt, &mut self.z);
         if self.diag {
-            for i in 0..e {
-                for p in 0..b {
-                    let idx = i * b + p;
-                    let mut acc = self.z[idx] - 0.5 * (self.mu[idx] + self.s_mu[idx]) * dt;
-                    acc -= 0.5 * (self.sigma[idx] + self.s_sigma[idx]) * dw[idx];
-                    self.z[idx] = acc;
-                }
-            }
+            simd::avg_mul_sub(&self.sigma, &self.s_sigma, dw, &mut self.z);
         } else {
             for i in 0..e {
-                for p in 0..b {
-                    let idx = i * b + p;
-                    let mut acc = self.z[idx] - 0.5 * (self.mu[idx] + self.s_mu[idx]) * dt;
-                    for j in 0..d {
-                        let r = (i * d + j) * b + p;
-                        acc -= 0.5 * (self.sigma[r] + self.s_sigma[r]) * dw[j * b + p];
-                    }
-                    self.z[idx] = acc;
-                }
+                simd::matvec_row_avg_sub_seeded(
+                    &self.sigma[i * d * b..(i + 1) * d * b],
+                    &self.s_sigma[i * d * b..(i + 1) * d * b],
+                    dw,
+                    &mut self.z[i * b..(i + 1) * b],
+                    d,
+                );
             }
         }
         std::mem::swap(&mut self.zh, &mut self.s_zh);
@@ -660,11 +618,21 @@ impl BatchStepper for BatchReversibleHeun {
 
 /// Work-partitioning knobs for [`integrate_batched`]. Neither affects
 /// results — only wall-clock time.
+///
+/// Scheduling is work-stealing: each worker starts with a contiguous run of
+/// chunks in its own deque, pops from the front, and — when its deque runs
+/// dry — steals from the back of the most-loaded peer. Skewed per-chunk
+/// costs (state-dependent vector fields, uneven tail chunks, a worker
+/// descheduled by the OS) therefore rebalance instead of serialising the
+/// pool, and because every chunk's noise and arithmetic depend only on its
+/// path indices, results are identical for every schedule the stealing
+/// produces.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchOptions {
     /// Worker threads (1 = run on the caller's thread).
     pub threads: usize,
-    /// Paths per chunk; chunks are the unit of work distribution.
+    /// Paths per chunk; chunks are the unit of work distribution (and of
+    /// stealing).
     pub chunk: usize,
 }
 
@@ -682,9 +650,38 @@ impl BatchOptions {
     }
 }
 
+/// Steal one chunk for worker `me`: scan for the peer with the most queued
+/// work and take from the *back* of its deque (the owner pops the front, so
+/// contention only happens on the last item). Returns `None` when every
+/// deque is empty — the termination condition, since chunks are never
+/// re-queued.
+fn steal(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    loop {
+        let mut victim: Option<(usize, usize)> = None;
+        for (v, q) in deques.iter().enumerate() {
+            if v == me {
+                continue;
+            }
+            let len = q.lock().expect("deque poisoned").len();
+            let better = match victim {
+                None => len > 0,
+                Some((_, best)) => len > best,
+            };
+            if better {
+                victim = Some((v, len));
+            }
+        }
+        let (v, _) = victim?;
+        if let Some(c) = deques[v].lock().expect("deque poisoned").pop_back() {
+            return Some(c);
+        }
+        // Raced with the owner draining its deque — rescan.
+    }
+}
+
 /// Integrate `batch` paths of `sde` from the SoA state `y0` over
 /// `[t0, t1]` in `n_steps` fixed steps with stepper `M`, fanning fixed-size
-/// path chunks across `opts.threads` workers.
+/// path chunks across `opts.threads` work-stealing workers.
 ///
 /// Returns the SoA trajectory `[(n_steps + 1) * dim * batch]`: time point
 /// `k`'s state block starts at `k * dim * batch`.
@@ -748,17 +745,38 @@ where
     let chunk_trajs: Vec<Vec<f64>> = if threads <= 1 {
         (0..n_chunks).map(run_chunk).collect()
     } else {
+        // Work-stealing deques: worker `w` owns a contiguous run of chunks
+        // (cache-friendly starts), pops from its own front, and steals from
+        // the back of the most-loaded peer once empty. Chunk results are
+        // keyed by chunk index, so the (nondeterministic) schedule cannot
+        // affect the (deterministic) result.
+        let per = n_chunks / threads;
+        let extra = n_chunks % threads;
+        let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+            .map(|w| {
+                let start = w * per + w.min(extra);
+                let count = per + usize::from(w < extra);
+                Mutex::new((start..start + count).collect())
+            })
+            .collect();
         let mut slots: Vec<Option<Vec<f64>>> = (0..n_chunks).map(|_| None).collect();
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(threads);
             for w in 0..threads {
                 let run_chunk = &run_chunk;
+                let deques = &deques;
                 handles.push(scope.spawn(move || {
                     let mut mine = Vec::new();
-                    let mut c = w;
-                    while c < n_chunks {
+                    loop {
+                        let own = deques[w].lock().expect("deque poisoned").pop_front();
+                        let c = match own {
+                            Some(c) => c,
+                            None => match steal(deques, w) {
+                                Some(c) => c,
+                                None => break,
+                            },
+                        };
                         mine.push((c, run_chunk(c)));
-                        c += threads;
                     }
                     mine
                 }));

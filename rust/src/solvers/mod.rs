@@ -15,14 +15,16 @@
 //!
 //! * [`integrate`] — one path at a time over `Vec<f64>` state;
 //! * [`integrate_batched`] (the batch engine) — a structure-of-arrays
-//!   `[dim × batch]` solve with a diagonal-noise fast path and a chunked
-//!   worker pool, bit-for-bit equal to per-path integration for every
-//!   solver and thread count.
+//!   `[dim × batch]` solve with a diagonal-noise fast path, SIMD inner
+//!   loops ([`simd`]) and a work-stealing chunked worker pool, bit-for-bit
+//!   equal to per-path integration for every solver, thread count and
+//!   steal schedule.
 
 mod batch;
 mod classic;
 mod convergence;
 mod reversible_heun;
+pub mod simd;
 mod stability;
 pub mod systems;
 

@@ -1,6 +1,14 @@
 //! Test SDE systems used across experiments and benchmarks.
+//!
+//! Each benchmark system comes in two forms: the per-path [`Sde`] (which the
+//! batch engine can drive through its blanket gather/scatter adapter) and,
+//! for the batched hot paths, a **native hand-batched** [`BatchSde`]
+//! ([`TanhDiagonalBatch`], [`DenseCoupledBatch`]) whose vector fields are
+//! evaluated directly over the SoA lanes — vectorised across paths on the
+//! [`super::simd`] kernels, with the per-path arithmetic order preserved so
+//! native and adapted solves agree bit-for-bit.
 
-use super::Sde;
+use super::{simd, BatchSde, Sde};
 use crate::brownian::SplitPrng;
 
 /// Scalar linear Stratonovich SDE `dy = a y dt + b y ∘ dW` with the exact
@@ -143,6 +151,156 @@ impl Sde for TanhDiagonal {
         for o in out.iter_mut() {
             *o = o.tanh();
         }
+    }
+}
+
+/// Native hand-batched twin of [`TanhDiagonal`]: a [`BatchSde`] whose
+/// mat-vecs run directly over the SoA lanes ([`simd::broadcast_matvec`] —
+/// the matrix entry is broadcast over four path lanes at a time) instead of
+/// gather → per-path mat-vec → scatter through the blanket adapter.
+///
+/// Same seed ⇒ same matrices ⇒ bit-identical trajectories to driving the
+/// per-path [`TanhDiagonal`] through the adapter (the `j` reduction order of
+/// the per-path `matvec` is preserved lane-wise).
+pub struct TanhDiagonalBatch {
+    inner: TanhDiagonal,
+}
+
+impl TanhDiagonalBatch {
+    /// Random system of dimension `d`; identical to [`TanhDiagonal::new`]
+    /// with the same arguments.
+    pub fn new(d: usize, seed: u64) -> Self {
+        Self { inner: TanhDiagonal::new(d, seed) }
+    }
+
+    /// Wrap an existing per-path system (shares its matrices).
+    pub fn from_system(inner: TanhDiagonal) -> Self {
+        Self { inner }
+    }
+
+    /// The wrapped per-path system.
+    pub fn system(&self) -> &TanhDiagonal {
+        &self.inner
+    }
+}
+
+/// One field row over all path lanes: `row[p] = tanh(Σ_j m_row[j] * y[j*b+p])`
+/// — the lane arithmetic every `TanhDiagonalBatch` field shares, kept in one
+/// place because it is the bit-identity-sensitive part.
+fn tanh_matvec_row(m_row: &[f64], y: &[f64], row: &mut [f64]) {
+    simd::broadcast_matvec(m_row, y, row);
+    for o in row.iter_mut() {
+        *o = o.tanh();
+    }
+}
+
+impl BatchSde for TanhDiagonalBatch {
+    fn state_dim(&self) -> usize {
+        self.inner.d
+    }
+
+    fn brownian_dim(&self) -> usize {
+        self.inner.d
+    }
+
+    fn diagonal_noise(&self) -> bool {
+        true
+    }
+
+    fn drift_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let d = self.inner.d;
+        for i in 0..d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            tanh_matvec_row(&self.inner.a[i * d..(i + 1) * d], y, row);
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        // Dense layout (only taken when a caller bypasses the diagonal fast
+        // path): diagonal entries, zero elsewhere.
+        let d = self.inner.d;
+        out.fill(0.0);
+        for i in 0..d {
+            let row = &mut out[(i * d + i) * batch..(i * d + i + 1) * batch];
+            tanh_matvec_row(&self.inner.b[i * d..(i + 1) * d], y, row);
+        }
+    }
+
+    fn diffusion_diag_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let d = self.inner.d;
+        for i in 0..d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            tanh_matvec_row(&self.inner.b[i * d..(i + 1) * d], y, row);
+        }
+    }
+}
+
+/// Dense-noise benchmark system: `e = 2` states driven by `d = 3` Brownian
+/// channels through a full, state-dependent 2×3 diffusion matrix. Exercises
+/// the dense `e×d` mat-vec path that diagonal systems skip (promoted from
+/// the batch-engine test suite so benches and tests share one definition).
+pub struct DenseCoupled;
+
+impl Sde for DenseCoupled {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn noise_dim(&self) -> usize {
+        3
+    }
+    fn drift(&self, t: f64, y: &[f64], out: &mut [f64]) {
+        out[0] = (0.2 * y[1]).sin() - 0.1 * y[0];
+        out[1] = 0.05 * t + 0.3 * y[0].cos();
+    }
+    fn diffusion(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+        out[0] = 0.1 + 0.05 * y[0];
+        out[1] = 0.2 * y[1];
+        out[2] = -0.1;
+        out[3] = 0.3;
+        out[4] = 0.02 * y[0] * y[1];
+        out[5] = 0.15;
+    }
+}
+
+/// Native hand-batched twin of [`DenseCoupled`]: vector fields written
+/// directly over the SoA lanes (unit-stride sweeps across paths, the same
+/// per-path expressions), bit-identical to the blanket adapter.
+pub struct DenseCoupledBatch;
+
+impl BatchSde for DenseCoupledBatch {
+    fn state_dim(&self) -> usize {
+        2
+    }
+
+    fn brownian_dim(&self) -> usize {
+        3
+    }
+
+    fn drift_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let (y0, y1) = y.split_at(batch);
+        let (o0, o1) = out.split_at_mut(batch);
+        for p in 0..batch {
+            o0[p] = (0.2 * y1[p]).sin() - 0.1 * y0[p];
+        }
+        for p in 0..batch {
+            o1[p] = 0.05 * t + 0.3 * y0[p].cos();
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let (y0, y1) = y.split_at(batch);
+        for p in 0..batch {
+            out[p] = 0.1 + 0.05 * y0[p];
+        }
+        for p in 0..batch {
+            out[batch + p] = 0.2 * y1[p];
+        }
+        out[2 * batch..3 * batch].fill(-0.1);
+        out[3 * batch..4 * batch].fill(0.3);
+        for p in 0..batch {
+            out[4 * batch + p] = 0.02 * y0[p] * y1[p];
+        }
+        out[5 * batch..6 * batch].fill(0.15);
     }
 }
 

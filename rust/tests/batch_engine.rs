@@ -1,44 +1,26 @@
 //! Property tests for the batched structure-of-arrays solve engine:
 //!
 //! * batched `integrate_batched` matches per-path `integrate` **bit-for-bit**
-//!   for every solver, on diagonal and dense-noise systems;
+//!   for every solver, on diagonal and dense-noise systems — including batch
+//!   sizes that exercise the SIMD kernels' remainder lanes (1, 3, 4, 7, 8,
+//!   33 around the 4-wide unroll);
+//! * the native hand-batched systems (`TanhDiagonalBatch`,
+//!   `DenseCoupledBatch`) agree with the blanket gather/scatter adapter
+//!   bit-for-bit;
 //! * the batched reversible Heun round-trips forward/reverse to <1e-10 per
 //!   path (algebraic reversibility survives batching);
 //! * results are identical across 1/2/4 worker threads and across chunk
-//!   sizes (the fan-out is a pure work partition);
+//!   sizes (the work-stealing fan-out is a pure work partition);
 //! * the diagonal-noise fast path agrees with the dense path.
 
+use neuralsde::solvers::systems::{
+    DenseCoupled, DenseCoupledBatch, TanhDiagonal, TanhDiagonalBatch,
+};
 use neuralsde::solvers::{
     aos_to_soa, integrate, integrate_batched, BatchEulerMaruyama, BatchHeun, BatchMidpoint,
     BatchNoise, BatchOptions, BatchReversibleHeun, CounterGridNoise, EulerMaruyama, Heun,
     Midpoint, ReversibleHeun, Sde,
 };
-use neuralsde::solvers::systems::TanhDiagonal;
-
-/// A small dense-noise (non-diagonal) test system: e = 2 states driven by
-/// d = 3 Brownian channels through a full, state-dependent 2×3 matrix.
-struct DenseToy;
-
-impl Sde for DenseToy {
-    fn dim(&self) -> usize {
-        2
-    }
-    fn noise_dim(&self) -> usize {
-        3
-    }
-    fn drift(&self, t: f64, y: &[f64], out: &mut [f64]) {
-        out[0] = (0.2 * y[1]).sin() - 0.1 * y[0];
-        out[1] = 0.05 * t + 0.3 * y[0].cos();
-    }
-    fn diffusion(&self, _t: f64, y: &[f64], out: &mut [f64]) {
-        out[0] = 0.1 + 0.05 * y[0];
-        out[1] = 0.2 * y[1];
-        out[2] = -0.1;
-        out[3] = 0.3;
-        out[4] = 0.02 * y[0] * y[1];
-        out[5] = 0.15;
-    }
-}
 
 /// Forwards a diagonal system through the dense code path (suppresses the
 /// `diffusion_is_diagonal` advertisement).
@@ -136,7 +118,7 @@ fn batched_matches_per_path_bitwise_diagonal_system() {
 
 #[test]
 fn batched_matches_per_path_bitwise_dense_system() {
-    let sde = DenseToy;
+    let sde = DenseCoupled;
     let (dim, batch, n) = (2usize, 9usize, 30usize);
     let aos = aos_start(dim, batch);
     let y0 = aos_to_soa(&aos, dim, batch);
@@ -262,6 +244,170 @@ fn batched_revheun_roundtrips_below_1e10() {
         .max(max_diff(stepper.mu(), &mu0))
         .max(max_diff(stepper.sigma(), &sigma0));
     assert!(err < 1e-10, "batched forward∘reverse round-trip error {err}");
+}
+
+/// Batch sizes around the 4-wide SIMD unroll: below it, exactly one block,
+/// one block + remainder, two blocks, and a large odd size.
+const REMAINDER_BATCHES: [usize; 6] = [1, 3, 4, 7, 8, 33];
+
+/// Run one batched solve of `sde` with stepper `which` and assert each
+/// path's trajectory equals the scalar per-path solve bit-for-bit.
+fn assert_batched_bitwise<S: Sde + Sync>(sde: &S, which: &str, batch: usize, n: usize) {
+    let dim = Sde::dim(sde);
+    let nd = Sde::noise_dim(sde);
+    let aos = aos_start(dim, batch);
+    let y0 = aos_to_soa(&aos, dim, batch);
+    let noise = CounterGridNoise::new(77, nd, 0.0, 1.0, n);
+    let opts = BatchOptions { threads: 1, chunk: batch };
+    let traj = match which {
+        "euler" => integrate_batched::<BatchEulerMaruyama, _, _>(
+            sde, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+        ),
+        "midpoint" => integrate_batched::<BatchMidpoint, _, _>(
+            sde, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+        ),
+        "heun" => integrate_batched::<BatchHeun, _, _>(sde, &noise, &y0, batch, 0.0, 1.0, n, &opts),
+        _ => integrate_batched::<BatchReversibleHeun, _, _>(
+            sde, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+        ),
+    };
+    for p in 0..batch {
+        let y0p = &aos[p * dim..(p + 1) * dim];
+        let mut pn = noise.path(p);
+        let per_path = match which {
+            "euler" => {
+                let mut s = EulerMaruyama::new(dim, nd);
+                integrate(sde, &mut s, &mut pn, y0p, 0.0, 1.0, n)
+            }
+            "midpoint" => {
+                let mut s = Midpoint::new(dim, nd);
+                integrate(sde, &mut s, &mut pn, y0p, 0.0, 1.0, n)
+            }
+            "heun" => {
+                let mut s = Heun::new(dim, nd);
+                integrate(sde, &mut s, &mut pn, y0p, 0.0, 1.0, n)
+            }
+            _ => {
+                let mut s = ReversibleHeun::new(sde, 0.0, y0p);
+                integrate(sde, &mut s, &mut pn, y0p, 0.0, 1.0, n)
+            }
+        };
+        assert_path_matches(&traj, &per_path, dim, batch, p);
+    }
+}
+
+#[test]
+fn simd_remainder_lanes_bitwise_diagonal_all_steppers() {
+    // dim 5 keeps the per-component lanes misaligned from the batch sizes;
+    // every stepper must stay bit-identical to per-path integration across
+    // full blocks, remainders and the scalar-only case.
+    let sde = TanhDiagonal::new(5, 17);
+    for &batch in &REMAINDER_BATCHES {
+        for which in ["euler", "midpoint", "heun", "revheun"] {
+            assert_batched_bitwise(&sde, which, batch, 12);
+        }
+    }
+}
+
+#[test]
+fn simd_remainder_lanes_bitwise_dense_all_steppers() {
+    let sde = DenseCoupled;
+    for &batch in &REMAINDER_BATCHES {
+        for which in ["euler", "midpoint", "heun", "revheun"] {
+            assert_batched_bitwise(&sde, which, batch, 10);
+        }
+    }
+}
+
+#[test]
+fn native_tanh_diagonal_matches_blanket_adapter() {
+    // Same seed => same matrices; the hand-batched SoA mat-vec must produce
+    // the exact bits the gather/scatter adapter does, for every stepper and
+    // for batch sizes exercising the remainder lanes.
+    let adapter = TanhDiagonal::new(6, 21);
+    let native = TanhDiagonalBatch::new(6, 21);
+    let (dim, n) = (6usize, 15usize);
+    for &batch in &[1usize, 5, 33, 64] {
+        let aos = aos_start(dim, batch);
+        let y0 = aos_to_soa(&aos, dim, batch);
+        let noise = CounterGridNoise::new(3, dim, 0.0, 1.0, n);
+        let opts = BatchOptions { threads: 1, chunk: 16 };
+        macro_rules! check {
+            ($stepper:ty, $label:expr) => {
+                let a = integrate_batched::<$stepper, _, _>(
+                    &adapter, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+                );
+                let b = integrate_batched::<$stepper, _, _>(
+                    &native, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+                );
+                assert_eq!(a, b, "{} diverged at batch {batch}", $label);
+            };
+        }
+        check!(BatchEulerMaruyama, "euler");
+        check!(BatchMidpoint, "midpoint");
+        check!(BatchHeun, "heun");
+        check!(BatchReversibleHeun, "revheun");
+    }
+}
+
+#[test]
+fn native_dense_coupled_matches_blanket_adapter() {
+    let (dim, n) = (2usize, 18usize);
+    for &batch in &[1usize, 7, 33] {
+        let aos = aos_start(dim, batch);
+        let y0 = aos_to_soa(&aos, dim, batch);
+        let noise = CounterGridNoise::new(11, 3, 0.0, 1.0, n);
+        let opts = BatchOptions { threads: 1, chunk: 8 };
+        macro_rules! check {
+            ($stepper:ty, $label:expr) => {
+                let a = integrate_batched::<$stepper, _, _>(
+                    &DenseCoupled, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+                );
+                let b = integrate_batched::<$stepper, _, _>(
+                    &DenseCoupledBatch, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+                );
+                assert_eq!(a, b, "{} diverged at batch {batch}", $label);
+            };
+        }
+        check!(BatchEulerMaruyama, "euler");
+        check!(BatchMidpoint, "midpoint");
+        check!(BatchHeun, "heun");
+        check!(BatchReversibleHeun, "revheun");
+    }
+}
+
+#[test]
+fn work_stealing_results_invariant_under_skewed_chunks() {
+    // Many more chunks than threads with an uneven tail: whatever schedule
+    // the stealing produces, the result must equal the single-thread solve.
+    let sde = TanhDiagonal::new(3, 8);
+    let (dim, batch, n) = (3usize, 131usize, 12usize);
+    let aos = aos_start(dim, batch);
+    let y0 = aos_to_soa(&aos, dim, batch);
+    let noise = CounterGridNoise::new(29, dim, 0.0, 1.0, n);
+    let reference = integrate_batched::<BatchEulerMaruyama, _, _>(
+        &sde,
+        &noise,
+        &y0,
+        batch,
+        0.0,
+        1.0,
+        n,
+        &BatchOptions { threads: 1, chunk: 4 },
+    );
+    for threads in [2usize, 3, 5, 8] {
+        let traj = integrate_batched::<BatchEulerMaruyama, _, _>(
+            &sde,
+            &noise,
+            &y0,
+            batch,
+            0.0,
+            1.0,
+            n,
+            &BatchOptions { threads, chunk: 4 },
+        );
+        assert_eq!(reference, traj, "threads={threads} changed the result");
+    }
 }
 
 #[test]

@@ -1,0 +1,161 @@
+//! Distributional tests over the Brownian sources (paper Section 4):
+//! increment mean/variance via chi-squared bounds, cross-interval
+//! independence, and `fill_grid`/per-step agreement through `reseed()`.
+//!
+//! Each source simulates `size` independent scalar Brownian motions, so one
+//! wide instance gives thousands of iid samples of any increment. With the
+//! seeds fixed the statistics are deterministic; the bounds are set at six
+//! standard deviations of the relevant sampling distribution — loose enough
+//! never to flake on a correct generator, tight enough to catch a wrong
+//! variance scale, a mean offset, or correlated bridge noise.
+
+use neuralsde::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
+
+const N: usize = 16_384;
+
+/// Mean of the samples.
+fn mean(w: &[f32]) -> f64 {
+    w.iter().map(|&x| x as f64).sum::<f64>() / w.len() as f64
+}
+
+/// `Σ w_i² / var` — chi-squared distributed with `w.len()` degrees of
+/// freedom when `w_i ~ N(0, var)` iid.
+fn chi_sq(w: &[f32], var: f64) -> f64 {
+    w.iter().map(|&x| (x as f64) * (x as f64) / var).sum::<f64>()
+}
+
+/// Pearson correlation across channels.
+fn corr(a: &[f32], b: &[f32]) -> f64 {
+    let (ma, mb) = (mean(a), mean(b));
+    let mut num = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..a.len() {
+        let (x, y) = (a[i] as f64 - ma, b[i] as f64 - mb);
+        num += x * y;
+        va += x * x;
+        vb += y * y;
+    }
+    num / (va.sqrt() * vb.sqrt())
+}
+
+/// |X̄| ≤ 6 sd/√n and |χ²/n − 1| ≤ 6 √(2/n), the 6σ bounds used throughout.
+fn assert_moments(w: &[f32], var: f64, label: &str) {
+    let n = w.len() as f64;
+    let m = mean(w);
+    let mean_bound = 6.0 * (var / n).sqrt();
+    assert!(m.abs() < mean_bound, "{label}: mean {m} exceeds {mean_bound}");
+    let s = chi_sq(w, var) / n;
+    let chi_bound = 6.0 * (2.0 / n).sqrt();
+    assert!(
+        (s - 1.0).abs() < chi_bound,
+        "{label}: chi-squared/n = {s}, expected within {chi_bound} of 1"
+    );
+}
+
+#[test]
+fn brownian_interval_increment_moments_chi_squared() {
+    let mut bi = BrownianInterval::new(0.0, 1.0, N, 424_242);
+    // Whole-span increment, then conditioned sub-increments: all must carry
+    // N(0, t - s) marginals.
+    for (s, t) in [(0.0, 1.0), (0.2, 0.7), (0.7, 0.95), (0.0, 0.2)] {
+        let w = bi.increment_vec(s, t);
+        assert_moments(&w, t - s, &format!("BI [{s},{t}]"));
+    }
+}
+
+#[test]
+fn virtual_tree_increment_moments_chi_squared() {
+    let mut vbt = VirtualBrownianTree::new(0.0, 1.0, N, 3_131, 1e-5);
+    for (s, t) in [(0.0, 1.0), (0.25, 0.5), (0.5, 0.9)] {
+        let w = vbt.increment_vec(s, t);
+        assert_moments(&w, t - s, &format!("VBT [{s},{t}]"));
+    }
+}
+
+#[test]
+fn brownian_interval_disjoint_increments_independent() {
+    let mut bi = BrownianInterval::new(0.0, 1.0, N, 99);
+    let w1 = bi.increment_vec(0.1, 0.4);
+    let w2 = bi.increment_vec(0.4, 0.9); // adjacent
+    let w3 = bi.increment_vec(0.93, 0.99); // separated
+    let bound = 6.0 / (N as f64).sqrt();
+    for (a, b, label) in
+        [(&w1, &w2, "adjacent"), (&w1, &w3, "separated"), (&w2, &w3, "disjoint")]
+    {
+        let r = corr(a, b);
+        assert!(r.abs() < bound, "{label}: correlation {r} exceeds {bound}");
+    }
+}
+
+#[test]
+fn virtual_tree_disjoint_increments_independent() {
+    let mut vbt = VirtualBrownianTree::new(0.0, 1.0, N, 17, 1e-5);
+    let w1 = vbt.increment_vec(0.05, 0.35);
+    let w2 = vbt.increment_vec(0.35, 0.8);
+    let bound = 6.0 / (N as f64).sqrt();
+    let r = corr(&w1, &w2);
+    assert!(r.abs() < bound, "correlation {r} exceeds {bound}");
+}
+
+#[test]
+fn brownian_interval_grid_steps_pooled_chi_squared() {
+    // Every step of a training grid at once: 32 steps × N channels pooled
+    // into one chi-squared statistic (each step has variance h).
+    let steps = 32usize;
+    let size = 2_048usize;
+    let h = 1.0 / steps as f64;
+    let ts: Vec<f64> = (0..=steps).map(|k| k as f64 * h).collect();
+    let mut bi = BrownianInterval::new(0.0, 1.0, size, 7_777);
+    let mut out = vec![0.0f32; steps * size];
+    bi.fill_grid(&ts, &mut out);
+    assert_moments(&out, h, "BI pooled grid steps");
+}
+
+#[test]
+fn brownian_interval_fill_grid_matches_steps_after_reseed() {
+    let steps = 24usize;
+    let size = 16usize;
+    let ts: Vec<f64> = (0..=steps).map(|k| k as f64 / steps as f64).collect();
+    let mut bulk = BrownianInterval::new(0.0, 1.0, size, 1);
+    let mut steppy = BrownianInterval::new(0.0, 1.0, size, 1);
+    let mut out = vec![0.0f32; steps * size];
+    bulk.fill_grid(&ts, &mut out); // build both tree shapes
+    for k in 0..steps {
+        let _ = steppy.increment_vec(ts[k], ts[k + 1]);
+    }
+    for seed in [2u64, 3, 4] {
+        bulk.reseed(seed);
+        steppy.reseed(seed);
+        bulk.fill_grid(&ts, &mut out);
+        for k in 0..steps {
+            assert_eq!(
+                &out[k * size..(k + 1) * size],
+                steppy.increment_vec(ts[k], ts[k + 1]).as_slice(),
+                "seed {seed} step {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn virtual_tree_fill_grid_matches_steps_after_reseed() {
+    let steps = 12usize;
+    let size = 8usize;
+    let ts: Vec<f64> = (0..=steps).map(|k| k as f64 / steps as f64).collect();
+    let mut bulk = VirtualBrownianTree::new(0.0, 1.0, size, 5, 1e-5);
+    let mut steppy = VirtualBrownianTree::new(0.0, 1.0, size, 5, 1e-5);
+    let mut out = vec![0.0f32; steps * size];
+    for seed in [6u64, 7] {
+        bulk.reseed(seed);
+        steppy.reseed(seed);
+        bulk.fill_grid(&ts, &mut out);
+        for k in 0..steps {
+            assert_eq!(
+                &out[k * size..(k + 1) * size],
+                steppy.increment_vec(ts[k], ts[k + 1]).as_slice(),
+                "seed {seed} step {k}"
+            );
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Measured solver-correctness properties, locked in as tests:
+//!
+//! * **strong convergence orders against analytic solutions** — Euler–
+//!   Maruyama converges at order 0.5 on multiplicative noise, midpoint and
+//!   Heun at order 1.0 on diagonal (here scalar, hence commutative) noise,
+//!   both measured against the closed-form solution of the linear SDE
+//!   `dy = a y dt + b y dW`; the reversible Heun method is measured on the
+//!   analytic time-dependent Ornstein–Uhlenbeck system of Appendix F.7,
+//!   whose solution is known in closed form given the Brownian path;
+//! * **algebraic reversibility** — the batched reversible Heun round-trips
+//!   forward∘reverse to `< 1e-10` across state dimensions, batch sizes and
+//!   step counts (the property the paper's exact-gradient claim rests on).
+//!
+//! Orders are measured: solve many paths at several step sizes on a shared
+//! fine Brownian grid, fit `log2(error)` against `log2(h)`, and pin the
+//! fitted slope to a window around the theoretical order.
+
+use neuralsde::brownian::SplitPrng;
+use neuralsde::solvers::systems::{ScalarLinear, TanhDiagonal, TimeDependentOu};
+use neuralsde::solvers::{
+    aos_to_soa, BatchNoise, BatchReversibleHeun, BatchStepper, CounterGridNoise,
+    EulerMaruyama, FixedStepSolver, Heun, Midpoint, ReversibleHeun, Sde,
+};
+use neuralsde::util::stats::linear_fit;
+
+/// Fine Brownian increments for one path: `n_fine` iid `N(0, T/n_fine)`.
+fn fine_increments(n_fine: usize, t1: f64, seed: u64) -> Vec<f64> {
+    let sd = (t1 / n_fine as f64).sqrt();
+    let mut rng = SplitPrng::new(seed);
+    (0..n_fine).map(|_| rng.next_normal_pair().0 * sd).collect()
+}
+
+/// Sum consecutive blocks of the fine increments down to `n` coarse steps.
+fn coarsen(fine: &[f64], n: usize) -> Vec<f64> {
+    let block = fine.len() / n;
+    assert_eq!(block * n, fine.len(), "coarse steps must divide the fine grid");
+    (0..n).map(|k| fine[k * block..(k + 1) * block].iter().sum()).collect()
+}
+
+/// Integrate a 1-dim SDE over `[0, 1]` with the given per-step increments,
+/// returning the terminal value.
+fn terminal_1d<S: Sde, M: FixedStepSolver>(sde: &S, solver: &mut M, dws: &[f64], y0: f64) -> f64 {
+    let n = dws.len();
+    let dt = 1.0 / n as f64;
+    let mut y = [y0];
+    for (k, &dw) in dws.iter().enumerate() {
+        solver.step(sde, k as f64 * dt, dt, &[dw], &mut y);
+    }
+    y[0]
+}
+
+/// Fit the strong-order slope from `(h, mean abs error)` pairs.
+fn fitted_order(points: &[(f64, f64)]) -> f64 {
+    let xs: Vec<f64> = points.iter().map(|p| p.0.log2()).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.1.log2()).collect();
+    let (_, slope) = linear_fit(&xs, &ys);
+    slope
+}
+
+const STEP_COUNTS: [usize; 5] = [16, 32, 64, 128, 256];
+const N_FINE: usize = 256;
+const N_PATHS: usize = 400;
+
+/// Mean terminal error per step count for a solver on [`ScalarLinear`],
+/// against `exact(W_T)` — the caller picks the Itô or Stratonovich form.
+fn scalar_linear_errors<M, MkM, Ex>(sde: &ScalarLinear, mk: MkM, exact: Ex) -> Vec<(f64, f64)>
+where
+    M: FixedStepSolver,
+    MkM: Fn(&ScalarLinear) -> M,
+    Ex: Fn(f64) -> f64,
+{
+    let mut errs = vec![0.0f64; STEP_COUNTS.len()];
+    for p in 0..N_PATHS {
+        let fine = fine_increments(N_FINE, 1.0, 1000 + p as u64);
+        let w_total: f64 = fine.iter().sum();
+        let truth = exact(w_total);
+        for (i, &n) in STEP_COUNTS.iter().enumerate() {
+            let dws = coarsen(&fine, n);
+            let mut solver = mk(sde);
+            let y = terminal_1d(sde, &mut solver, &dws, 1.0);
+            errs[i] += (y - truth).abs();
+        }
+    }
+    STEP_COUNTS
+        .iter()
+        .zip(errs)
+        .map(|(&n, e)| (1.0 / n as f64, e / N_PATHS as f64))
+        .collect()
+}
+
+#[test]
+fn euler_maruyama_strong_order_half_multiplicative_noise() {
+    // Itô linear SDE: exact solution y0 exp((a - b²/2) T + b W_T).
+    let sde = ScalarLinear { a: 0.3, b: 0.5 };
+    let pts = scalar_linear_errors(
+        &sde,
+        |_| EulerMaruyama::new(1, 1),
+        |w| ((0.3 - 0.5 * 0.5 * 0.5) + 0.5 * w).exp(),
+    );
+    let order = fitted_order(&pts);
+    assert!(
+        order > 0.3 && order < 0.72,
+        "Euler–Maruyama strong order {order}, errors {pts:?}"
+    );
+}
+
+#[test]
+fn midpoint_strong_order_one_diagonal_noise() {
+    // Stratonovich linear SDE: exact solution y0 exp(a T + b W_T).
+    let sde = ScalarLinear { a: 0.3, b: 0.5 };
+    let pts = scalar_linear_errors(&sde, |_| Midpoint::new(1, 1), |w| (0.3 + 0.5 * w).exp());
+    let order = fitted_order(&pts);
+    assert!(
+        order > 0.72 && order < 1.35,
+        "midpoint strong order {order}, errors {pts:?}"
+    );
+}
+
+#[test]
+fn heun_strong_order_one_diagonal_noise() {
+    let sde = ScalarLinear { a: 0.3, b: 0.5 };
+    let pts = scalar_linear_errors(&sde, |_| Heun::new(1, 1), |w| (0.3 + 0.5 * w).exp());
+    let order = fitted_order(&pts);
+    assert!(
+        order > 0.72 && order < 1.35,
+        "Heun strong order {order}, errors {pts:?}"
+    );
+}
+
+#[test]
+fn reversible_heun_converges_on_analytic_ou() {
+    // Time-dependent OU (Appendix F.7): dY = (ρt − κY) dt + χ dW, additive
+    // noise. Conditioned on the Brownian path, the solution is exact per
+    // step: Y_{t+h} = e^{-κh} Y_t + ρ ∫ s e^{-κ(t+h-s)} ds
+    //                + χ ∫ e^{-κ(t+h-s)} dW_s,
+    // with the deterministic integral in closed form and the stochastic
+    // integral evaluated on a fine grid (conditional mean given each fine
+    // increment), so the reference error is O(h_fine) with a tiny constant.
+    let sde = TimeDependentOu::default();
+    let (rho, kappa, chi) = (sde.rho, sde.kappa, sde.chi);
+    let steps = [8usize, 16, 32, 64];
+    let n_fine = 4096usize;
+    let n_paths = 300usize;
+    let hf = 1.0 / n_fine as f64;
+    let ekh = (-kappa * hf).exp();
+    let lam = (1.0 - ekh) / (kappa * hf); // E[∫ e^{-κ(t+h-s)} dW | ΔW] / ΔW
+    let mut errs = vec![0.0f64; steps.len()];
+    for p in 0..n_paths {
+        let fine = fine_increments(n_fine, 1.0, 5000 + p as u64);
+        // Exact solution on the fine grid.
+        let mut y_ref = 1.0f64;
+        for (j, &dw) in fine.iter().enumerate() {
+            let t = j as f64 * hf;
+            let det = rho
+                * (t * (1.0 - ekh) / kappa + hf / kappa - (1.0 - ekh) / (kappa * kappa));
+            y_ref = ekh * y_ref + det + chi * lam * dw;
+        }
+        for (i, &n) in steps.iter().enumerate() {
+            let dws = coarsen(&fine, n);
+            let mut solver = ReversibleHeun::new(&sde, 0.0, &[1.0]);
+            let y = terminal_1d(&sde, &mut solver, &dws, 1.0);
+            errs[i] += (y - y_ref).abs();
+        }
+    }
+    let pts: Vec<(f64, f64)> = steps
+        .iter()
+        .zip(&errs)
+        .map(|(&n, &e)| (1.0 / n as f64, e / n_paths as f64))
+        .collect();
+    for w in pts.windows(2) {
+        assert!(
+            w[1].1 < w[0].1,
+            "error did not decrease with h: {pts:?}"
+        );
+    }
+    let order = fitted_order(&pts);
+    assert!(
+        order > 0.7 && order < 2.5,
+        "reversible Heun measured order {order} on the OU system, errors {pts:?}"
+    );
+}
+
+#[test]
+fn batched_revheun_roundtrip_across_dims_batches_steps() {
+    for &dim in &[1usize, 4, 10] {
+        for &batch in &[1usize, 7, 32] {
+            for &n in &[16usize, 100] {
+                let sde = TanhDiagonal::new(dim, 3 * dim as u64 + batch as u64);
+                let aos: Vec<f64> =
+                    (0..batch * dim).map(|x| 0.03 * (x % 11) as f64 - 0.15).collect();
+                let y0 = aos_to_soa(&aos, dim, batch);
+                let noise = CounterGridNoise::new(7, dim, 0.0, 1.0, n);
+                let dt = 1.0 / n as f64;
+                let mut stepper = BatchReversibleHeun::for_chunk(&sde, 0.0, &y0, batch);
+                let (z0, zh0, mu0, sigma0) = (
+                    stepper.z().to_vec(),
+                    stepper.zh().to_vec(),
+                    stepper.mu().to_vec(),
+                    stepper.sigma().to_vec(),
+                );
+                let mut dws: Vec<Vec<f64>> = Vec::with_capacity(n);
+                for k in 0..n {
+                    let (s, t) = (k as f64 * dt, (k + 1) as f64 * dt);
+                    let mut dw = vec![0.0; dim * batch];
+                    noise.fill_step(k, s, t, 0, batch, &mut dw);
+                    stepper.forward_step(&sde, s, dt, &dw);
+                    dws.push(dw);
+                }
+                for k in (0..n).rev() {
+                    stepper.reverse_step(&sde, (k + 1) as f64 * dt, dt, &dws[k]);
+                }
+                let max_diff = |a: &[f64], b: &[f64]| {
+                    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
+                };
+                let err = max_diff(stepper.z(), &z0)
+                    .max(max_diff(stepper.zh(), &zh0))
+                    .max(max_diff(stepper.mu(), &mu0))
+                    .max(max_diff(stepper.sigma(), &sigma0));
+                assert!(
+                    err < 1e-10,
+                    "round-trip error {err} at dim={dim} batch={batch} n={n}"
+                );
+            }
+        }
+    }
+}
