@@ -1,12 +1,37 @@
 //! Figure 2 / Table 6 as a bench target: regenerates the gradient-error
-//! table (the numbers, not just timings). Requires `make artifacts`.
+//! table (the numbers, not just timings). The native reversible-Heun
+//! adjoint rows run unconditionally; the PJRT solver comparison additionally
+//! requires `make artifacts`.
 
 use neuralsde::coordinator::gradient_error;
 use neuralsde::runtime::{load_runtime, Runtime};
 
 fn main() {
+    // Native rows: pure-Rust adjoint engine, no artifacts needed. Hard
+    // assertions of the paper's machine-precision claim for the
+    // reconstruction-based gradient.
+    let native = gradient_error::run_native(2021);
+    println!("{}", gradient_error::render(&native));
+    for p in &native {
+        match p.solver.as_str() {
+            "native_revheun_rec_vs_tape" => assert!(
+                p.rel_err < 1e-9,
+                "reconstruction gradient should be roundoff-exact, got {} at n={}",
+                p.rel_err,
+                p.n_steps
+            ),
+            _ => assert!(
+                p.rel_err < 1e-5,
+                "adjoint should sit at the FD floor, got {} at n={}",
+                p.rel_err,
+                p.n_steps
+            ),
+        }
+    }
+    println!("native adjoint assertions OK (reconstruction roundoff-exact)");
+
     if !Runtime::artifacts_present("artifacts") {
-        eprintln!("skipping fig2_gradient_error: run `make artifacts` first");
+        eprintln!("skipping PJRT fig2 rows: run `make artifacts` first");
         return;
     }
     let mut rt = load_runtime("artifacts").expect("runtime");

@@ -9,7 +9,8 @@ use neuralsde::metrics::{series_features, signature};
 use neuralsde::nn::{Adadelta, Optimizer};
 use neuralsde::solvers::systems::{TanhDiagonal, TanhDiagonalBatch};
 use neuralsde::solvers::{
-    integrate_batched, simd, BatchOptions, BatchReversibleHeun, CounterGridNoise,
+    adjoint_solve, adjoint_solve_batched, integrate_batched, simd, BackwardMode, BatchOptions,
+    BatchReversibleHeun, CounterGridNoise,
 };
 use neuralsde::util::bench::{black_box, BenchTable};
 
@@ -83,6 +84,61 @@ fn main() {
                 1.0,
                 32,
                 &BatchOptions { threads: 1, chunk: 64 },
+            ));
+        });
+    }
+
+    // Adjoint engine: forward + backward (O(1)-memory reconstruction and
+    // stored-tape) vs the forward-only solves above — the gradient
+    // overhead per training step.
+    {
+        let sde = TanhDiagonal::new(16, 3);
+        let nsde = TanhDiagonalBatch::new(16, 3);
+        let y0p = vec![0.1f64; 16];
+        let y0 = vec![0.1f64; 16 * 256];
+        let ones = |_p0: usize, _cl: usize, _z: &[f64], g: &mut [f64]| g.fill(1.0);
+        table.bench("adjoint/revheun_per_path/d=16/n=32", |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
+            let mut pn = noise.path(0);
+            black_box(adjoint_solve(
+                &sde,
+                &y0p,
+                0.0,
+                1.0,
+                32,
+                &mut pn,
+                BackwardMode::Reconstruct,
+                |_z, g| g.fill(1.0),
+            ));
+        });
+        table.bench("adjoint/revheun_native/d=16/batch=256/n=32", |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
+            black_box(adjoint_solve_batched(
+                &nsde,
+                &noise,
+                &y0,
+                256,
+                0.0,
+                1.0,
+                32,
+                BackwardMode::Reconstruct,
+                &BatchOptions { threads: 1, chunk: 64 },
+                &ones,
+            ));
+        });
+        table.bench("adjoint/revheun_native_tape/d=16/batch=256/n=32", |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
+            black_box(adjoint_solve_batched(
+                &nsde,
+                &noise,
+                &y0,
+                256,
+                0.0,
+                1.0,
+                32,
+                BackwardMode::Tape,
+                &BatchOptions { threads: 1, chunk: 64 },
+                &ones,
             ));
         });
     }

@@ -12,17 +12,21 @@
 //! multi-core host (diagonal fast path + work-stealing thread fan-out),
 //! and the `batched_native/` rows (SIMD kernels + hand-batched SoA
 //! vector fields, no gather/scatter) beating the `batched/` adapter rows.
+//! The `adjoint/*` rows time the full forward+backward reversible-Heun
+//! gradient (O(1)-memory reconstruction) against the forward-only
+//! `batched_native/revheun` rows — the cost of exact gradients.
 //!
 //! Results are written to `results/bench_tab10_sde_solve.json` and, for the
-//! perf trajectory, `BENCH_pr2.json` (override the directory with
+//! perf trajectory, `BENCH_pr3.json` (override the directory with
 //! `BENCH_DIR`). Pass `--smoke` (or set `QUICK=1`) for the trimmed CI
 //! perf-smoke workload.
 
 use neuralsde::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
 use neuralsde::solvers::systems::{TanhDiagonal, TanhDiagonalBatch};
 use neuralsde::solvers::{
-    integrate, integrate_batched, BatchEulerMaruyama, BatchOptions, BatchReversibleHeun,
-    CounterGridNoise, EulerMaruyama, NoiseF64, NoiseFromSource, ReversibleHeun,
+    adjoint_solve_batched, integrate, integrate_batched, BackwardMode, BatchEulerMaruyama,
+    BatchOptions, BatchReversibleHeun, CounterGridNoise, EulerMaruyama, NoiseF64,
+    NoiseFromSource, ReversibleHeun,
 };
 use neuralsde::util::bench::{black_box, write_bench_json, BenchTable};
 use neuralsde::util::json::Json;
@@ -171,6 +175,56 @@ fn main() {
         );
     }
 
+    // ---- Adjoint engine (this PR's headline): forward + backward through
+    // the same native batched reversible-Heun solve, O(1)-memory backward
+    // reconstruction vs the stored-tape baseline. Compare against the
+    // forward-only `batched_native/revheun` rows for the gradient overhead.
+    let mut atable = BenchTable::new(
+        "Reversible-Heun adjoint: forward+backward (TanhDiagonal d=16, n=100)",
+        reps,
+        1,
+    );
+    let ones = |_p0: usize, _cl: usize, _z: &[f64], g: &mut [f64]| g.fill(1.0);
+    for &threads in &thread_counts {
+        atable.bench_n(
+            &format!("adjoint/revheun/threads={threads}/batch={batch}"),
+            reps,
+            |i| {
+                let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+                let opts = BatchOptions { threads, chunk: 64 };
+                black_box(adjoint_solve_batched(
+                    &nsde,
+                    &noise,
+                    &y0b,
+                    batch,
+                    0.0,
+                    1.0,
+                    n,
+                    BackwardMode::Reconstruct,
+                    &opts,
+                    &ones,
+                ));
+            },
+        );
+    }
+    atable.bench_n(&format!("adjoint/revheun_tape/threads=1/batch={batch}"), reps, |i| {
+        let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+        let opts = BatchOptions { threads: 1, chunk: 64 };
+        black_box(adjoint_solve_batched(
+            &nsde,
+            &noise,
+            &y0b,
+            batch,
+            0.0,
+            1.0,
+            n,
+            BackwardMode::Tape,
+            &opts,
+            &ones,
+        ));
+    });
+    println!("{}", atable.render());
+
     println!("{}", btable.render());
     let mut headline: Vec<(&str, Json)> = vec![
         ("batch", Json::Num(batch as f64)),
@@ -196,6 +250,16 @@ fn main() {
             speedups.push((format!("native_vs_adapter/{solver}/threads={threads}"), rel));
         }
     }
+    // Gradient overhead: adjoint (forward+backward) over forward-only, per
+    // thread count — the number that tells training users what exact
+    // gradients cost on top of sampling.
+    for &threads in &thread_counts {
+        let fwd = btable.min_of(&format!("batched_native/revheun/threads={threads}/batch={batch}"));
+        let adj = atable.min_of(&format!("adjoint/revheun/threads={threads}/batch={batch}"));
+        let ratio = adj / fwd;
+        println!("  adjoint   threads={threads:<3} fwd+bwd/fwd {ratio:.2}x");
+        speedups.push((format!("adjoint_overhead/revheun/threads={threads}"), ratio));
+    }
     let speedup_json: Vec<(String, f64)> = speedups;
     let extras: Vec<Json> = speedup_json
         .iter()
@@ -212,12 +276,12 @@ fn main() {
     table.write_json("results/bench_tab10_sde_solve.json").ok();
     if quick {
         // Trimmed workloads are not comparable to the tracked trajectory —
-        // never let a smoke run overwrite BENCH_pr2.json.
-        println!("smoke/QUICK run: skipping BENCH_pr2.json (full run required)");
+        // never let a smoke run overwrite BENCH_pr3.json.
+        println!("smoke/QUICK run: skipping BENCH_pr3.json (full run required)");
         return;
     }
     let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
-    match write_bench_json(&bench_dir, "pr2", &[&table, &btable], headline) {
+    match write_bench_json(&bench_dir, "pr3", &[&table, &btable, &atable], headline) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write BENCH json: {e}"),
     }

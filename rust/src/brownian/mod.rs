@@ -18,7 +18,11 @@
 //! solvers in [`crate::solvers`] and the training coordinator consume. Every
 //! source is deterministic given its seed: re-running the same query sequence
 //! reproduces bit-identical noise, which is what makes the backward
-//! (adjoint) pass see *exactly* the forward pass's Brownian sample.
+//! (adjoint) pass see *exactly* the forward pass's Brownian sample. The
+//! native adjoint engine leans on this directly — it either re-queries the
+//! source right-to-left, or pulls the whole grid in one
+//! [`BrownianSource::fill_grid`] descent and replays it in reverse
+//! (`solvers::GridReplayNoise`); both produce the forward pass's exact bits.
 
 mod interval;
 mod levy;

@@ -59,6 +59,28 @@
 //! of per-step queries, and [`brownian::BrownianInterval::reseed`] redraws
 //! a persistent tree without reallocating it.
 //!
+//! ### Adjoint engine
+//!
+//! Gradients run natively on the same stack ([`solvers::adjoint`]). The
+//! reversibility invariant: the reversible-Heun step is algebraically
+//! invertible, so the backward pass *reconstructs* the forward trajectory
+//! via [`solvers::ReversibleHeun::reverse_step`] in O(1) memory, and the
+//! cotangents it accumulates are the exact derivatives of the discrete
+//! forward solve — no truncation error, only roundoff (the backward
+//! reconstruction is bit-exact up to float inversion, pinned <1e-10 by
+//! tests, and debug builds assert every reconstructed state forward-replays
+//! onto the pre-reverse state). VJP-kernel association rule: the fused
+//! backward kernels in [`solvers::simd`] and the analytic VJPs of
+//! [`solvers::SdeVjp`] / [`solvers::BatchSdeVjp`] keep the forward kernels'
+//! float association — vectorised across paths, never within one path, with
+//! θ-gradients held in per-path lanes and reduced in ascending path order —
+//! so [`solvers::adjoint_solve_batched`] is bit-identical to per-path
+//! [`solvers::adjoint_solve`] for every batch size, chunk size and thread
+//! count. Backward noise is replayed from the same deterministic sources as
+//! the forward pass ([`solvers::GridReplayNoise`] pulls a whole grid out of
+//! a Brownian source in one `fill_grid` descent and serves it right-to-left
+//! — the Brownian Interval's reason for existing).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

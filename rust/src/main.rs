@@ -92,9 +92,17 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args)?,
         Some("gradient-error") => {
-            let mut rt = load_runtime("artifacts")?;
-            let points = gradient_error::run(&mut rt, 2021)?;
-            println!("{}", gradient_error::render(&points));
+            // Native adjoint rows need no artifacts; the PJRT solver
+            // comparison additionally needs `make artifacts`.
+            let native = gradient_error::run_native(2021);
+            println!("{}", gradient_error::render(&native));
+            if neuralsde::runtime::Runtime::artifacts_present("artifacts") {
+                let mut rt = load_runtime("artifacts")?;
+                let points = gradient_error::run(&mut rt, 2021)?;
+                println!("{}", gradient_error::render(&points));
+            } else {
+                println!("PJRT rows skipped (no artifacts; run `make artifacts`)");
+            }
         }
         Some("info") => {
             println!("neural-sde v{}", env!("CARGO_PKG_VERSION"));

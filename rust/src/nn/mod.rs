@@ -13,7 +13,7 @@
 
 mod optim;
 
-pub use optim::{Adadelta, Adam, Optimizer, Sgd, StochasticWeightAverage};
+pub use optim::{step_f64, Adadelta, Adam, Optimizer, Sgd, StochasticWeightAverage};
 
 use crate::brownian::SplitPrng;
 use crate::util::json::Json;

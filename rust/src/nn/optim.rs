@@ -171,6 +171,17 @@ impl Optimizer for Adadelta {
     }
 }
 
+/// Apply one optimiser step from an `f64` gradient — the bridge from the
+/// native adjoint engine (`solvers::adjoint` produces flat `f64` gradients,
+/// `dy0`/`dtheta`) to the `f32` parameter vectors the optimisers drive.
+/// Values are narrowed with a plain `as f32` cast (non-finite values pass
+/// through so divergence stays visible rather than being masked).
+pub fn step_f64<O: Optimizer>(opt: &mut O, params: &mut [f32], grad: &[f64]) {
+    assert_eq!(params.len(), grad.len());
+    let g32: Vec<f32> = grad.iter().map(|&g| g as f32).collect();
+    opt.step(params, &g32);
+}
+
 /// Stochastic weight averaging (Appendix F.2): a Cesàro mean of generator
 /// weights over the latter part of training, used as the final model.
 pub struct StochasticWeightAverage {
@@ -255,6 +266,19 @@ mod tests {
         }
         assert!(p[0] < -0.5);
         assert_eq!(p[1], 0.0);
+    }
+
+    #[test]
+    fn step_f64_matches_pre_narrowed_gradient() {
+        let mut a = Adam::new(0.05, 3);
+        let mut b = Adam::new(0.05, 3);
+        let mut pa = [0.1f32, -0.2, 0.3];
+        let mut pb = pa;
+        let g64 = [0.5f64, -1.25, 2.0];
+        let g32: Vec<f32> = g64.iter().map(|&g| g as f32).collect();
+        step_f64(&mut a, &mut pa, &g64);
+        b.step(&mut pb, &g32);
+        assert_eq!(pa, pb);
     }
 
     #[test]

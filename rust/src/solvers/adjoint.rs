@@ -1,0 +1,786 @@
+//! Native reverse-mode adjoint engine for the reversible Heun method
+//! (paper Section 3, Algorithm 2 — "optimise then discretise" made exact).
+//!
+//! Backpropagating through an SDE solve usually forces a choice: store the
+//! whole forward trajectory (O(n) memory) or integrate a backward adjoint
+//! SDE and eat its truncation error (Li et al. 2020). The reversible Heun
+//! scheme removes the choice: its step is *algebraically invertible*, so the
+//! backward pass reconstructs the forward trajectory state-by-state via
+//! [`ReversibleHeun::reverse_step`] in O(1) memory, and the accumulated
+//! cotangents are the **exact** derivatives of the discrete forward solve —
+//! zero truncation error, limited only by roundoff (the paper's Figure 2).
+//!
+//! The engine is layered on the batch engine of [`super::batch`]:
+//!
+//! * [`SdeVjp`] / [`BatchSdeVjp`] — analytic vector-Jacobian products of the
+//!   drift and diffusion with respect to state and parameters, per path and
+//!   over SoA lanes (every per-path [`SdeVjp`] is a [`BatchSdeVjp`] through
+//!   a blanket gather/scatter adapter, mirroring [`BatchSde`]);
+//! * [`adjoint_solve`] — per-path forward + backward sweep returning
+//!   `∂L/∂y₀` and `∂L/∂θ` for a terminal loss `L(z_N)`;
+//! * [`adjoint_solve_batched`] — the SoA twin over `[dim × batch]` lanes
+//!   with a chunked thread fan-out; per-path lane arithmetic runs on the
+//!   fused VJP kernels of [`super::simd`], so batched gradients are
+//!   **bit-for-bit equal** to per-path gradients (θ-gradients are kept in
+//!   per-path lanes and reduced in ascending path order at the very end,
+//!   independent of chunking and threading);
+//! * [`BackwardMode`] — `Reconstruct` (O(1) memory, the paper's algorithm)
+//!   vs `Tape` (store the forward `ẑ` trajectory and backprop through it).
+//!   Both differentiate the same discrete map; their difference is pure
+//!   reconstruction roundoff, which is what the machine-precision rows of
+//!   [`crate::coordinator::gradient_error`] measure;
+//! * [`GridReplayNoise`] — backward-pass Brownian reconstruction: one
+//!   [`BrownianSource::fill_grid`] descent up front, then O(1) replay of
+//!   `ΔW` in any order — the doubly-sequential access pattern the Brownian
+//!   Interval (Section 4) was built for.
+//!
+//! # The backward recursion
+//!
+//! With the forward step (dropping the step index, `′` = next)
+//!
+//! ```text
+//! ẑ′ = 2z − ẑ + f(t, ẑ) Δt + g(t, ẑ) ΔW
+//! z′ = z + ½ (f(t, ẑ) + f(t′, ẑ′)) Δt + ½ (g(t, ẑ) + g(t′, ẑ′)) ΔW
+//! ```
+//!
+//! the cotangents `(λ_z, λ_ẑ) = (∂L/∂z, ∂L/∂ẑ)` pull back as
+//!
+//! ```text
+//! w   = λ_ẑ′ + J_f(t′, ẑ′)ᵀ (½Δt λ_z′) + J_{g·ΔW}(t′, ẑ′)ᵀ (½ λ_z′)
+//! λ_z = λ_z′ + 2w
+//! λ_ẑ = −w + J_f(t, ẑ)ᵀ (Δt (w + ½λ_z′)) + J_{g·ΔW}(t, ẑ)ᵀ (w + ½λ_z′)
+//! ```
+//!
+//! with the same weights driving the parameter accumulation
+//! `∂L/∂θ += (∂f/∂θ)ᵀ(·) + (∂(g·ΔW)/∂θ)ᵀ(·)` at both evaluation points, and
+//! `∂L/∂y₀ = λ_z + λ_ẑ` at step 0 (where `z₀ = ẑ₀ = y₀`). The `ẑ`
+//! states the Jacobians are evaluated at come from running
+//! [`ReversibleHeun::reverse_step`] in lockstep with the cotangent
+//! recursion, replaying the forward noise in reverse.
+//!
+//! In debug builds the `Reconstruct` backward replays each reconstructed
+//! state forward again and asserts it reproduces the pre-reverse state
+//! (the reconstruction-drift invariant); release builds skip the check.
+
+use super::batch::{BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper};
+use super::{simd, NoiseF64, ReversibleHeun, Sde};
+use crate::brownian::BrownianSource;
+use crate::util::stats;
+
+/// Analytic vector-Jacobian products of a per-path [`Sde`]'s vector fields.
+///
+/// The parameter gradient layout (`gth`, length [`param_len`](Self::param_len))
+/// is fixed per implementation and documented there; it is what
+/// [`adjoint_solve`] returns as `dtheta` and what the optimisers in
+/// [`crate::nn`] consume as a flat gradient (`nn::step_f64`).
+pub trait SdeVjp: Sde {
+    /// Number of trainable parameters `θ`.
+    fn param_len(&self) -> usize;
+
+    /// Accumulate the drift VJP: `gy += J_f(t, y)ᵀ wf` and
+    /// `gth += (∂f/∂θ)ᵀ wf`. Both outputs are `+=` accumulated, never
+    /// overwritten.
+    fn drift_vjp(&self, t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], gth: &mut [f64]);
+
+    /// Accumulate the diffusion VJP through the applied increment
+    /// `h(y) = g(t, y) · dw`: `gy += J_h(t, y)ᵀ v` and
+    /// `gth += (∂h/∂θ)ᵀ v`. The cotangent arrives factored as `(v, dw)`
+    /// (`v` of length `dim`, `dw` of length `noise_dim`) because every
+    /// adjoint-step cotangent of the diffusion matrix is the rank-one
+    /// `v ΔWᵀ` — implementations exploit their sparsity (diagonal systems
+    /// touch only `v[i] * dw[i]`).
+    fn diffusion_vjp(
+        &self,
+        t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+    );
+}
+
+/// Analytic VJPs over structure-of-arrays lanes, mirroring [`SdeVjp`] the
+/// way [`BatchSde`] mirrors [`Sde`].
+///
+/// Layouts follow the batch engine: `y`, `wf`, `v`, `gy` are `[dim * batch]`,
+/// `dw` is `[noise_dim * batch]`, and `gth` is **per-path lanes**
+/// `[param_len * batch]` (`gth[m * batch + p]` is path `p`'s running
+/// gradient of parameter `m`). Keeping θ in lanes — rather than summing
+/// across paths inside the call — is what lets the batched adjoint reduce
+/// over paths once, in ascending order, and so stay bit-identical to the
+/// per-path adjoint.
+pub trait BatchSdeVjp: BatchSde {
+    /// Number of trainable parameters `θ`.
+    fn param_len(&self) -> usize;
+
+    /// Batched [`SdeVjp::drift_vjp`] over SoA lanes (`+=` accumulated).
+    fn drift_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        wf: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    );
+
+    /// Batched [`SdeVjp::diffusion_vjp`] over SoA lanes (`+=` accumulated).
+    fn diffusion_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    );
+}
+
+/// Blanket adapter: every per-path [`SdeVjp`] is a [`BatchSdeVjp`] by
+/// gather → per-path VJP → scatter. The per-path arithmetic is the scalar
+/// implementation itself, so adapted batched gradients agree with per-path
+/// gradients bit-for-bit (the same guarantee the forward blanket adapter
+/// gives).
+impl<S: SdeVjp + Sync> BatchSdeVjp for S {
+    fn param_len(&self) -> usize {
+        SdeVjp::param_len(self)
+    }
+
+    fn drift_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        wf: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let e = Sde::dim(self);
+        let pl = SdeVjp::param_len(self);
+        let mut yp = vec![0.0; e];
+        let mut wp = vec![0.0; e];
+        let mut gyp = vec![0.0; e];
+        let mut gtp = vec![0.0; pl];
+        for p in 0..batch {
+            for i in 0..e {
+                yp[i] = y[i * batch + p];
+                wp[i] = wf[i * batch + p];
+                gyp[i] = gy[i * batch + p];
+            }
+            for m in 0..pl {
+                gtp[m] = gth[m * batch + p];
+            }
+            self.drift_vjp(t, &yp, &wp, &mut gyp, &mut gtp);
+            for i in 0..e {
+                gy[i * batch + p] = gyp[i];
+            }
+            for m in 0..pl {
+                gth[m * batch + p] = gtp[m];
+            }
+        }
+    }
+
+    fn diffusion_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let e = Sde::dim(self);
+        let d = Sde::noise_dim(self);
+        let pl = SdeVjp::param_len(self);
+        let mut yp = vec![0.0; e];
+        let mut vp = vec![0.0; e];
+        let mut dwp = vec![0.0; d];
+        let mut gyp = vec![0.0; e];
+        let mut gtp = vec![0.0; pl];
+        for p in 0..batch {
+            for i in 0..e {
+                yp[i] = y[i * batch + p];
+                vp[i] = v[i * batch + p];
+                gyp[i] = gy[i * batch + p];
+            }
+            for j in 0..d {
+                dwp[j] = dw[j * batch + p];
+            }
+            for m in 0..pl {
+                gtp[m] = gth[m * batch + p];
+            }
+            self.diffusion_vjp(t, &yp, &vp, &dwp, &mut gyp, &mut gtp);
+            for i in 0..e {
+                gy[i * batch + p] = gyp[i];
+            }
+            for m in 0..pl {
+                gth[m * batch + p] = gtp[m];
+            }
+        }
+    }
+}
+
+/// How the backward pass obtains the forward trajectory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackwardMode {
+    /// Reconstruct each forward state in closed form via
+    /// [`ReversibleHeun::reverse_step`] — O(1) memory, the paper's
+    /// Algorithm 2. Gradients are exact up to reconstruction roundoff.
+    Reconstruct,
+    /// Store the forward `ẑ` trajectory (O(n) memory) and backprop through
+    /// the stored states — classic discretise-then-optimise, the reference
+    /// the `Reconstruct` mode is compared against for the machine-precision
+    /// claim.
+    Tape,
+}
+
+/// Gradients of a terminal loss `L(z_N)` through a reversible-Heun solve.
+#[derive(Clone, Debug)]
+pub struct AdjointGrad {
+    /// Terminal solution estimate `z_N` (per-path `[dim]`; batched SoA
+    /// `[dim * batch]`).
+    pub terminal: Vec<f64>,
+    /// `∂L/∂y₀`, same shape as the initial state.
+    pub dy0: Vec<f64>,
+    /// `∂L/∂θ`, flat `[param_len]` (batched: summed over paths in ascending
+    /// path order).
+    pub dtheta: Vec<f64>,
+}
+
+/// Run one path forward over `[t0, t1]` in `n_steps` reversible-Heun steps,
+/// then backward, returning the exact discrete gradients of the terminal
+/// loss seeded by `grad_terminal` (called once with `z_N` to fill
+/// `∂L/∂z_N`).
+///
+/// `noise` is queried forward and then *again in reverse* — any
+/// deterministic source works ([`super::CounterGridNoise`] paths,
+/// [`GridReplayNoise`], or [`super::NoiseFromSource`] over a Brownian
+/// source), which is exactly the re-queryable contract the Brownian
+/// Interval provides.
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_solve<S, N, G>(
+    sde: &S,
+    y0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    noise: &mut N,
+    mode: BackwardMode,
+    grad_terminal: G,
+) -> AdjointGrad
+where
+    S: SdeVjp,
+    N: NoiseF64,
+    G: FnOnce(&[f64], &mut [f64]),
+{
+    let e = sde.dim();
+    let d = sde.noise_dim();
+    assert_eq!(y0.len(), e, "y0 must be [dim]");
+    assert!(n_steps >= 1);
+    let pl = sde.param_len();
+    let dtg = (t1 - t0) / n_steps as f64;
+    let tape_on = matches!(mode, BackwardMode::Tape);
+
+    // Forward pass — the same grid arithmetic as `integrate`, so the solve
+    // being differentiated is bit-identical to what a driver loop runs.
+    let mut solver = ReversibleHeun::new(sde, t0, y0);
+    let mut dw = vec![0.0f64; d];
+    let mut tape: Vec<f64> = Vec::with_capacity(if tape_on { (n_steps + 1) * e } else { 0 });
+    for k in 0..n_steps {
+        if tape_on {
+            tape.extend_from_slice(&solver.state().zh);
+        }
+        let s = t0 + k as f64 * dtg;
+        let t = t0 + (k + 1) as f64 * dtg;
+        noise.increment(s, t, &mut dw);
+        solver.forward_step(sde, s, t - s, &dw);
+    }
+    if tape_on {
+        tape.extend_from_slice(&solver.state().zh);
+    }
+    let terminal = solver.state().z.clone();
+
+    // Cotangent seed: the loss reads the terminal solution estimate z_N.
+    let mut lz = vec![0.0f64; e];
+    let mut lzh = vec![0.0f64; e];
+    grad_terminal(&terminal, &mut lz);
+    let mut gth = vec![0.0f64; pl];
+
+    let mut vg = vec![0.0f64; e];
+    let mut wf = vec![0.0f64; e];
+    let mut wa = vec![0.0f64; e];
+    #[cfg(debug_assertions)]
+    let mut chk = ReversibleHeun::new(sde, t1, &terminal);
+
+    for k in (0..n_steps).rev() {
+        let s = t0 + k as f64 * dtg;
+        let t = t0 + (k + 1) as f64 * dtg;
+        let h = t - s;
+        // The forward step evaluated its fields at `s + h` (the `t + dt`
+        // token in `forward_step`); the backward must use the same value.
+        let t_hi = s + h;
+        noise.increment(s, t, &mut dw);
+
+        // Stage A — total cotangent of ẑ_{k+1}:
+        //   w = λ_ẑ + J_f(t′,ẑ′)ᵀ(½Δt λ_z) + J_{g·ΔW}(t′,ẑ′)ᵀ(½ λ_z).
+        simd::scale_half(&lz, &mut vg);
+        simd::scale(h, &vg, &mut wf);
+        wa.copy_from_slice(&lzh);
+        // ẑ_{k+1} is still the solver's current state (reverse_step runs
+        // below) or a tape slice — borrow, don't copy.
+        let zh_hi: &[f64] =
+            if tape_on { &tape[(k + 1) * e..(k + 2) * e] } else { &solver.state().zh };
+        sde.drift_vjp(t_hi, zh_hi, &wf, &mut wa, &mut gth);
+        sde.diffusion_vjp(t_hi, zh_hi, &vg, &dw, &mut wa, &mut gth);
+
+        // Reconstruct the state at t_k (Algorithm 2), or read the tape.
+        if !tape_on {
+            #[cfg(debug_assertions)]
+            let pre = solver.state().clone();
+            solver.reverse_step(sde, t, h, &dw);
+            #[cfg(debug_assertions)]
+            {
+                // Reconstruction-drift invariant: stepping the reconstructed
+                // state forward again must reproduce the pre-reverse state.
+                chk.set_state(solver.state().clone());
+                chk.forward_step(sde, s, h, &dw);
+                let scale0 = pre.z.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+                let drift = chk.state().max_abs_diff(&pre);
+                debug_assert!(
+                    drift <= 1e-6 * scale0,
+                    "reversible-Heun reconstruction drift {drift:e} at step {k}"
+                );
+            }
+        }
+        let zh_lo: &[f64] =
+            if tape_on { &tape[k * e..(k + 1) * e] } else { &solver.state().zh };
+
+        // Stage B — pull back to (z_k, ẑ_k):
+        //   λ_ẑ = −w + J_f(t,ẑ)ᵀ(Δt(w + ½λ_z)) + J_{g·ΔW}(t,ẑ)ᵀ(w + ½λ_z)
+        //   λ_z = λ_z + 2w.
+        simd::add_half(&wa, &lz, &mut vg);
+        simd::scale(h, &vg, &mut wf);
+        simd::neg(&wa, &mut lzh);
+        sde.drift_vjp(s, zh_lo, &wf, &mut lzh, &mut gth);
+        sde.diffusion_vjp(s, zh_lo, &vg, &dw, &mut lzh, &mut gth);
+        simd::axpy(2.0, &wa, &mut lz);
+    }
+
+    // z₀ = ẑ₀ = y₀ ⟹ ∂L/∂y₀ = λ_z + λ_ẑ.
+    let mut dy0 = vec![0.0f64; e];
+    for i in 0..e {
+        dy0[i] = lz[i] + lzh[i];
+    }
+    AdjointGrad { terminal, dy0, dtheta: gth }
+}
+
+/// Batched-SoA adjoint over `[dim × batch]` lanes: forward + backward per
+/// fixed-size path chunk, fanned across `opts.threads` scoped workers.
+///
+/// `grad_terminal` is called once per chunk with
+/// `(path_offset, chunk_len, terminal_z_lanes, out_lanes)` and must fill the
+/// chunk's `∂L/∂z_N` lanes (`[dim * chunk_len]`, pre-zeroed).
+///
+/// Determinism and bit-identity: each path's lane arithmetic runs on the
+/// same fused kernels the per-path sweep uses and touches only its own
+/// lane; θ-gradients accumulate in per-path lanes and are reduced over
+/// paths in ascending order after all chunks complete. The result is
+/// bit-identical for every `threads`/`chunk` setting — and bit-identical to
+/// `batch` separate [`adjoint_solve`] runs whose `dtheta` are summed in
+/// ascending path order.
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_solve_batched<S, N, G>(
+    sde: &S,
+    noise: &N,
+    y0: &[f64],
+    batch: usize,
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    mode: BackwardMode,
+    opts: &BatchOptions,
+    grad_terminal: &G,
+) -> AdjointGrad
+where
+    S: BatchSdeVjp,
+    N: BatchNoise,
+    G: Fn(usize, usize, &[f64], &mut [f64]) + Sync,
+{
+    let e = sde.state_dim();
+    let nd = sde.brownian_dim();
+    let pl = sde.param_len();
+    assert_eq!(y0.len(), e * batch, "y0 must be SoA [dim * batch]");
+    assert_eq!(noise.brownian_dim(), nd, "noise/sde Brownian dimension mismatch");
+    assert!(n_steps >= 1 && batch >= 1);
+    let chunk = opts.chunk.max(1);
+    let n_chunks = (batch + chunk - 1) / chunk;
+    let dtg = (t1 - t0) / n_steps as f64;
+    let tape_on = matches!(mode, BackwardMode::Tape);
+
+    // One chunk's forward + backward sweep: returns (terminal z lanes,
+    // dy0 lanes, per-path θ lanes), all `[· * chunk_len]`.
+    let run_chunk = |c: usize| -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let p0 = c * chunk;
+        let cl = chunk.min(batch - p0);
+        let mut yc = vec![0.0f64; e * cl];
+        for i in 0..e {
+            for q in 0..cl {
+                yc[i * cl + q] = y0[i * batch + p0 + q];
+            }
+        }
+        let mut stepper = BatchReversibleHeun::for_chunk(sde, t0, &yc, cl);
+        let mut dw = vec![0.0f64; nd * cl];
+        let mut tape: Vec<f64> =
+            Vec::with_capacity(if tape_on { (n_steps + 1) * e * cl } else { 0 });
+        for k in 0..n_steps {
+            if tape_on {
+                tape.extend_from_slice(stepper.zh());
+            }
+            let s = t0 + k as f64 * dtg;
+            let t = t0 + (k + 1) as f64 * dtg;
+            noise.fill_step(k, s, t, p0, cl, &mut dw);
+            stepper.forward_step(sde, s, t - s, &dw);
+        }
+        if tape_on {
+            tape.extend_from_slice(stepper.zh());
+        }
+        let terminal = stepper.z().to_vec();
+
+        let mut lz = vec![0.0f64; e * cl];
+        let mut lzh = vec![0.0f64; e * cl];
+        grad_terminal(p0, cl, &terminal, &mut lz);
+        let mut gth = vec![0.0f64; pl * cl];
+
+        let mut vg = vec![0.0f64; e * cl];
+        let mut wf = vec![0.0f64; e * cl];
+        let mut wa = vec![0.0f64; e * cl];
+        #[cfg(debug_assertions)]
+        let mut chk = BatchReversibleHeun::for_chunk(sde, t1, &terminal, cl);
+
+        for k in (0..n_steps).rev() {
+            let s = t0 + k as f64 * dtg;
+            let t = t0 + (k + 1) as f64 * dtg;
+            let h = t - s;
+            let t_hi = s + h;
+            noise.fill_step(k, s, t, p0, cl, &mut dw);
+
+            // Stage A (same kernel sequence as the per-path sweep).
+            simd::scale_half(&lz, &mut vg);
+            simd::scale(h, &vg, &mut wf);
+            wa.copy_from_slice(&lzh);
+            // ẑ_{k+1} lanes: the stepper's current state (reverse_step runs
+            // below) or a tape slice — borrow, don't copy.
+            let zh_hi: &[f64] = if tape_on {
+                &tape[(k + 1) * e * cl..(k + 2) * e * cl]
+            } else {
+                stepper.zh()
+            };
+            sde.drift_vjp_batch(t_hi, zh_hi, &wf, &mut wa, &mut gth, cl);
+            sde.diffusion_vjp_batch(t_hi, zh_hi, &vg, &dw, &mut wa, &mut gth, cl);
+
+            if !tape_on {
+                #[cfg(debug_assertions)]
+                let pre = (
+                    stepper.z().to_vec(),
+                    stepper.zh().to_vec(),
+                    stepper.mu().to_vec(),
+                    stepper.sigma().to_vec(),
+                );
+                stepper.reverse_step(sde, t, h, &dw);
+                #[cfg(debug_assertions)]
+                {
+                    chk.set_state(stepper.z(), stepper.zh(), stepper.mu(), stepper.sigma());
+                    chk.forward_step(sde, s, h, &dw);
+                    let md = |a: &[f64], b: &[f64]| {
+                        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
+                    };
+                    let drift = md(chk.z(), &pre.0)
+                        .max(md(chk.zh(), &pre.1))
+                        .max(md(chk.mu(), &pre.2))
+                        .max(md(chk.sigma(), &pre.3));
+                    let scale0 = pre.0.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+                    debug_assert!(
+                        drift <= 1e-6 * scale0,
+                        "batched reconstruction drift {drift:e} at step {k}"
+                    );
+                }
+            }
+            let zh_lo: &[f64] =
+                if tape_on { &tape[k * e * cl..(k + 1) * e * cl] } else { stepper.zh() };
+
+            // Stage B.
+            simd::add_half(&wa, &lz, &mut vg);
+            simd::scale(h, &vg, &mut wf);
+            simd::neg(&wa, &mut lzh);
+            sde.drift_vjp_batch(s, zh_lo, &wf, &mut lzh, &mut gth, cl);
+            sde.diffusion_vjp_batch(s, zh_lo, &vg, &dw, &mut lzh, &mut gth, cl);
+            simd::axpy(2.0, &wa, &mut lz);
+        }
+        let mut dy0 = vec![0.0f64; e * cl];
+        for i in 0..e * cl {
+            dy0[i] = lz[i] + lzh[i];
+        }
+        (terminal, dy0, gth)
+    };
+
+    let threads = opts.threads.max(1).min(n_chunks);
+    let chunk_grads: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = if threads <= 1 {
+        (0..n_chunks).map(run_chunk).collect()
+    } else {
+        // Strided static partition: chunk results are keyed by index, so the
+        // schedule cannot affect the (deterministic) result.
+        let mut slots: Vec<Option<(Vec<f64>, Vec<f64>, Vec<f64>)>> =
+            (0..n_chunks).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads);
+            for w in 0..threads {
+                let run_chunk = &run_chunk;
+                handles.push(scope.spawn(move || {
+                    let mut mine = Vec::new();
+                    let mut c = w;
+                    while c < n_chunks {
+                        mine.push((c, run_chunk(c)));
+                        c += threads;
+                    }
+                    mine
+                }));
+            }
+            for hdl in handles {
+                for (c, r) in hdl.join().expect("adjoint worker panicked") {
+                    slots[c] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|o| o.expect("chunk result missing")).collect()
+    };
+
+    // Scatter chunk lanes back to the full batch, then reduce θ over paths
+    // in ascending path order — the association of the per-path reference
+    // (Σ_p dθ_p, p = 0..batch), independent of chunking and threading.
+    let mut terminal = vec![0.0f64; e * batch];
+    let mut dy0 = vec![0.0f64; e * batch];
+    let mut gth_lanes = vec![0.0f64; pl * batch];
+    for (c, (tz, dz, gt)) in chunk_grads.iter().enumerate() {
+        let p0 = c * chunk;
+        let cl = chunk.min(batch - p0);
+        for i in 0..e {
+            terminal[i * batch + p0..i * batch + p0 + cl]
+                .copy_from_slice(&tz[i * cl..(i + 1) * cl]);
+            dy0[i * batch + p0..i * batch + p0 + cl].copy_from_slice(&dz[i * cl..(i + 1) * cl]);
+        }
+        for m in 0..pl {
+            gth_lanes[m * batch + p0..m * batch + p0 + cl]
+                .copy_from_slice(&gt[m * cl..(m + 1) * cl]);
+        }
+    }
+    let mut dtheta = vec![0.0f64; pl];
+    for m in 0..pl {
+        let mut acc = 0.0f64;
+        for p in 0..batch {
+            acc += gth_lanes[m * batch + p];
+        }
+        dtheta[m] = acc;
+    }
+    AdjointGrad { terminal, dy0, dtheta }
+}
+
+/// Backward-pass Brownian replay: pulls every increment of a uniform grid
+/// out of a [`BrownianSource`] in **one** [`fill_grid`] descent, then serves
+/// them as [`NoiseF64`] in any order — forward for the solve, right-to-left
+/// for the adjoint sweep. Bit-identical to querying the source per step
+/// (the `fill_grid` contract), widened to `f64` exactly as
+/// [`super::NoiseFromSource`] widens.
+///
+/// [`fill_grid`]: BrownianSource::fill_grid
+pub struct GridReplayNoise {
+    t0: f64,
+    dt: f64,
+    n_steps: usize,
+    size: usize,
+    vals: Vec<f64>,
+}
+
+impl GridReplayNoise {
+    /// Fill the `n_steps`-interval uniform grid over `[t0, t1]` from `src`.
+    pub fn from_source<B: BrownianSource>(src: &mut B, t0: f64, t1: f64, n_steps: usize) -> Self {
+        assert!(t1 > t0 && n_steps >= 1);
+        let size = src.size();
+        let dt = (t1 - t0) / n_steps as f64;
+        let ts: Vec<f64> = (0..=n_steps).map(|k| t0 + k as f64 * dt).collect();
+        let mut buf = vec![0.0f32; n_steps * size];
+        src.fill_grid(&ts, &mut buf);
+        let vals = buf.iter().map(|&x| x as f64).collect();
+        Self { t0, dt, n_steps, size, vals }
+    }
+
+    /// Brownian channels per query.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+}
+
+impl NoiseF64 for GridReplayNoise {
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f64]) {
+        // Hard asserts, not debug: a mis-gridded query in a release build
+        // would otherwise silently return the wrong increment (the replay
+        // only ever holds single grid steps).
+        let k = ((s - self.t0) / self.dt).round() as usize;
+        assert!(k < self.n_steps, "query off the replay grid: s={s}");
+        assert!(
+            ((t - s) - self.dt).abs() < self.dt * 1e-9,
+            "GridReplayNoise serves single grid steps, got [{s}, {t}]"
+        );
+        out.copy_from_slice(&self.vals[k * self.size..(k + 1) * self.size]);
+    }
+}
+
+/// Test support: worst absolute error of an [`SdeVjp`] implementation
+/// against central finite differences with step `h`, probing the scalar
+/// observables `wf · f(t, y)` (drift) and `v · (g(t, y) · dw)` (diffusion)
+/// in both the state and the parameter directions.
+///
+/// `rebuild` must construct the system from a flat parameter vector laid
+/// out as the impl's θ-gradient; pass the current parameters in `params`
+/// (empty for parameter-free systems).
+#[allow(clippy::too_many_arguments)]
+pub fn max_vjp_fd_error<S, F>(
+    rebuild: F,
+    params: &[f64],
+    t: f64,
+    y: &[f64],
+    wf: &[f64],
+    v: &[f64],
+    dw: &[f64],
+    h: f64,
+) -> f64
+where
+    S: SdeVjp,
+    F: Fn(&[f64]) -> S,
+{
+    let sde = rebuild(params);
+    let e = sde.dim();
+    let d = sde.noise_dim();
+    let pl = sde.param_len();
+    assert_eq!(params.len(), pl, "params must match param_len()");
+    let dot = |a: &[f64], b: &[f64]| a.iter().zip(b).map(|(u, w)| u * w).sum::<f64>();
+    let drift_obs = |s: &S, yy: &[f64]| {
+        let mut f = vec![0.0; e];
+        s.drift(t, yy, &mut f);
+        dot(wf, &f)
+    };
+    let diff_obs = |s: &S, yy: &[f64]| {
+        let mut g = vec![0.0; e * d];
+        s.diffusion(t, yy, &mut g);
+        let mut hv = vec![0.0; e];
+        super::apply_diffusion(&g, dw, &mut hv);
+        dot(v, &hv)
+    };
+
+    let mut gy_f = vec![0.0; e];
+    let mut gth_f = vec![0.0; pl];
+    sde.drift_vjp(t, y, wf, &mut gy_f, &mut gth_f);
+    let mut gy_g = vec![0.0; e];
+    let mut gth_g = vec![0.0; pl];
+    sde.diffusion_vjp(t, y, v, dw, &mut gy_g, &mut gth_g);
+
+    let mut worst = 0.0f64;
+    let fd_y_f = stats::central_gradient(|yy| drift_obs(&sde, yy), y, h);
+    let fd_y_g = stats::central_gradient(|yy| diff_obs(&sde, yy), y, h);
+    for i in 0..e {
+        worst = worst.max((gy_f[i] - fd_y_f[i]).abs());
+        worst = worst.max((gy_g[i] - fd_y_g[i]).abs());
+    }
+    if pl > 0 {
+        let fd_th_f = stats::central_gradient(|pp| drift_obs(&rebuild(pp), y), params, h);
+        let fd_th_g = stats::central_gradient(|pp| diff_obs(&rebuild(pp), y), params, h);
+        for m in 0..pl {
+            worst = worst.max((gth_f[m] - fd_th_f[m]).abs());
+            worst = worst.max((gth_g[m] - fd_th_g[m]).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::systems::ScalarLinear;
+    use super::super::CounterGridNoise;
+    use super::*;
+
+    #[test]
+    fn scalar_linear_vjps_match_finite_differences() {
+        let mk = |p: &[f64]| ScalarLinear { a: p[0], b: p[1] };
+        let err = max_vjp_fd_error(
+            mk,
+            &[0.3, 0.5],
+            0.0,
+            &[1.2],
+            &[0.7],
+            &[-0.4],
+            &[0.9],
+            1e-6,
+        );
+        assert!(err < 1e-9, "VJP-vs-FD error {err}");
+    }
+
+    #[test]
+    fn adjoint_matches_exact_linear_jacobian() {
+        // For the linear SDE the discrete reversible-Heun map is linear in
+        // (z, ẑ), so ∂z_N/∂y0 is an exact product of per-step 2×2 Jacobians
+        // — the adjoint must reproduce it to roundoff.
+        let (a, b) = (0.3f64, 0.5f64);
+        let sde = ScalarLinear { a, b };
+        let n = 64usize;
+        let noise = CounterGridNoise::new(11, 1, 0.0, 1.0, n);
+        let mut pn = noise.path(0);
+        let g = adjoint_solve(
+            &sde,
+            &[1.0],
+            0.0,
+            1.0,
+            n,
+            &mut pn,
+            BackwardMode::Reconstruct,
+            |_z, gz| gz[0] = 1.0,
+        );
+        // Reference: [dz_N/dz0, dz_N/dẑ0] = [1, 0] · Π_k M_k, seeded [1; 1]
+        // because z0 = ẑ0 = y0.
+        let h = 1.0 / n as f64;
+        let (mut rz, mut rzh) = (1.0f64, 0.0f64); // row vector [∂/∂z, ∂/∂ẑ]
+        for k in (0..n).rev() {
+            let dw = noise.value(0, k, 0);
+            let c = 0.5 * a * h + 0.5 * b * dw;
+            let dzh_dz = 2.0;
+            let dzh_dzh = -1.0 + a * h + b * dw;
+            let dz_dz = 1.0 + c * dzh_dz;
+            let dz_dzh = c * (1.0 + dzh_dzh);
+            let (nz, nzh) = (rz * dz_dz + rzh * dzh_dz, rz * dz_dzh + rzh * dzh_dzh);
+            rz = nz;
+            rzh = nzh;
+        }
+        let reference = rz + rzh;
+        let rel = (g.dy0[0] - reference).abs() / reference.abs().max(1e-300);
+        assert!(rel < 1e-10, "adjoint {} vs exact {} (rel {rel:e})", g.dy0[0], reference);
+    }
+
+    #[test]
+    fn tape_and_reconstruct_agree_to_roundoff() {
+        let sde = ScalarLinear { a: 0.2, b: 0.4 };
+        let n = 100usize;
+        let noise = CounterGridNoise::new(5, 1, 0.0, 1.0, n);
+        let run = |mode| {
+            let mut pn = noise.path(0);
+            adjoint_solve(&sde, &[0.8], 0.0, 1.0, n, &mut pn, mode, |_z, gz| gz[0] = 1.0)
+        };
+        let rec = run(BackwardMode::Reconstruct);
+        let tape = run(BackwardMode::Tape);
+        let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1e-300);
+        assert!(rel(rec.dy0[0], tape.dy0[0]) < 1e-10);
+        assert!(rel(rec.dtheta[0], tape.dtheta[0]) < 1e-10);
+        assert!(rel(rec.dtheta[1], tape.dtheta[1]) < 1e-10);
+        assert_eq!(rec.terminal, tape.terminal, "forward passes must be identical");
+    }
+}

@@ -436,7 +436,10 @@ impl BatchStepper for BatchHeun {
 /// Batched reversible Heun (paper Section 3, Algorithms 1 and 2) over SoA
 /// state, mirroring [`super::ReversibleHeun`] per path — including the
 /// closed-form [`reverse_step`](Self::reverse_step), so algebraic
-/// reversibility holds path-wise in the batched engine too.
+/// reversibility holds path-wise in the batched engine too. The adjoint
+/// engine ([`super::adjoint`]) drives `reverse_step` in lockstep with its
+/// cotangent recursion to reconstruct the forward trajectory in O(1)
+/// memory.
 pub struct BatchReversibleHeun {
     dim: usize,
     noise_dim: usize,
@@ -471,6 +474,17 @@ impl BatchReversibleHeun {
     /// advertises diagonal noise, dense otherwise).
     pub fn sigma(&self) -> &[f64] {
         &self.sigma
+    }
+
+    /// Replace the full `(z, ẑ, μ, σ)` state (all SoA, lengths matching the
+    /// construction-time shapes). Used by the adjoint engine's debug-mode
+    /// reconstruction-drift check to replay a forward step from a
+    /// reconstructed state.
+    pub fn set_state(&mut self, z: &[f64], zh: &[f64], mu: &[f64], sigma: &[f64]) {
+        self.z.copy_from_slice(z);
+        self.zh.copy_from_slice(zh);
+        self.mu.copy_from_slice(mu);
+        self.sigma.copy_from_slice(sigma);
     }
 
     /// Max-abs difference of the full `(z, ẑ, μ, σ)` state to another

@@ -19,7 +19,14 @@
 //!   loops ([`simd`]) and a work-stealing chunked worker pool, bit-for-bit
 //!   equal to per-path integration for every solver, thread count and
 //!   steal schedule.
+//!
+//! Gradients are native too: the [`adjoint`] module runs the reversible
+//! Heun method *backwards* (Algorithm 2), reconstructing the forward
+//! trajectory in O(1) memory and accumulating exact discrete gradients
+//! through the analytic vector-Jacobian products of [`SdeVjp`] /
+//! [`BatchSdeVjp`] — see [`adjoint_solve`] and [`adjoint_solve_batched`].
 
+pub mod adjoint;
 mod batch;
 mod classic;
 mod convergence;
@@ -28,6 +35,10 @@ pub mod simd;
 mod stability;
 pub mod systems;
 
+pub use adjoint::{
+    adjoint_solve, adjoint_solve_batched, max_vjp_fd_error, AdjointGrad, BackwardMode,
+    BatchSdeVjp, GridReplayNoise, SdeVjp,
+};
 pub use batch::{
     aos_to_soa, integrate_batched, soa_to_aos, BatchEulerMaruyama, BatchHeun, BatchMidpoint,
     BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper, CounterGridNoise,

@@ -6,8 +6,10 @@
 //! the previous state from the next one in closed form. That reversibility
 //! is what makes the continuous-adjoint gradients exactly equal to the
 //! discretise-then-optimise gradients of the forward pass (the paper's
-//! headline Figure 2; reproduced through the JAX twin of this stepper by
-//! `examples/gradient_error.rs`).
+//! headline Figure 2) — the native adjoint engine ([`super::adjoint`])
+//! drives `reverse_step` in lockstep with its cotangent recursion, and
+//! `examples/gradient_error.rs` reproduces the machine-precision claim on
+//! it end to end.
 
 use super::{apply_diffusion, FixedStepSolver, Sde};
 

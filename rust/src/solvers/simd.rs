@@ -442,6 +442,116 @@ pub fn matvec_row_avg_sub_seeded(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused VJP kernels for the adjoint engine.
+//
+// The backward pass of the reversible-Heun adjoint combines cotangents with
+// the same lane discipline as the forward kernels: elementwise across path
+// lanes, association written token-for-token as the per-path adjoint writes
+// it, so batched gradients are bit-identical to per-path gradients.
+// ---------------------------------------------------------------------------
+
+/// `out[i] = x[i] * a` — scaled copy (drift cotangent weight `w · Δt`).
+#[inline]
+pub fn scale(a: f64, x: &[f64], out: &mut [f64]) {
+    let n = out.len();
+    debug_assert_eq!(x.len(), n);
+    let nb = n - n % LANES;
+    let mut i = 0;
+    while i < nb {
+        out[i] = x[i] * a;
+        out[i + 1] = x[i + 1] * a;
+        out[i + 2] = x[i + 2] * a;
+        out[i + 3] = x[i + 3] * a;
+        i += LANES;
+    }
+    while i < n {
+        out[i] = x[i] * a;
+        i += 1;
+    }
+}
+
+/// `out[i] = x[i] + 0.5 * y[i]` — the adjoint's combined diffusion
+/// cotangent `w + ½ λ_z`.
+#[inline]
+pub fn add_half(x: &[f64], y: &[f64], out: &mut [f64]) {
+    let n = out.len();
+    debug_assert!(x.len() == n && y.len() == n);
+    let nb = n - n % LANES;
+    let mut i = 0;
+    while i < nb {
+        out[i] = x[i] + 0.5 * y[i];
+        out[i + 1] = x[i + 1] + 0.5 * y[i + 1];
+        out[i + 2] = x[i + 2] + 0.5 * y[i + 2];
+        out[i + 3] = x[i + 3] + 0.5 * y[i + 3];
+        i += LANES;
+    }
+    while i < n {
+        out[i] = x[i] + 0.5 * y[i];
+        i += 1;
+    }
+}
+
+/// `out[i] = -x[i]` — cotangent negation (the `−w` seed of `λ_ẑ`).
+#[inline]
+pub fn neg(x: &[f64], out: &mut [f64]) {
+    let n = out.len();
+    debug_assert_eq!(x.len(), n);
+    let nb = n - n % LANES;
+    let mut i = 0;
+    while i < nb {
+        out[i] = -x[i];
+        out[i + 1] = -x[i + 1];
+        out[i + 2] = -x[i + 2];
+        out[i + 3] = -x[i + 3];
+        i += LANES;
+    }
+    while i < n {
+        out[i] = -x[i];
+        i += 1;
+    }
+}
+
+/// Seeded strided broadcast mat-vec (the transposed-matrix VJP row):
+/// `out[p] = (..(out[p] + m[0]·x[0·b+p]) ..) + m[(k-1)·stride]·x[(k-1)·b+p]`
+/// with `k = x.len() / out.len()` terms taken at stride `stride` from `m` —
+/// i.e. one *column* of a row-major matrix applied across path lanes, seeded
+/// sequential so the per-path association matches the scalar
+/// `acc = gy[j]; for i { acc += m[i*d + j] * s[i]; }` loop exactly.
+#[inline]
+pub fn broadcast_matvec_strided_seeded(m: &[f64], stride: usize, x: &[f64], out: &mut [f64]) {
+    let b = out.len();
+    debug_assert_eq!(x.len() % b, 0);
+    let k = x.len() / b;
+    debug_assert!(k == 0 || m.len() > (k - 1) * stride);
+    let nb = b - b % LANES;
+    let mut p = 0;
+    while p < nb {
+        let mut acc = [out[p], out[p + 1], out[p + 2], out[p + 3]];
+        for i in 0..k {
+            let mi = m[i * stride];
+            let o = i * b + p;
+            acc[0] += mi * x[o];
+            acc[1] += mi * x[o + 1];
+            acc[2] += mi * x[o + 2];
+            acc[3] += mi * x[o + 3];
+        }
+        out[p] = acc[0];
+        out[p + 1] = acc[1];
+        out[p + 2] = acc[2];
+        out[p + 3] = acc[3];
+        p += LANES;
+    }
+    while p < b {
+        let mut acc = out[p];
+        for i in 0..k {
+            acc += m[i * stride] * x[i * b + p];
+        }
+        out[p] = acc;
+        p += 1;
+    }
+}
+
 /// Broadcast mat-vec row: `out[p] = Σ_j m[j] * x[j*b+p]` — one row of a
 /// shared (per-system, not per-path) matrix applied across all path lanes.
 /// The native hand-batched systems build on this: the matrix entry is a
@@ -578,6 +688,48 @@ mod tests {
                     2.0 * x[i] - u[i] - w[i] * a,
                     "leapfrog_sub n={n} i={i}"
                 );
+            }
+
+            let mut out = vec![0.0; n];
+            scale(a, &x, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], x[i] * a, "scale n={n} i={i}");
+            }
+
+            let mut out = vec![0.0; n];
+            add_half(&x, &u, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], x[i] + 0.5 * u[i], "add_half n={n} i={i}");
+            }
+
+            let mut out = vec![0.0; n];
+            neg(&x, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], -x[i], "neg n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_seeded_matvec_matches_scalar_column_loop() {
+        for &b in &SIZES {
+            for d in [1usize, 2, 3, 5] {
+                // Row-major d×d matrix, SoA input [d * b], one output column
+                // per j: the transposed-matrix VJP access pattern.
+                let m = data(d * d, 20);
+                let x = data(d * b, 21);
+                let y0 = data(b, 22);
+                for j in 0..d {
+                    let mut y = y0.clone();
+                    broadcast_matvec_strided_seeded(&m[j..], d, &x, &mut y);
+                    for p in 0..b {
+                        let mut acc = y0[p];
+                        for i in 0..d {
+                            acc += m[i * d + j] * x[i * b + p];
+                        }
+                        assert_eq!(y[p], acc, "strided seeded b={b} d={d} j={j} p={p}");
+                    }
+                }
             }
         }
     }

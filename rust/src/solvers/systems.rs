@@ -8,6 +8,7 @@
 //! [`super::simd`] kernels, with the per-path arithmetic order preserved so
 //! native and adapted solves agree bit-for-bit.
 
+use super::adjoint::{BatchSdeVjp, SdeVjp};
 use super::{simd, BatchSde, Sde};
 use crate::brownian::SplitPrng;
 
@@ -42,6 +43,30 @@ impl Sde for ScalarLinear {
     }
 }
 
+/// VJPs for `θ = [a, b]`: `∂f/∂y = a`, `∂f/∂a = y`; `∂(g·dw)/∂y = b·dw`,
+/// `∂(g·dw)/∂b = y·dw`.
+impl SdeVjp for ScalarLinear {
+    fn param_len(&self) -> usize {
+        2
+    }
+    fn drift_vjp(&self, _t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], gth: &mut [f64]) {
+        gy[0] += self.a * wf[0];
+        gth[0] += y[0] * wf[0];
+    }
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+    ) {
+        gy[0] += self.b * dw[0] * v[0];
+        gth[1] += y[0] * dw[0] * v[0];
+    }
+}
+
 /// The scalar anharmonic oscillator of Appendix D.4, equation (28):
 /// `dy = sin(y) dt + σ dW` (additive noise) — the test problem for the
 /// Figure-5/6 convergence study (the paper uses σ = 1, y₀ = 1, T = 1).
@@ -68,6 +93,28 @@ impl Sde for Anharmonic {
     }
     fn diffusion_diag(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
         out[0] = self.sigma;
+    }
+}
+
+/// VJPs for `θ = [σ]`: `∂f/∂y = cos(y)`; the additive noise contributes
+/// only `∂(g·dw)/∂σ = dw`.
+impl SdeVjp for Anharmonic {
+    fn param_len(&self) -> usize {
+        1
+    }
+    fn drift_vjp(&self, _t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], _gth: &mut [f64]) {
+        gy[0] += y[0].cos() * wf[0];
+    }
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        _y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        _gy: &mut [f64],
+        gth: &mut [f64],
+    ) {
+        gth[0] += dw[0] * v[0];
     }
 }
 
@@ -104,6 +151,23 @@ impl TanhDiagonal {
         let a = mk(d * d);
         let b = mk(d * d);
         Self { d, a, b, _priv: () }
+    }
+
+    /// System with explicit matrices (row-major `d×d` each) — the
+    /// constructor finite-difference gradient checks rebuild perturbed
+    /// systems through.
+    pub fn from_matrices(d: usize, a: Vec<f64>, b: Vec<f64>) -> Self {
+        assert_eq!(a.len(), d * d);
+        assert_eq!(b.len(), d * d);
+        Self { d, a, b, _priv: () }
+    }
+
+    /// The flat parameter vector `θ = [A row-major, B row-major]` — the
+    /// layout of the [`SdeVjp`] θ-gradient.
+    pub fn params_flat(&self) -> Vec<f64> {
+        let mut p = self.a.clone();
+        p.extend_from_slice(&self.b);
+        p
     }
 
     fn matvec(m: &[f64], x: &[f64], out: &mut [f64]) {
@@ -150,6 +214,83 @@ impl Sde for TanhDiagonal {
         Self::matvec(&self.b, y, out);
         for o in out.iter_mut() {
             *o = o.tanh();
+        }
+    }
+}
+
+/// VJP weight through `tanh`: `s[i] = w[i] * (1 − tanh(u[i])²)` in place
+/// (`s` holds the pre-activation `u` on entry). One shared token form for
+/// the per-path and batched impls, so their bits agree lane-for-lane.
+fn tanh_vjp_weight(u_then_s: &mut [f64], w: &[f64]) {
+    for (sv, &wv) in u_then_s.iter_mut().zip(w) {
+        let th = sv.tanh();
+        *sv = wv * (1.0 - th * th);
+    }
+}
+
+/// As [`tanh_vjp_weight`] with the factored diffusion cotangent:
+/// `s[i] = v[i] * dw[i] * (1 − tanh(u[i])²)`.
+fn tanh_vjp_weight_dw(u_then_s: &mut [f64], v: &[f64], dw: &[f64]) {
+    for ((sv, &vv), &dv) in u_then_s.iter_mut().zip(v).zip(dw) {
+        let th = sv.tanh();
+        *sv = vv * dv * (1.0 - th * th);
+    }
+}
+
+/// VJPs for `θ = [A row-major (d²), B row-major (d²)]`. With
+/// `u = M y`, `out_i = tanh(u_i)` and VJP weight `s_i = w_i (1 − tanh²u_i)`:
+/// `gy = Mᵀ s` and `∂/∂M_ij = s_i y_j`.
+impl SdeVjp for TanhDiagonal {
+    fn param_len(&self) -> usize {
+        2 * self.d * self.d
+    }
+
+    fn drift_vjp(&self, _t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], gth: &mut [f64]) {
+        let d = self.d;
+        let mut s = vec![0.0; d];
+        Self::matvec(&self.a, y, &mut s);
+        tanh_vjp_weight(&mut s, wf);
+        // gy += Aᵀ s, seeded ascending-i — the association the batched
+        // strided kernel mirrors.
+        for j in 0..d {
+            let mut acc = gy[j];
+            for i in 0..d {
+                acc += self.a[i * d + j] * s[i];
+            }
+            gy[j] = acc;
+        }
+        for i in 0..d {
+            for j in 0..d {
+                gth[i * d + j] += s[i] * y[j];
+            }
+        }
+    }
+
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+    ) {
+        let d = self.d;
+        let dd = d * d;
+        let mut s = vec![0.0; d];
+        Self::matvec(&self.b, y, &mut s);
+        tanh_vjp_weight_dw(&mut s, v, dw);
+        for j in 0..d {
+            let mut acc = gy[j];
+            for i in 0..d {
+                acc += self.b[i * d + j] * s[i];
+            }
+            gy[j] = acc;
+        }
+        for i in 0..d {
+            for j in 0..d {
+                gth[dd + i * d + j] += s[i] * y[j];
+            }
         }
     }
 }
@@ -235,6 +376,97 @@ impl BatchSde for TanhDiagonalBatch {
     }
 }
 
+/// Native SoA VJPs sharing [`TanhDiagonal`]'s matrices: the forward's
+/// broadcast mat-vec reappears for `u = M y`, its transpose runs on
+/// [`simd::broadcast_matvec_strided_seeded`] (one matrix *column* broadcast
+/// across path lanes), and the rank-one `∂/∂M_ij = s_i y_j` update is a
+/// lane-wise [`simd::mul_add`] into the per-path θ lanes. Per-path
+/// association is preserved throughout, so gradients are bit-identical to
+/// driving the per-path [`SdeVjp`] through the blanket adapter.
+impl BatchSdeVjp for TanhDiagonalBatch {
+    fn param_len(&self) -> usize {
+        2 * self.inner.d * self.inner.d
+    }
+
+    fn drift_vjp_batch(
+        &self,
+        _t: f64,
+        y: &[f64],
+        wf: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let d = self.inner.d;
+        let mut s = vec![0.0; d * batch];
+        for i in 0..d {
+            simd::broadcast_matvec(
+                &self.inner.a[i * d..(i + 1) * d],
+                y,
+                &mut s[i * batch..(i + 1) * batch],
+            );
+        }
+        tanh_vjp_weight(&mut s, wf);
+        for j in 0..d {
+            simd::broadcast_matvec_strided_seeded(
+                &self.inner.a[j..],
+                d,
+                &s,
+                &mut gy[j * batch..(j + 1) * batch],
+            );
+        }
+        for i in 0..d {
+            for j in 0..d {
+                simd::mul_add(
+                    &s[i * batch..(i + 1) * batch],
+                    &y[j * batch..(j + 1) * batch],
+                    &mut gth[(i * d + j) * batch..(i * d + j + 1) * batch],
+                );
+            }
+        }
+    }
+
+    fn diffusion_vjp_batch(
+        &self,
+        _t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let d = self.inner.d;
+        let dd = d * d;
+        let mut s = vec![0.0; d * batch];
+        for i in 0..d {
+            simd::broadcast_matvec(
+                &self.inner.b[i * d..(i + 1) * d],
+                y,
+                &mut s[i * batch..(i + 1) * batch],
+            );
+        }
+        tanh_vjp_weight_dw(&mut s, v, dw);
+        for j in 0..d {
+            simd::broadcast_matvec_strided_seeded(
+                &self.inner.b[j..],
+                d,
+                &s,
+                &mut gy[j * batch..(j + 1) * batch],
+            );
+        }
+        for i in 0..d {
+            for j in 0..d {
+                simd::mul_add(
+                    &s[i * batch..(i + 1) * batch],
+                    &y[j * batch..(j + 1) * batch],
+                    &mut gth[(dd + i * d + j) * batch..(dd + i * d + j + 1) * batch],
+                );
+            }
+        }
+    }
+}
+
 /// Dense-noise benchmark system: `e = 2` states driven by `d = 3` Brownian
 /// channels through a full, state-dependent 2×3 diffusion matrix. Exercises
 /// the dense `e×d` mat-vec path that diagonal systems skip (promoted from
@@ -259,6 +491,33 @@ impl Sde for DenseCoupled {
         out[3] = 0.3;
         out[4] = 0.02 * y[0] * y[1];
         out[5] = 0.15;
+    }
+}
+
+/// Parameter-free VJPs (the coefficients are fixtures, not weights):
+/// hand-differentiated dense `2×3` diffusion, exercising the
+/// dense-cotangent path the diagonal systems skip.
+impl SdeVjp for DenseCoupled {
+    fn param_len(&self) -> usize {
+        0
+    }
+
+    fn drift_vjp(&self, _t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], _gth: &mut [f64]) {
+        gy[0] += -0.1 * wf[0] - 0.3 * y[0].sin() * wf[1];
+        gy[1] += 0.2 * (0.2 * y[1]).cos() * wf[0];
+    }
+
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        _gth: &mut [f64],
+    ) {
+        gy[0] += 0.05 * dw[0] * v[0] + 0.02 * y[1] * dw[1] * v[1];
+        gy[1] += 0.2 * dw[1] * v[0] + 0.02 * y[0] * dw[1] * v[1];
     }
 }
 
@@ -304,6 +563,57 @@ impl BatchSde for DenseCoupledBatch {
     }
 }
 
+/// Native SoA twin of [`DenseCoupled`]'s VJPs: the same per-path
+/// expressions swept unit-stride across path lanes.
+impl BatchSdeVjp for DenseCoupledBatch {
+    fn param_len(&self) -> usize {
+        0
+    }
+
+    fn drift_vjp_batch(
+        &self,
+        _t: f64,
+        y: &[f64],
+        wf: &[f64],
+        gy: &mut [f64],
+        _gth: &mut [f64],
+        batch: usize,
+    ) {
+        let (y0l, y1l) = y.split_at(batch);
+        let (w0, w1) = wf.split_at(batch);
+        let (g0, g1) = gy.split_at_mut(batch);
+        for p in 0..batch {
+            g0[p] += -0.1 * w0[p] - 0.3 * y0l[p].sin() * w1[p];
+        }
+        for p in 0..batch {
+            g1[p] += 0.2 * (0.2 * y1l[p]).cos() * w0[p];
+        }
+    }
+
+    fn diffusion_vjp_batch(
+        &self,
+        _t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        _gth: &mut [f64],
+        batch: usize,
+    ) {
+        let (y0l, y1l) = y.split_at(batch);
+        let (v0, v1) = v.split_at(batch);
+        let dw0 = &dw[..batch];
+        let dw1 = &dw[batch..2 * batch];
+        let (g0, g1) = gy.split_at_mut(batch);
+        for p in 0..batch {
+            g0[p] += 0.05 * dw0[p] * v0[p] + 0.02 * y1l[p] * dw1[p] * v1[p];
+        }
+        for p in 0..batch {
+            g1[p] += 0.2 * dw1[p] * v0[p] + 0.02 * y0l[p] * dw1[p] * v1[p];
+        }
+    }
+}
+
 /// The time-dependent Ornstein–Uhlenbeck process of Appendix F.7:
 /// `dY = (ρ t − κ Y) dt + χ dW` (the SDE-GAN training dataset).
 pub struct TimeDependentOu {
@@ -339,6 +649,33 @@ impl Sde for TimeDependentOu {
     }
     fn diffusion_diag(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
         out[0] = self.chi;
+    }
+}
+
+/// VJPs for `θ = [ρ, κ, χ]`: `∂f/∂y = −κ`, `∂f/∂ρ = t`, `∂f/∂κ = −y`;
+/// the additive noise contributes only `∂(g·dw)/∂χ = dw`. The closed-form
+/// machine-precision gradient tests run on this system.
+impl SdeVjp for TimeDependentOu {
+    fn param_len(&self) -> usize {
+        3
+    }
+
+    fn drift_vjp(&self, t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], gth: &mut [f64]) {
+        gy[0] += -self.kappa * wf[0];
+        gth[0] += t * wf[0];
+        gth[1] += -y[0] * wf[0];
+    }
+
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        _y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        _gy: &mut [f64],
+        gth: &mut [f64],
+    ) {
+        gth[2] += dw[0] * v[0];
     }
 }
 
@@ -399,5 +736,22 @@ mod tests {
         let mut f = [0.0];
         sde.drift(10.0, &[0.0], &mut f);
         assert!((f[0] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_matrices_round_trips_params_flat() {
+        // The FD gradient checks rebuild perturbed systems through this
+        // pair; full VJP-vs-FD validation of every impl lives in
+        // `tests/adjoint_gradients.rs` (one source of truth).
+        let base = TanhDiagonal::new(3, 13);
+        let theta = base.params_flat();
+        let rebuilt = TanhDiagonal::from_matrices(3, theta[..9].to_vec(), theta[9..].to_vec());
+        assert_eq!(rebuilt.params_flat(), theta);
+        let y = [0.2, -0.1, 0.3];
+        let mut fa = [0.0; 3];
+        let mut fb = [0.0; 3];
+        base.drift(0.0, &y, &mut fa);
+        rebuilt.drift(0.0, &y, &mut fb);
+        assert_eq!(fa, fb);
     }
 }

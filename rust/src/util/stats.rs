@@ -52,6 +52,32 @@ pub fn correlation(x: &[f64], y: &[f64]) -> f64 {
     sxy / (sxx.sqrt() * syy.sqrt())
 }
 
+/// Central-difference gradient of a scalar function:
+/// `g_i = (f(x + h e_i) − f(x − h e_i)) / 2h`.
+///
+/// The shared gradient-check harness: every analytic VJP in
+/// `solvers::adjoint` is validated against this (the `O(h²)` truncation
+/// error means halving `h` should quarter the disagreement until roundoff
+/// `~ε/h` takes over — tests probe several `h` to see both regimes). For
+/// maps that are *affine* in `x_i` the central difference is exact up to
+/// roundoff at any `h`, which is how the closed-form OU problem pins the
+/// adjoint to machine precision.
+pub fn central_gradient<F: FnMut(&[f64]) -> f64>(mut f: F, x: &[f64], h: f64) -> Vec<f64> {
+    assert!(h > 0.0, "finite-difference step must be positive");
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let xi = x[i];
+        xp[i] = xi + h;
+        let fp = f(&xp);
+        xp[i] = xi - h;
+        let fm = f(&xp);
+        xp[i] = xi;
+        g[i] = (fp - fm) / (2.0 * h);
+    }
+    g
+}
+
 /// Minimum of a slice (NaN-propagating).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().fold(f64::INFINITY, |a, &b| a.min(b))
@@ -107,6 +133,22 @@ mod tests {
         let xs = [3.0, -1.0, 2.0];
         assert_eq!(min(&xs), -1.0);
         assert_eq!(max(&xs), 3.0);
+    }
+
+    #[test]
+    fn central_gradient_quadratic_and_affine() {
+        // f(x) = x0² + 3 x1: ∂f = [2 x0, 3]. The affine component is exact
+        // at any h; the quadratic one is exact for central differences too
+        // (odd truncation terms vanish, f''' = 0).
+        let f = |x: &[f64]| x[0] * x[0] + 3.0 * x[1];
+        let g = central_gradient(f, &[1.5, -2.0], 0.5);
+        assert!((g[0] - 3.0).abs() < 1e-12, "g0 = {}", g[0]);
+        assert!((g[1] - 3.0).abs() < 1e-12, "g1 = {}", g[1]);
+        // Cubic term: truncation error shrinks ~h².
+        let f3 = |x: &[f64]| x[0] * x[0] * x[0];
+        let e1 = (central_gradient(f3, &[1.0], 1e-2)[0] - 3.0).abs();
+        let e2 = (central_gradient(f3, &[1.0], 1e-3)[0] - 3.0).abs();
+        assert!(e2 < e1 / 10.0, "truncation did not shrink: {e1} -> {e2}");
     }
 
     #[test]
