@@ -1,56 +1,81 @@
-//! Tables 1 / 4 / 5: per-training-step wall time, reversible Heun vs
-//! midpoint, for the SDE-GAN (OU & weights datasets) and the Latent SDE
-//! (air dataset).
+//! Tables 1 / 4 / 5: per-training-step wall time.
 //!
-//! The paper's headline speedups (1.98× on weights, 1.25× on air) come
-//! from the reversible Heun method's single vector-field evaluation per
-//! step; the same ratio should appear here in the gradient-executable
-//! time. Requires `make artifacts`.
+//! `native/*` rows time the pure-Rust SDE-GAN step (batched reversible-Heun
+//! solves + the native adjoint engine + Adadelta/clip/SWA) and need no
+//! artifacts. With `--features pjrt` and `make artifacts`, the AOT
+//! gradient-executable rows (reversible Heun vs midpoint — the paper's
+//! 1.98×/1.25× headline comparison) and the Latent SDE rows run as well.
 
 use neuralsde::brownian::SplitPrng;
-use neuralsde::config::{DatasetKind, SolverKind, TrainConfig};
-use neuralsde::coordinator::{GanTrainer, LatentTrainer};
-use neuralsde::data::{air, ou, weights};
-use neuralsde::runtime::{load_runtime, Runtime};
+use neuralsde::config::{DatasetKind, TrainConfig};
+use neuralsde::coordinator::GanTrainer;
+use neuralsde::data::{ou, weights};
 use neuralsde::util::bench::BenchTable;
 
+fn dataset(ds: DatasetKind) -> neuralsde::data::TimeSeriesDataset {
+    let mut data = match ds {
+        DatasetKind::Ou => ou::generate(256, 1, ou::OuParams::default()),
+        DatasetKind::Weights => weights::generate(256, 1, weights::WeightsParams::default()),
+        _ => unreachable!(),
+    };
+    data.normalise_initial();
+    data
+}
+
 fn main() {
-    if !Runtime::artifacts_present("artifacts") {
-        eprintln!("skipping tab1_training_step: run `make artifacts` first");
-        return;
-    }
-    let mut rt = load_runtime("artifacts").expect("runtime");
     let quick = std::env::var("QUICK").is_ok();
     let repeats = if quick { 5 } else { 16 };
     let mut table = BenchTable::new(
-        "Tables 1/4/5: training-step time (revheun vs midpoint)",
+        "Tables 1/4/5: training-step time (native + AOT backends)",
         repeats,
         2,
     );
 
-    let datasets = [DatasetKind::Ou, DatasetKind::Weights];
-    for ds in datasets {
-        let mut data = match ds {
-            DatasetKind::Ou => ou::generate(256, 1, ou::OuParams::default()),
-            DatasetKind::Weights => weights::generate(256, 1, weights::WeightsParams::default()),
-            _ => unreachable!(),
-        };
-        data.normalise_initial();
+    // Native rows: the default-build training path, no artifacts needed.
+    for ds in [DatasetKind::Ou, DatasetKind::Weights] {
+        let data = dataset(ds);
+        let mut cfg = TrainConfig::default();
+        cfg.dataset = ds;
+        let mut trainer = GanTrainer::new(&cfg, 1000).expect("native trainer");
+        let mut rng = SplitPrng::new(7);
+        table.bench(&format!("native/gan_{}/reversible_heun", ds.as_str()), |_| {
+            trainer.train_step(&data, &mut rng).expect("step");
+        });
+    }
+
+    runtime_rows(&mut table);
+
+    println!("{}", table.render());
+    std::fs::create_dir_all("results").ok();
+    table.write_json("results/bench_tab1_training_step.json").ok();
+}
+
+/// The AOT-executable rows (PJRT feature + artifacts).
+#[cfg(feature = "pjrt")]
+fn runtime_rows(table: &mut BenchTable) {
+    use neuralsde::config::SolverKind;
+    use neuralsde::coordinator::LatentTrainer;
+    use neuralsde::data::air;
+    use neuralsde::runtime::{load_runtime, Runtime};
+
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("skipping AOT rows: run `make artifacts` first");
+        return;
+    }
+    let mut rt = load_runtime("artifacts").expect("runtime");
+    for ds in [DatasetKind::Ou, DatasetKind::Weights] {
+        let data = dataset(ds);
         for solver in [SolverKind::ReversibleHeun, SolverKind::Midpoint] {
             let mut cfg = TrainConfig::default();
             cfg.dataset = ds;
             cfg.solver = solver;
-            let mut trainer = GanTrainer::new(&rt, &cfg, 1000).expect("trainer");
+            let mut trainer = GanTrainer::from_runtime(&rt, &cfg, 1000).expect("trainer");
             let mut rng = SplitPrng::new(7);
-            table.bench(
-                &format!("gan_{}/{}", ds.as_str(), solver.as_str()),
-                |_| {
-                    trainer.train_step(&mut rt, &data, &mut rng).expect("step");
-                },
-            );
+            table.bench(&format!("gan_{}/{}", ds.as_str(), solver.as_str()), |_| {
+                trainer.train_step_runtime(&mut rt, &data, &mut rng).expect("step");
+            });
         }
     }
-
     // Latent SDE on air.
     let mut data = air::generate(256, 1, air::AirParams::default());
     data.normalise_initial();
@@ -64,13 +89,14 @@ fn main() {
             trainer.train_step(&mut rt, &data, &mut rng).expect("step");
         });
     }
-
-    println!("{}", table.render());
     for model in ["gan_ou", "gan_weights", "latent_air"] {
         let rh = table.min_of(&format!("{model}/reversible_heun"));
         let mp = table.min_of(&format!("{model}/midpoint"));
         println!("  {model:<12} revheun speedup over midpoint: {:.2}x", mp / rh);
     }
-    std::fs::create_dir_all("results").ok();
-    table.write_json("results/bench_tab1_training_step.json").ok();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn runtime_rows(_table: &mut BenchTable) {
+    eprintln!("AOT rows need --features pjrt (+ `make artifacts`); native rows above");
 }

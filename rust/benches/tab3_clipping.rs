@@ -1,24 +1,21 @@
 //! Tables 3 / 11: discriminator-step cost of Lipschitz **clipping**
-//! (Section 5) vs **gradient penalty** (the double-backward baseline), on
-//! the OU SDE-GAN.
+//! (Section 5) vs the unconstrained / gradient-penalty alternatives, on the
+//! OU SDE-GAN.
 //!
-//! The paper's 1.41× speedup (midpoint+clip over midpoint+GP) comes from
-//! skipping the double backward; reversible Heun adds another 1.09×.
-//! Requires `make artifacts`.
+//! `native/*` rows time the pure-Rust step with and without the clip
+//! (clipping is a cheap post-optimiser clamp — the paper's point is that it
+//! *replaces* the GP's double backward). The double-backward gradient
+//! penalty itself is only lowered as an AOT executable, so the full
+//! Table-11 comparison (the paper's 1.41× midpoint+clip over midpoint+GP)
+//! needs `--features pjrt` + `make artifacts`.
 
 use neuralsde::brownian::SplitPrng;
-use neuralsde::config::{SolverKind, TrainConfig};
+use neuralsde::config::TrainConfig;
 use neuralsde::coordinator::GanTrainer;
 use neuralsde::data::ou;
-use neuralsde::runtime::{load_runtime, Runtime};
 use neuralsde::util::bench::BenchTable;
 
 fn main() {
-    if !Runtime::artifacts_present("artifacts") {
-        eprintln!("skipping tab3_clipping: run `make artifacts` first");
-        return;
-    }
-    let mut rt = load_runtime("artifacts").expect("runtime");
     let quick = std::env::var("QUICK").is_ok();
     let repeats = if quick { 5 } else { 16 };
     let mut data = ou::generate(256, 1, ou::OuParams::default());
@@ -29,6 +26,40 @@ fn main() {
         repeats,
         2,
     );
+    for (name, clip) in [
+        ("native/reversible_heun+clipping", true),
+        ("native/reversible_heun+unconstrained", false),
+    ] {
+        let mut cfg = TrainConfig::default();
+        cfg.clip = clip;
+        let mut trainer = GanTrainer::new(&cfg, 1000).expect("native trainer");
+        let mut rng = SplitPrng::new(7);
+        table.bench(name, |_| {
+            trainer.train_step(&data, &mut rng).expect("step");
+        });
+    }
+    let clip = table.min_of("native/reversible_heun+clipping");
+    let unc = table.min_of("native/reversible_heun+unconstrained");
+    println!("  native clipping overhead: {:.3}x", clip / unc);
+
+    runtime_rows(&mut table, &data);
+
+    println!("{}", table.render());
+    std::fs::create_dir_all("results").ok();
+    table.write_json("results/bench_tab3_clipping.json").ok();
+}
+
+/// The AOT rows, including the double-backward gradient-penalty baseline.
+#[cfg(feature = "pjrt")]
+fn runtime_rows(table: &mut BenchTable, data: &neuralsde::data::TimeSeriesDataset) {
+    use neuralsde::config::SolverKind;
+    use neuralsde::runtime::{load_runtime, Runtime};
+
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("skipping AOT rows: run `make artifacts` first");
+        return;
+    }
+    let mut rt = load_runtime("artifacts").expect("runtime");
     let configs: [(&str, SolverKind, bool); 3] = [
         ("midpoint+gradient_penalty", SolverKind::Midpoint, false),
         ("midpoint+clipping", SolverKind::Midpoint, true),
@@ -38,19 +69,21 @@ fn main() {
         let mut cfg = TrainConfig::default();
         cfg.solver = solver;
         cfg.clip = clip;
-        let mut trainer = GanTrainer::new(&rt, &cfg, 1000).expect("trainer");
+        let mut trainer = GanTrainer::from_runtime(&rt, &cfg, 1000).expect("trainer");
         let mut rng = SplitPrng::new(7);
         table.bench(name, |_| {
-            trainer.train_step(&mut rt, &data, &mut rng).expect("step");
+            trainer.train_step_runtime(&mut rt, data, &mut rng).expect("step");
         });
     }
-    println!("{}", table.render());
     let gp = table.min_of("midpoint+gradient_penalty");
     let clip = table.min_of("midpoint+clipping");
     let rh = table.min_of("reversible_heun+clipping");
     println!("  clipping speedup over GP      : {:.2}x", gp / clip);
     println!("  revheun further speedup       : {:.2}x", clip / rh);
     println!("  total (revheun+clip vs mp+GP) : {:.2}x", gp / rh);
-    std::fs::create_dir_all("results").ok();
-    table.write_json("results/bench_tab3_clipping.json").ok();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn runtime_rows(_table: &mut BenchTable, _data: &neuralsde::data::TimeSeriesDataset) {
+    eprintln!("gradient-penalty rows need --features pjrt (+ `make artifacts`)");
 }

@@ -1,23 +1,21 @@
-//! Quickstart: the whole three-layer stack in ~60 lines.
+//! Quickstart: the whole native stack in ~50 lines.
 //!
-//! Loads the AOT artifacts, builds the OU dataset, trains an SDE-GAN with
-//! the reversible Heun method for a handful of steps, and scores the
-//! samples. Run with:
+//! Builds the OU dataset, trains an SDE-GAN with the reversible Heun method
+//! and the pure-Rust adjoint engine for a handful of steps, and scores the
+//! samples. No artifacts or PJRT required — this runs on a fresh checkout:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use neuralsde::brownian::SplitPrng;
 use neuralsde::config::TrainConfig;
 use neuralsde::coordinator::{evaluate_generator, GanTrainer};
 use neuralsde::data::ou::{self, OuParams};
-use neuralsde::runtime::load_runtime;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = TrainConfig::default();
-    let mut rt = load_runtime(&cfg.artifacts_dir)?;
-    println!("PJRT platform: {}", rt.platform());
+    let mut cfg = TrainConfig::default();
+    cfg.batch = 64;
 
     // Data: the paper's time-dependent OU dataset (Appendix F.7).
     let mut data = ou::generate(512, cfg.seed, OuParams::default());
@@ -25,12 +23,12 @@ fn main() -> anyhow::Result<()> {
     let (train, _val, test) = data.split();
     println!("dataset: {} train / {} test series", train.n, test.n);
 
-    // Train an SDE-GAN (reversible Heun + Lipschitz clipping).
+    // Train an SDE-GAN (reversible Heun + Lipschitz clipping), natively.
     let steps = 20;
-    let mut trainer = GanTrainer::new(&rt, &cfg, steps)?;
+    let mut trainer = GanTrainer::new(&cfg, steps)?;
     let mut rng = SplitPrng::new(cfg.seed);
     for step in 0..steps {
-        let stats = trainer.train_step(&mut rt, &train, &mut rng)?;
+        let stats = trainer.train_step(&train, &mut rng)?;
         if step % 5 == 0 || step + 1 == steps {
             println!(
                 "step {step:>3}  loss_g {:+.4}  loss_d {:+.4}",
@@ -40,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Generate and score samples.
-    let fake = trainer.sample(&mut rt, test.n)?;
+    let fake = trainer.sample(test.n)?;
     let report = evaluate_generator(&test, &fake, 7);
     println!("after {steps} steps: {}", report.row());
     println!("quickstart OK");

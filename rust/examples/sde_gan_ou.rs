@@ -1,49 +1,61 @@
-//! End-to-end validation driver (Tables 3/11, scaled down).
+//! End-to-end validation driver (Tables 3/11, scaled down) — **native**.
 //!
 //! Trains an SDE-GAN on the time-dependent OU dataset for a few hundred
-//! optimiser steps through the complete stack — Rust data pipeline →
-//! Brownian Interval noise → AOT PJRT gradient executables (O-t-D adjoint)
-//! → Adadelta + Lipschitz clipping → SWA — logging the Wasserstein loss
-//! curve and the Appendix-F.1 test metrics. Results are appended to
-//! `results/sde_gan_ou.json` and summarised in EXPERIMENTS.md.
+//! optimiser steps through the complete pure-Rust stack — data pipeline →
+//! Brownian Interval noise → batched reversible-Heun solves → native
+//! reverse-mode adjoint (per-step cotangents through the neural-CDE
+//! discriminator) → Adadelta + Lipschitz clipping → SWA — logging the
+//! Wasserstein loss curve and the Appendix-F.1 test metrics. Runs out of
+//! the box on the default (stub-runtime) build: no `make artifacts`, no
+//! PJRT. Results are appended to `results/sde_gan_ou_*.json`.
 //!
 //! ```sh
-//! cargo run --release --example sde_gan_ou -- [--steps 300] [--solver midpoint] [--no-clip]
+//! cargo run --release --example sde_gan_ou -- [--steps 300] [--no-clip] [--smoke]
 //! ```
+//!
+//! `--smoke` is the CI mode: a handful of steps with asserted invariants
+//! (finite losses throughout, a discriminator loss that improves on its
+//! first value, clipped discriminator weights).
 
 use neuralsde::brownian::SplitPrng;
 use neuralsde::config::TrainConfig;
 use neuralsde::coordinator::{evaluate_generator, GanTrainer};
 use neuralsde::data::ou::{self, OuParams};
-use neuralsde::runtime::load_runtime;
+use neuralsde::nn::weights_clipped;
 use neuralsde::util::cli::Args;
 use neuralsde::util::json::{num_arr, obj, Json};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let mut args = Args::from_env();
+    let smoke = args.flag("smoke");
     let mut cfg = TrainConfig::default();
     cfg.apply_args(&mut args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let mut rt = load_runtime(&cfg.artifacts_dir)?;
+    if smoke {
+        cfg.steps = cfg.steps.min(12);
+        cfg.batch = cfg.batch.min(32);
+        cfg.data_size = cfg.data_size.min(128);
+    }
 
     let mut data = ou::generate(cfg.data_size, cfg.seed, OuParams::default());
     data.normalise_initial();
     let (train, _val, test) = data.split();
     println!(
-        "SDE-GAN / OU — solver={} clip={} steps={} batch(from manifest)",
+        "SDE-GAN / OU (native) — solver={} clip={} steps={} batch={}",
         cfg.solver.as_str(),
         cfg.clip,
-        cfg.steps
+        cfg.steps,
+        cfg.batch
     );
 
-    let mut trainer = GanTrainer::new(&rt, &cfg, cfg.steps)?;
+    let mut trainer = GanTrainer::new(&cfg, cfg.steps)?;
     let mut rng = SplitPrng::new(cfg.seed);
     let mut losses_g = Vec::new();
     let mut losses_d = Vec::new();
     let t0 = Instant::now();
     for step in 0..cfg.steps {
-        let stats = trainer.train_step(&mut rt, &train, &mut rng)?;
+        let stats = trainer.train_step(&train, &mut rng)?;
         losses_g.push(stats.loss_g as f64);
         losses_d.push(stats.loss_d as f64);
         if step % 25 == 0 || step + 1 == cfg.steps {
@@ -58,7 +70,29 @@ fn main() -> anyhow::Result<()> {
     let train_time = t0.elapsed().as_secs_f64();
     let per_step = train_time / cfg.steps as f64;
 
-    let fake = trainer.sample(&mut rt, test.n)?;
+    if smoke {
+        assert!(
+            losses_g.iter().chain(&losses_d).all(|l| l.is_finite()),
+            "non-finite loss in the native training loop"
+        );
+        let first_d = losses_d[0];
+        let best_d = losses_d.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            best_d < first_d,
+            "discriminator loss never improved on its first value ({first_d} -> best {best_d})"
+        );
+        if cfg.clip {
+            assert!(
+                weights_clipped(trainer.disc_layout(), &trainer.phi, |n| {
+                    n.starts_with("f.") || n.starts_with("g.")
+                }),
+                "discriminator weights escaped the Lipschitz clip region"
+            );
+        }
+        println!("smoke OK: finite losses, improving discriminator, clipped weights");
+    }
+
+    let fake = trainer.sample(test.n)?;
     let report = evaluate_generator(&test, &fake, 7);
     println!("\ntraining time: {train_time:.1}s ({per_step:.3}s/step)");
     println!("test metrics: {}", report.row());
@@ -66,6 +100,7 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all("results")?;
     let out = obj(vec![
         ("experiment", Json::Str("sde_gan_ou".into())),
+        ("backend", Json::Str("native".into())),
         ("solver", Json::Str(cfg.solver.as_str().into())),
         ("clip", Json::Bool(cfg.clip)),
         ("steps", Json::Num(cfg.steps as f64)),
@@ -80,7 +115,7 @@ fn main() -> anyhow::Result<()> {
     let path = format!(
         "results/sde_gan_ou_{}_{}.json",
         cfg.solver.as_str(),
-        if cfg.clip { "clip" } else { "gp" }
+        if cfg.clip { "clip" } else { "unconstrained" }
     );
     std::fs::write(&path, out.to_string_pretty())?;
     println!("wrote {path}");

@@ -1,70 +1,130 @@
-//! The SDE-GAN trainer (paper Sections 2.2 and 5).
+//! The SDE-GAN trainer (paper Sections 2.2 and 5) — **native backend**.
 //!
-//! Drives the AOT-compiled generator/discriminator gradient executables
-//! with noise from the Brownian Interval, updates both networks with
-//! Adadelta (Appendix F.2), enforces the discriminator's Lipschitz
-//! constraint by **weight clipping** after every discriminator step
-//! (Section 5) — or falls back to the gradient-penalty executable for the
-//! Table-11 baseline — and maintains a stochastic weight average of the
-//! generator over the latter half of training.
+//! A full adversarial training step runs in pure Rust on the batch + adjoint
+//! engines: generator solve ([`integrate_batched`], reversible Heun over SoA
+//! lanes) → affine readout → neural-CDE discriminator
+//! ([`NeuralDiscriminatorBatch`] driven by the path's `ΔY` increments) →
+//! exact reverse-mode gradients through both solves
+//! ([`adjoint_solve_batched_steps`]: terminal cotangent `±m/B` for the CDE,
+//! per-step cotangent injection for the generator whose whole trajectory the
+//! discriminator read, and `ΔY` cotangents chaining the two) → Adadelta
+//! (Appendix F.2) → hard Lipschitz enforcement by **weight clipping**
+//! (Section 5) → stochastic weight averaging of the generator.
+//!
+//! No `artifacts/manifest.json` is needed: hyperparameters come from
+//! [`TrainConfig`] and the [`GanNetSpec`] defaults, layouts from the native
+//! constructors. The AOT-executable path (which also provides the
+//! gradient-penalty baseline and non-reversible solvers) is retained behind
+//! the `pjrt` feature as [`GanTrainer::from_runtime`] /
+//! [`GanTrainer::train_step_runtime`] / [`GanTrainer::sample_runtime`].
+//!
+//! Determinism: all noise is drawn from the persistent [`StepNoise`]
+//! (Brownian Interval) keyed by the config seed, per-path solve and adjoint
+//! arithmetic is bit-identical across batch/chunk/thread settings (the
+//! engines' invariant), and every cross-path reduction here (θ-chains,
+//! readout gradients, score means) runs in ascending path order — so
+//! training losses and parameters are bit-reproducible for any
+//! [`BatchOptions`].
 
 use crate::config::{SolverKind, TrainConfig};
 use crate::coordinator::noise::{NoiseBackend, StepNoise};
 use crate::data::TimeSeriesDataset;
-use crate::nn::{Adadelta, Optimizer, StochasticWeightAverage};
+use crate::nn::{
+    step_f64, Activation, Adadelta, GanNetSpec, Mlp, ParamLayout, StochasticWeightAverage,
+};
+#[cfg(feature = "pjrt")]
+use crate::nn::Optimizer;
+use crate::solvers::neural::{widen_params, NeuralDiscriminatorBatch, NeuralGeneratorBatch};
+use crate::solvers::{
+    adjoint_solve_batched_steps, integrate_batched, AdjointGrad, BackwardMode, BatchOptions,
+    BatchReversibleHeun, StoredBatchNoise,
+};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use anyhow::Result;
+
+/// The normalised training interval (observation times have mean 0 and unit
+/// range — Appendix F.2).
+const T0: f64 = -0.5;
+const T1: f64 = 0.5;
 
 /// Per-step statistics.
 #[derive(Clone, Copy, Debug)]
 pub struct GanStepStats {
     /// Generator loss `E[F_φ(fake)]`.
     pub loss_g: f32,
-    /// Discriminator (negated Wasserstein) loss.
+    /// Discriminator (negated Wasserstein) loss `E[F(real)] − E[F(fake)]`.
     pub loss_d: f32,
 }
 
 /// SDE-GAN training state.
 pub struct GanTrainer {
-    /// Model name in the manifest (e.g. `"gan_ou"`).
+    /// Model name (e.g. `"gan_ou"`), used for display and artifact lookup.
     pub model: String,
+    spec: GanNetSpec,
     solver: SolverKind,
     clip: bool,
     batch: usize,
-    seq_len: usize,
-    w: usize,
-    v_dim: usize,
-    y_dim: usize,
     eval_batch: usize,
+    seq_len: usize,
     /// Generator parameters (flat).
     pub theta: Vec<f32>,
     /// Discriminator parameters (flat).
     pub phi: Vec<f32>,
+    gen_layout: ParamLayout,
+    disc_layout: ParamLayout,
+    zeta: Mlp,
+    xi: Mlp,
+    ell_w_off: usize,
+    ell_b_off: usize,
+    m_off: usize,
     opt_g: Adadelta,
     opt_d: Adadelta,
     swa: StochasticWeightAverage,
     noise: StepNoise,
     ts: Vec<f32>,
-    /// Discriminator layout, cached at construction — `train_step` clips
-    /// after every discriminator update and must not re-fetch (and clone)
-    /// the layout from the manifest each time.
-    disc_layout: crate::nn::ParamLayout,
+    opts: BatchOptions,
     steps_done: usize,
     total_steps: usize,
 }
 
 impl GanTrainer {
-    /// Build from a runtime + config; initialises parameters with the
-    /// paper's α/β scaling (equation (33)).
-    pub fn new(rt: &Runtime, cfg: &TrainConfig, total_steps: usize) -> Result<Self> {
-        let model = format!("gan_{}", cfg.dataset.as_str());
-        let spec = rt.manifest.model(&model)?;
-        let model_name = model.clone();
-        let hy = move |k: &str| rt.manifest.hyper(&model_name, k);
-        let batch = hy("batch")? as usize;
-        let seq_len = hy("seq_len")? as usize;
-        let gl = spec.gen_layout.clone();
-        let dl = spec.disc_layout.clone();
+    /// Build the native trainer from the config alone — no runtime, no
+    /// manifest. Network dimensions are the [`GanNetSpec`] defaults for the
+    /// dataset's channel count; parameters are initialised with the paper's
+    /// α/β scaling (equation (33)) and the discriminator starts inside the
+    /// clipped region.
+    pub fn new(cfg: &TrainConfig, total_steps: usize) -> Result<Self> {
+        if !cfg.clip {
+            // The flag used to select the Table-11 gradient-penalty
+            // executable; natively there is no GP, only no constraint.
+            eprintln!(
+                "[gan] warning: clip=false on the native backend trains an \
+                 UNCONSTRAINED critic (no Lipschitz control); the Table-11 \
+                 gradient-penalty baseline needs --features pjrt + artifacts \
+                 (GanTrainer::from_runtime)"
+            );
+        }
+        let (seq_len, y_dim) = cfg.dataset.shape();
+        let spec = GanNetSpec::for_data_dim(y_dim);
+        let gl = spec.gen_layout();
+        let dl = spec.disc_layout();
+        Self::assemble(cfg, spec, seq_len, gl, dl, cfg.batch, cfg.batch, total_steps)
+    }
+
+    /// Shared construction over externally supplied layouts (native path:
+    /// the [`GanNetSpec`] constructors; `pjrt` path: the manifest's).
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        cfg: &TrainConfig,
+        spec: GanNetSpec,
+        seq_len: usize,
+        gl: ParamLayout,
+        dl: ParamLayout,
+        batch: usize,
+        eval_batch: usize,
+        total_steps: usize,
+    ) -> Result<Self> {
         let alpha = cfg.alpha;
         let beta = cfg.beta;
         // ζ (and ξ) get α; vector fields get β (Appendix F.2 eq. (33)).
@@ -77,7 +137,7 @@ impl GanTrainer {
         // Start inside the clipped region.
         dl.clip_lipschitz(&mut phi, field_filter);
         // Per-group learning rates via lr_scale over the flat vector.
-        let scale_of = |layout: &crate::nn::ParamLayout, init_group: &str| -> Vec<f32> {
+        let scale_of = |layout: &ParamLayout, init_group: &str| -> Vec<f32> {
             let mut s = vec![1.0f32; layout.total];
             for t in &layout.tensors {
                 let is_init = t.name.starts_with(init_group);
@@ -86,58 +146,562 @@ impl GanTrainer {
             }
             s
         };
-        let opt_g = Adadelta::new(cfg.lr_init, gl.total)
-            .with_lr_scale(scale_of(&gl, "zeta"));
-        let opt_d = Adadelta::new(cfg.lr_init, dl.total)
-            .with_lr_scale(scale_of(&dl, "xi"));
+        let opt_g = Adadelta::new(cfg.lr_init, gl.total).with_lr_scale(scale_of(&gl, "zeta"));
+        let opt_d = Adadelta::new(cfg.lr_init, dl.total).with_lr_scale(scale_of(&dl, "xi"));
         // Times: normalised to mean 0, unit range (Appendix F.2).
-        let ts: Vec<f32> = (0..seq_len)
-            .map(|k| k as f32 / (seq_len - 1) as f32 - 0.5)
-            .collect();
+        let ts: Vec<f32> =
+            (0..seq_len).map(|k| k as f32 / (seq_len - 1) as f32 - 0.5).collect();
         let backend = if cfg.brownian_interval {
             NoiseBackend::Interval
         } else {
             NoiseBackend::VirtualTree { eps: 1e-5 }
         };
-        let w = hy("w")? as usize;
-        let noise = StepNoise::new(backend, -0.5, 0.5, batch * w, cfg.seed ^ 0x77);
+        let noise = StepNoise::new(backend, T0, T1, batch * spec.noise, cfg.seed ^ 0x77);
+        let zeta = Mlp::from_layout(&gl, "zeta", Activation::Identity)?;
+        let xi = Mlp::from_layout(&dl, "xi", Activation::Identity)?;
+        let ell_w_off = gl
+            .find("ell.w")
+            .ok_or_else(|| anyhow::anyhow!("gen layout missing ell.w"))?
+            .offset;
+        let ell_b_off = gl
+            .find("ell.b")
+            .ok_or_else(|| anyhow::anyhow!("gen layout missing ell.b"))?
+            .offset;
+        let m_off = dl
+            .find("m")
+            .ok_or_else(|| anyhow::anyhow!("disc layout missing m"))?
+            .offset;
         Ok(Self {
-            model,
+            model: format!("gan_{}", cfg.dataset.as_str()),
+            spec,
             solver: cfg.solver,
             clip: cfg.clip,
             batch,
+            eval_batch,
             seq_len,
-            w,
-            v_dim: hy("v")? as usize,
-            y_dim: hy("y")? as usize,
-            eval_batch: hy("eval_batch")? as usize,
+            swa: StochasticWeightAverage::new(gl.total),
             theta,
             phi,
-            swa: StochasticWeightAverage::new(gl.total),
+            gen_layout: gl,
+            disc_layout: dl,
+            zeta,
+            xi,
+            ell_w_off,
+            ell_b_off,
+            m_off,
             opt_g,
             opt_d,
             noise,
             ts,
-            disc_layout: dl,
+            opts: BatchOptions::auto(),
             steps_done: 0,
             total_steps,
         })
+    }
+
+    /// Override the batch-engine fan-out knobs (results are bit-identical
+    /// for every setting; only wall-clock changes).
+    pub fn with_batch_options(mut self, opts: BatchOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// The network dimensions in use.
+    pub fn spec(&self) -> &GanNetSpec {
+        &self.spec
+    }
+
+    /// The discriminator layout (tests assert the clipping invariant on it).
+    pub fn disc_layout(&self) -> &ParamLayout {
+        &self.disc_layout
+    }
+
+    /// One adversarial round — a discriminator step then a generator step —
+    /// entirely on the native stack.
+    pub fn train_step(
+        &mut self,
+        data: &TimeSeriesDataset,
+        rng: &mut crate::brownian::SplitPrng,
+    ) -> Result<GanStepStats> {
+        anyhow::ensure!(
+            self.solver == SolverKind::ReversibleHeun,
+            "the native backend trains through the reversible-Heun adjoint; \
+             other solvers need the AOT executables (`--features pjrt` + `make artifacts`)"
+        );
+        // ---- Discriminator step.
+        let (y_real, _) = data.sample_batch(self.batch, rng);
+        let (loss_d, gphi) = self.disc_grads(&y_real);
+        step_f64(&mut self.opt_d, &mut self.phi, &gphi);
+        if self.clip {
+            // Section 5: clip the CDE vector fields f_φ, g_φ to Lipschitz ≤ 1.
+            // (With --no-clip the native discriminator is simply
+            // unconstrained; the gradient-penalty baseline is pjrt-only.)
+            self.disc_layout.clip_lipschitz(&mut self.phi, field_filter);
+        }
+
+        // ---- Generator step (fresh noise).
+        let (loss_g, gtheta) = self.gen_grads();
+        step_f64(&mut self.opt_g, &mut self.theta, &gtheta);
+        self.steps_done += 1;
+        // SWA over the last 50% of training (Appendix F.2).
+        if self.steps_done * 2 >= self.total_steps {
+            self.swa.update(&self.theta);
+        }
+        Ok(GanStepStats { loss_g: loss_g as f32, loss_d: loss_d as f32 })
+    }
+
+    /// Draw one training step's noise: initial normals `V [batch, v]` and
+    /// the Brownian grid increments, widened to the batch engine's stored
+    /// SoA form.
+    fn draw_noise(&mut self) -> (Vec<f64>, StoredBatchNoise) {
+        let (b, w, v_dim) = (self.batch, self.spec.noise, self.spec.init_noise);
+        let n = self.seq_len - 1;
+        let mut v32 = vec![0.0f32; b * v_dim];
+        self.noise.fill_normals(&mut v32);
+        let mut dws32 = vec![0.0f32; n * b * w];
+        self.noise.fill(&self.ts, &mut dws32);
+        (widen_params(&v32), widen_increments(&dws32, n, w, b))
+    }
+
+    /// `ζ_θ(V)` per path, scattered to SoA `[x * batch]` lanes.
+    fn initial_state(&self, theta64: &[f64], v: &[f64], batch: usize) -> Vec<f64> {
+        let (x, v_dim) = (self.spec.state, self.spec.init_noise);
+        let mut z0 = vec![0.0f64; x * batch];
+        let mut z0p = vec![0.0f64; x];
+        for p in 0..batch {
+            self.zeta.forward(theta64, &v[p * v_dim..(p + 1) * v_dim], &mut z0p);
+            for i in 0..x {
+                z0[i * batch + p] = z0p[i];
+            }
+        }
+        z0
+    }
+
+    /// Affine readout `Y = ℓ_θ(X)` over a whole SoA trajectory:
+    /// `[(n+1) * x * batch]` lanes → `[(n+1) * y * batch]` lanes.
+    fn readout(&self, theta64: &[f64], x_traj: &[f64], batch: usize) -> Vec<f64> {
+        let (x, y) = (self.spec.state, self.spec.data_dim);
+        let n_pts = x_traj.len() / (x * batch);
+        let mut y_path = vec![0.0f64; n_pts * y * batch];
+        for k in 0..n_pts {
+            for c in 0..y {
+                for p in 0..batch {
+                    let mut acc = theta64[self.ell_b_off + c];
+                    for i in 0..x {
+                        acc += theta64[self.ell_w_off + i * y + c]
+                            * x_traj[(k * x + i) * batch + p];
+                    }
+                    y_path[(k * y + c) * batch + p] = acc;
+                }
+            }
+        }
+        y_path
+    }
+
+    /// Path increments `ΔY_k = Y_{k+1} − Y_k` as the CDE's stored "noise".
+    fn path_increments(&self, y_path: &[f64], batch: usize) -> StoredBatchNoise {
+        let y = self.spec.data_dim;
+        let n = self.seq_len - 1;
+        let mut dys = StoredBatchNoise::zeros(T0, T1, n, y, batch);
+        for k in 0..n {
+            for c in 0..y {
+                for p in 0..batch {
+                    let hi = y_path[((k + 1) * y + c) * batch + p];
+                    let lo = y_path[(k * y + c) * batch + p];
+                    dys.set(k, c, p, hi - lo);
+                }
+            }
+        }
+        dys
+    }
+
+    /// `H₀ = ξ_φ(t₀, Y₀)` per path, scattered to SoA `[dh * batch]` lanes.
+    fn cde_initial(&self, phi64: &[f64], y_path: &[f64], batch: usize) -> Vec<f64> {
+        let (dh, y) = (self.spec.disc_state, self.spec.data_dim);
+        let mut h0 = vec![0.0f64; dh * batch];
+        let mut inp = vec![0.0f64; 1 + y];
+        let mut h0p = vec![0.0f64; dh];
+        for p in 0..batch {
+            inp[0] = T0;
+            for c in 0..y {
+                inp[1 + c] = y_path[c * batch + p];
+            }
+            self.xi.forward(phi64, &inp, &mut h0p);
+            for i in 0..dh {
+                h0[i * batch + p] = h0p[i];
+            }
+        }
+        h0
+    }
+
+    /// Chain the CDE's `∂L/∂H₀` back through `ξ_φ` (ascending path order):
+    /// φ-gradients accumulate into `gphi`, and the `Y₀` input gradient into
+    /// `y0_cot` lanes when the caller needs the path cotangent (generator
+    /// step).
+    fn chain_xi(
+        &self,
+        phi64: &[f64],
+        y_path: &[f64],
+        gh0: &[f64],
+        batch: usize,
+        gphi: &mut [f64],
+        mut y0_cot: Option<&mut [f64]>,
+    ) {
+        let (dh, y) = (self.spec.disc_state, self.spec.data_dim);
+        let mut inp = vec![0.0f64; 1 + y];
+        let mut gx = vec![0.0f64; 1 + y];
+        let mut gh0p = vec![0.0f64; dh];
+        for p in 0..batch {
+            inp[0] = T0;
+            for c in 0..y {
+                inp[1 + c] = y_path[c * batch + p];
+            }
+            for i in 0..dh {
+                gh0p[i] = gh0[i * batch + p];
+            }
+            self.xi.vjp(phi64, &inp, &gh0p, &mut gx, gphi);
+            if let Some(yc) = y0_cot.as_deref_mut() {
+                for c in 0..y {
+                    yc[c * batch + p] += gx[1 + c];
+                }
+            }
+        }
+    }
+
+    /// Mean readout score `E_p[m · H_T]` from the CDE adjoint's terminal
+    /// lanes (ascending path order).
+    fn mean_score(&self, m64: &[f64], g: &AdjointGrad, batch: usize) -> f64 {
+        let dh = self.spec.disc_state;
+        let mut acc = 0.0f64;
+        for p in 0..batch {
+            let mut s = 0.0f64;
+            for i in 0..dh {
+                s += m64[i] * g.terminal[i * batch + p];
+            }
+            acc += s;
+        }
+        acc / batch as f64
+    }
+
+    /// One discriminator update's loss and φ-gradient:
+    /// `loss_d = E[F(real)] − E[F(fake)]`, CDE adjoints on both paths with
+    /// terminal cotangents `∓m/B`, `ξ` chain, and the `m`-readout gradient.
+    fn disc_grads(&mut self, y_real: &[f32]) -> (f64, Vec<f64>) {
+        let b = self.batch;
+        let (dh, y) = (self.spec.disc_state, self.spec.data_dim);
+        let n = self.seq_len - 1;
+        let (v, dws) = self.draw_noise();
+        let theta64 = widen_params(&self.theta);
+        let phi64 = widen_params(&self.phi);
+        let m64 = phi64[self.m_off..self.m_off + dh].to_vec();
+
+        // Fake path (forward only — no generator gradients in this step).
+        let gen = NeuralGeneratorBatch::from_f32(&self.spec, &self.theta);
+        let z0 = self.initial_state(&theta64, &v, b);
+        let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
+            &gen, &dws, &z0, b, T0, T1, n, &self.opts,
+        );
+        let y_fake = self.readout(&theta64, &x_traj, b);
+        // Real path, repacked [B, L, y] → per-point SoA lanes.
+        let stride = self.seq_len * y;
+        let mut y_real_lanes = vec![0.0f64; (n + 1) * y * b];
+        for k in 0..=n {
+            for c in 0..y {
+                for p in 0..b {
+                    y_real_lanes[(k * y + c) * b + p] = y_real[p * stride + k * y + c] as f64;
+                }
+            }
+        }
+
+        let disc = NeuralDiscriminatorBatch::from_f32(&self.spec, &self.phi);
+        let run = |y_path: &[f64], sign: f64| -> AdjointGrad {
+            let dys = self.path_increments(y_path, b);
+            let h0 = self.cde_initial(&phi64, y_path, b);
+            let m_ref = &m64;
+            adjoint_solve_batched_steps(
+                &disc,
+                &dys,
+                &h0,
+                b,
+                T0,
+                T1,
+                n,
+                BackwardMode::Reconstruct,
+                false,
+                &self.opts,
+                &|k, _p0, cl, _z, lz| {
+                    if k == n {
+                        for (i, &mi) in m_ref.iter().enumerate() {
+                            let w = sign * mi / b as f64;
+                            for q in 0..cl {
+                                lz[i * cl + q] += w;
+                            }
+                        }
+                    }
+                },
+            )
+        };
+        let gf = run(&y_fake, -1.0);
+        let gr = run(&y_real_lanes, 1.0);
+        let loss_d = self.mean_score(&m64, &gr, b) - self.mean_score(&m64, &gf, b);
+
+        // φ-gradient: CDE solves (fake then real, matching the reference
+        // accumulation order), ξ chains, then the m readout.
+        let mut gphi = gf.dtheta.clone();
+        for (g, &r) in gphi.iter_mut().zip(gr.dtheta.iter()) {
+            *g += r;
+        }
+        self.chain_xi(&phi64, &y_fake, &gf.dy0, b, &mut gphi, None);
+        self.chain_xi(&phi64, &y_real_lanes, &gr.dy0, b, &mut gphi, None);
+        for i in 0..dh {
+            let mut mean_r = 0.0f64;
+            let mut mean_f = 0.0f64;
+            for p in 0..b {
+                mean_r += gr.terminal[i * b + p];
+                mean_f += gf.terminal[i * b + p];
+            }
+            gphi[self.m_off + i] += (mean_r - mean_f) / b as f64;
+        }
+        (loss_d, gphi)
+    }
+
+    /// One generator update's loss and θ-gradient: CDE adjoint with `ΔY`
+    /// cotangents, chain onto the generated path (increments + `Y₀` via `ξ`
+    /// + readout `ℓ`), then the generator adjoint with per-step cotangent
+    /// injection, and the `ζ` chain at the initial condition.
+    fn gen_grads(&mut self) -> (f64, Vec<f64>) {
+        let b = self.batch;
+        let (x, y, dh) = (self.spec.state, self.spec.data_dim, self.spec.disc_state);
+        let n = self.seq_len - 1;
+        let v_dim = self.spec.init_noise;
+        let (v, dws) = self.draw_noise();
+        let theta64 = widen_params(&self.theta);
+        let phi64 = widen_params(&self.phi);
+        let m64 = phi64[self.m_off..self.m_off + dh].to_vec();
+
+        let gen = NeuralGeneratorBatch::from_f32(&self.spec, &self.theta);
+        let z0 = self.initial_state(&theta64, &v, b);
+        let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
+            &gen, &dws, &z0, b, T0, T1, n, &self.opts,
+        );
+        let y_path = self.readout(&theta64, &x_traj, b);
+
+        // Discriminator response + backward: loss_g = E_p[m · H_T], so the
+        // terminal cotangent is +m/B; ddw gives ∂loss/∂ΔY.
+        let disc = NeuralDiscriminatorBatch::from_f32(&self.spec, &self.phi);
+        let dys = self.path_increments(&y_path, b);
+        let h0 = self.cde_initial(&phi64, &y_path, b);
+        let m_ref = &m64;
+        let gcde = adjoint_solve_batched_steps(
+            &disc,
+            &dys,
+            &h0,
+            b,
+            T0,
+            T1,
+            n,
+            BackwardMode::Reconstruct,
+            true,
+            &self.opts,
+            &|k, _p0, cl, _z, lz| {
+                if k == n {
+                    for (i, &mi) in m_ref.iter().enumerate() {
+                        let w = mi / b as f64;
+                        for q in 0..cl {
+                            lz[i * cl + q] += w;
+                        }
+                    }
+                }
+            },
+        );
+        let loss_g = self.mean_score(&m64, &gcde, b);
+
+        // Path cotangent: ΔY_k = Y_{k+1} − Y_k chains the increment
+        // cotangents onto the grid points; Y₀ additionally feeds ξ.
+        let mut y_cot = vec![0.0f64; (n + 1) * y * b];
+        for k in 0..n {
+            for c in 0..y {
+                for p in 0..b {
+                    let d = gcde.ddw[(k * y + c) * b + p];
+                    y_cot[((k + 1) * y + c) * b + p] += d;
+                    y_cot[(k * y + c) * b + p] -= d;
+                }
+            }
+        }
+        let mut phi_scratch = vec![0.0f64; phi64.len()];
+        {
+            let (head, _) = y_cot.split_at_mut(y * b);
+            self.chain_xi(&phi64, &y_path, &gcde.dy0, b, &mut phi_scratch, Some(head));
+        }
+
+        // Through the affine readout ℓ: X-cotangents for the solve, ℓ-grads
+        // for θ.
+        let mut x_cot = vec![0.0f64; (n + 1) * x * b];
+        for k in 0..=n {
+            for i in 0..x {
+                for c in 0..y {
+                    let wic = theta64[self.ell_w_off + i * y + c];
+                    for p in 0..b {
+                        x_cot[(k * x + i) * b + p] += wic * y_cot[(k * y + c) * b + p];
+                    }
+                }
+            }
+        }
+
+        // Generator adjoint: the loss read the whole X trajectory, so the
+        // cotangents inject per step during the backward sweep.
+        let x_cot_ref = &x_cot;
+        let ggen = adjoint_solve_batched_steps(
+            &gen,
+            &dws,
+            &z0,
+            b,
+            T0,
+            T1,
+            n,
+            BackwardMode::Reconstruct,
+            false,
+            &self.opts,
+            &|k, p0, cl, _z, lz| {
+                let blk = &x_cot_ref[k * x * b..(k + 1) * x * b];
+                for i in 0..x {
+                    for q in 0..cl {
+                        lz[i * cl + q] += blk[i * b + p0 + q];
+                    }
+                }
+            },
+        );
+        let mut gtheta = ggen.dtheta;
+
+        // ζ chain at the initial condition (ascending path order).
+        let mut gv = vec![0.0f64; v_dim];
+        let mut dz0p = vec![0.0f64; x];
+        for p in 0..b {
+            for i in 0..x {
+                dz0p[i] = ggen.dy0[i * b + p];
+            }
+            self.zeta.vjp(&theta64, &v[p * v_dim..(p + 1) * v_dim], &dz0p, &mut gv, &mut gtheta);
+        }
+
+        // ℓ gradients: g_w[i][c] = Σ_k Σ_p X·cot, g_b[c] = Σ_k Σ_p cot.
+        for k in 0..=n {
+            for i in 0..x {
+                for c in 0..y {
+                    let mut acc = gtheta[self.ell_w_off + i * y + c];
+                    for p in 0..b {
+                        acc += x_traj[(k * x + i) * b + p] * y_cot[(k * y + c) * b + p];
+                    }
+                    gtheta[self.ell_w_off + i * y + c] = acc;
+                }
+            }
+            for c in 0..y {
+                let mut acc = gtheta[self.ell_b_off + c];
+                for p in 0..b {
+                    acc += y_cot[(k * y + c) * b + p];
+                }
+                gtheta[self.ell_b_off + c] = acc;
+            }
+        }
+        (loss_g, gtheta)
+    }
+
+    /// Final generator weights: the stochastic weight average if available.
+    pub fn final_theta(&self) -> Vec<f32> {
+        if self.swa.count() > 0 {
+            self.swa.average()
+        } else {
+            self.theta.clone()
+        }
+    }
+
+    /// Generate `n_samples` series from the (averaged) generator — native
+    /// forward solves, no runtime required.
+    pub fn sample(&mut self, n_samples: usize) -> Result<TimeSeriesDataset> {
+        let theta = self.final_theta();
+        let theta64 = widen_params(&theta);
+        let (y, w, v_dim) = (self.spec.data_dim, self.spec.noise, self.spec.init_noise);
+        let n = self.seq_len - 1;
+        let eb = self.eval_batch;
+        let gen = NeuralGeneratorBatch::from_f32(&self.spec, &theta);
+        let mut eval_noise = StepNoise::new(NoiseBackend::Interval, T0, T1, eb * w, 0xE7A1);
+        let mut values = Vec::with_capacity(n_samples * self.seq_len * y);
+        let mut v32 = vec![0.0f32; eb * v_dim];
+        let mut dws32 = vec![0.0f32; n * eb * w];
+        let mut produced = 0;
+        while produced < n_samples {
+            eval_noise.fill_normals(&mut v32);
+            eval_noise.fill(&self.ts, &mut dws32);
+            let v = widen_params(&v32);
+            let dws = widen_increments(&dws32, n, w, eb);
+            let z0 = self.initial_state(&theta64, &v, eb);
+            let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
+                &gen, &dws, &z0, eb, T0, T1, n, &self.opts,
+            );
+            let y_path = self.readout(&theta64, &x_traj, eb);
+            let take = (n_samples - produced).min(eb);
+            for p in 0..take {
+                for k in 0..self.seq_len {
+                    for c in 0..y {
+                        values.push(y_path[(k * y + c) * eb + p] as f32);
+                    }
+                }
+            }
+            produced += take;
+        }
+        Ok(TimeSeriesDataset {
+            n: n_samples,
+            seq_len: self.seq_len,
+            channels: y,
+            values,
+            times: self.ts.iter().map(|&t| t as f64).collect(),
+            labels: None,
+        })
+    }
+}
+
+/// The AOT-executable training path (PJRT runtime): the Table-11
+/// gradient-penalty baseline and the non-reversible solvers live here.
+#[cfg(feature = "pjrt")]
+impl GanTrainer {
+    /// Build from a runtime + manifest (hyperparameters and layouts come
+    /// from `artifacts/manifest.json`, as `python/compile/aot.py` records
+    /// them).
+    pub fn from_runtime(rt: &Runtime, cfg: &TrainConfig, total_steps: usize) -> Result<Self> {
+        let model = format!("gan_{}", cfg.dataset.as_str());
+        let spec_m = rt.manifest.model(&model)?;
+        let gl = spec_m.gen_layout.clone();
+        let dl = spec_m.disc_layout.clone();
+        let hy = |k: &str| rt.manifest.hyper(&model, k);
+        let spec = GanNetSpec {
+            data_dim: hy("y")? as usize,
+            state: hy("x")? as usize,
+            hidden: hy("h")? as usize,
+            noise: hy("w")? as usize,
+            init_noise: hy("v")? as usize,
+            disc_state: hy("dh")? as usize,
+            disc_hidden: hy("dhh")? as usize,
+        };
+        let seq_len = hy("seq_len")? as usize;
+        let batch = hy("batch")? as usize;
+        let eval_batch = hy("eval_batch")? as usize;
+        Self::assemble(cfg, spec, seq_len, gl, dl, batch, eval_batch, total_steps)
     }
 
     fn exec_name(&self, kind: &str) -> String {
         format!("{}_{}_{}", self.model, self.solver.as_str(), kind)
     }
 
-    /// One adversarial round: a discriminator step then a generator step.
-    pub fn train_step(
+    /// One adversarial round through the AOT gradient executables.
+    pub fn train_step_runtime(
         &mut self,
         rt: &mut Runtime,
         data: &TimeSeriesDataset,
         rng: &mut crate::brownian::SplitPrng,
     ) -> Result<GanStepStats> {
         let n = self.seq_len - 1;
-        let mut v = vec![0.0f32; self.batch * self.v_dim];
-        let mut dws = vec![0.0f32; n * self.batch * self.w];
+        let w = self.spec.noise;
+        let mut v = vec![0.0f32; self.batch * self.spec.init_noise];
+        let mut dws = vec![0.0f32; n * self.batch * w];
 
         // ---- Discriminator step.
         let (y_real, _) = data.sample_batch(self.batch, rng);
@@ -154,10 +718,10 @@ impl GanTrainer {
             &[
                 (&self.theta, &[self.theta.len()]),
                 (&self.phi, &[self.phi.len()]),
-                (&v, &[self.batch, self.v_dim]),
+                (&v, &[self.batch, self.spec.init_noise]),
                 (&self.ts, &[self.seq_len]),
-                (&dws, &[n, self.batch, self.w]),
-                (&y_real, &[self.batch, self.seq_len, self.y_dim]),
+                (&dws, &[n, self.batch, w]),
+                (&y_real, &[self.batch, self.seq_len, self.spec.data_dim]),
             ],
         )?;
         let loss_d = out[0][0];
@@ -165,8 +729,6 @@ impl GanTrainer {
         anyhow::ensure!(gphi.len() == self.phi.len(), "disc grad shape");
         self.opt_d.step(&mut self.phi, gphi);
         if self.clip {
-            // Section 5: clip the CDE vector fields f_φ, g_φ to Lipschitz ≤ 1
-            // (layout cached at construction — no per-step manifest clone).
             self.disc_layout.clip_lipschitz(&mut self.phi, field_filter);
         }
 
@@ -178,9 +740,9 @@ impl GanTrainer {
             &[
                 (&self.theta, &[self.theta.len()]),
                 (&self.phi, &[self.phi.len()]),
-                (&v, &[self.batch, self.v_dim]),
+                (&v, &[self.batch, self.spec.init_noise]),
                 (&self.ts, &[self.seq_len]),
-                (&dws, &[n, self.batch, self.w]),
+                (&dws, &[n, self.batch, w]),
             ],
         )?;
         let loss_g = out[0][0];
@@ -188,32 +750,26 @@ impl GanTrainer {
         anyhow::ensure!(gtheta.len() == self.theta.len(), "gen grad shape");
         self.opt_g.step(&mut self.theta, gtheta);
         self.steps_done += 1;
-        // SWA over the last 50% of training (Appendix F.2).
         if self.steps_done * 2 >= self.total_steps {
             self.swa.update(&self.theta);
         }
         Ok(GanStepStats { loss_g, loss_d })
     }
 
-    /// Final generator weights: the stochastic weight average if available.
-    pub fn final_theta(&self) -> Vec<f32> {
-        if self.swa.count() > 0 {
-            self.swa.average()
-        } else {
-            self.theta.clone()
-        }
-    }
-
-    /// Generate `n_samples` series from the (averaged) generator.
-    pub fn sample(&mut self, rt: &mut Runtime, n_samples: usize) -> Result<TimeSeriesDataset> {
+    /// Generate `n_samples` series through the AOT sampling executable.
+    pub fn sample_runtime(
+        &mut self,
+        rt: &mut Runtime,
+        n_samples: usize,
+    ) -> Result<TimeSeriesDataset> {
         let theta = self.final_theta();
         let n = self.seq_len - 1;
         let eb = self.eval_batch;
-        let mut values = Vec::with_capacity(n_samples * self.seq_len * self.y_dim);
-        let mut v = vec![0.0f32; eb * self.v_dim];
-        let mut dws = vec![0.0f32; n * eb * self.w];
-        let mut eval_noise =
-            StepNoise::new(NoiseBackend::Interval, -0.5, 0.5, eb * self.w, 0xE7A1);
+        let (y, w, v_dim) = (self.spec.data_dim, self.spec.noise, self.spec.init_noise);
+        let mut values = Vec::with_capacity(n_samples * self.seq_len * y);
+        let mut v = vec![0.0f32; eb * v_dim];
+        let mut dws = vec![0.0f32; n * eb * w];
+        let mut eval_noise = StepNoise::new(NoiseBackend::Interval, T0, T1, eb * w, 0xE7A1);
         let mut produced = 0;
         while produced < n_samples {
             eval_noise.fill_normals(&mut v);
@@ -222,19 +778,19 @@ impl GanTrainer {
                 &self.exec_name("sample"),
                 &[
                     (&theta, &[theta.len()]),
-                    (&v, &[eb, self.v_dim]),
+                    (&v, &[eb, v_dim]),
                     (&self.ts, &[self.seq_len]),
-                    (&dws, &[n, eb, self.w]),
+                    (&dws, &[n, eb, w]),
                 ],
             )?;
             let take = (n_samples - produced).min(eb);
-            values.extend_from_slice(&out[0][..take * self.seq_len * self.y_dim]);
+            values.extend_from_slice(&out[0][..take * self.seq_len * y]);
             produced += take;
         }
         Ok(TimeSeriesDataset {
             n: n_samples,
             seq_len: self.seq_len,
-            channels: self.y_dim,
+            channels: y,
             values,
             times: self.ts.iter().map(|&t| t as f64).collect(),
             labels: None,
@@ -244,6 +800,22 @@ impl GanTrainer {
 
 /// Clip filter: the discriminator's CDE vector fields (Section 5 applies
 /// the Lipschitz constraint to `f_φ` and `g_φ`).
-fn field_filter(name: &str) -> bool {
+pub fn field_filter(name: &str) -> bool {
     name.starts_with("f.") || name.starts_with("g.")
+}
+
+/// Widen a filled `[n][batch, w]` `f32` increment buffer (the
+/// [`StepNoise::fill`] layout the AOT executables consume) into the batch
+/// engine's stored SoA form over the normalised `[T0, T1]` grid.
+fn widen_increments(dws32: &[f32], n: usize, w: usize, batch: usize) -> StoredBatchNoise {
+    debug_assert_eq!(dws32.len(), n * batch * w);
+    let mut dws = StoredBatchNoise::zeros(T0, T1, n, w, batch);
+    for k in 0..n {
+        for p in 0..batch {
+            for j in 0..w {
+                dws.set(k, j, p, dws32[(k * batch + p) * w + j] as f64);
+            }
+        }
+    }
+    dws
 }

@@ -1,10 +1,13 @@
-//! Training orchestration — the Layer-3 event loop.
+//! Training orchestration — the coordinator layer's event loop.
 //!
 //! * [`gan::GanTrainer`] — adversarial training of SDE-GANs with Adadelta,
-//!   weight clipping (Section 5) or the gradient-penalty baseline, and SWA;
-//! * [`latent::LatentTrainer`] — ELBO training of Latent SDEs with Adam;
-//! * [`noise`] — Brownian-Interval/Virtual-Tree noise plumbing into the
-//!   PJRT executables;
+//!   weight clipping (Section 5) and SWA, **natively** on the batch +
+//!   adjoint engines (no artifacts); the AOT-executable path and the
+//!   gradient-penalty baseline sit behind the `pjrt` feature;
+//! * [`latent::LatentTrainer`] — ELBO training of Latent SDEs with Adam
+//!   (still runtime-driven);
+//! * [`noise`] — Brownian-Interval/Virtual-Tree noise plumbing shared by
+//!   both backends;
 //! * [`gradient_error`] — the Figure-2/Table-6 experiment driver;
 //! * [`eval`] — the Appendix-F.1 metric battery over trained models.
 

@@ -3,28 +3,35 @@
 //! A Rust + JAX + Pallas reproduction of *Efficient and Accurate Gradients
 //! for Neural SDEs* (Kidger, Foster, Li, Lyons — NeurIPS 2021).
 //!
-//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//! The crate is a **four-layer native stack** (the historical JAX/PJRT
+//! lowering survives as an optional backend):
 //!
-//! * Layer 1 (build time): Pallas kernels for the fused LipSwish-MLP vector
-//!   fields and the reversible-Heun state update (`python/compile/kernels/`).
-//! * Layer 2 (build time): the Neural SDE / Neural CDE / Latent SDE models
-//!   and their optimise-then-discretise adjoints in JAX, AOT-lowered to HLO
-//!   text (`python/compile/`).
-//! * Layer 3 (this crate, runtime): the paper's coordination contributions —
-//!   the [`brownian::BrownianInterval`] noise data structure (persistent and
-//!   [`brownian::BrownianInterval::reseed`]-able across training steps), the
-//!   [`solvers::ReversibleHeun`] algebraically-reversible solver and its
-//!   batched structure-of-arrays twin ([`solvers::BatchReversibleHeun`]),
-//!   the multi-threaded batch solve engine ([`solvers::integrate_batched`]),
-//!   training orchestration ([`coordinator`]) driving PJRT executables,
-//!   optimisers with the paper's weight-clipping scheme ([`nn`]), datasets
-//!   ([`data`]), and evaluation metrics ([`metrics`]).
+//! * Neural layer ([`nn`]): flat-parameter layouts with native constructors
+//!   ([`nn::GanNetSpec`] — no manifest JSON required), the LipSwish-MLP
+//!   forward + analytic VJP in per-path and SoA-batched form
+//!   ([`nn::mlp`]), optimisers, the paper's **weight clipping**
+//!   ([`nn::ParamLayout::clip_lipschitz`]) and stochastic weight averaging.
+//! * Solver layer ([`solvers`]): the [`solvers::ReversibleHeun`] method and
+//!   its batched SoA twin, the multi-threaded batch engine
+//!   ([`solvers::integrate_batched`]), and the **neural vector fields** as
+//!   native systems ([`solvers::neural`]: the SDE-GAN generator and the
+//!   neural-CDE discriminator, per-path and hand-batched).
+//! * Adjoint layer ([`solvers::adjoint`]): exact reverse-mode gradients by
+//!   backward reconstruction, from terminal losses up to whole-trajectory
+//!   losses (per-step cotangent injection) and increment cotangents for
+//!   data-driven CDEs.
+//! * Coordinator layer ([`coordinator`]): end-to-end **in-Rust SDE-GAN
+//!   training** ([`coordinator::GanTrainer`] — generator solve →
+//!   discriminator CDE → adjoint gradients → Adadelta + clipping + SWA) on
+//!   [`brownian::BrownianInterval`] noise, plus datasets ([`data`]) and
+//!   evaluation metrics ([`metrics`]).
 //!
-//! Python never runs on the training path: `make artifacts` lowers the JAX
-//! programs once, and the Rust binary is self-contained afterwards. The
-//! PJRT execution layer sits behind the off-by-default `pjrt` cargo
-//! feature; the default build substitutes a manifest-only stub runtime so
-//! the crate builds and tests offline.
+//! Python never runs on the training path, and the default build needs no
+//! artifacts at all: `cargo run --example sde_gan_ou` trains natively. The
+//! AOT/PJRT execution layer (Latent SDE, gradient-penalty baseline,
+//! non-reversible training solvers) sits behind the off-by-default `pjrt`
+//! cargo feature; the default build substitutes a manifest-only stub
+//! runtime so the crate builds and tests offline.
 //!
 //! ## Performance architecture
 //!
@@ -80,6 +87,19 @@
 //! the forward pass ([`solvers::GridReplayNoise`] pulls a whole grid out of
 //! a Brownian source in one `fill_grid` descent and serves it right-to-left
 //! — the Brownian Interval's reason for existing).
+//!
+//! The adjoint extends beyond terminal losses: [`solvers::adjoint_solve_steps`]
+//! injects per-step loss cotangents during the backward sweep (a
+//! path-dependent discriminator reading the whole trajectory backpropagates
+//! exactly) and accumulates increment cotangents `∂L/∂ΔW`
+//! ([`solvers::AdjointGrad::ddw`]) so CDEs driven by data increments chain
+//! onto the driving path. The neural vector fields ([`solvers::neural`])
+//! implement the same VJP traits natively over SoA lanes via the batched
+//! LipSwish-MLP kernels ([`nn::mlp`]), preserving batched ≡ per-path
+//! bit-identity through the whole GAN training step. Both chunk fan-outs —
+//! forward and adjoint — share one work-stealing scheduler
+//! ([`solvers::map_chunks`]), whose results are keyed by chunk index so
+//! schedules can never affect bits.
 //!
 //! ## Quickstart
 //!

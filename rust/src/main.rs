@@ -47,7 +47,6 @@ fn cmd_train(mut args: Args) -> anyhow::Result<()> {
     let config_path = args.get("config");
     let mut cfg = TrainConfig::load(config_path.as_deref(), &mut args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let mut rt = load_runtime(&cfg.artifacts_dir)?;
     let data = build_dataset(&cfg);
     let (train, _val, test) = data.split();
     let mut rng = SplitPrng::new(cfg.seed);
@@ -61,7 +60,9 @@ fn cmd_train(mut args: Args) -> anyhow::Result<()> {
     );
     match cfg.dataset {
         DatasetKind::Air => {
+            // The Latent SDE still runs through the AOT executables.
             cfg.lr_init = 4e-3;
+            let mut rt = load_runtime(&cfg.artifacts_dir)?;
             let mut tr = LatentTrainer::new(&rt, &cfg)?;
             for step in 0..cfg.steps {
                 let loss = tr.train_step(&mut rt, &train, &mut rng)?;
@@ -73,14 +74,47 @@ fn cmd_train(mut args: Args) -> anyhow::Result<()> {
             println!("{}", evaluate_generator(&test, &fake, 7).row());
         }
         _ => {
-            let mut tr = GanTrainer::new(&rt, &cfg, cfg.steps)?;
+            // SDE-GANs train natively (reversible Heun + clipping) — no
+            // artifacts required. Non-reversible solvers and the Table-11
+            // gradient-penalty baseline (--no-clip) only exist as AOT
+            // executables, so those requests route to the pjrt runtime.
+            let needs_runtime =
+                cfg.solver != neuralsde::config::SolverKind::ReversibleHeun || !cfg.clip;
+            if needs_runtime {
+                #[cfg(feature = "pjrt")]
+                {
+                    let mut rt = load_runtime(&cfg.artifacts_dir)?;
+                    let mut tr = GanTrainer::from_runtime(&rt, &cfg, cfg.steps)?;
+                    for step in 0..cfg.steps {
+                        let s = tr.train_step_runtime(&mut rt, &train, &mut rng)?;
+                        if step % 25 == 0 {
+                            println!(
+                                "step {step:>4}  loss_g {:+.4}  loss_d {:+.4}",
+                                s.loss_g, s.loss_d
+                            );
+                        }
+                    }
+                    let fake = tr.sample_runtime(&mut rt, test.n)?;
+                    println!("{}", evaluate_generator(&test, &fake, 7).row());
+                    return Ok(());
+                }
+                #[cfg(not(feature = "pjrt"))]
+                anyhow::bail!(
+                    "--solver {} with clip={} trains through the AOT executables: \
+                     rebuild with --features pjrt and run `make artifacts` (the \
+                     native backend covers reversible_heun + clipping)",
+                    cfg.solver.as_str(),
+                    cfg.clip
+                );
+            }
+            let mut tr = GanTrainer::new(&cfg, cfg.steps)?;
             for step in 0..cfg.steps {
-                let s = tr.train_step(&mut rt, &train, &mut rng)?;
+                let s = tr.train_step(&train, &mut rng)?;
                 if step % 25 == 0 {
                     println!("step {step:>4}  loss_g {:+.4}  loss_d {:+.4}", s.loss_g, s.loss_d);
                 }
             }
-            let fake = tr.sample(&mut rt, test.n)?;
+            let fake = tr.sample(test.n)?;
             println!("{}", evaluate_generator(&test, &fake, 7).row());
         }
     }

@@ -1,0 +1,528 @@
+//! Native LipSwish-MLP forward passes and analytic VJPs.
+//!
+//! This is the in-Rust twin of `python/compile/kernels/ref.py`'s
+//! `mlp2_lipswish`: a two-layer MLP with the paper's LipSwish hidden
+//! activation (Section 5 — 1-Lipschitz, so weight clipping alone bounds the
+//! whole network's Lipschitz constant) and an optional bounded final
+//! nonlinearity. Parameters live inside the **flat `f32`/`f64` vectors** the
+//! training loop owns, addressed through a [`Mlp`] descriptor derived from a
+//! [`ParamLayout`] (`w1 [in, h]`, `b1 [h]`, `w2 [h, out]`, `b2 [out]`,
+//! contiguous, row-major — the `nets.add_mlp` contract).
+//!
+//! Every entry point comes in a per-path and an SoA-batched form, and the
+//! batched form follows the batch engine's association rule — the matrix
+//! reductions run on the broadcast kernels of [`crate::solvers::simd`]
+//! (ascending index order, matrix entry broadcast across path lanes) and the
+//! nonlinearities are the *same scalar functions* applied lane-wise — so
+//! batched evaluation and batched VJPs are **bit-for-bit equal** to the
+//! per-path forms. The neural vector fields in [`crate::solvers::neural`]
+//! inherit their batched-≡-per-path guarantee directly from this module.
+//!
+//! The VJP recomputes the forward activations at the evaluation point
+//! (the adjoint engine only retains solver states, not MLP internals), and
+//! accumulates `∂L/∂θ` with `+=` into the full flat gradient vector at the
+//! descriptor's offsets; the input gradient is written zero-seeded.
+
+use crate::nn::{ParamKind, ParamLayout};
+use crate::solvers::simd;
+
+/// LipSwish scale: `ρ(x) = 0.909 · x · sigmoid(x)` has Lipschitz constant
+/// exactly 1 (Chen et al. 2019) — the paper's Section-5 activation.
+pub const LIPSWISH_SCALE: f64 = 0.909;
+
+/// Numerically standard sigmoid.
+#[inline]
+pub fn sigmoid(u: f64) -> f64 {
+    1.0 / (1.0 + (-u).exp())
+}
+
+/// LipSwish activation `ρ(u) = 0.909 · u · σ(u)` (1-Lipschitz, smooth).
+#[inline]
+pub fn lipswish(u: f64) -> f64 {
+    LIPSWISH_SCALE * u * sigmoid(u)
+}
+
+/// Derivative `ρ'(u) = 0.909 · (σ(u) + u σ(u)(1 − σ(u)))`; its maximum is
+/// `0.909 · 1.0998… < 1`, which is the slope bound the Lipschitz argument
+/// needs.
+#[inline]
+pub fn dlipswish(u: f64) -> f64 {
+    let s = sigmoid(u);
+    LIPSWISH_SCALE * (s + u * s * (1.0 - s))
+}
+
+/// Final nonlinearity of a [`Mlp`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// No output nonlinearity (the generator drift `μ_θ`, `ζ`, `ξ`).
+    Identity,
+    /// `tanh` (the diffusions `σ_θ`, and the CDE fields `f_φ`, `g_φ` — keeps
+    /// them bounded).
+    Tanh,
+    /// `sigmoid` (the Figure-2 gradient-error test problem's fields).
+    Sigmoid,
+}
+
+#[inline]
+fn apply_final(act: Activation, u: f64) -> f64 {
+    match act {
+        Activation::Identity => u,
+        Activation::Tanh => u.tanh(),
+        Activation::Sigmoid => sigmoid(u),
+    }
+}
+
+/// Derivative factor of the final nonlinearity at pre-activation `u`.
+#[inline]
+fn dfinal(act: Activation, u: f64) -> f64 {
+    match act {
+        Activation::Identity => 1.0,
+        Activation::Tanh => {
+            let th = u.tanh();
+            1.0 - th * th
+        }
+        Activation::Sigmoid => {
+            let s = sigmoid(u);
+            s * (1.0 - s)
+        }
+    }
+}
+
+/// Descriptor of one two-layer LipSwish MLP inside a flat parameter vector:
+/// `w1 [in, h]` row-major at `offset`, then `b1 [h]`, `w2 [h, out]`
+/// row-major, `b2 [out]`, all contiguous.
+#[derive(Clone, Copy, Debug)]
+pub struct Mlp {
+    /// Input width.
+    pub in_dim: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Output width.
+    pub out_dim: usize,
+    /// Offset of `w1` within the flat parameter vector.
+    pub offset: usize,
+    /// Output nonlinearity.
+    pub final_act: Activation,
+}
+
+impl Mlp {
+    /// Describe the MLP registered as `{prefix}.w1 / .b1 / .w2 / .b2` in a
+    /// [`ParamLayout`], validating shapes and contiguity.
+    pub fn from_layout(
+        layout: &ParamLayout,
+        prefix: &str,
+        final_act: Activation,
+    ) -> anyhow::Result<Self> {
+        let get = |suffix: &str| {
+            layout
+                .find(&format!("{prefix}.{suffix}"))
+                .ok_or_else(|| anyhow::anyhow!("layout missing {prefix}.{suffix}"))
+        };
+        let w1 = get("w1")?;
+        let b1 = get("b1")?;
+        let w2 = get("w2")?;
+        let b2 = get("b2")?;
+        anyhow::ensure!(w1.shape.len() == 2 && w2.shape.len() == 2, "{prefix}: w1/w2 not 2-D");
+        let (in_dim, hidden) = (w1.shape[0], w1.shape[1]);
+        let out_dim = w2.shape[1];
+        anyhow::ensure!(w2.shape[0] == hidden, "{prefix}: w2 rows != hidden");
+        anyhow::ensure!(b1.shape == [hidden] && b2.shape == [out_dim], "{prefix}: bias shapes");
+        anyhow::ensure!(
+            b1.offset == w1.offset + in_dim * hidden
+                && w2.offset == b1.offset + hidden
+                && b2.offset == w2.offset + hidden * out_dim,
+            "{prefix}: tensors not contiguous"
+        );
+        Ok(Self { in_dim, hidden, out_dim, offset: w1.offset, final_act })
+    }
+
+    /// Number of scalars the MLP owns in the flat vector.
+    pub fn param_len(&self) -> usize {
+        self.in_dim * self.hidden + self.hidden + self.hidden * self.out_dim + self.out_dim
+    }
+
+    #[inline]
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let w1 = self.offset;
+        let b1 = w1 + self.in_dim * self.hidden;
+        let w2 = b1 + self.hidden;
+        let b2 = w2 + self.hidden * self.out_dim;
+        (w1, b1, w2, b2)
+    }
+
+    /// Per-path forward: `out = final(lipswish(x·w1 + b1)·w2 + b2)`.
+    ///
+    /// The reductions run over the input index in ascending order with the
+    /// bias as the seed — the association the batched form reproduces
+    /// lane-for-lane.
+    pub fn forward(&self, params: &[f64], x: &[f64], out: &mut [f64]) {
+        let (h, o) = (self.hidden, self.out_dim);
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(out.len(), o);
+        let (w1o, b1o, w2o, b2o) = self.offsets();
+        let mut a1 = vec![0.0f64; h];
+        for j in 0..h {
+            let mut acc = params[b1o + j];
+            for i in 0..self.in_dim {
+                acc += params[w1o + i * h + j] * x[i];
+            }
+            a1[j] = lipswish(acc);
+        }
+        for k in 0..o {
+            let mut acc = params[b2o + k];
+            for j in 0..h {
+                acc += params[w2o + j * o + k] * a1[j];
+            }
+            out[k] = apply_final(self.final_act, acc);
+        }
+    }
+
+    /// Batched-SoA forward over `[in_dim × batch]` lanes into
+    /// `[out_dim × batch]` lanes — bit-identical per path to [`forward`]
+    /// (bias-seeded strided reductions on
+    /// [`simd::broadcast_matvec_strided_seeded`], then the same scalar
+    /// nonlinearities lane-wise).
+    ///
+    /// [`forward`]: Self::forward
+    pub fn forward_batch(&self, params: &[f64], x: &[f64], out: &mut [f64], batch: usize) {
+        let (h, o, b) = (self.hidden, self.out_dim, batch);
+        debug_assert_eq!(x.len(), self.in_dim * b);
+        debug_assert_eq!(out.len(), o * b);
+        let (w1o, b1o, w2o, b2o) = self.offsets();
+        let w1 = &params[w1o..w1o + self.in_dim * h];
+        let w2 = &params[w2o..w2o + h * o];
+        let mut a1 = vec![0.0f64; h * b];
+        for j in 0..h {
+            let lane = &mut a1[j * b..(j + 1) * b];
+            lane.fill(params[b1o + j]);
+            simd::broadcast_matvec_strided_seeded(&w1[j..], h, x, lane);
+        }
+        for v in a1.iter_mut() {
+            *v = lipswish(*v);
+        }
+        for k in 0..o {
+            let lane = &mut out[k * b..(k + 1) * b];
+            lane.fill(params[b2o + k]);
+            simd::broadcast_matvec_strided_seeded(&w2[k..], o, &a1, lane);
+        }
+        for v in out.iter_mut() {
+            *v = apply_final(self.final_act, *v);
+        }
+    }
+
+    /// Per-path VJP: given the output cotangent `wout`, accumulate
+    /// `∂L/∂θ` (`+=`) into the flat gradient `gth` at this MLP's offsets and
+    /// write the input gradient into `gx` (overwritten, zero-seeded). The
+    /// forward activations are recomputed from `x`.
+    pub fn vjp(&self, params: &[f64], x: &[f64], wout: &[f64], gx: &mut [f64], gth: &mut [f64]) {
+        let (h, o) = (self.hidden, self.out_dim);
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(wout.len(), o);
+        debug_assert_eq!(gx.len(), self.in_dim);
+        let (w1o, b1o, w2o, b2o) = self.offsets();
+        // Recompute pre-activations and hidden activations.
+        let mut u1 = vec![0.0f64; h];
+        let mut a1 = vec![0.0f64; h];
+        for j in 0..h {
+            let mut acc = params[b1o + j];
+            for i in 0..self.in_dim {
+                acc += params[w1o + i * h + j] * x[i];
+            }
+            u1[j] = acc;
+            a1[j] = lipswish(acc);
+        }
+        let mut u2 = vec![0.0f64; o];
+        for k in 0..o {
+            let mut acc = params[b2o + k];
+            for j in 0..h {
+                acc += params[w2o + j * o + k] * a1[j];
+            }
+            u2[k] = acc;
+        }
+        // Backward through the final nonlinearity and the second layer.
+        let mut s2 = vec![0.0f64; o];
+        for k in 0..o {
+            s2[k] = wout[k] * dfinal(self.final_act, u2[k]);
+        }
+        for k in 0..o {
+            gth[b2o + k] += s2[k];
+        }
+        for j in 0..h {
+            for k in 0..o {
+                gth[w2o + j * o + k] += a1[j] * s2[k];
+            }
+        }
+        let mut s1 = vec![0.0f64; h];
+        for j in 0..h {
+            let mut acc = 0.0;
+            for k in 0..o {
+                acc += params[w2o + j * o + k] * s2[k];
+            }
+            s1[j] = acc * dlipswish(u1[j]);
+        }
+        // First layer.
+        for j in 0..h {
+            gth[b1o + j] += s1[j];
+        }
+        for i in 0..self.in_dim {
+            for j in 0..h {
+                gth[w1o + i * h + j] += x[i] * s1[j];
+            }
+        }
+        for i in 0..self.in_dim {
+            let mut acc = 0.0;
+            for j in 0..h {
+                acc += params[w1o + i * h + j] * s1[j];
+            }
+            gx[i] = acc;
+        }
+    }
+
+    /// Batched-SoA VJP, bit-identical per path to [`vjp`]: `gth` holds
+    /// **per-path θ lanes** of the full flat vector
+    /// (`gth[(offset + m) * batch + p]`, the [`BatchSdeVjp`] convention), and
+    /// `gx` (`[in_dim × batch]`) is overwritten zero-seeded.
+    ///
+    /// [`vjp`]: Self::vjp
+    /// [`BatchSdeVjp`]: crate::solvers::BatchSdeVjp
+    pub fn vjp_batch(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        wout: &[f64],
+        gx: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let (h, o, b) = (self.hidden, self.out_dim, batch);
+        debug_assert_eq!(x.len(), self.in_dim * b);
+        debug_assert_eq!(wout.len(), o * b);
+        debug_assert_eq!(gx.len(), self.in_dim * b);
+        let (w1o, b1o, w2o, b2o) = self.offsets();
+        let w1 = &params[w1o..w1o + self.in_dim * h];
+        let w2 = &params[w2o..w2o + h * o];
+        // Recompute pre-activations (u1 kept for ρ', a1 for the rank-one
+        // weight updates) — same bias-seeded strided reductions as forward.
+        let mut u1 = vec![0.0f64; h * b];
+        for j in 0..h {
+            let lane = &mut u1[j * b..(j + 1) * b];
+            lane.fill(params[b1o + j]);
+            simd::broadcast_matvec_strided_seeded(&w1[j..], h, x, lane);
+        }
+        let mut a1 = vec![0.0f64; h * b];
+        for (av, &uv) in a1.iter_mut().zip(u1.iter()) {
+            *av = lipswish(uv);
+        }
+        let mut u2 = vec![0.0f64; o * b];
+        for k in 0..o {
+            let lane = &mut u2[k * b..(k + 1) * b];
+            lane.fill(params[b2o + k]);
+            simd::broadcast_matvec_strided_seeded(&w2[k..], o, &a1, lane);
+        }
+        // s2 = wout ⊙ final'(u2).
+        let mut s2 = vec![0.0f64; o * b];
+        for idx in 0..o * b {
+            s2[idx] = wout[idx] * dfinal(self.final_act, u2[idx]);
+        }
+        for k in 0..o {
+            simd::add(&s2[k * b..(k + 1) * b], &mut gth[(b2o + k) * b..(b2o + k + 1) * b]);
+        }
+        for j in 0..h {
+            for k in 0..o {
+                let slot = w2o + j * o + k;
+                simd::mul_add(
+                    &a1[j * b..(j + 1) * b],
+                    &s2[k * b..(k + 1) * b],
+                    &mut gth[slot * b..(slot + 1) * b],
+                );
+            }
+        }
+        // s1 = (w2 s2) ⊙ ρ'(u1): row j of w2 is contiguous, so the hidden
+        // cotangent is a zero-seeded broadcast reduction (scalar order).
+        let mut s1 = vec![0.0f64; h * b];
+        for j in 0..h {
+            simd::broadcast_matvec(&w2[j * o..(j + 1) * o], &s2, &mut s1[j * b..(j + 1) * b]);
+        }
+        for (sv, &uv) in s1.iter_mut().zip(u1.iter()) {
+            *sv *= dlipswish(uv);
+        }
+        for j in 0..h {
+            simd::add(&s1[j * b..(j + 1) * b], &mut gth[(b1o + j) * b..(b1o + j + 1) * b]);
+        }
+        for i in 0..self.in_dim {
+            for j in 0..h {
+                let slot = w1o + i * h + j;
+                simd::mul_add(
+                    &x[i * b..(i + 1) * b],
+                    &s1[j * b..(j + 1) * b],
+                    &mut gth[slot * b..(slot + 1) * b],
+                );
+            }
+        }
+        for i in 0..self.in_dim {
+            simd::broadcast_matvec(
+                &w1[i * h..(i + 1) * h],
+                &s1,
+                &mut gx[i * b..(i + 1) * b],
+            );
+        }
+    }
+}
+
+/// True when every weight tensor selected by `filter` is entrywise inside
+/// `[-1/fan_in, 1/fan_in]` — the post-[`clip_lipschitz`] invariant the
+/// Lipschitz bound rests on.
+///
+/// [`clip_lipschitz`]: ParamLayout::clip_lipschitz
+pub fn weights_clipped<F: Fn(&str) -> bool>(
+    layout: &ParamLayout,
+    params: &[f32],
+    filter: F,
+) -> bool {
+    layout.tensors.iter().all(|t| {
+        if t.kind != ParamKind::Weight || !filter(&t.name) {
+            return true;
+        }
+        let bound = 1.0 / t.fan_in.max(1) as f32 + 1e-7;
+        params[t.offset..t.offset + t.len()].iter().all(|v| v.abs() <= bound)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brownian::SplitPrng;
+    use crate::nn::layout_from_specs;
+    use crate::util::stats::central_gradient;
+
+    fn demo_mlp(final_act: Activation) -> (Mlp, Vec<f64>) {
+        let layout = layout_from_specs(&[
+            ("t.w1", vec![3, 5], 3, ParamKind::Weight),
+            ("t.b1", vec![5], 3, ParamKind::Bias),
+            ("t.w2", vec![5, 2], 5, ParamKind::Weight),
+            ("t.b2", vec![2], 5, ParamKind::Bias),
+        ]);
+        let mlp = Mlp::from_layout(&layout, "t", final_act).unwrap();
+        let mut rng = SplitPrng::new(11);
+        let params: Vec<f64> =
+            (0..layout.total).map(|_| rng.next_normal_pair().0 * 0.4).collect();
+        (mlp, params)
+    }
+
+    #[test]
+    fn from_layout_reads_dims_and_offsets() {
+        let (mlp, params) = demo_mlp(Activation::Tanh);
+        assert_eq!((mlp.in_dim, mlp.hidden, mlp.out_dim), (3, 5, 2));
+        assert_eq!(mlp.offset, 0);
+        assert_eq!(mlp.param_len(), params.len());
+    }
+
+    #[test]
+    fn lipswish_matches_reference_values() {
+        // ρ(0) = 0, ρ(u) → 0.909·u for large u, ρ(−u) small.
+        assert_eq!(lipswish(0.0), 0.0);
+        assert!((lipswish(10.0) - 0.909 * 10.0 * sigmoid(10.0)).abs() < 1e-15);
+        // Derivative against central differences.
+        for &u in &[-3.0, -0.7, 0.0, 0.4, 2.5] {
+            let h = 1e-6;
+            let fd = (lipswish(u + h) - lipswish(u - h)) / (2.0 * h);
+            assert!((dlipswish(u) - fd).abs() < 1e-8, "u={u}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_per_path() {
+        for act in [Activation::Identity, Activation::Tanh, Activation::Sigmoid] {
+            let (mlp, params) = demo_mlp(act);
+            for &b in &[1usize, 3, 4, 7, 8, 33] {
+                let mut rng = SplitPrng::new(b as u64);
+                let x_soa: Vec<f64> =
+                    (0..3 * b).map(|_| rng.next_normal_pair().0 * 0.5).collect();
+                let mut out_soa = vec![0.0; 2 * b];
+                mlp.forward_batch(&params, &x_soa, &mut out_soa, b);
+                for p in 0..b {
+                    let xp: Vec<f64> = (0..3).map(|i| x_soa[i * b + p]).collect();
+                    let mut op = [0.0; 2];
+                    mlp.forward(&params, &xp, &mut op);
+                    for k in 0..2 {
+                        assert_eq!(out_soa[k * b + p], op[k], "act {act:?} b={b} p={p} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_batch_bit_identical_to_per_path() {
+        for act in [Activation::Identity, Activation::Tanh] {
+            let (mlp, params) = demo_mlp(act);
+            let total = params.len();
+            for &b in &[1usize, 4, 7, 33] {
+                let mut rng = SplitPrng::new(100 + b as u64);
+                let x_soa: Vec<f64> =
+                    (0..3 * b).map(|_| rng.next_normal_pair().0 * 0.5).collect();
+                let w_soa: Vec<f64> =
+                    (0..2 * b).map(|_| rng.next_normal_pair().0).collect();
+                let mut gx_soa = vec![0.0; 3 * b];
+                let mut gth_lanes = vec![0.0; total * b];
+                mlp.vjp_batch(&params, &x_soa, &w_soa, &mut gx_soa, &mut gth_lanes, b);
+                for p in 0..b {
+                    let xp: Vec<f64> = (0..3).map(|i| x_soa[i * b + p]).collect();
+                    let wp: Vec<f64> = (0..2).map(|k| w_soa[k * b + p]).collect();
+                    let mut gx = vec![0.0; 3];
+                    let mut gth = vec![0.0; total];
+                    mlp.vjp(&params, &xp, &wp, &mut gx, &mut gth);
+                    for i in 0..3 {
+                        assert_eq!(gx_soa[i * b + p], gx[i], "gx act {act:?} b={b} p={p}");
+                    }
+                    for m in 0..total {
+                        assert_eq!(
+                            gth_lanes[m * b + p],
+                            gth[m],
+                            "gth act {act:?} b={b} p={p} m={m}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        for act in [Activation::Identity, Activation::Tanh, Activation::Sigmoid] {
+            let (mlp, params) = demo_mlp(act);
+            let x = [0.3, -0.5, 0.8];
+            let wout = [0.7, -1.1];
+            let obs = |pp: &[f64], xx: &[f64]| -> f64 {
+                let mut out = [0.0; 2];
+                mlp.forward(pp, xx, &mut out);
+                out.iter().zip(&wout).map(|(o, w)| o * w).sum()
+            };
+            let mut gx = vec![0.0; 3];
+            let mut gth = vec![0.0; params.len()];
+            mlp.vjp(&params, &x, &wout, &mut gx, &mut gth);
+            let fd_x = central_gradient(|xx| obs(&params, xx), &x, 1e-6);
+            for i in 0..3 {
+                assert!((gx[i] - fd_x[i]).abs() < 1e-8, "act {act:?} gx[{i}]");
+            }
+            let fd_th = central_gradient(|pp| obs(pp, &x), &params, 1e-6);
+            for m in 0..params.len() {
+                assert!((gth[m] - fd_th[m]).abs() < 1e-8, "act {act:?} gth[{m}]");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_clipped_detects_violations() {
+        let layout = layout_from_specs(&[
+            ("f.w1", vec![4, 2], 4, ParamKind::Weight),
+            ("f.b1", vec![2], 4, ParamKind::Bias),
+        ]);
+        let mut p = vec![2.0f32; layout.total];
+        assert!(!weights_clipped(&layout, &p, |n| n.starts_with("f.")));
+        layout.clip_lipschitz(&mut p, |n| n.starts_with("f."));
+        assert!(weights_clipped(&layout, &p, |n| n.starts_with("f.")));
+        // Biases are exempt, and unfiltered tensors are ignored.
+        assert!(weights_clipped(&layout, &p, |_| false));
+    }
+}

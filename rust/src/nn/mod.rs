@@ -11,8 +11,10 @@
 //! contribution: **hard Lipschitz enforcement by weight clipping**
 //! (Section 5) and stochastic weight averaging.
 
+pub mod mlp;
 mod optim;
 
+pub use mlp::{lipswish, weights_clipped, Activation, Mlp};
 pub use optim::{step_f64, Adadelta, Adam, Optimizer, Sgd, StochasticWeightAverage};
 
 use crate::brownian::SplitPrng;
@@ -161,6 +163,89 @@ impl ParamLayout {
     }
 }
 
+/// SDE-GAN network dimensions (the scaled-down Appendix-F.7 defaults of
+/// `python/compile/nets.py::GanSpec`), with **native layout constructors**:
+/// the pure-Rust training path builds its [`ParamLayout`]s from this spec —
+/// same tensor names, shapes, fan-ins and ordering as the JAX
+/// `LayoutBuilder` — so no `artifacts/manifest.json` is required. The
+/// manifest lookup survives only as the `pjrt` runtime path's source of the
+/// same layouts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GanNetSpec {
+    /// Data channels `y`.
+    pub data_dim: usize,
+    /// Generator SDE state dimension `x`.
+    pub state: usize,
+    /// MLP hidden width `h` (shared by generator and discriminator nets).
+    pub hidden: usize,
+    /// Brownian dimension `w` driving the generator.
+    pub noise: usize,
+    /// Initial-noise dimension `v` feeding `ζ_θ`.
+    pub init_noise: usize,
+    /// Discriminator CDE state dimension `dh`.
+    pub disc_state: usize,
+    /// Discriminator hidden width `dhh`.
+    pub disc_hidden: usize,
+}
+
+impl GanNetSpec {
+    /// The paper-scaled defaults for `y` data channels.
+    pub fn for_data_dim(data_dim: usize) -> Self {
+        Self {
+            data_dim,
+            state: 16,
+            hidden: 32,
+            noise: 4,
+            init_noise: 4,
+            disc_state: 16,
+            disc_hidden: 32,
+        }
+    }
+
+    /// Generator layout: `ζ_θ : V → X₀`, vector fields `μ_θ(t, X)`,
+    /// `σ_θ(t, X)` (output `x·w`), affine readout `ℓ_θ : X → Y`.
+    pub fn gen_layout(&self) -> ParamLayout {
+        let (y, x, h, w, v) = (self.data_dim, self.state, self.hidden, self.noise, self.init_noise);
+        layout_from_specs(&[
+            ("zeta.w1", vec![v, h], v, ParamKind::Weight),
+            ("zeta.b1", vec![h], v, ParamKind::Bias),
+            ("zeta.w2", vec![h, x], h, ParamKind::Weight),
+            ("zeta.b2", vec![x], h, ParamKind::Bias),
+            ("mu.w1", vec![1 + x, h], 1 + x, ParamKind::Weight),
+            ("mu.b1", vec![h], 1 + x, ParamKind::Bias),
+            ("mu.w2", vec![h, x], h, ParamKind::Weight),
+            ("mu.b2", vec![x], h, ParamKind::Bias),
+            ("sigma.w1", vec![1 + x, h], 1 + x, ParamKind::Weight),
+            ("sigma.b1", vec![h], 1 + x, ParamKind::Bias),
+            ("sigma.w2", vec![h, x * w], h, ParamKind::Weight),
+            ("sigma.b2", vec![x * w], h, ParamKind::Bias),
+            ("ell.w", vec![x, y], x, ParamKind::Weight),
+            ("ell.b", vec![y], x, ParamKind::Bias),
+        ])
+    }
+
+    /// Discriminator layout: initial map `ξ_φ(t₀, Y₀)`, CDE vector fields
+    /// `f_φ(t, H)`, `g_φ(t, H)` (output `dh·y`), readout vector `m_φ`.
+    pub fn disc_layout(&self) -> ParamLayout {
+        let (y, dh, dhh) = (self.data_dim, self.disc_state, self.disc_hidden);
+        layout_from_specs(&[
+            ("xi.w1", vec![1 + y, dhh], 1 + y, ParamKind::Weight),
+            ("xi.b1", vec![dhh], 1 + y, ParamKind::Bias),
+            ("xi.w2", vec![dhh, dh], dhh, ParamKind::Weight),
+            ("xi.b2", vec![dh], dhh, ParamKind::Bias),
+            ("f.w1", vec![1 + dh, dhh], 1 + dh, ParamKind::Weight),
+            ("f.b1", vec![dhh], 1 + dh, ParamKind::Bias),
+            ("f.w2", vec![dhh, dh], dhh, ParamKind::Weight),
+            ("f.b2", vec![dh], dhh, ParamKind::Bias),
+            ("g.w1", vec![1 + dh, dhh], 1 + dh, ParamKind::Weight),
+            ("g.b1", vec![dhh], 1 + dh, ParamKind::Bias),
+            ("g.w2", vec![dhh, dh * y], dhh, ParamKind::Weight),
+            ("g.b2", vec![dh * y], dhh, ParamKind::Bias),
+            ("m", vec![dh], dh, ParamKind::Other),
+        ])
+    }
+}
+
 /// Build a layout programmatically (used by tests and the pure-Rust
 /// experiment paths that don't go through the JAX manifest).
 pub fn layout_from_specs(specs: &[(&str, Vec<usize>, usize, ParamKind)]) -> ParamLayout {
@@ -250,6 +335,35 @@ mod tests {
         assert!(p[32..40].iter().all(|&v| v == 10.0));
         assert!(p[40..56].iter().all(|&v| v == 0.125));
         assert!(p[56..58].iter().all(|&v| v == 10.0));
+    }
+
+    #[test]
+    fn gan_net_spec_layouts_match_the_jax_builder() {
+        // Mirrors nets.py::GanSpec at the paper-scaled defaults: same tensor
+        // order, shapes and fan-ins, so the flat vectors are interchangeable
+        // with the manifest layouts.
+        let spec = GanNetSpec::for_data_dim(1);
+        let gl = spec.gen_layout();
+        // zeta: 4*32+32+32*16+16, mu: 17*32+32+32*16+16,
+        // sigma: 17*32+32+32*64+64, ell: 16+1.
+        assert_eq!(gl.total, 688 + 1104 + 2688 + 17);
+        assert_eq!(gl.find("mu.w1").unwrap().shape, vec![17, 32]);
+        assert_eq!(gl.find("sigma.w2").unwrap().shape, vec![32, 64]);
+        assert_eq!(gl.find("ell.w").unwrap().fan_in, 16);
+        let dl = spec.disc_layout();
+        // xi: 2*32+32+32*16+16, f: 17*32+32+32*16+16, g: same (y = 1), m: 16.
+        assert_eq!(dl.total, 624 + 1104 + 1104 + 16);
+        assert_eq!(dl.find("m").unwrap().kind, ParamKind::Other);
+        // Every MLP resolves through the descriptor used by the native
+        // vector fields.
+        for (layout, prefix) in
+            [(&gl, "zeta"), (&gl, "mu"), (&gl, "sigma"), (&dl, "xi"), (&dl, "f"), (&dl, "g")]
+        {
+            assert!(
+                Mlp::from_layout(layout, prefix, Activation::Identity).is_ok(),
+                "{prefix} should resolve"
+            );
+        }
     }
 
     #[test]

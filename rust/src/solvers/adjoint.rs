@@ -98,6 +98,29 @@ pub trait SdeVjp: Sde {
         gy: &mut [f64],
         gth: &mut [f64],
     );
+
+    /// Accumulate the **increment** cotangent of the applied diffusion
+    /// `h = g(t, y) · dw`: `gdw[j] += Σ_i g[i][j] v[i]` (ascending `i`,
+    /// seeded on the existing `gdw` entry). This is what lets a solve driven
+    /// by *data* increments — the neural-CDE discriminator, whose controls
+    /// are the path's `ΔY` — backpropagate onto the path itself.
+    ///
+    /// The default evaluates the dense diffusion matrix and contracts;
+    /// implementations with structure (or a cheaper forward) may override,
+    /// keeping the same per-path association.
+    fn diffusion_dw_vjp(&self, t: f64, y: &[f64], v: &[f64], gdw: &mut [f64]) {
+        let e = self.dim();
+        let d = self.noise_dim();
+        let mut g = vec![0.0; e * d];
+        self.diffusion(t, y, &mut g);
+        for j in 0..d {
+            let mut acc = gdw[j];
+            for i in 0..e {
+                acc += g[i * d + j] * v[i];
+            }
+            gdw[j] = acc;
+        }
+    }
 }
 
 /// Analytic VJPs over structure-of-arrays lanes, mirroring [`SdeVjp`] the
@@ -136,6 +159,26 @@ pub trait BatchSdeVjp: BatchSde {
         gth: &mut [f64],
         batch: usize,
     );
+
+    /// Batched [`SdeVjp::diffusion_dw_vjp`] over SoA lanes: `gdw` is
+    /// `[noise_dim * batch]`, seeded-accumulated with the per-path
+    /// association (ascending `i` per lane). Default: dense
+    /// [`BatchSde::diffusion_batch`] evaluation and lane-wise contraction.
+    fn diffusion_dw_vjp_batch(&self, t: f64, y: &[f64], v: &[f64], gdw: &mut [f64], batch: usize) {
+        let e = self.state_dim();
+        let d = self.brownian_dim();
+        let mut g = vec![0.0; e * d * batch];
+        self.diffusion_batch(t, y, &mut g, batch);
+        for j in 0..d {
+            for p in 0..batch {
+                let mut acc = gdw[j * batch + p];
+                for i in 0..e {
+                    acc += g[(i * d + j) * batch + p] * v[i * batch + p];
+                }
+                gdw[j * batch + p] = acc;
+            }
+        }
+    }
 }
 
 /// Blanket adapter: every per-path [`SdeVjp`] is a [`BatchSdeVjp`] by
@@ -221,6 +264,29 @@ impl<S: SdeVjp + Sync> BatchSdeVjp for S {
             }
         }
     }
+
+    fn diffusion_dw_vjp_batch(&self, t: f64, y: &[f64], v: &[f64], gdw: &mut [f64], batch: usize) {
+        // Route through the per-path method (rather than the dense default)
+        // so a per-path override's arithmetic — and bits — carry over.
+        let e = Sde::dim(self);
+        let d = Sde::noise_dim(self);
+        let mut yp = vec![0.0; e];
+        let mut vp = vec![0.0; e];
+        let mut gdwp = vec![0.0; d];
+        for p in 0..batch {
+            for i in 0..e {
+                yp[i] = y[i * batch + p];
+                vp[i] = v[i * batch + p];
+            }
+            for j in 0..d {
+                gdwp[j] = gdw[j * batch + p];
+            }
+            self.diffusion_dw_vjp(t, &yp, &vp, &mut gdwp);
+            for j in 0..d {
+                gdw[j * batch + p] = gdwp[j];
+            }
+        }
+    }
 }
 
 /// How the backward pass obtains the forward trajectory.
@@ -237,7 +303,8 @@ pub enum BackwardMode {
     Tape,
 }
 
-/// Gradients of a terminal loss `L(z_N)` through a reversible-Heun solve.
+/// Gradients of a (terminal or whole-trajectory) loss through a
+/// reversible-Heun solve.
 #[derive(Clone, Debug)]
 pub struct AdjointGrad {
     /// Terminal solution estimate `z_N` (per-path `[dim]`; batched SoA
@@ -248,6 +315,11 @@ pub struct AdjointGrad {
     /// `∂L/∂θ`, flat `[param_len]` (batched: summed over paths in ascending
     /// path order).
     pub dtheta: Vec<f64>,
+    /// `∂L/∂ΔW_k` per grid step — empty unless requested (`want_ddw`).
+    /// Per-path layout `[n_steps * noise_dim]` (`ddw[k * d + j]`); batched
+    /// SoA `[(k * d + j) * batch + p]`. For a CDE driven by data increments
+    /// this is the loss cotangent on the driving path's `ΔY`.
+    pub ddw: Vec<f64>,
 }
 
 /// Run one path forward over `[t0, t1]` in `n_steps` reversible-Heun steps,
@@ -260,6 +332,9 @@ pub struct AdjointGrad {
 /// [`GridReplayNoise`], or [`super::NoiseFromSource`] over a Brownian
 /// source), which is exactly the re-queryable contract the Brownian
 /// Interval provides.
+///
+/// Terminal-only convenience over [`adjoint_solve_steps`], which handles
+/// whole-trajectory losses and noise cotangents.
 #[allow(clippy::too_many_arguments)]
 pub fn adjoint_solve<S, N, G>(
     sde: &S,
@@ -276,6 +351,51 @@ where
     N: NoiseF64,
     G: FnOnce(&[f64], &mut [f64]),
 {
+    let mut seed = Some(grad_terminal);
+    adjoint_solve_steps(sde, y0, t0, t1, n_steps, noise, mode, false, |k, z, lz| {
+        if k == n_steps {
+            if let Some(g) = seed.take() {
+                g(z, lz);
+            }
+        }
+    })
+}
+
+/// The general per-path adjoint: gradients of a loss that may read **every**
+/// grid point, `L = Σ_k l_k(z_k)`, with optional per-step noise cotangents.
+///
+/// `grad_step(k, z_k, λ_z)` is called during the backward sweep for
+/// `k = n_steps` (the terminal state, before the first reverse step) down to
+/// `k = 0`, in that order; it must **accumulate** `∂l_k/∂z_k` into the
+/// running cotangent `λ_z` (`+=` — for a terminal-only loss, write only at
+/// `k == n_steps`). The injected cotangents ride the same exact backward
+/// recursion as the terminal seed, so a path-dependent loss — e.g. the
+/// Wasserstein discriminator reading the generator's whole trajectory —
+/// backpropagates with zero truncation error too.
+///
+/// With `want_ddw`, the increment cotangents `∂L/∂ΔW_k` are accumulated via
+/// [`SdeVjp::diffusion_dw_vjp`] at both evaluation points of each step
+/// (`∂L/∂ΔW_k = g(t′, ẑ′)ᵀ(½λ_z′) + g(t, ẑ)ᵀ(w + ½λ_z′)` — the same two
+/// diffusion cotangents Stage A and Stage B already compute) and returned in
+/// [`AdjointGrad::ddw`]; a CDE driven by data increments chains them onto
+/// the driving path.
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_solve_steps<S, N, G>(
+    sde: &S,
+    y0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    noise: &mut N,
+    mode: BackwardMode,
+    want_ddw: bool,
+    mut grad_step: G,
+) -> AdjointGrad
+where
+    S: SdeVjp,
+    N: NoiseF64,
+    G: FnMut(usize, &[f64], &mut [f64]),
+{
     let e = sde.dim();
     let d = sde.noise_dim();
     assert_eq!(y0.len(), e, "y0 must be [dim]");
@@ -285,13 +405,17 @@ where
     let tape_on = matches!(mode, BackwardMode::Tape);
 
     // Forward pass — the same grid arithmetic as `integrate`, so the solve
-    // being differentiated is bit-identical to what a driver loop runs.
+    // being differentiated is bit-identical to what a driver loop runs. The
+    // tape stores ẑ (the Jacobian evaluation points) and z (the states the
+    // loss reads).
     let mut solver = ReversibleHeun::new(sde, t0, y0);
     let mut dw = vec![0.0f64; d];
     let mut tape: Vec<f64> = Vec::with_capacity(if tape_on { (n_steps + 1) * e } else { 0 });
+    let mut tape_z: Vec<f64> = Vec::with_capacity(if tape_on { (n_steps + 1) * e } else { 0 });
     for k in 0..n_steps {
         if tape_on {
             tape.extend_from_slice(&solver.state().zh);
+            tape_z.extend_from_slice(&solver.state().z);
         }
         let s = t0 + k as f64 * dtg;
         let t = t0 + (k + 1) as f64 * dtg;
@@ -300,14 +424,16 @@ where
     }
     if tape_on {
         tape.extend_from_slice(&solver.state().zh);
+        tape_z.extend_from_slice(&solver.state().z);
     }
     let terminal = solver.state().z.clone();
 
-    // Cotangent seed: the loss reads the terminal solution estimate z_N.
+    // Cotangent seed: the loss's terminal contribution ∂l_N/∂z_N.
     let mut lz = vec![0.0f64; e];
     let mut lzh = vec![0.0f64; e];
-    grad_terminal(&terminal, &mut lz);
+    grad_step(n_steps, &terminal, &mut lz);
     let mut gth = vec![0.0f64; pl];
+    let mut ddw = vec![0.0f64; if want_ddw { n_steps * d } else { 0 }];
 
     let mut vg = vec![0.0f64; e];
     let mut wf = vec![0.0f64; e];
@@ -335,6 +461,9 @@ where
             if tape_on { &tape[(k + 1) * e..(k + 2) * e] } else { &solver.state().zh };
         sde.drift_vjp(t_hi, zh_hi, &wf, &mut wa, &mut gth);
         sde.diffusion_vjp(t_hi, zh_hi, &vg, &dw, &mut wa, &mut gth);
+        if want_ddw {
+            sde.diffusion_dw_vjp(t_hi, zh_hi, &vg, &mut ddw[k * d..(k + 1) * d]);
+        }
 
         // Reconstruct the state at t_k (Algorithm 2), or read the tape.
         if !tape_on {
@@ -366,7 +495,15 @@ where
         simd::neg(&wa, &mut lzh);
         sde.drift_vjp(s, zh_lo, &wf, &mut lzh, &mut gth);
         sde.diffusion_vjp(s, zh_lo, &vg, &dw, &mut lzh, &mut gth);
+        if want_ddw {
+            sde.diffusion_dw_vjp(s, zh_lo, &vg, &mut ddw[k * d..(k + 1) * d]);
+        }
         simd::axpy(2.0, &wa, &mut lz);
+
+        // Per-step loss cotangent: the loss read z_k too.
+        let z_lo: &[f64] =
+            if tape_on { &tape_z[k * e..(k + 1) * e] } else { &solver.state().z };
+        grad_step(k, z_lo, &mut lz);
     }
 
     // z₀ = ẑ₀ = y₀ ⟹ ∂L/∂y₀ = λ_z + λ_ẑ.
@@ -374,11 +511,13 @@ where
     for i in 0..e {
         dy0[i] = lz[i] + lzh[i];
     }
-    AdjointGrad { terminal, dy0, dtheta: gth }
+    AdjointGrad { terminal, dy0, dtheta: gth, ddw }
 }
 
 /// Batched-SoA adjoint over `[dim × batch]` lanes: forward + backward per
-/// fixed-size path chunk, fanned across `opts.threads` scoped workers.
+/// fixed-size path chunk, fanned across `opts.threads` workers on the same
+/// work-stealing chunk scheduler as the forward engine
+/// ([`super::map_chunks`]).
 ///
 /// `grad_terminal` is called once per chunk with
 /// `(path_offset, chunk_len, terminal_z_lanes, out_lanes)` and must fill the
@@ -391,6 +530,8 @@ where
 /// bit-identical for every `threads`/`chunk` setting — and bit-identical to
 /// `batch` separate [`adjoint_solve`] runs whose `dtheta` are summed in
 /// ascending path order.
+///
+/// Terminal-only convenience over [`adjoint_solve_batched_steps`].
 #[allow(clippy::too_many_arguments)]
 pub fn adjoint_solve_batched<S, N, G>(
     sde: &S,
@@ -409,6 +550,58 @@ where
     N: BatchNoise,
     G: Fn(usize, usize, &[f64], &mut [f64]) + Sync,
 {
+    adjoint_solve_batched_steps(
+        sde,
+        noise,
+        y0,
+        batch,
+        t0,
+        t1,
+        n_steps,
+        mode,
+        false,
+        opts,
+        &|k, p0, cl, z, lz| {
+            if k == n_steps {
+                grad_terminal(p0, cl, z, lz);
+            }
+        },
+    )
+}
+
+/// The general batched adjoint: whole-trajectory losses and per-step noise
+/// cotangents over SoA lanes — the batched twin of [`adjoint_solve_steps`].
+///
+/// `grad_step(k, path_offset, chunk_len, z_lanes, λ_z_lanes)` is called for
+/// `k = n_steps` down to `0` per chunk and must **accumulate** the chunk's
+/// `∂l_k/∂z_k` lanes (`[dim * chunk_len]`) into the running cotangent. With
+/// `want_ddw`, [`AdjointGrad::ddw`] holds `∂L/∂ΔW` as
+/// `[(k * noise_dim + j) * batch + p]`.
+///
+/// Per-path bit-identity extends to both features: injections touch only
+/// their own lanes and `ddw` accumulates with the per-path association at
+/// the same two evaluation points, so batched results equal per-path
+/// [`adjoint_solve_steps`] runs bit-for-bit across every batch/chunk/thread
+/// setting.
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_solve_batched_steps<S, N, G>(
+    sde: &S,
+    noise: &N,
+    y0: &[f64],
+    batch: usize,
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    mode: BackwardMode,
+    want_ddw: bool,
+    opts: &BatchOptions,
+    grad_step: &G,
+) -> AdjointGrad
+where
+    S: BatchSdeVjp,
+    N: BatchNoise,
+    G: Fn(usize, usize, usize, &[f64], &mut [f64]) + Sync,
+{
     let e = sde.state_dim();
     let nd = sde.brownian_dim();
     let pl = sde.param_len();
@@ -421,8 +614,8 @@ where
     let tape_on = matches!(mode, BackwardMode::Tape);
 
     // One chunk's forward + backward sweep: returns (terminal z lanes,
-    // dy0 lanes, per-path θ lanes), all `[· * chunk_len]`.
-    let run_chunk = |c: usize| -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    // dy0 lanes, per-path θ lanes, ddw lanes), all `[· * chunk_len]`.
+    let run_chunk = |c: usize| -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
         let p0 = c * chunk;
         let cl = chunk.min(batch - p0);
         let mut yc = vec![0.0f64; e * cl];
@@ -435,9 +628,12 @@ where
         let mut dw = vec![0.0f64; nd * cl];
         let mut tape: Vec<f64> =
             Vec::with_capacity(if tape_on { (n_steps + 1) * e * cl } else { 0 });
+        let mut tape_z: Vec<f64> =
+            Vec::with_capacity(if tape_on { (n_steps + 1) * e * cl } else { 0 });
         for k in 0..n_steps {
             if tape_on {
                 tape.extend_from_slice(stepper.zh());
+                tape_z.extend_from_slice(stepper.z());
             }
             let s = t0 + k as f64 * dtg;
             let t = t0 + (k + 1) as f64 * dtg;
@@ -446,13 +642,15 @@ where
         }
         if tape_on {
             tape.extend_from_slice(stepper.zh());
+            tape_z.extend_from_slice(stepper.z());
         }
         let terminal = stepper.z().to_vec();
 
         let mut lz = vec![0.0f64; e * cl];
         let mut lzh = vec![0.0f64; e * cl];
-        grad_terminal(p0, cl, &terminal, &mut lz);
+        grad_step(n_steps, p0, cl, &terminal, &mut lz);
         let mut gth = vec![0.0f64; pl * cl];
+        let mut ddw = vec![0.0f64; if want_ddw { n_steps * nd * cl } else { 0 }];
 
         let mut vg = vec![0.0f64; e * cl];
         let mut wf = vec![0.0f64; e * cl];
@@ -480,6 +678,15 @@ where
             };
             sde.drift_vjp_batch(t_hi, zh_hi, &wf, &mut wa, &mut gth, cl);
             sde.diffusion_vjp_batch(t_hi, zh_hi, &vg, &dw, &mut wa, &mut gth, cl);
+            if want_ddw {
+                sde.diffusion_dw_vjp_batch(
+                    t_hi,
+                    zh_hi,
+                    &vg,
+                    &mut ddw[k * nd * cl..(k + 1) * nd * cl],
+                    cl,
+                );
+            }
 
             if !tape_on {
                 #[cfg(debug_assertions)]
@@ -517,45 +724,31 @@ where
             simd::neg(&wa, &mut lzh);
             sde.drift_vjp_batch(s, zh_lo, &wf, &mut lzh, &mut gth, cl);
             sde.diffusion_vjp_batch(s, zh_lo, &vg, &dw, &mut lzh, &mut gth, cl);
+            if want_ddw {
+                sde.diffusion_dw_vjp_batch(
+                    s,
+                    zh_lo,
+                    &vg,
+                    &mut ddw[k * nd * cl..(k + 1) * nd * cl],
+                    cl,
+                );
+            }
             simd::axpy(2.0, &wa, &mut lz);
+
+            // Per-step loss cotangents on z_k.
+            let z_lo: &[f64] =
+                if tape_on { &tape_z[k * e * cl..(k + 1) * e * cl] } else { stepper.z() };
+            grad_step(k, p0, cl, z_lo, &mut lz);
         }
         let mut dy0 = vec![0.0f64; e * cl];
         for i in 0..e * cl {
             dy0[i] = lz[i] + lzh[i];
         }
-        (terminal, dy0, gth)
+        (terminal, dy0, gth, ddw)
     };
 
-    let threads = opts.threads.max(1).min(n_chunks);
-    let chunk_grads: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = if threads <= 1 {
-        (0..n_chunks).map(run_chunk).collect()
-    } else {
-        // Strided static partition: chunk results are keyed by index, so the
-        // schedule cannot affect the (deterministic) result.
-        let mut slots: Vec<Option<(Vec<f64>, Vec<f64>, Vec<f64>)>> =
-            (0..n_chunks).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(threads);
-            for w in 0..threads {
-                let run_chunk = &run_chunk;
-                handles.push(scope.spawn(move || {
-                    let mut mine = Vec::new();
-                    let mut c = w;
-                    while c < n_chunks {
-                        mine.push((c, run_chunk(c)));
-                        c += threads;
-                    }
-                    mine
-                }));
-            }
-            for hdl in handles {
-                for (c, r) in hdl.join().expect("adjoint worker panicked") {
-                    slots[c] = Some(r);
-                }
-            }
-        });
-        slots.into_iter().map(|o| o.expect("chunk result missing")).collect()
-    };
+    let chunk_grads: Vec<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> =
+        super::map_chunks(n_chunks, opts.threads, run_chunk);
 
     // Scatter chunk lanes back to the full batch, then reduce θ over paths
     // in ascending path order — the association of the per-path reference
@@ -563,7 +756,8 @@ where
     let mut terminal = vec![0.0f64; e * batch];
     let mut dy0 = vec![0.0f64; e * batch];
     let mut gth_lanes = vec![0.0f64; pl * batch];
-    for (c, (tz, dz, gt)) in chunk_grads.iter().enumerate() {
+    let mut ddw = vec![0.0f64; if want_ddw { n_steps * nd * batch } else { 0 }];
+    for (c, (tz, dz, gt, dd)) in chunk_grads.iter().enumerate() {
         let p0 = c * chunk;
         let cl = chunk.min(batch - p0);
         for i in 0..e {
@@ -575,6 +769,12 @@ where
             gth_lanes[m * batch + p0..m * batch + p0 + cl]
                 .copy_from_slice(&gt[m * cl..(m + 1) * cl]);
         }
+        if want_ddw {
+            for r in 0..n_steps * nd {
+                ddw[r * batch + p0..r * batch + p0 + cl]
+                    .copy_from_slice(&dd[r * cl..(r + 1) * cl]);
+            }
+        }
     }
     let mut dtheta = vec![0.0f64; pl];
     for m in 0..pl {
@@ -584,7 +784,7 @@ where
         }
         dtheta[m] = acc;
     }
-    AdjointGrad { terminal, dy0, dtheta }
+    AdjointGrad { terminal, dy0, dtheta, ddw }
 }
 
 /// Backward-pass Brownian replay: pulls every increment of a uniform grid

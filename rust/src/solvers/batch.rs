@@ -224,6 +224,104 @@ impl NoiseF64 for PathNoiseF64<'_> {
     }
 }
 
+/// Explicitly stored per-step, per-path increments over a uniform grid —
+/// the "noise" feed for solves whose driving increments are **data** rather
+/// than fresh randomness:
+///
+/// * the neural-CDE discriminator, whose control increments are the observed
+///   (or generated) path's `ΔY` (equation (2) of the paper);
+/// * replaying an externally sampled Brownian grid (e.g. a Brownian-Interval
+///   `fill_grid` widened to `f64`) through the batch engine's forward *and*
+///   backward sweeps with guaranteed identical bits.
+///
+/// Storage is SoA: `vals[(k * dim + j) * batch + p]` is channel `j` of path
+/// `p` at grid step `k`. Serves any step in any order (the doubly-sequential
+/// adjoint access pattern), per path via [`path`](Self::path) or per chunk
+/// via [`BatchNoise`].
+pub struct StoredBatchNoise {
+    t0: f64,
+    dt: f64,
+    n_steps: usize,
+    dim: usize,
+    batch: usize,
+    vals: Vec<f64>,
+}
+
+impl StoredBatchNoise {
+    /// Zero-filled increments for `n_steps` uniform intervals over
+    /// `[t0, t1]`, `dim` channels per path.
+    pub fn zeros(t0: f64, t1: f64, n_steps: usize, dim: usize, batch: usize) -> Self {
+        assert!(t1 > t0 && n_steps >= 1 && dim >= 1 && batch >= 1);
+        Self {
+            t0,
+            dt: (t1 - t0) / n_steps as f64,
+            n_steps,
+            dim,
+            batch,
+            vals: vec![0.0; n_steps * dim * batch],
+        }
+    }
+
+    /// Set channel `j` of path `p` at step `k`.
+    #[inline]
+    pub fn set(&mut self, k: usize, j: usize, p: usize, v: f64) {
+        self.vals[(k * self.dim + j) * self.batch + p] = v;
+    }
+
+    /// Read channel `j` of path `p` at step `k`.
+    #[inline]
+    pub fn get(&self, k: usize, j: usize, p: usize) -> f64 {
+        self.vals[(k * self.dim + j) * self.batch + p]
+    }
+
+    /// The full SoA value buffer (tests perturb it for finite differences).
+    pub fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.vals
+    }
+
+    /// A [`NoiseF64`] view of path `p`'s stream.
+    pub fn path(&self, p: usize) -> StoredPathNoise<'_> {
+        assert!(p < self.batch);
+        StoredPathNoise { src: self, p }
+    }
+}
+
+impl BatchNoise for StoredBatchNoise {
+    fn brownian_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [f64]) {
+        debug_assert!((s - (self.t0 + k as f64 * self.dt)).abs() < self.dt * 1e-9);
+        debug_assert!(t > s && p0 + chunk <= self.batch);
+        debug_assert_eq!(out.len(), self.dim * chunk);
+        for j in 0..self.dim {
+            let src = &self.vals[(k * self.dim + j) * self.batch + p0..];
+            out[j * chunk..(j + 1) * chunk].copy_from_slice(&src[..chunk]);
+        }
+    }
+}
+
+/// Single-path [`NoiseF64`] view into a [`StoredBatchNoise`].
+pub struct StoredPathNoise<'a> {
+    src: &'a StoredBatchNoise,
+    p: usize,
+}
+
+impl NoiseF64 for StoredPathNoise<'_> {
+    fn increment(&mut self, s: f64, t: f64, out: &mut [f64]) {
+        let k = ((s - self.src.t0) / self.src.dt).round() as usize;
+        debug_assert!(k < self.src.n_steps, "query off the grid: s={s}");
+        debug_assert!(
+            ((t - s) - self.src.dt).abs() < self.src.dt * 1e-9,
+            "StoredPathNoise serves single grid steps, got [{s}, {t}]"
+        );
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.src.get(k, j, self.p);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Steppers
 // ---------------------------------------------------------------------------
@@ -664,6 +762,67 @@ impl BatchOptions {
     }
 }
 
+/// Map `run` over the chunk indices `0..n_chunks` on up to `threads`
+/// work-stealing workers, returning the results **keyed by chunk index** —
+/// the shared scheduler behind [`integrate_batched`] and
+/// [`super::adjoint_solve_batched`].
+///
+/// Each worker starts with a contiguous run of chunks in its own deque
+/// (cache-friendly starts), pops from the front, and — when its deque runs
+/// dry — steals from the back of the most-loaded peer, so skewed per-chunk
+/// costs rebalance instead of serialising the pool. Because the output is
+/// keyed by chunk index, the (nondeterministic) schedule cannot affect a
+/// deterministic `run`'s results: callers whose chunks depend only on their
+/// own index get bit-identical output for every `threads` value.
+pub fn map_chunks<R, F>(n_chunks: usize, threads: usize, run: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n_chunks);
+    if threads <= 1 {
+        return (0..n_chunks).map(run).collect();
+    }
+    let per = n_chunks / threads;
+    let extra = n_chunks % threads;
+    let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| {
+            let start = w * per + w.min(extra);
+            let count = per + usize::from(w < extra);
+            Mutex::new((start..start + count).collect())
+        })
+        .collect();
+    let mut slots: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let run = &run;
+            let deques = &deques;
+            handles.push(scope.spawn(move || {
+                let mut mine = Vec::new();
+                loop {
+                    let own = deques[w].lock().expect("deque poisoned").pop_front();
+                    let c = match own {
+                        Some(c) => c,
+                        None => match steal(deques, w) {
+                            Some(c) => c,
+                            None => break,
+                        },
+                    };
+                    mine.push((c, run(c)));
+                }
+                mine
+            }));
+        }
+        for h in handles {
+            for (c, r) in h.join().expect("chunk worker panicked") {
+                slots[c] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|o| o.expect("chunk result missing")).collect()
+}
+
 /// Steal one chunk for worker `me`: scan for the peer with the most queued
 /// work and take from the *back* of its deque (the owner pops the front, so
 /// contention only happens on the last item). Returns `None` when every
@@ -755,54 +914,7 @@ where
         traj
     };
 
-    let threads = opts.threads.max(1).min(n_chunks);
-    let chunk_trajs: Vec<Vec<f64>> = if threads <= 1 {
-        (0..n_chunks).map(run_chunk).collect()
-    } else {
-        // Work-stealing deques: worker `w` owns a contiguous run of chunks
-        // (cache-friendly starts), pops from its own front, and steals from
-        // the back of the most-loaded peer once empty. Chunk results are
-        // keyed by chunk index, so the (nondeterministic) schedule cannot
-        // affect the (deterministic) result.
-        let per = n_chunks / threads;
-        let extra = n_chunks % threads;
-        let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
-            .map(|w| {
-                let start = w * per + w.min(extra);
-                let count = per + usize::from(w < extra);
-                Mutex::new((start..start + count).collect())
-            })
-            .collect();
-        let mut slots: Vec<Option<Vec<f64>>> = (0..n_chunks).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(threads);
-            for w in 0..threads {
-                let run_chunk = &run_chunk;
-                let deques = &deques;
-                handles.push(scope.spawn(move || {
-                    let mut mine = Vec::new();
-                    loop {
-                        let own = deques[w].lock().expect("deque poisoned").pop_front();
-                        let c = match own {
-                            Some(c) => c,
-                            None => match steal(deques, w) {
-                                Some(c) => c,
-                                None => break,
-                            },
-                        };
-                        mine.push((c, run_chunk(c)));
-                    }
-                    mine
-                }));
-            }
-            for h in handles {
-                for (c, tr) in h.join().expect("batch worker panicked") {
-                    slots[c] = Some(tr);
-                }
-            }
-        });
-        slots.into_iter().map(|o| o.expect("chunk result missing")).collect()
-    };
+    let chunk_trajs: Vec<Vec<f64>> = map_chunks(n_chunks, opts.threads, run_chunk);
 
     // Scatter chunk lanes back into the full SoA trajectory.
     let mut traj = vec![0.0; (n_steps + 1) * dim * batch];
@@ -887,6 +999,46 @@ mod tests {
         crate::solvers::NoiseF64::increment(&mut pn, 0.25, 0.375, &mut dw);
         for j in 0..3 {
             assert_eq!(dw[j], whole[j * 10 + 5]);
+        }
+    }
+
+    #[test]
+    fn map_chunks_keys_results_by_index_for_every_thread_count() {
+        let run = |c: usize| c * c + 1;
+        let reference: Vec<usize> = (0..13).map(run).collect();
+        for threads in [1usize, 2, 3, 8, 32] {
+            assert_eq!(map_chunks(13, threads, run), reference, "threads={threads}");
+        }
+        // Degenerate sizes.
+        assert_eq!(map_chunks(0, 4, run), Vec::<usize>::new());
+        assert_eq!(map_chunks(1, 4, run), vec![1]);
+    }
+
+    #[test]
+    fn stored_noise_serves_chunks_and_paths_identically() {
+        let mut sn = StoredBatchNoise::zeros(0.0, 1.0, 4, 2, 5);
+        for k in 0..4 {
+            for j in 0..2 {
+                for p in 0..5 {
+                    sn.set(k, j, p, (100 * k + 10 * j + p) as f64);
+                }
+            }
+        }
+        // Chunked fill matches direct reads.
+        let mut out = vec![0.0; 2 * 3];
+        sn.fill_step(2, 0.5, 0.75, 1, 3, &mut out);
+        for j in 0..2 {
+            for q in 0..3 {
+                assert_eq!(out[j * 3 + q], sn.get(2, j, 1 + q));
+            }
+        }
+        // Per-path view serves steps in any order (the adjoint pattern).
+        let mut pn = sn.path(4);
+        let mut dw = [0.0f64; 2];
+        for &k in &[3usize, 0, 2, 1] {
+            let (s, t) = (0.25 * k as f64, 0.25 * (k + 1) as f64);
+            crate::solvers::NoiseF64::increment(&mut pn, s, t, &mut dw);
+            assert_eq!(dw, [sn.get(k, 0, 4), sn.get(k, 1, 4)]);
         }
     }
 

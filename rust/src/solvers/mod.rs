@@ -25,24 +25,32 @@
 //! trajectory in O(1) memory and accumulating exact discrete gradients
 //! through the analytic vector-Jacobian products of [`SdeVjp`] /
 //! [`BatchSdeVjp`] — see [`adjoint_solve`] and [`adjoint_solve_batched`].
+//! Losses that read the whole trajectory (path-dependent discriminators)
+//! inject per-step cotangents during the backward sweep
+//! ([`adjoint_solve_steps`] / [`adjoint_solve_batched_steps`]), and solves
+//! driven by data increments recover the cotangent on the driving path via
+//! [`AdjointGrad::ddw`]. The [`neural`] module implements the SDE-GAN's
+//! LipSwish-MLP generator and neural-CDE discriminator as native systems on
+//! this stack.
 
 pub mod adjoint;
 mod batch;
 mod classic;
 mod convergence;
+pub mod neural;
 mod reversible_heun;
 pub mod simd;
 mod stability;
 pub mod systems;
 
 pub use adjoint::{
-    adjoint_solve, adjoint_solve_batched, max_vjp_fd_error, AdjointGrad, BackwardMode,
-    BatchSdeVjp, GridReplayNoise, SdeVjp,
+    adjoint_solve, adjoint_solve_batched, adjoint_solve_batched_steps, adjoint_solve_steps,
+    max_vjp_fd_error, AdjointGrad, BackwardMode, BatchSdeVjp, GridReplayNoise, SdeVjp,
 };
 pub use batch::{
-    aos_to_soa, integrate_batched, soa_to_aos, BatchEulerMaruyama, BatchHeun, BatchMidpoint,
-    BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper, CounterGridNoise,
-    PathNoiseF64,
+    aos_to_soa, integrate_batched, map_chunks, soa_to_aos, BatchEulerMaruyama, BatchHeun,
+    BatchMidpoint, BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper,
+    CounterGridNoise, PathNoiseF64, StoredBatchNoise, StoredPathNoise,
 };
 pub use classic::{EulerMaruyama, Heun, Midpoint};
 pub use convergence::{

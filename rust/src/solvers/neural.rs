@@ -1,0 +1,574 @@
+//! Native neural vector fields: the SDE-GAN generator and the neural-CDE
+//! discriminator as in-Rust [`Sde`]/[`BatchSde`] + [`SdeVjp`]/[`BatchSdeVjp`]
+//! systems.
+//!
+//! These are the Layer-2 models of `python/compile/model.py` rebuilt on the
+//! native stack — no JAX, no AOT executables:
+//!
+//! * [`NeuralGenerator`] — `dX = μ_θ(t, X) dt + σ_θ(t, X) ∘ dW` with
+//!   LipSwish-MLP fields (`μ` unbounded, `σ` tanh-bounded, dense `x×w`
+//!   noise), parameters addressed inside the **full flat θ vector** of
+//!   [`GanNetSpec::gen_layout`] — so the θ-gradient the adjoint engine
+//!   returns is directly the optimiser's flat gradient (the `ζ`/`ℓ`
+//!   segments, which the solve doesn't touch, stay zero and are filled by
+//!   the trainer's chain rule at the ends);
+//! * [`NeuralDiscriminator`] — the CDE response
+//!   `dH = f_φ(t, H) dt + g_φ(t, H) dY` (equation (2)): formally an [`Sde`]
+//!   whose "Brownian" increments are the driving path's `ΔY`, served by
+//!   [`super::StoredBatchNoise`]. The loss cotangent on the driving path
+//!   comes back through the adjoint engine's increment cotangents
+//!   ([`SdeVjp::diffusion_dw_vjp`] / [`AdjointGrad::ddw`]);
+//! * [`NeuralGeneratorBatch`] / [`NeuralDiscriminatorBatch`] — native SoA
+//!   twins whose MLP evaluations run on [`Mlp::forward_batch`] /
+//!   [`Mlp::vjp_batch`]: vectorised across paths on the broadcast kernels of
+//!   [`super::simd`], never within a path, so batched solves and batched
+//!   adjoints are **bit-for-bit equal** to the per-path systems (pinned in
+//!   `tests/neural_gan.rs` on the same 1/3/4/7/8/33 remainder batches as the
+//!   analytic systems).
+//!
+//! Time enters every field as the JAX models pass it: prepended to the state
+//! (`input = [t, y…]`), and its input-gradient slot is discarded.
+//!
+//! [`AdjointGrad::ddw`]: super::AdjointGrad::ddw
+
+use super::adjoint::{BatchSdeVjp, SdeVjp};
+use super::{BatchSde, Sde};
+use crate::nn::{Activation, GanNetSpec, Mlp};
+
+/// Widen a flat `f32` parameter vector (the training state) to the `f64` the
+/// solver layer computes in.
+pub fn widen_params(params: &[f32]) -> Vec<f64> {
+    params.iter().map(|&p| p as f64).collect()
+}
+
+fn with_time(t: f64, y: &[f64], inp: &mut [f64]) {
+    inp[0] = t;
+    inp[1..1 + y.len()].copy_from_slice(y);
+}
+
+fn with_time_batch(t: f64, y: &[f64], inp: &mut [f64], dim: usize, batch: usize) {
+    debug_assert_eq!(y.len(), dim * batch);
+    inp[..batch].fill(t);
+    inp[batch..(1 + dim) * batch].copy_from_slice(y);
+}
+
+// ---------------------------------------------------------------------------
+// Generator
+// ---------------------------------------------------------------------------
+
+/// The SDE-GAN generator's vector fields over the full flat θ of
+/// [`GanNetSpec::gen_layout`].
+pub struct NeuralGenerator {
+    x_dim: usize,
+    w_dim: usize,
+    mu: Mlp,
+    sigma: Mlp,
+    params: Vec<f64>,
+}
+
+impl NeuralGenerator {
+    /// Build from the spec and the full flat θ (`f64`, length
+    /// `gen_layout().total`).
+    pub fn new(spec: &GanNetSpec, params: Vec<f64>) -> Self {
+        let layout = spec.gen_layout();
+        assert_eq!(params.len(), layout.total, "theta length != gen layout");
+        let mu = Mlp::from_layout(&layout, "mu", Activation::Identity).expect("mu layout");
+        let sigma = Mlp::from_layout(&layout, "sigma", Activation::Tanh).expect("sigma layout");
+        Self { x_dim: spec.state, w_dim: spec.noise, mu, sigma, params }
+    }
+
+    /// Build from the trainer's flat `f32` θ.
+    pub fn from_f32(spec: &GanNetSpec, params: &[f32]) -> Self {
+        Self::new(spec, widen_params(params))
+    }
+
+    /// The flat parameter vector (the [`SdeVjp`] θ-gradient layout).
+    pub fn params_flat(&self) -> &[f64] {
+        &self.params
+    }
+}
+
+impl Sde for NeuralGenerator {
+    fn dim(&self) -> usize {
+        self.x_dim
+    }
+    fn noise_dim(&self) -> usize {
+        self.w_dim
+    }
+    fn drift(&self, t: f64, y: &[f64], out: &mut [f64]) {
+        let mut inp = vec![0.0f64; 1 + self.x_dim];
+        with_time(t, y, &mut inp);
+        self.mu.forward(&self.params, &inp, out);
+    }
+    fn diffusion(&self, t: f64, y: &[f64], out: &mut [f64]) {
+        // σ_θ's output reshapes row-major to the dense `x×w` matrix — the
+        // same `[e * d]` layout `Sde::diffusion` expects.
+        let mut inp = vec![0.0f64; 1 + self.x_dim];
+        with_time(t, y, &mut inp);
+        self.sigma.forward(&self.params, &inp, out);
+    }
+}
+
+impl SdeVjp for NeuralGenerator {
+    fn param_len(&self) -> usize {
+        self.params.len()
+    }
+
+    fn drift_vjp(&self, t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], gth: &mut [f64]) {
+        let mut inp = vec![0.0f64; 1 + self.x_dim];
+        with_time(t, y, &mut inp);
+        let mut gx = vec![0.0f64; 1 + self.x_dim];
+        self.mu.vjp(&self.params, &inp, wf, &mut gx, gth);
+        for i in 0..self.x_dim {
+            gy[i] += gx[1 + i];
+        }
+    }
+
+    fn diffusion_vjp(
+        &self,
+        t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+    ) {
+        // Cotangent of the MLP output through `h = G·dw` is the rank-one
+        // `v dwᵀ` in the row-major output layout.
+        let (x, w) = (self.x_dim, self.w_dim);
+        let mut wout = vec![0.0f64; x * w];
+        for i in 0..x {
+            for j in 0..w {
+                wout[i * w + j] = v[i] * dw[j];
+            }
+        }
+        let mut inp = vec![0.0f64; 1 + x];
+        with_time(t, y, &mut inp);
+        let mut gx = vec![0.0f64; 1 + x];
+        self.sigma.vjp(&self.params, &inp, &wout, &mut gx, gth);
+        for i in 0..x {
+            gy[i] += gx[1 + i];
+        }
+    }
+}
+
+/// Native SoA twin of [`NeuralGenerator`] — MLPs evaluated over whole path
+/// lanes, bit-identical per path to the blanket adapter.
+pub struct NeuralGeneratorBatch {
+    inner: NeuralGenerator,
+}
+
+impl NeuralGeneratorBatch {
+    /// Wrap a per-path system (shares its parameters).
+    pub fn from_system(inner: NeuralGenerator) -> Self {
+        Self { inner }
+    }
+
+    /// Build directly from the trainer's flat `f32` θ.
+    pub fn from_f32(spec: &GanNetSpec, params: &[f32]) -> Self {
+        Self::from_system(NeuralGenerator::from_f32(spec, params))
+    }
+
+    /// The wrapped per-path system.
+    pub fn system(&self) -> &NeuralGenerator {
+        &self.inner
+    }
+}
+
+impl BatchSde for NeuralGeneratorBatch {
+    fn state_dim(&self) -> usize {
+        self.inner.x_dim
+    }
+    fn brownian_dim(&self) -> usize {
+        self.inner.w_dim
+    }
+    fn drift_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let x = self.inner.x_dim;
+        let mut inp = vec![0.0f64; (1 + x) * batch];
+        with_time_batch(t, y, &mut inp, x, batch);
+        self.inner.mu.forward_batch(&self.inner.params, &inp, out, batch);
+    }
+    fn diffusion_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        // MLP output row `i*w + j` lands on lane `(i*w + j)*batch` — exactly
+        // the batch engine's dense `g[(i*d + j)*batch + p]` layout.
+        let x = self.inner.x_dim;
+        let mut inp = vec![0.0f64; (1 + x) * batch];
+        with_time_batch(t, y, &mut inp, x, batch);
+        self.inner.sigma.forward_batch(&self.inner.params, &inp, out, batch);
+    }
+}
+
+impl BatchSdeVjp for NeuralGeneratorBatch {
+    fn param_len(&self) -> usize {
+        self.inner.params.len()
+    }
+
+    fn drift_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        wf: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let x = self.inner.x_dim;
+        let b = batch;
+        let mut inp = vec![0.0f64; (1 + x) * b];
+        with_time_batch(t, y, &mut inp, x, b);
+        let mut gx = vec![0.0f64; (1 + x) * b];
+        self.inner.mu.vjp_batch(&self.inner.params, &inp, wf, &mut gx, gth, b);
+        for i in 0..x {
+            super::simd::add(&gx[(1 + i) * b..(2 + i) * b], &mut gy[i * b..(i + 1) * b]);
+        }
+    }
+
+    fn diffusion_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let (x, w) = (self.inner.x_dim, self.inner.w_dim);
+        let b = batch;
+        let mut wout = vec![0.0f64; x * w * b];
+        for i in 0..x {
+            for j in 0..w {
+                let lane = &mut wout[(i * w + j) * b..(i * w + j + 1) * b];
+                for p in 0..b {
+                    lane[p] = v[i * b + p] * dw[j * b + p];
+                }
+            }
+        }
+        let mut inp = vec![0.0f64; (1 + x) * b];
+        with_time_batch(t, y, &mut inp, x, b);
+        let mut gx = vec![0.0f64; (1 + x) * b];
+        self.inner.sigma.vjp_batch(&self.inner.params, &inp, &wout, &mut gx, gth, b);
+        for i in 0..x {
+            super::simd::add(&gx[(1 + i) * b..(2 + i) * b], &mut gy[i * b..(i + 1) * b]);
+        }
+    }
+
+    fn diffusion_dw_vjp_batch(&self, t: f64, y: &[f64], v: &[f64], gdw: &mut [f64], batch: usize) {
+        // Forward σ once, then the per-path contraction over lanes —
+        // ascending `i` per lane, matching the per-path default's order.
+        let (x, w) = (self.inner.x_dim, self.inner.w_dim);
+        let b = batch;
+        let mut inp = vec![0.0f64; (1 + x) * b];
+        with_time_batch(t, y, &mut inp, x, b);
+        let mut g = vec![0.0f64; x * w * b];
+        self.inner.sigma.forward_batch(&self.inner.params, &inp, &mut g, b);
+        for j in 0..w {
+            for p in 0..b {
+                let mut acc = gdw[j * b + p];
+                for i in 0..x {
+                    acc += g[(i * w + j) * b + p] * v[i * b + p];
+                }
+                gdw[j * b + p] = acc;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Discriminator (neural CDE)
+// ---------------------------------------------------------------------------
+
+/// The SDE-GAN discriminator's CDE response fields over the full flat φ of
+/// [`GanNetSpec::disc_layout`]. An [`Sde`] whose driving increments are the
+/// observed path's `ΔY` (`noise_dim == data_dim`).
+pub struct NeuralDiscriminator {
+    h_dim: usize,
+    y_dim: usize,
+    f: Mlp,
+    g: Mlp,
+    params: Vec<f64>,
+}
+
+impl NeuralDiscriminator {
+    /// Build from the spec and the full flat φ (`f64`, length
+    /// `disc_layout().total`).
+    pub fn new(spec: &GanNetSpec, params: Vec<f64>) -> Self {
+        let layout = spec.disc_layout();
+        assert_eq!(params.len(), layout.total, "phi length != disc layout");
+        let f = Mlp::from_layout(&layout, "f", Activation::Tanh).expect("f layout");
+        let g = Mlp::from_layout(&layout, "g", Activation::Tanh).expect("g layout");
+        Self { h_dim: spec.disc_state, y_dim: spec.data_dim, f, g, params }
+    }
+
+    /// Build from the trainer's flat `f32` φ.
+    pub fn from_f32(spec: &GanNetSpec, params: &[f32]) -> Self {
+        Self::new(spec, widen_params(params))
+    }
+
+    /// The flat parameter vector (the [`SdeVjp`] θ-gradient layout).
+    pub fn params_flat(&self) -> &[f64] {
+        &self.params
+    }
+}
+
+impl Sde for NeuralDiscriminator {
+    fn dim(&self) -> usize {
+        self.h_dim
+    }
+    fn noise_dim(&self) -> usize {
+        self.y_dim
+    }
+    fn drift(&self, t: f64, y: &[f64], out: &mut [f64]) {
+        let mut inp = vec![0.0f64; 1 + self.h_dim];
+        with_time(t, y, &mut inp);
+        self.f.forward(&self.params, &inp, out);
+    }
+    fn diffusion(&self, t: f64, y: &[f64], out: &mut [f64]) {
+        let mut inp = vec![0.0f64; 1 + self.h_dim];
+        with_time(t, y, &mut inp);
+        self.g.forward(&self.params, &inp, out);
+    }
+}
+
+impl SdeVjp for NeuralDiscriminator {
+    fn param_len(&self) -> usize {
+        self.params.len()
+    }
+
+    fn drift_vjp(&self, t: f64, y: &[f64], wf: &[f64], gy: &mut [f64], gth: &mut [f64]) {
+        let mut inp = vec![0.0f64; 1 + self.h_dim];
+        with_time(t, y, &mut inp);
+        let mut gx = vec![0.0f64; 1 + self.h_dim];
+        self.f.vjp(&self.params, &inp, wf, &mut gx, gth);
+        for i in 0..self.h_dim {
+            gy[i] += gx[1 + i];
+        }
+    }
+
+    fn diffusion_vjp(
+        &self,
+        t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+    ) {
+        let (e, d) = (self.h_dim, self.y_dim);
+        let mut wout = vec![0.0f64; e * d];
+        for i in 0..e {
+            for j in 0..d {
+                wout[i * d + j] = v[i] * dw[j];
+            }
+        }
+        let mut inp = vec![0.0f64; 1 + e];
+        with_time(t, y, &mut inp);
+        let mut gx = vec![0.0f64; 1 + e];
+        self.g.vjp(&self.params, &inp, &wout, &mut gx, gth);
+        for i in 0..e {
+            gy[i] += gx[1 + i];
+        }
+    }
+}
+
+/// Native SoA twin of [`NeuralDiscriminator`], bit-identical per path to the
+/// blanket adapter.
+pub struct NeuralDiscriminatorBatch {
+    inner: NeuralDiscriminator,
+}
+
+impl NeuralDiscriminatorBatch {
+    /// Wrap a per-path system (shares its parameters).
+    pub fn from_system(inner: NeuralDiscriminator) -> Self {
+        Self { inner }
+    }
+
+    /// Build directly from the trainer's flat `f32` φ.
+    pub fn from_f32(spec: &GanNetSpec, params: &[f32]) -> Self {
+        Self::from_system(NeuralDiscriminator::from_f32(spec, params))
+    }
+
+    /// The wrapped per-path system.
+    pub fn system(&self) -> &NeuralDiscriminator {
+        &self.inner
+    }
+}
+
+impl BatchSde for NeuralDiscriminatorBatch {
+    fn state_dim(&self) -> usize {
+        self.inner.h_dim
+    }
+    fn brownian_dim(&self) -> usize {
+        self.inner.y_dim
+    }
+    fn drift_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let e = self.inner.h_dim;
+        let mut inp = vec![0.0f64; (1 + e) * batch];
+        with_time_batch(t, y, &mut inp, e, batch);
+        self.inner.f.forward_batch(&self.inner.params, &inp, out, batch);
+    }
+    fn diffusion_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let e = self.inner.h_dim;
+        let mut inp = vec![0.0f64; (1 + e) * batch];
+        with_time_batch(t, y, &mut inp, e, batch);
+        self.inner.g.forward_batch(&self.inner.params, &inp, out, batch);
+    }
+}
+
+impl BatchSdeVjp for NeuralDiscriminatorBatch {
+    fn param_len(&self) -> usize {
+        self.inner.params.len()
+    }
+
+    fn drift_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        wf: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let e = self.inner.h_dim;
+        let b = batch;
+        let mut inp = vec![0.0f64; (1 + e) * b];
+        with_time_batch(t, y, &mut inp, e, b);
+        let mut gx = vec![0.0f64; (1 + e) * b];
+        self.inner.f.vjp_batch(&self.inner.params, &inp, wf, &mut gx, gth, b);
+        for i in 0..e {
+            super::simd::add(&gx[(1 + i) * b..(2 + i) * b], &mut gy[i * b..(i + 1) * b]);
+        }
+    }
+
+    fn diffusion_vjp_batch(
+        &self,
+        t: f64,
+        y: &[f64],
+        v: &[f64],
+        dw: &[f64],
+        gy: &mut [f64],
+        gth: &mut [f64],
+        batch: usize,
+    ) {
+        let (e, d) = (self.inner.h_dim, self.inner.y_dim);
+        let b = batch;
+        let mut wout = vec![0.0f64; e * d * b];
+        for i in 0..e {
+            for j in 0..d {
+                let lane = &mut wout[(i * d + j) * b..(i * d + j + 1) * b];
+                for p in 0..b {
+                    lane[p] = v[i * b + p] * dw[j * b + p];
+                }
+            }
+        }
+        let mut inp = vec![0.0f64; (1 + e) * b];
+        with_time_batch(t, y, &mut inp, e, b);
+        let mut gx = vec![0.0f64; (1 + e) * b];
+        self.inner.g.vjp_batch(&self.inner.params, &inp, &wout, &mut gx, gth, b);
+        for i in 0..e {
+            super::simd::add(&gx[(1 + i) * b..(2 + i) * b], &mut gy[i * b..(i + 1) * b]);
+        }
+    }
+
+    fn diffusion_dw_vjp_batch(&self, t: f64, y: &[f64], v: &[f64], gdw: &mut [f64], batch: usize) {
+        let (e, d) = (self.inner.h_dim, self.inner.y_dim);
+        let b = batch;
+        let mut inp = vec![0.0f64; (1 + e) * b];
+        with_time_batch(t, y, &mut inp, e, b);
+        let mut g = vec![0.0f64; e * d * b];
+        self.inner.g.forward_batch(&self.inner.params, &inp, &mut g, b);
+        for j in 0..d {
+            for p in 0..b {
+                let mut acc = gdw[j * b + p];
+                for i in 0..e {
+                    acc += g[(i * d + j) * b + p] * v[i * b + p];
+                }
+                gdw[j * b + p] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{aos_to_soa, BatchSde, Sde};
+    use super::*;
+    use crate::brownian::SplitPrng;
+
+    fn tiny_spec() -> GanNetSpec {
+        GanNetSpec {
+            data_dim: 1,
+            state: 3,
+            hidden: 4,
+            noise: 2,
+            init_noise: 2,
+            disc_state: 3,
+            disc_hidden: 4,
+        }
+    }
+
+    fn random_params(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = SplitPrng::new(seed);
+        (0..n).map(|_| rng.next_normal_pair().0 * 0.3).collect()
+    }
+
+    #[test]
+    fn generator_field_shapes_and_time_dependence() {
+        let spec = tiny_spec();
+        let gen = NeuralGenerator::new(&spec, random_params(spec.gen_layout().total, 3));
+        assert_eq!(Sde::dim(&gen), 3);
+        assert_eq!(Sde::noise_dim(&gen), 2);
+        let y = [0.1, -0.2, 0.3];
+        let mut f0 = [0.0; 3];
+        let mut f1 = [0.0; 3];
+        gen.drift(0.0, &y, &mut f0);
+        gen.drift(0.5, &y, &mut f1);
+        assert_ne!(f0, f1, "time must enter the drift");
+        let mut g = [0.0; 6];
+        gen.diffusion(0.0, &y, &mut g);
+        assert!(g.iter().all(|v| v.abs() <= 1.0), "tanh-bounded diffusion");
+    }
+
+    #[test]
+    fn batched_fields_bit_identical_to_per_path() {
+        let spec = tiny_spec();
+        let theta = random_params(spec.gen_layout().total, 5);
+        let gen = NeuralGenerator::new(&spec, theta.clone());
+        let genb = NeuralGeneratorBatch::from_system(NeuralGenerator::new(&spec, theta));
+        for &b in &[1usize, 3, 4, 7, 8, 33] {
+            let aos: Vec<f64> = (0..3 * b).map(|i| 0.03 * (i % 11) as f64 - 0.1).collect();
+            let soa = aos_to_soa(&aos, 3, b);
+            let mut fb = vec![0.0; 3 * b];
+            let mut gb = vec![0.0; 6 * b];
+            genb.drift_batch(0.3, &soa, &mut fb, b);
+            genb.diffusion_batch(0.3, &soa, &mut gb, b);
+            for p in 0..b {
+                let yp = &aos[p * 3..(p + 1) * 3];
+                let mut fp = [0.0; 3];
+                let mut gp = [0.0; 6];
+                gen.drift(0.3, yp, &mut fp);
+                gen.diffusion(0.3, yp, &mut gp);
+                for i in 0..3 {
+                    assert_eq!(fb[i * b + p], fp[i], "drift b={b} p={p} i={i}");
+                }
+                for r in 0..6 {
+                    assert_eq!(gb[r * b + p], gp[r], "diffusion b={b} p={p} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn discriminator_noise_dim_is_data_dim() {
+        let spec = tiny_spec();
+        let disc = NeuralDiscriminator::new(&spec, random_params(spec.disc_layout().total, 9));
+        assert_eq!(Sde::dim(&disc), 3);
+        assert_eq!(Sde::noise_dim(&disc), 1);
+        let discb = NeuralDiscriminatorBatch::from_system(NeuralDiscriminator::new(
+            &spec,
+            random_params(spec.disc_layout().total, 9),
+        ));
+        assert_eq!(BatchSde::state_dim(&discb), 3);
+        assert_eq!(BatchSde::brownian_dim(&discb), 1);
+    }
+}

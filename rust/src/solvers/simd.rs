@@ -471,6 +471,27 @@ pub fn scale(a: f64, x: &[f64], out: &mut [f64]) {
     }
 }
 
+/// `y[i] += x[i]` — plain lane accumulate (bias gradients and cotangent
+/// merges in the neural-MLP VJPs).
+#[inline]
+pub fn add(x: &[f64], y: &mut [f64]) {
+    let n = y.len();
+    debug_assert_eq!(x.len(), n);
+    let nb = n - n % LANES;
+    let mut i = 0;
+    while i < nb {
+        y[i] += x[i];
+        y[i + 1] += x[i + 1];
+        y[i + 2] += x[i + 2];
+        y[i + 3] += x[i + 3];
+        i += LANES;
+    }
+    while i < n {
+        y[i] += x[i];
+        i += 1;
+    }
+}
+
 /// `out[i] = x[i] + 0.5 * y[i]` — the adjoint's combined diffusion
 /// cotangent `w + ½ λ_z`.
 #[inline]
@@ -628,6 +649,12 @@ mod tests {
             scale_half(&x, &mut y);
             for i in 0..n {
                 assert_eq!(y[i], 0.5 * x[i], "scale_half n={n} i={i}");
+            }
+
+            let mut y = y0.clone();
+            add(&x, &mut y);
+            for i in 0..n {
+                assert_eq!(y[i], y0[i] + x[i], "add n={n} i={i}");
             }
 
             let mut y = y0.clone();

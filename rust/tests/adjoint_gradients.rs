@@ -179,7 +179,7 @@ fn per_path_reference(
             dtheta[m] += g.dtheta[m];
         }
     }
-    AdjointGrad { terminal, dy0, dtheta }
+    AdjointGrad { terminal, dy0, dtheta, ddw: Vec::new() }
 }
 
 #[test]
@@ -201,7 +201,10 @@ fn batched_adjoint_bit_identical_to_per_path() {
         let noise = CounterGridNoise::new(77, dim, 0.0, 1.0, n);
         for mode in [BackwardMode::Reconstruct, BackwardMode::Tape] {
             let reference = per_path_reference(&sde, &aos, batch, n, &noise, mode);
-            for (threads, chunk) in [(1usize, batch), (1, 2), (3, 2), (2, 4)] {
+            // The chunk fan-out now runs on the same work-stealing deque
+            // pool as the forward engine (`map_chunks`); results stay keyed
+            // by chunk index, so every schedule must produce the same bits.
+            for (threads, chunk) in [(1usize, batch), (1, 2), (3, 2), (2, 4), (4, 1), (8, 3)] {
                 let opts = BatchOptions { threads, chunk };
                 let got = adjoint_solve_batched(
                     &native, &noise, &y0, batch, 0.0, 1.0, n, mode, &opts, &seed,

@@ -1,0 +1,600 @@
+//! Property tests for the native neural layer and the in-Rust SDE-GAN
+//! training path:
+//!
+//! * LipSwish slope ≤ 1 and the post-clip MLP ∞-norm contraction — the two
+//!   halves of the paper's Section-5 Lipschitz argument;
+//! * `max_vjp_fd_error` for the neural `SdeVjp` impls (generator MLP fields
+//!   and CDE discriminator fields) at several FD step sizes;
+//! * whole-trajectory losses: per-step cotangent injection and the noise
+//!   (`ΔW`) cotangents both agree with central finite differences of the
+//!   same discrete solve (≤1e-6 relative L1 — the acceptance bound);
+//! * the batched neural adjoint (with injection + `ddw`) is **bit-identical**
+//!   to the per-path adjoint across the SIMD remainder batches 1/3/4/7/8/33
+//!   and every chunk/thread setting, and the native SoA systems match the
+//!   blanket gather/scatter adapter bitwise;
+//! * the native `GanTrainer`: finite losses, moving parameters, the clip
+//!   invariant after every step, bit-determinism across seeds and across
+//!   batch-engine fan-out settings, and finite non-degenerate sampling —
+//!   all without artifacts or a runtime.
+
+use neuralsde::brownian::SplitPrng;
+use neuralsde::config::TrainConfig;
+use neuralsde::coordinator::gradient_error::relative_l1;
+use neuralsde::coordinator::GanTrainer;
+use neuralsde::data::ou;
+use neuralsde::nn::mlp::{dlipswish, lipswish};
+use neuralsde::nn::{weights_clipped, Activation, GanNetSpec, Mlp};
+use neuralsde::solvers::neural::{
+    widen_params, NeuralDiscriminator, NeuralDiscriminatorBatch, NeuralGenerator,
+    NeuralGeneratorBatch,
+};
+use neuralsde::solvers::{
+    adjoint_solve_batched_steps, adjoint_solve_steps, aos_to_soa, integrate, max_vjp_fd_error,
+    AdjointGrad, BackwardMode, BatchOptions, CounterGridNoise, ReversibleHeun, Sde,
+    StoredBatchNoise,
+};
+use neuralsde::util::stats::central_gradient;
+
+fn tiny_spec() -> GanNetSpec {
+    GanNetSpec {
+        data_dim: 1,
+        state: 3,
+        hidden: 4,
+        noise: 2,
+        init_noise: 2,
+        disc_state: 3,
+        disc_hidden: 4,
+    }
+}
+
+fn random_params(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = SplitPrng::new(seed);
+    (0..n).map(|_| rng.next_normal_pair().0 * 0.3).collect()
+}
+
+fn field_filter(name: &str) -> bool {
+    name.starts_with("f.") || name.starts_with("g.")
+}
+
+// ---------------------------------------------------------------------------
+// Lipschitz properties (Section 5)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lipswish_slope_bounded_by_one() {
+    // ρ(x) = 0.909·x·σ(x): its max slope is 0.909·1.0998… < 1. Scan the
+    // derivative and check the Lipschitz pair bound on random pairs.
+    let mut u = -12.0f64;
+    while u <= 12.0 {
+        let d = dlipswish(u);
+        assert!(d <= 1.0 && d >= -0.2, "slope {d} at u={u}");
+        u += 1e-3;
+    }
+    let mut rng = SplitPrng::new(3);
+    for _ in 0..2000 {
+        let (a, b) = rng.next_normal_pair();
+        let (a, b) = (3.0 * a, 3.0 * b);
+        assert!(
+            (lipswish(a) - lipswish(b)).abs() <= (a - b).abs() + 1e-12,
+            "pair ({a}, {b})"
+        );
+    }
+}
+
+#[test]
+fn clipped_mlp_is_inf_norm_contraction() {
+    // After clip_lipschitz, every output coordinate of a weight matrix is an
+    // absolute-row-sum ≤ 1 map, LipSwish and tanh are 1-Lipschitz and biases
+    // shift-invariant — so the whole f_φ MLP contracts in the ∞-norm.
+    let spec = GanNetSpec::for_data_dim(1);
+    let dl = spec.disc_layout();
+    // Init far outside the clip region so the clamp is doing the work.
+    let mut phi = dl.init(17, |_| 8.0);
+    assert!(!weights_clipped(&dl, &phi, field_filter));
+    dl.clip_lipschitz(&mut phi, field_filter);
+    assert!(weights_clipped(&dl, &phi, field_filter));
+    let phi64 = widen_params(&phi);
+    let f = Mlp::from_layout(&dl, "f", Activation::Tanh).unwrap();
+    let mut rng = SplitPrng::new(23);
+    let dim = 1 + spec.disc_state;
+    let mut out_a = vec![0.0; spec.disc_state];
+    let mut out_b = vec![0.0; spec.disc_state];
+    for trial in 0..50 {
+        let xa: Vec<f64> = (0..dim).map(|_| rng.next_normal_pair().0 * 2.0).collect();
+        let xb: Vec<f64> = (0..dim).map(|_| rng.next_normal_pair().0 * 2.0).collect();
+        f.forward(&phi64, &xa, &mut out_a);
+        f.forward(&phi64, &xb, &mut out_b);
+        let din = xa
+            .iter()
+            .zip(&xb)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let dout = out_a
+            .iter()
+            .zip(&out_b)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            dout <= din * (1.0 + 1e-12) + 1e-15,
+            "trial {trial}: |Δout|∞ {dout} > |Δin|∞ {din}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VJP-vs-FD for the neural fields
+// ---------------------------------------------------------------------------
+
+#[test]
+fn neural_vjps_match_finite_differences_at_several_tolerances() {
+    let spec = tiny_spec();
+    let probes = [(1e-3, 1e-4), (1e-4, 1e-6), (1e-5, 1e-8)];
+    let gen_theta = random_params(spec.gen_layout().total, 41);
+    for &(h, tol) in &probes {
+        let err = max_vjp_fd_error(
+            |p: &[f64]| NeuralGenerator::new(&spec, p.to_vec()),
+            &gen_theta,
+            0.2,
+            &[0.3, -0.4, 0.5],
+            &[0.8, -0.6, 1.1],
+            &[0.5, 0.9, -0.7],
+            &[0.12, -0.31],
+            h,
+        );
+        assert!(err < tol, "generator VJP-vs-FD error {err:e} at h={h:e}");
+    }
+    let disc_phi = random_params(spec.disc_layout().total, 43);
+    for &(h, tol) in &probes {
+        let err = max_vjp_fd_error(
+            |p: &[f64]| NeuralDiscriminator::new(&spec, p.to_vec()),
+            &disc_phi,
+            -0.3,
+            &[0.2, 0.6, -0.5],
+            &[1.2, -0.4, 0.3],
+            &[-0.8, 0.5, 0.6],
+            &[0.21],
+            h,
+        );
+        assert!(err < tol, "discriminator VJP-vs-FD error {err:e} at h={h:e}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-trajectory losses: per-step cotangents and noise cotangents vs FD
+// ---------------------------------------------------------------------------
+
+/// The deterministic per-step loss weights `c[k][i]` shared by the FD loss
+/// and the adjoint injection.
+fn step_weight(k: usize, i: usize) -> f64 {
+    0.2 + (0.37 * k as f64).sin() * 0.1 + 0.05 * i as f64
+}
+
+#[test]
+fn per_step_cotangent_injection_matches_fd() {
+    // L = Σ_k Σ_i c[k][i] · z_k[i] reads the whole trajectory — the
+    // path-dependent-discriminator shape. The injected backward must match
+    // central differences of the identical discrete solve to ≤1e-6 rel L1.
+    let spec = tiny_spec();
+    let x = spec.state;
+    let n = 12usize;
+    let theta0 = random_params(spec.gen_layout().total, 7);
+    let y0 = [0.15f64, -0.1, 0.2];
+    let noise = CounterGridNoise::new(19, spec.noise, 0.0, 1.0, n);
+    let loss = |th: &[f64], y0v: &[f64]| -> f64 {
+        let sde = NeuralGenerator::new(&spec, th.to_vec());
+        let mut solver = ReversibleHeun::new(&sde, 0.0, y0v);
+        let mut pn = noise.path(0);
+        let traj = integrate(&sde, &mut solver, &mut pn, y0v, 0.0, 1.0, n);
+        let mut acc = 0.0;
+        for k in 0..=n {
+            for i in 0..x {
+                acc += step_weight(k, i) * traj[k * x + i];
+            }
+        }
+        acc
+    };
+    let sde = NeuralGenerator::new(&spec, theta0.clone());
+    let mut pn = noise.path(0);
+    let adj = adjoint_solve_steps(
+        &sde,
+        &y0,
+        0.0,
+        1.0,
+        n,
+        &mut pn,
+        BackwardMode::Reconstruct,
+        false,
+        |k, _z, lz| {
+            for (i, l) in lz.iter_mut().enumerate() {
+                *l += step_weight(k, i);
+            }
+        },
+    );
+    let mut got = adj.dy0.clone();
+    got.extend_from_slice(&adj.dtheta);
+    let mut fd = central_gradient(|yy| loss(&theta0, yy), &y0, 1e-5);
+    fd.extend(central_gradient(|th| loss(th, &y0), &theta0, 1e-5));
+    let rel = relative_l1(&got, &fd);
+    assert!(rel <= 1e-6, "per-step-injection adjoint vs FD rel L1 {rel:e}");
+    // Reconstruct and Tape agree on the injected loss too.
+    let mut pn = noise.path(0);
+    let tape = adjoint_solve_steps(
+        &sde,
+        &y0,
+        0.0,
+        1.0,
+        n,
+        &mut pn,
+        BackwardMode::Tape,
+        false,
+        |k, _z, lz| {
+            for (i, l) in lz.iter_mut().enumerate() {
+                *l += step_weight(k, i);
+            }
+        },
+    );
+    let mut tp = tape.dy0.clone();
+    tp.extend_from_slice(&tape.dtheta);
+    assert!(relative_l1(&got, &tp) < 1e-10, "rec vs tape with injection");
+}
+
+#[test]
+fn noise_cotangents_match_fd() {
+    // ∂L/∂ΔW for a terminal loss, against central differences over the
+    // stored increment values themselves — validates the ddw recursion the
+    // CDE's path cotangents ride on.
+    let spec = tiny_spec();
+    let (x, w) = (spec.state, spec.noise);
+    let n = 8usize;
+    let theta = random_params(spec.gen_layout().total, 29);
+    let y0 = [0.1f64, 0.05, -0.2];
+    // Base increments from the counter stream, owned so FD can perturb.
+    let src = CounterGridNoise::new(31, w, 0.0, 1.0, n);
+    let base: Vec<f64> = (0..n * w).map(|r| src.value(0, r / w, r % w)).collect();
+    let loss = |vals: &[f64]| -> f64 {
+        let mut stored = StoredBatchNoise::zeros(0.0, 1.0, n, w, 1);
+        stored.values_mut().copy_from_slice(vals);
+        let sde = NeuralGenerator::new(&spec, theta.clone());
+        let mut solver = ReversibleHeun::new(&sde, 0.0, &y0);
+        let mut pn = stored.path(0);
+        let traj = integrate(&sde, &mut solver, &mut pn, &y0, 0.0, 1.0, n);
+        traj[traj.len() - x..].iter().sum()
+    };
+    let sde = NeuralGenerator::new(&spec, theta.clone());
+    let mut stored = StoredBatchNoise::zeros(0.0, 1.0, n, w, 1);
+    stored.values_mut().copy_from_slice(&base);
+    let mut pn = stored.path(0);
+    let adj = adjoint_solve_steps(
+        &sde,
+        &y0,
+        0.0,
+        1.0,
+        n,
+        &mut pn,
+        BackwardMode::Reconstruct,
+        true,
+        |k, _z, lz| {
+            if k == n {
+                lz.fill(1.0);
+            }
+        },
+    );
+    assert_eq!(adj.ddw.len(), n * w);
+    let fd = central_gradient(loss, &base, 1e-6);
+    let rel = relative_l1(&adj.ddw, &fd);
+    assert!(rel <= 1e-6, "ddw vs FD rel L1 {rel:e}");
+}
+
+// ---------------------------------------------------------------------------
+// Batched ≡ per-path, bitwise, for the neural systems
+// ---------------------------------------------------------------------------
+
+const REMAINDER_BATCHES: [usize; 6] = [1, 3, 4, 7, 8, 33];
+
+/// Per-path starting states, slightly different per path so lane mixups
+/// would be caught.
+fn aos_start(dim: usize, batch: usize) -> Vec<f64> {
+    (0..batch * dim).map(|q| 0.02 * (q % 17) as f64 - 0.1).collect()
+}
+
+/// Per-path + per-component + per-step cotangent (catches any transposition).
+fn inject_weight(k: usize, i: usize, p: usize) -> f64 {
+    0.1 + 0.03 * i as f64 + 0.001 * p as f64 + 0.01 * (k % 5) as f64
+}
+
+/// Per-path reference with injection + ddw: `batch` separate
+/// `adjoint_solve_steps` runs, lanes gathered SoA, θ summed ascending.
+fn per_path_reference(
+    sde: &NeuralGenerator,
+    aos: &[f64],
+    batch: usize,
+    n: usize,
+    noise: &CounterGridNoise,
+    mode: BackwardMode,
+) -> AdjointGrad {
+    let dim = Sde::dim(sde);
+    let nd = Sde::noise_dim(sde);
+    let pl = sde.params_flat().len();
+    let mut terminal = vec![0.0; dim * batch];
+    let mut dy0 = vec![0.0; dim * batch];
+    let mut dtheta = vec![0.0; pl];
+    let mut ddw = vec![0.0; n * nd * batch];
+    for p in 0..batch {
+        let y0p = &aos[p * dim..(p + 1) * dim];
+        let mut pn = noise.path(p);
+        let g = adjoint_solve_steps(sde, y0p, 0.0, 1.0, n, &mut pn, mode, true, |k, _z, lz| {
+            for (i, l) in lz.iter_mut().enumerate() {
+                *l += inject_weight(k, i, p);
+            }
+        });
+        for i in 0..dim {
+            terminal[i * batch + p] = g.terminal[i];
+            dy0[i * batch + p] = g.dy0[i];
+        }
+        for m in 0..pl {
+            dtheta[m] += g.dtheta[m];
+        }
+        for r in 0..n * nd {
+            ddw[r * batch + p] = g.ddw[r];
+        }
+    }
+    AdjointGrad { terminal, dy0, dtheta, ddw }
+}
+
+#[test]
+fn neural_batched_adjoint_bit_identical_to_per_path() {
+    let spec = tiny_spec();
+    let dim = spec.state;
+    let n = 10usize;
+    let theta = random_params(spec.gen_layout().total, 13);
+    let sde = NeuralGenerator::new(&spec, theta.clone());
+    let native = NeuralGeneratorBatch::from_system(NeuralGenerator::new(&spec, theta.clone()));
+    for &batch in &REMAINDER_BATCHES {
+        let aos = aos_start(dim, batch);
+        let y0 = aos_to_soa(&aos, dim, batch);
+        let noise = CounterGridNoise::new(77, spec.noise, 0.0, 1.0, n);
+        for mode in [BackwardMode::Reconstruct, BackwardMode::Tape] {
+            let reference = per_path_reference(&sde, &aos, batch, n, &noise, mode);
+            let seed = |k: usize, p0: usize, cl: usize, _z: &[f64], lz: &mut [f64]| {
+                for i in 0..dim {
+                    for q in 0..cl {
+                        lz[i * cl + q] += inject_weight(k, i, p0 + q);
+                    }
+                }
+            };
+            for (threads, chunk) in [(1usize, batch), (1, 2), (3, 2), (2, 4), (4, 3)] {
+                let opts = BatchOptions { threads, chunk };
+                let got = adjoint_solve_batched_steps(
+                    &native, &noise, &y0, batch, 0.0, 1.0, n, mode, true, &opts, &seed,
+                );
+                assert_eq!(
+                    got.terminal, reference.terminal,
+                    "terminal: batch={batch} mode={mode:?} t={threads} c={chunk}"
+                );
+                assert_eq!(
+                    got.dy0, reference.dy0,
+                    "dy0: batch={batch} mode={mode:?} t={threads} c={chunk}"
+                );
+                assert_eq!(
+                    got.dtheta, reference.dtheta,
+                    "dtheta: batch={batch} mode={mode:?} t={threads} c={chunk}"
+                );
+                assert_eq!(
+                    got.ddw, reference.ddw,
+                    "ddw: batch={batch} mode={mode:?} t={threads} c={chunk}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn neural_native_batch_matches_blanket_adapter_bitwise() {
+    // The per-path NeuralGenerator *is* a BatchSdeVjp through the blanket
+    // gather/scatter adapter; the hand-batched SoA twin must produce the
+    // same bits (forward, backward, injection and ddw).
+    let spec = tiny_spec();
+    let dim = spec.state;
+    let n = 9usize;
+    let theta = random_params(spec.gen_layout().total, 51);
+    let adapter = NeuralGenerator::new(&spec, theta.clone());
+    let native = NeuralGeneratorBatch::from_system(NeuralGenerator::new(&spec, theta));
+    let seed = |k: usize, p0: usize, cl: usize, _z: &[f64], lz: &mut [f64]| {
+        for i in 0..dim {
+            for q in 0..cl {
+                lz[i * cl + q] += inject_weight(k, i, p0 + q);
+            }
+        }
+    };
+    for &batch in &[1usize, 5, 33] {
+        let y0 = aos_to_soa(&aos_start(dim, batch), dim, batch);
+        let noise = CounterGridNoise::new(3, spec.noise, 0.0, 1.0, n);
+        let opts = BatchOptions { threads: 1, chunk: 16 };
+        let a = adjoint_solve_batched_steps(
+            &adapter,
+            &noise,
+            &y0,
+            batch,
+            0.0,
+            1.0,
+            n,
+            BackwardMode::Reconstruct,
+            true,
+            &opts,
+            &seed,
+        );
+        let b = adjoint_solve_batched_steps(
+            &native,
+            &noise,
+            &y0,
+            batch,
+            0.0,
+            1.0,
+            n,
+            BackwardMode::Reconstruct,
+            true,
+            &opts,
+            &seed,
+        );
+        assert_eq!(a.terminal, b.terminal, "terminal at batch {batch}");
+        assert_eq!(a.dy0, b.dy0, "dy0 at batch {batch}");
+        assert_eq!(a.dtheta, b.dtheta, "dtheta at batch {batch}");
+        assert_eq!(a.ddw, b.ddw, "ddw at batch {batch}");
+    }
+}
+
+#[test]
+fn cde_batched_adjoint_matches_per_path() {
+    // The discriminator CDE: driven by stored ΔY "noise", terminal readout
+    // cotangent, ddw wanted (the generator-step path cotangents).
+    let spec = tiny_spec();
+    let (dh, y) = (spec.disc_state, spec.data_dim);
+    let n = 11usize;
+    let phi = random_params(spec.disc_layout().total, 61);
+    let disc = NeuralDiscriminator::new(&spec, phi.clone());
+    let native = NeuralDiscriminatorBatch::from_system(NeuralDiscriminator::new(&spec, phi));
+    for &batch in &[1usize, 4, 7, 33] {
+        // Deterministic pseudo-ΔY increments, distinct per (k, c, p).
+        let mut dys = StoredBatchNoise::zeros(0.0, 1.0, n, y, batch);
+        for k in 0..n {
+            for c in 0..y {
+                for p in 0..batch {
+                    dys.set(k, c, p, 0.05 * ((k + 1) as f64 * 0.7).sin() + 0.002 * p as f64
+                        - 0.001 * c as f64);
+                }
+            }
+        }
+        let aos = aos_start(dh, batch);
+        let h0 = aos_to_soa(&aos, dh, batch);
+        let seed = |k: usize, _p0: usize, cl: usize, _z: &[f64], lz: &mut [f64]| {
+            if k == n {
+                for i in 0..dh {
+                    for q in 0..cl {
+                        lz[i * cl + q] += 1.0 + 0.5 * i as f64;
+                    }
+                }
+            }
+        };
+        let opts = BatchOptions { threads: 2, chunk: 3 };
+        let got = adjoint_solve_batched_steps(
+            &native,
+            &dys,
+            &h0,
+            batch,
+            0.0,
+            1.0,
+            n,
+            BackwardMode::Reconstruct,
+            true,
+            &opts,
+            &seed,
+        );
+        let pl = spec.disc_layout().total;
+        let mut dtheta = vec![0.0; pl];
+        for p in 0..batch {
+            let y0p = &aos[p * dh..(p + 1) * dh];
+            let mut pn = dys.path(p);
+            let g = adjoint_solve_steps(
+                &disc,
+                y0p,
+                0.0,
+                1.0,
+                n,
+                &mut pn,
+                BackwardMode::Reconstruct,
+                true,
+                |k, _z, lz| {
+                    if k == n {
+                        for (i, l) in lz.iter_mut().enumerate() {
+                            *l += 1.0 + 0.5 * i as f64;
+                        }
+                    }
+                },
+            );
+            for i in 0..dh {
+                assert_eq!(got.terminal[i * batch + p], g.terminal[i], "terminal p={p}");
+                assert_eq!(got.dy0[i * batch + p], g.dy0[i], "dy0 p={p}");
+            }
+            for r in 0..n * y {
+                assert_eq!(got.ddw[r * batch + p], g.ddw[r], "ddw p={p} r={r}");
+            }
+            for m in 0..pl {
+                dtheta[m] += g.dtheta[m];
+            }
+        }
+        assert_eq!(got.dtheta, dtheta, "dtheta at batch {batch}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The native trainer end to end
+// ---------------------------------------------------------------------------
+
+fn smoke_config() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.steps = 3;
+    cfg.batch = 12;
+    cfg.data_size = 64;
+    cfg
+}
+
+#[test]
+fn native_gan_training_steps_are_finite_and_clip() {
+    let cfg = smoke_config();
+    let mut data = ou::generate(cfg.data_size, 3, ou::OuParams::default());
+    data.normalise_initial();
+    let mut trainer = GanTrainer::new(&cfg, cfg.steps).expect("trainer");
+    let theta0 = trainer.theta.clone();
+    let phi0 = trainer.phi.clone();
+    let mut rng = SplitPrng::new(1);
+    for step in 0..cfg.steps {
+        let stats = trainer.train_step(&data, &mut rng).expect("step");
+        assert!(stats.loss_g.is_finite(), "step {step} loss_g");
+        assert!(stats.loss_d.is_finite(), "step {step} loss_d");
+        assert!(
+            weights_clipped(trainer.disc_layout(), &trainer.phi, field_filter),
+            "step {step}: f/g weights escaped the clip region"
+        );
+    }
+    assert_ne!(trainer.theta, theta0, "generator params should move");
+    assert_ne!(trainer.phi, phi0, "discriminator params should move");
+}
+
+#[test]
+fn native_gan_training_is_bit_deterministic_across_fanout() {
+    // Same seed → identical losses, for ANY batch-engine fan-out: the
+    // trainer's reductions run in ascending path order and the engines are
+    // schedule-invariant, so threads/chunks must not change a single bit.
+    let cfg = smoke_config();
+    let mut data = ou::generate(cfg.data_size, 3, ou::OuParams::default());
+    data.normalise_initial();
+    let run = |opts: BatchOptions| -> Vec<(f32, f32)> {
+        let mut trainer =
+            GanTrainer::new(&cfg, cfg.steps).expect("trainer").with_batch_options(opts);
+        let mut rng = SplitPrng::new(5);
+        (0..cfg.steps)
+            .map(|_| {
+                let s = trainer.train_step(&data, &mut rng).expect("step");
+                (s.loss_g, s.loss_d)
+            })
+            .collect()
+    };
+    let a = run(BatchOptions { threads: 1, chunk: 12 });
+    let b = run(BatchOptions { threads: 3, chunk: 2 });
+    let c = run(BatchOptions { threads: 4, chunk: 5 });
+    assert_eq!(a, b, "fan-out changed the training bits");
+    assert_eq!(a, c, "fan-out changed the training bits");
+}
+
+#[test]
+fn native_sampling_produces_finite_series() {
+    let cfg = smoke_config();
+    let mut trainer = GanTrainer::new(&cfg, 1).expect("trainer");
+    let fake = trainer.sample(9).expect("sample");
+    assert_eq!(fake.n, 9);
+    assert_eq!(fake.seq_len, 32);
+    assert!(fake.values.iter().all(|v| v.is_finite()));
+    let spread = fake.values.iter().cloned().fold(f32::MIN, f32::max)
+        - fake.values.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(spread > 1e-3, "degenerate samples, spread {spread}");
+}
