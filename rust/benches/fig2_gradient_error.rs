@@ -30,6 +30,22 @@ fn main() {
     }
     println!("native adjoint assertions OK (reconstruction roundoff-exact)");
 
+    // Mixed-precision rows: f32 forward (8-wide lanes) + exact f64 tape
+    // backward, vs the all-f64 adjoint on the same Brownian sample. The
+    // deviation is the f32 truncation of the forward trajectory — nonzero,
+    // but bounded well below any solver-truncation bias.
+    let mixed = gradient_error::run_native_mixed(2021);
+    println!("{}", gradient_error::render(&mixed));
+    for p in &mixed {
+        assert!(
+            p.rel_err > 0.0 && p.rel_err < 1e-2,
+            "f32-forward deviation should be small but nonzero, got {} at n={}",
+            p.rel_err,
+            p.n_steps
+        );
+    }
+    println!("mixed-precision assertions OK (f32 forward, f64 backward)");
+
     if !Runtime::artifacts_present("artifacts") {
         eprintln!("skipping PJRT fig2 rows: run `make artifacts` first");
         return;

@@ -86,6 +86,22 @@ fn main() {
                 &BatchOptions { threads: 1, chunk: 64 },
             ));
         });
+        // The same native solve on the 8-wide f32 lanes (the precision-
+        // generic engine's single-precision path, noise served as f32).
+        let y032 = vec![0.1f32; 16 * 256];
+        table.bench("batch/revheun_native_f32/d=16/batch=256/n=32", |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
+            black_box(integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+                &nsde,
+                &noise,
+                &y032,
+                256,
+                0.0,
+                1.0,
+                32,
+                &BatchOptions { threads: 1, chunk: 64 },
+            ));
+        });
     }
 
     // Adjoint engine: forward + backward (O(1)-memory reconstruction and
@@ -161,6 +177,30 @@ fn main() {
             black_box(&y);
         });
         table.bench("simd/matvec_row/d=16/batch=256", |_| {
+            simd::matvec_row(&f[..16 * 256], &g0[..16 * 256], &mut y[..256], 16);
+            black_box(&y);
+        });
+    }
+
+    // The same kernels instantiated at f32 (8-wide unroll): same element
+    // count, half the bytes — the per-kernel floor under the f32/* solve
+    // rows in tab10.
+    {
+        let n = 16 * 256;
+        let f = vec![0.37f32; n];
+        let g0 = vec![0.21f32; n];
+        let g1 = vec![0.19f32; n];
+        let w = vec![0.023f32; n];
+        let mut y = vec![0.1f32; n];
+        table.bench("simd/axpy_f32x8/4096", |_| {
+            simd::axpy(1.0e-3f32, &f, &mut y);
+            black_box(&y);
+        });
+        table.bench("simd/avg_mul_add_f32x8/4096", |_| {
+            simd::avg_mul_add(&g0, &g1, &w, &mut y);
+            black_box(&y);
+        });
+        table.bench("simd/matvec_row_f32x8/d=16/batch=256", |_| {
             simd::matvec_row(&f[..16 * 256], &g0[..16 * 256], &mut y[..256], 16);
             black_box(&y);
         });

@@ -14,10 +14,14 @@
 //! vector fields, no gather/scatter) beating the `batched/` adapter rows.
 //! The `adjoint/*` rows time the full forward+backward reversible-Heun
 //! gradient (O(1)-memory reconstruction) against the forward-only
-//! `batched_native/revheun` rows — the cost of exact gradients.
+//! `batched_native/revheun` rows — the cost of exact gradients. The
+//! `f32/*` rows run the same native solves on the precision-generic
+//! engine's 8-wide `f32` lanes (double the SIMD width, half the memory
+//! traffic); the `f32_vs_f64/*` headline ratios are the single-precision
+//! speedup (target ≥1.5× on the native systems).
 //!
 //! Results are written to `results/bench_tab10_sde_solve.json` and, for the
-//! perf trajectory, `BENCH_pr3.json` (override the directory with
+//! perf trajectory, `BENCH_pr5.json` (override the directory with
 //! `BENCH_DIR`). Pass `--smoke` (or set `QUICK=1`) for the trimmed CI
 //! perf-smoke workload.
 
@@ -175,6 +179,30 @@ fn main() {
         );
     }
 
+    // f32 solve path (this PR's headline): the same native solves on the
+    // 8-wide f32 lanes — the noise is served as f32 straight from the
+    // counter streams, the state/fields stay f32 end to end, no widening
+    // anywhere on the hot path.
+    let y0b32 = vec![0.1f32; d * batch];
+    for &threads in &thread_counts {
+        btable.bench_n(&format!("f32/euler/threads={threads}/batch={batch}"), reps, |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+            let opts = BatchOptions { threads, chunk: 64 };
+            black_box(integrate_batched::<BatchEulerMaruyama<f32>, _, _>(
+                &nsde, &noise, &y0b32, batch, 0.0, 1.0, n, &opts,
+            ));
+        });
+    }
+    for &threads in &thread_counts {
+        btable.bench_n(&format!("f32/revheun/threads={threads}/batch={batch}"), reps, |i| {
+            let noise = CounterGridNoise::new(i as u64 + 1, d, 0.0, 1.0, n);
+            let opts = BatchOptions { threads, chunk: 64 };
+            black_box(integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+                &nsde, &noise, &y0b32, batch, 0.0, 1.0, n, &opts,
+            ));
+        });
+    }
+
     // ---- Adjoint engine (this PR's headline): forward + backward through
     // the same native batched reversible-Heun solve, O(1)-memory backward
     // reconstruction vs the stored-tape baseline. Compare against the
@@ -250,6 +278,19 @@ fn main() {
             speedups.push((format!("native_vs_adapter/{solver}/threads={threads}"), rel));
         }
     }
+    // f32-vs-f64 lane-width win: the native f64 solve over the f32 solve,
+    // per solver and thread count — the headline ratio of the precision-
+    // generic engine (8-wide lanes + half the memory traffic; target ≥1.5×).
+    for solver in ["euler", "revheun"] {
+        for &threads in &thread_counts {
+            let f64t = btable
+                .min_of(&format!("batched_native/{solver}/threads={threads}/batch={batch}"));
+            let f32t = btable.min_of(&format!("f32/{solver}/threads={threads}/batch={batch}"));
+            let ratio = f64t / f32t;
+            println!("  f32       {solver:<8} threads={threads:<3} f64/f32 {ratio:.2}x");
+            speedups.push((format!("f32_vs_f64/{solver}/threads={threads}"), ratio));
+        }
+    }
     // Gradient overhead: adjoint (forward+backward) over forward-only, per
     // thread count — the number that tells training users what exact
     // gradients cost on top of sampling.
@@ -276,12 +317,12 @@ fn main() {
     table.write_json("results/bench_tab10_sde_solve.json").ok();
     if quick {
         // Trimmed workloads are not comparable to the tracked trajectory —
-        // never let a smoke run overwrite BENCH_pr3.json.
-        println!("smoke/QUICK run: skipping BENCH_pr3.json (full run required)");
+        // never let a smoke run overwrite BENCH_pr5.json.
+        println!("smoke/QUICK run: skipping BENCH_pr5.json (full run required)");
         return;
     }
     let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
-    match write_bench_json(&bench_dir, "pr3", &[&table, &btable, &atable], headline) {
+    match write_bench_json(&bench_dir, "pr5", &[&table, &btable, &atable], headline) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write BENCH json: {e}"),
     }

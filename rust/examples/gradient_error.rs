@@ -26,6 +26,14 @@ fn main() -> anyhow::Result<()> {
         .fold(0.0f64, f64::max);
     println!("native reconstruction-vs-tape worst error: {rec_max:.3e} (pure roundoff)");
 
+    // Mixed-precision rows: f32 forward on the 8-wide lanes, exact f64
+    // tape backward — the gradient-accuracy price of the f32 solve path.
+    let mixed = gradient_error::run_native_mixed(2021);
+    println!("{}", gradient_error::render(&mixed));
+    let mixed_max = mixed.iter().map(|p| p.rel_err).fold(0.0f64, f64::max);
+    println!("f32-forward vs f64 worst deviation: {mixed_max:.3e} (single-precision truncation)");
+    points.extend(mixed);
+
     // PJRT rows: the JAX-twin solver comparison, when artifacts exist.
     match load_runtime("artifacts") {
         Ok(mut rt) => {

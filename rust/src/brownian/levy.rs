@@ -25,14 +25,21 @@
 use super::prng::{box_muller_fill, splitmix64};
 use super::{BrownianInterval, BrownianSource};
 
-/// Sample the space–time Lévy area `H_{s,t}` for `dim` channels.
+/// Sample the space–time Lévy area `H_{s,t}` into a caller-supplied buffer
+/// (one channel per slot) — the allocation-free primitive the hot-path
+/// query methods build on.
 ///
-/// Deterministic in `(seed, s, t, dim)`; independent of the increment by
-/// construction (separate stream).
+/// Deterministic in `(seed, s, t, h.len())`; independent of the increment
+/// by construction (separate stream).
+pub fn space_time_levy_area_into(seed: u64, s: f64, t: f64, h: &mut [f32]) {
+    let sd = ((t - s) / 12.0).sqrt();
+    box_muller_fill(splitmix64(seed ^ 0x48_4C45_5659), sd, h);
+}
+
+/// Allocating convenience over [`space_time_levy_area_into`].
 pub fn space_time_levy_area(seed: u64, s: f64, t: f64, dim: usize) -> Vec<f32> {
     let mut h = vec![0.0f32; dim];
-    let sd = ((t - s) / 12.0).sqrt();
-    box_muller_fill(splitmix64(seed ^ 0x48_4C45_5659), sd, &mut h);
+    space_time_levy_area_into(seed, s, t, &mut h);
     h
 }
 
@@ -93,11 +100,22 @@ impl BrownianWithLevy {
         Self { inner, seed }
     }
 
+    /// Increment and space–time Lévy area over `[s, t]` into caller-supplied
+    /// buffers (each `size` long) — the allocation-free form a solver loop
+    /// should call per step (the allocating wrappers below cost two `Vec`s
+    /// per query).
+    pub fn increment_and_levy_into(&mut self, s: f64, t: f64, w: &mut [f32], h: &mut [f32]) {
+        self.inner.increment(s, t, w);
+        let key = self.seed ^ (s.to_bits().rotate_left(17)) ^ t.to_bits();
+        space_time_levy_area_into(key, s, t, h);
+    }
+
     /// Increment and space–time Lévy area over `[s, t]`.
     pub fn increment_and_levy(&mut self, s: f64, t: f64) -> (Vec<f32>, Vec<f32>) {
-        let w = self.inner.increment_vec(s, t);
-        let key = self.seed ^ (s.to_bits().rotate_left(17)) ^ t.to_bits();
-        let h = space_time_levy_area(key, s, t, w.len());
+        let n = self.inner.size();
+        let mut w = vec![0.0f32; n];
+        let mut h = vec![0.0f32; n];
+        self.increment_and_levy_into(s, t, &mut w, &mut h);
         (w, h)
     }
 

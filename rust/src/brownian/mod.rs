@@ -32,7 +32,9 @@ mod stored;
 mod virtual_tree;
 
 pub use interval::{BrownianInterval, IntervalOptions, QueryStats};
-pub use levy::{davie_levy_area, space_time_levy_area, BrownianWithLevy};
+pub use levy::{
+    davie_levy_area, space_time_levy_area, space_time_levy_area_into, BrownianWithLevy,
+};
 pub use lru::LruCache;
 pub use prng::{box_muller_fill, normal_at, split_seed, splitmix64, SplitPrng};
 pub use stored::StoredPath;
@@ -59,6 +61,13 @@ pub trait BrownianSource {
     fn increment(&mut self, s: f64, t: f64, out: &mut [f32]);
 
     /// Convenience wrapper allocating the output vector.
+    ///
+    /// **Not for hot paths**: this allocates on every call. Solve and
+    /// training loops should query [`increment`](Self::increment) into a
+    /// reusable buffer, or better, pull the whole grid in one
+    /// [`fill_grid`](Self::fill_grid) descent
+    /// (`solvers::StoredBatchNoise::fill_from_source` /
+    /// `solvers::GridReplayNoise::from_source` wrap exactly that pattern).
     fn increment_vec(&mut self, s: f64, t: f64) -> Vec<f32> {
         let mut out = vec![0.0; self.size()];
         self.increment(s, t, &mut out);

@@ -806,16 +806,10 @@ pub fn field_filter(name: &str) -> bool {
 
 /// Widen a filled `[n][batch, w]` `f32` increment buffer (the
 /// [`StepNoise::fill`] layout the AOT executables consume) into the batch
-/// engine's stored SoA form over the normalised `[T0, T1]` grid.
+/// engine's stored SoA form over the normalised `[T0, T1]` grid — one
+/// transpose pass via [`StoredBatchNoise::from_f32_grid`], no intermediate
+/// widened buffer (and none at all once the consumer moves to `f32` lanes).
 fn widen_increments(dws32: &[f32], n: usize, w: usize, batch: usize) -> StoredBatchNoise {
     debug_assert_eq!(dws32.len(), n * batch * w);
-    let mut dws = StoredBatchNoise::zeros(T0, T1, n, w, batch);
-    for k in 0..n {
-        for p in 0..batch {
-            for j in 0..w {
-                dws.set(k, j, p, dws32[(k * batch + p) * w + j] as f64);
-            }
-        }
-    }
-    dws
+    StoredBatchNoise::from_f32_grid(T0, T1, n, w, batch, dws32)
 }

@@ -20,9 +20,10 @@
 
 use crate::brownian::{box_muller_fill, splitmix64, SplitPrng};
 use crate::runtime::Runtime;
-use crate::solvers::systems::TanhDiagonal;
+use crate::solvers::systems::{TanhDiagonal, TanhDiagonalBatch};
 use crate::solvers::{
-    adjoint_solve, integrate, BackwardMode, CounterGridNoise, ReversibleHeun,
+    adjoint_solve, adjoint_solve_batched, adjoint_solve_batched_mixed, integrate, BackwardMode,
+    BatchOptions, CounterGridNoise, ReversibleHeun,
 };
 use crate::util::stats::central_gradient;
 use anyhow::Result;
@@ -173,6 +174,57 @@ pub fn run_native(seed: u64) -> Vec<GradErrPoint> {
     out
 }
 
+/// The mixed-precision rows: per step count, the deviation of the
+/// mixed-precision gradient — **forward solved in `f32`** on the 8-wide
+/// lanes, exact `f64` tape backward over the widened trajectory
+/// ([`adjoint_solve_batched_mixed`]) — from the all-`f64` batched adjoint on
+/// the *same* Brownian sample (the `f32` increments are the rounded `f64`
+/// draws of the shared [`CounterGridNoise`]).
+///
+/// Unlike the reconstruction-vs-tape rows, this deviation is **not**
+/// roundoff-flat: it is the single-precision truncation of the forward
+/// trajectory carried through the chain rule — the accuracy price of the
+/// f32 solve path's ~2× bandwidth win, which is exactly what a user trading
+/// precision for speed needs to see.
+pub fn run_native_mixed(seed: u64) -> Vec<GradErrPoint> {
+    let d = 4usize;
+    let batch = 8usize;
+    let nsde = TanhDiagonalBatch::new(d, seed);
+    let y0: Vec<f64> = (0..d * batch).map(|i| 0.04 * (i % 7) as f64 + 0.05).collect();
+    let opts = BatchOptions::default();
+    let ones = |_p0: usize, _cl: usize, _z: &[f64], g: &mut [f64]| g.fill(1.0);
+    let mut out = Vec::new();
+    for &n in &[8usize, 64, 512] {
+        let noise = CounterGridNoise::new(splitmix64(seed ^ n as u64), d, 0.0, 1.0, n);
+        let cat = |g: &crate::solvers::AdjointGrad| {
+            let mut c = g.dy0.clone();
+            c.extend_from_slice(&g.dtheta);
+            c
+        };
+        let full = adjoint_solve_batched(
+            &nsde,
+            &noise,
+            &y0,
+            batch,
+            0.0,
+            1.0,
+            n,
+            BackwardMode::Tape,
+            &opts,
+            &ones,
+        );
+        let mixed = adjoint_solve_batched_mixed(
+            &nsde, &nsde, &noise, &y0, batch, 0.0, 1.0, n, &opts, &ones,
+        );
+        out.push(GradErrPoint {
+            solver: "native_revheun_f32fwd_vs_f64".to_string(),
+            n_steps: n,
+            rel_err: relative_l1(&cat(&mixed), &cat(&full)),
+        });
+    }
+    out
+}
+
 /// Render the Table-6-style text table.
 pub fn render(points: &[GradErrPoint]) -> String {
     let mut s = String::from(
@@ -197,6 +249,26 @@ mod tests {
         assert_eq!(relative_l1(&[1.0, -1.0], &[1.0, -1.0]), 0.0);
         let e = relative_l1(&[1.0, 0.0], &[0.0, 1.0]);
         assert!((e - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_precision_rows_show_f32_truncation_only() {
+        let points = run_native_mixed(77);
+        assert_eq!(points.len(), 3);
+        for p in &points {
+            assert!(
+                p.rel_err > 0.0,
+                "the f32 forward must actually differ from the f64 one at n={}",
+                p.n_steps
+            );
+            assert!(
+                p.rel_err < 1e-2,
+                "f32-forward gradient deviation should stay at single-precision \
+                 truncation level, got {} at n={}",
+                p.rel_err,
+                p.n_steps
+            );
+        }
     }
 
     #[test]

@@ -46,13 +46,20 @@
 //!   native hand-batched twins), and diagonal-noise systems skip the dense
 //!   `e×d` mat-vec. Component `i`'s values for all paths are contiguous
 //!   (`y[i * batch + p]`), so every inner loop is a unit-stride sweep.
-//! * **SIMD kernels** — those sweeps run on the 4-wide unrolled fused
-//!   kernels of [`solvers::simd`]. Vectorisation is *across paths*, never
-//!   within one path's arithmetic: each path's expression tree (operand
-//!   order, association, reduction order over noise channels) is exactly
-//!   the scalar steppers', so batched results are **bit-for-bit equal** to
-//!   per-path [`solvers::integrate`] — the SoA-lane invariant the whole
-//!   stack rests on.
+//! * **SIMD kernels** — those sweeps run on the unrolled fused kernels of
+//!   [`solvers::simd`], which are **precision-generic** over the sealed
+//!   [`solvers::Lane`] element type: `f64` unrolls 4-wide (one AVX2
+//!   register), `f32` unrolls **8-wide** with half the memory traffic —
+//!   the single-precision solve path for workloads that tolerate it (the
+//!   Brownian sources produce `f32` natively, so the `f32` path has zero
+//!   widening copies). Vectorisation is *across paths*, never within one
+//!   path's arithmetic: each path's expression tree (operand order,
+//!   association, reduction order over noise channels) is exactly the
+//!   scalar steppers', so batched results are **bit-for-bit equal** to
+//!   per-path integration at the same precision — lane width varies with
+//!   the element type, the association rule does not. That is the SoA-lane
+//!   invariant the whole stack rests on (the `f64` instantiation's bits are
+//!   the historical ones).
 //! * **Work-stealing fan-out** — [`solvers::integrate_batched`] spreads
 //!   path chunks over a `std::thread` pool with per-worker deques (steal
 //!   from the most-loaded peer when idle). Per-path noise comes from
@@ -87,6 +94,12 @@
 //! the forward pass ([`solvers::GridReplayNoise`] pulls a whole grid out of
 //! a Brownian source in one `fill_grid` descent and serves it right-to-left
 //! — the Brownian Interval's reason for existing).
+//!
+//! The adjoint engine itself stays `f64` (gradient accuracy is the paper's
+//! point), but [`solvers::adjoint_solve_batched_mixed`] runs the *forward*
+//! trajectory on the 8-wide `f32` lanes and backpropagates exactly through
+//! the widened tape — mixed-precision training's cost in gradient accuracy
+//! is measured by `coordinator::gradient_error::run_native_mixed`.
 //!
 //! The adjoint extends beyond terminal losses: [`solvers::adjoint_solve_steps`]
 //! injects per-step loss cotangents during the backward sweep (a

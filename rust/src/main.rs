@@ -130,6 +130,8 @@ fn main() -> anyhow::Result<()> {
             // comparison additionally needs `make artifacts`.
             let native = gradient_error::run_native(2021);
             println!("{}", gradient_error::render(&native));
+            let mixed = gradient_error::run_native_mixed(2021);
+            println!("{}", gradient_error::render(&mixed));
             if neuralsde::runtime::Runtime::artifacts_present("artifacts") {
                 let mut rt = load_runtime("artifacts")?;
                 let points = gradient_error::run(&mut rt, 2021)?;

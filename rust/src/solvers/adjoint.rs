@@ -63,6 +63,7 @@
 //! (the reconstruction-drift invariant); release builds skip the check.
 
 use super::batch::{BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper};
+use super::simd::Lane;
 use super::{simd, NoiseF64, ReversibleHeun, Sde};
 use crate::brownian::BrownianSource;
 use crate::util::stats;
@@ -440,6 +441,10 @@ where
     let mut wa = vec![0.0f64; e];
     #[cfg(debug_assertions)]
     let mut chk = ReversibleHeun::new(sde, t1, &terminal);
+    // Reusable pre-reverse snapshot for the debug drift check — hoisted out
+    // of the loop so the check costs copies, not allocations, per step.
+    #[cfg(debug_assertions)]
+    let mut pre = solver.state().clone();
 
     for k in (0..n_steps).rev() {
         let s = t0 + k as f64 * dtg;
@@ -468,7 +473,13 @@ where
         // Reconstruct the state at t_k (Algorithm 2), or read the tape.
         if !tape_on {
             #[cfg(debug_assertions)]
-            let pre = solver.state().clone();
+            {
+                let st = solver.state();
+                pre.z.copy_from_slice(&st.z);
+                pre.zh.copy_from_slice(&st.zh);
+                pre.mu.copy_from_slice(&st.mu);
+                pre.sigma.copy_from_slice(&st.sigma);
+            }
             solver.reverse_step(sde, t, h, &dw);
             #[cfg(debug_assertions)]
             {
@@ -657,6 +668,16 @@ where
         let mut wa = vec![0.0f64; e * cl];
         #[cfg(debug_assertions)]
         let mut chk = BatchReversibleHeun::for_chunk(sde, t1, &terminal, cl);
+        // Reusable pre-reverse snapshot lanes for the debug drift check —
+        // hoisted out of the backward sweep so each step copies into the
+        // same four buffers instead of allocating four fresh vectors.
+        #[cfg(debug_assertions)]
+        let (mut pre_z, mut pre_zh, mut pre_mu, mut pre_sigma) = (
+            stepper.z().to_vec(),
+            stepper.zh().to_vec(),
+            stepper.mu().to_vec(),
+            stepper.sigma().to_vec(),
+        );
 
         for k in (0..n_steps).rev() {
             let s = t0 + k as f64 * dtg;
@@ -690,12 +711,12 @@ where
 
             if !tape_on {
                 #[cfg(debug_assertions)]
-                let pre = (
-                    stepper.z().to_vec(),
-                    stepper.zh().to_vec(),
-                    stepper.mu().to_vec(),
-                    stepper.sigma().to_vec(),
-                );
+                {
+                    pre_z.copy_from_slice(stepper.z());
+                    pre_zh.copy_from_slice(stepper.zh());
+                    pre_mu.copy_from_slice(stepper.mu());
+                    pre_sigma.copy_from_slice(stepper.sigma());
+                }
                 stepper.reverse_step(sde, t, h, &dw);
                 #[cfg(debug_assertions)]
                 {
@@ -704,11 +725,11 @@ where
                     let md = |a: &[f64], b: &[f64]| {
                         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
                     };
-                    let drift = md(chk.z(), &pre.0)
-                        .max(md(chk.zh(), &pre.1))
-                        .max(md(chk.mu(), &pre.2))
-                        .max(md(chk.sigma(), &pre.3));
-                    let scale0 = pre.0.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+                    let drift = md(chk.z(), &pre_z)
+                        .max(md(chk.zh(), &pre_zh))
+                        .max(md(chk.mu(), &pre_mu))
+                        .max(md(chk.sigma(), &pre_sigma));
+                    let scale0 = pre_z.iter().fold(1.0f64, |m, v| m.max(v.abs()));
                     debug_assert!(
                         drift <= 1e-6 * scale0,
                         "batched reconstruction drift {drift:e} at step {k}"
@@ -776,6 +797,15 @@ where
             }
         }
     }
+    let dtheta = reduce_theta_ascending(&gth_lanes, pl, batch);
+    AdjointGrad { terminal, dy0, dtheta, ddw }
+}
+
+/// Sum per-path θ lanes over paths in **ascending path order** — the
+/// association of the per-path reference (`Σ_p dθ_p`, `p = 0..batch`),
+/// shared by every batched adjoint variant so the reduction order cannot
+/// drift between them.
+fn reduce_theta_ascending(gth_lanes: &[f64], pl: usize, batch: usize) -> Vec<f64> {
     let mut dtheta = vec![0.0f64; pl];
     for m in 0..pl {
         let mut acc = 0.0f64;
@@ -784,26 +814,169 @@ where
         }
         dtheta[m] = acc;
     }
-    AdjointGrad { terminal, dy0, dtheta, ddw }
+    dtheta
+}
+
+/// Mixed-precision batched adjoint: the **forward** trajectory runs in
+/// `f32` on the 8-wide SIMD lanes (half the memory traffic of the `f64`
+/// forward), its `ẑ` tape is widened once per step, and the **backward**
+/// sweep is the exact `f64` Tape-mode cotangent recursion over that tape —
+/// i.e. the discretise-then-optimise gradient of the *`f32`* discrete
+/// forward map, contracted through the `f64` VJPs on the widened increments
+/// the forward consumed.
+///
+/// `sde` and `sde32` must be the two precision instantiations of the same
+/// system (e.g. a [`super::systems::TanhDiagonalBatch`], which implements
+/// `BatchSde` at both precisions); `noise32` drives the forward and, after
+/// exact widening, the backward. The returned gradients deviate from the
+/// all-`f64` [`adjoint_solve_batched`] only by the forward's single-
+/// precision rounding — [`crate::coordinator::gradient_error::run_native_mixed`]
+/// measures exactly that deviation.
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_solve_batched_mixed<S, S32, N32, G>(
+    sde: &S,
+    sde32: &S32,
+    noise32: &N32,
+    y0: &[f64],
+    batch: usize,
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    opts: &BatchOptions,
+    grad_terminal: &G,
+) -> AdjointGrad
+where
+    S: BatchSdeVjp,
+    S32: BatchSde<f32>,
+    N32: BatchNoise<f32>,
+    G: Fn(usize, usize, &[f64], &mut [f64]) + Sync,
+{
+    let e = sde.state_dim();
+    let nd = sde.brownian_dim();
+    let pl = sde.param_len();
+    assert_eq!(sde32.state_dim(), e, "sde/sde32 state dimension mismatch");
+    assert_eq!(sde32.brownian_dim(), nd, "sde/sde32 Brownian dimension mismatch");
+    assert_eq!(y0.len(), e * batch, "y0 must be SoA [dim * batch]");
+    assert_eq!(noise32.brownian_dim(), nd, "noise/sde Brownian dimension mismatch");
+    assert!(n_steps >= 1 && batch >= 1);
+    let chunk = opts.chunk.max(1);
+    let n_chunks = (batch + chunk - 1) / chunk;
+    let dtg = (t1 - t0) / n_steps as f64;
+
+    let run_chunk = |c: usize| -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let p0 = c * chunk;
+        let cl = chunk.min(batch - p0);
+        // f32 forward on 8-wide lanes, taping ẑ widened to f64.
+        let mut yc32 = vec![0.0f32; e * cl];
+        for i in 0..e {
+            for q in 0..cl {
+                yc32[i * cl + q] = y0[i * batch + p0 + q] as f32;
+            }
+        }
+        let mut fwd = <BatchReversibleHeun<f32> as BatchStepper>::for_chunk(sde32, t0, &yc32, cl);
+        let mut dw32 = vec![0.0f32; nd * cl];
+        let mut tape: Vec<f64> = Vec::with_capacity((n_steps + 1) * e * cl);
+        for k in 0..n_steps {
+            tape.extend(fwd.zh().iter().map(|&v| v as f64));
+            let s = t0 + k as f64 * dtg;
+            let t = t0 + (k + 1) as f64 * dtg;
+            noise32.fill_step(k, s, t, p0, cl, &mut dw32);
+            fwd.forward_step(sde32, s, t - s, &dw32);
+        }
+        tape.extend(fwd.zh().iter().map(|&v| v as f64));
+        let terminal: Vec<f64> = fwd.z().iter().map(|&v| v as f64).collect();
+
+        // Exact f64 Tape-mode backward over the widened f32 trajectory.
+        let mut lz = vec![0.0f64; e * cl];
+        let mut lzh = vec![0.0f64; e * cl];
+        grad_terminal(p0, cl, &terminal, &mut lz);
+        let mut gth = vec![0.0f64; pl * cl];
+        let mut vg = vec![0.0f64; e * cl];
+        let mut wf = vec![0.0f64; e * cl];
+        let mut wa = vec![0.0f64; e * cl];
+        let mut dw = vec![0.0f64; nd * cl];
+        for k in (0..n_steps).rev() {
+            let s = t0 + k as f64 * dtg;
+            let t = t0 + (k + 1) as f64 * dtg;
+            let h = t - s;
+            let t_hi = s + h;
+            // The increments the f32 forward consumed, widened exactly.
+            noise32.fill_step(k, s, t, p0, cl, &mut dw32);
+            for (o, &v) in dw.iter_mut().zip(&dw32) {
+                *o = v as f64;
+            }
+
+            // Stage A (same kernel sequence as the all-f64 sweep).
+            simd::scale_half(&lz, &mut vg);
+            simd::scale(h, &vg, &mut wf);
+            wa.copy_from_slice(&lzh);
+            let zh_hi = &tape[(k + 1) * e * cl..(k + 2) * e * cl];
+            sde.drift_vjp_batch(t_hi, zh_hi, &wf, &mut wa, &mut gth, cl);
+            sde.diffusion_vjp_batch(t_hi, zh_hi, &vg, &dw, &mut wa, &mut gth, cl);
+
+            // Stage B.
+            let zh_lo = &tape[k * e * cl..(k + 1) * e * cl];
+            simd::add_half(&wa, &lz, &mut vg);
+            simd::scale(h, &vg, &mut wf);
+            simd::neg(&wa, &mut lzh);
+            sde.drift_vjp_batch(s, zh_lo, &wf, &mut lzh, &mut gth, cl);
+            sde.diffusion_vjp_batch(s, zh_lo, &vg, &dw, &mut lzh, &mut gth, cl);
+            simd::axpy(2.0, &wa, &mut lz);
+        }
+        let mut dy0 = vec![0.0f64; e * cl];
+        for i in 0..e * cl {
+            dy0[i] = lz[i] + lzh[i];
+        }
+        (terminal, dy0, gth)
+    };
+
+    let chunk_grads: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> =
+        super::map_chunks(n_chunks, opts.threads, run_chunk);
+
+    // Scatter and reduce exactly as the all-f64 engine does: θ over paths
+    // in ascending path order, independent of chunking and threading.
+    let mut terminal = vec![0.0f64; e * batch];
+    let mut dy0 = vec![0.0f64; e * batch];
+    let mut gth_lanes = vec![0.0f64; pl * batch];
+    for (c, (tz, dz, gt)) in chunk_grads.iter().enumerate() {
+        let p0 = c * chunk;
+        let cl = chunk.min(batch - p0);
+        for i in 0..e {
+            terminal[i * batch + p0..i * batch + p0 + cl]
+                .copy_from_slice(&tz[i * cl..(i + 1) * cl]);
+            dy0[i * batch + p0..i * batch + p0 + cl].copy_from_slice(&dz[i * cl..(i + 1) * cl]);
+        }
+        for m in 0..pl {
+            gth_lanes[m * batch + p0..m * batch + p0 + cl]
+                .copy_from_slice(&gt[m * cl..(m + 1) * cl]);
+        }
+    }
+    let dtheta = reduce_theta_ascending(&gth_lanes, pl, batch);
+    AdjointGrad { terminal, dy0, dtheta, ddw: Vec::new() }
 }
 
 /// Backward-pass Brownian replay: pulls every increment of a uniform grid
 /// out of a [`BrownianSource`] in **one** [`fill_grid`] descent, then serves
 /// them as [`NoiseF64`] in any order — forward for the solve, right-to-left
 /// for the adjoint sweep. Bit-identical to querying the source per step
-/// (the `fill_grid` contract), widened to `f64` exactly as
-/// [`super::NoiseFromSource`] widens.
+/// (the `fill_grid` contract).
+///
+/// Generic over the stored element type: `GridReplayNoise<f64>` (the
+/// default) widens at fill time exactly as [`super::NoiseFromSource`]
+/// widens; `GridReplayNoise<f32>` keeps the source's native `f32` grid
+/// **without any conversion pass** ([`Lane::vec_from_f32`] hands the fill
+/// buffer over as-is) and widens only at query time.
 ///
 /// [`fill_grid`]: BrownianSource::fill_grid
-pub struct GridReplayNoise {
+pub struct GridReplayNoise<T: Lane = f64> {
     t0: f64,
     dt: f64,
     n_steps: usize,
     size: usize,
-    vals: Vec<f64>,
+    vals: Vec<T>,
 }
 
-impl GridReplayNoise {
+impl<T: Lane> GridReplayNoise<T> {
     /// Fill the `n_steps`-interval uniform grid over `[t0, t1]` from `src`.
     pub fn from_source<B: BrownianSource>(src: &mut B, t0: f64, t1: f64, n_steps: usize) -> Self {
         assert!(t1 > t0 && n_steps >= 1);
@@ -812,7 +985,7 @@ impl GridReplayNoise {
         let ts: Vec<f64> = (0..=n_steps).map(|k| t0 + k as f64 * dt).collect();
         let mut buf = vec![0.0f32; n_steps * size];
         src.fill_grid(&ts, &mut buf);
-        let vals = buf.iter().map(|&x| x as f64).collect();
+        let vals = T::vec_from_f32(buf);
         Self { t0, dt, n_steps, size, vals }
     }
 
@@ -820,9 +993,18 @@ impl GridReplayNoise {
     pub fn size(&self) -> usize {
         self.size
     }
+
+    /// The stored increments of grid step `k` at the native element type —
+    /// the direct read path for `f32` consumers (the [`NoiseF64`] view is
+    /// `f64`-only so that un-annotated `from_source` calls keep inferring
+    /// the default precision).
+    pub fn step(&self, k: usize) -> &[T] {
+        assert!(k < self.n_steps, "step {k} off the replay grid");
+        &self.vals[k * self.size..(k + 1) * self.size]
+    }
 }
 
-impl NoiseF64 for GridReplayNoise {
+impl NoiseF64 for GridReplayNoise<f64> {
     fn increment(&mut self, s: f64, t: f64, out: &mut [f64]) {
         // Hard asserts, not debug: a mis-gridded query in a release build
         // would otherwise silently return the wrong increment (the replay

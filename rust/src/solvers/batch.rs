@@ -1,4 +1,4 @@
-//! Batched structure-of-arrays (SoA) solve engine.
+//! Batched structure-of-arrays (SoA) solve engine — precision-generic.
 //!
 //! The paper's headline numbers are measured on *batched* solves — SDE-GAN
 //! and Latent SDE training integrate 1024+ sample paths per step — while the
@@ -29,19 +29,33 @@
 //! `p`), noise `dw[j * batch + p]`, dense diffusion
 //! `g[(i * noise_dim + j) * batch + p]`, diagonal diffusion `g[i * batch + p]`.
 //!
-//! The per-component inner loops run on the 4-wide unit-stride kernels of
-//! [`super::simd`]; vectorisation is across paths only, so batched results
-//! stay bit-for-bit equal to per-path integration (see that module's docs
-//! for the exact invariants).
+//! # Precision-generic lanes
+//!
+//! Every trait and stepper here is generic over the sealed element type
+//! [`Lane`] (`f64`, the default everywhere, or `f32`): the per-component
+//! inner loops run on the unit-stride kernels of [`super::simd`], 4-wide
+//! for `f64` and **8-wide for `f32`** — double the SIMD lane width and half
+//! the memory bandwidth for workloads that tolerate single precision. The
+//! time grid stays `f64` in both instantiations (grid arithmetic is not a
+//! lane quantity); only lane data changes type, with `Δt` rounded once per
+//! step through [`Lane::from_f64`] (the identity for `f64`, so the `f64`
+//! path's bits are exactly the historical ones). Vectorisation is across
+//! paths only, so batched results stay bit-for-bit equal to per-path
+//! integration *at the same precision* (see the kernel module's docs for
+//! the exact invariants).
 
-use super::{simd, NoiseF64, Sde};
-use crate::brownian::{normal_at, splitmix64};
+use super::simd::{self, Lane};
+use super::{NoiseF64, Sde};
+use crate::brownian::{normal_at, splitmix64, BrownianSource};
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
-/// A batched SDE over structure-of-arrays state (see module docs for the
-/// layout conventions). `Sync` so chunks can be solved on worker threads.
-pub trait BatchSde: Sync {
+/// A batched SDE over structure-of-arrays state of element type `T` (see
+/// module docs for the layout conventions). `Sync` so chunks can be solved
+/// on worker threads. Per-path systems adapt automatically at `f64`; native
+/// hand-batched systems additionally implement `BatchSde<f32>` to run on
+/// the 8-wide lanes.
+pub trait BatchSde<T: Lane = f64>: Sync {
     /// State dimension `e` per path.
     fn state_dim(&self) -> usize;
     /// Brownian dimension `d` per path.
@@ -53,18 +67,18 @@ pub trait BatchSde: Sync {
         false
     }
     /// Batched drift into `out` (`[dim * batch]`, SoA).
-    fn drift_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize);
+    fn drift_batch(&self, t: f64, y: &[T], out: &mut [T], batch: usize);
     /// Batched dense diffusion into `out` (`[dim * noise_dim * batch]`, SoA).
-    fn diffusion_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize);
+    fn diffusion_batch(&self, t: f64, y: &[T], out: &mut [T], batch: usize);
     /// Batched diagonal diffusion into `out` (`[dim * batch]`, SoA). Only
     /// called when [`diagonal_noise`](Self::diagonal_noise) is true.
-    fn diffusion_diag_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+    fn diffusion_diag_batch(&self, t: f64, y: &[T], out: &mut [T], batch: usize) {
         let _ = (t, y, out, batch);
         unimplemented!("diffusion_diag_batch called on a non-diagonal BatchSde");
     }
 }
 
-/// Blanket adapter: every per-path [`Sde`] is a [`BatchSde`] by
+/// Blanket adapter: every per-path [`Sde`] is a [`BatchSde`] (at `f64`) by
 /// gather → per-path evaluation → scatter. Per-path arithmetic is the
 /// scalar implementation itself, so adapted batched solves agree with
 /// per-path solves bit-for-bit.
@@ -132,22 +146,28 @@ impl<S: Sde + Sync> BatchSde for S {
 // Noise
 // ---------------------------------------------------------------------------
 
-/// Per-path Brownian grid noise for batched solves. Implementations must be
-/// deterministic **per path**: the increment of path `p` at step `k` may not
-/// depend on which chunk or thread asks for it.
-pub trait BatchNoise: Sync {
+/// Per-path Brownian grid noise for batched solves over element type `T`.
+/// Implementations must be deterministic **per path**: the increment of
+/// path `p` at step `k` may not depend on which chunk or thread asks for it.
+pub trait BatchNoise<T: Lane = f64>: Sync {
     /// Brownian dimension `d` per path.
     fn brownian_dim(&self) -> usize;
     /// Write the SoA increments for grid step `k` (spanning `[s, t]`) of
     /// paths `p0 .. p0 + chunk` into `out` (`[d * chunk]`):
     /// `out[j * chunk + q]` is channel `j` of path `p0 + q`.
-    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [f64]);
+    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [T]);
 }
 
 /// Counter-based per-path Gaussian grid noise: O(1) memory, random access,
 /// thread-safe. Path `p`'s stream is seeded from `(seed, p)` only, so its
 /// increments are identical whether it is solved alone, inside any chunk, or
 /// on any thread — the property the engine's determinism guarantee rests on.
+///
+/// Implements [`BatchNoise`] at both precisions: the `f32` increments are
+/// the rounded `f64` samples (same underlying Gaussian draw), so an `f32`
+/// solve and an `f64` solve of the same seed see the *same* Brownian sample
+/// up to lane rounding — the property the mixed-precision deviation
+/// measurements rest on.
 pub struct CounterGridNoise {
     base: u64,
     noise_dim: usize,
@@ -178,10 +198,45 @@ impl CounterGridNoise {
         normal_at(self.path_seed(p), (k * self.noise_dim + j) as u64) * self.sd
     }
 
+    /// The `f32` lane value of the same draw — exactly what the
+    /// `BatchNoise<f32>` impl serves (the rounded `f64` sample).
+    #[inline]
+    pub fn value_f32(&self, p: usize, k: usize, j: usize) -> f32 {
+        self.value(p, k, j) as f32
+    }
+
     /// A [`NoiseF64`] view of path `p`'s stream, for driving the per-path
     /// solvers with exactly the noise the batched engine hands that path.
     pub fn path(&self, p: usize) -> PathNoiseF64<'_> {
         PathNoiseF64 { src: self, p }
+    }
+}
+
+impl CounterGridNoise {
+    /// One shared fill body for both precisions: the draw is always the
+    /// `f64` sample (`normal_at · √Δt`), rounded through [`Lane::from_f64`]
+    /// — the identity at `f64` — so the two [`BatchNoise`] impls cannot
+    /// drift apart.
+    #[inline]
+    fn fill_step_lanes<T: Lane>(
+        &self,
+        k: usize,
+        s: f64,
+        t: f64,
+        p0: usize,
+        chunk: usize,
+        out: &mut [T],
+    ) {
+        debug_assert!((s - (self.t0 + k as f64 * self.dt)).abs() < self.dt * 1e-9);
+        debug_assert!(t > s);
+        debug_assert_eq!(out.len(), self.noise_dim * chunk);
+        let d = self.noise_dim;
+        for q in 0..chunk {
+            let seed = self.path_seed(p0 + q);
+            for j in 0..d {
+                out[j * chunk + q] = T::from_f64(normal_at(seed, (k * d + j) as u64) * self.sd);
+            }
+        }
     }
 }
 
@@ -191,16 +246,17 @@ impl BatchNoise for CounterGridNoise {
     }
 
     fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [f64]) {
-        debug_assert!((s - (self.t0 + k as f64 * self.dt)).abs() < self.dt * 1e-9);
-        debug_assert!(t > s);
-        debug_assert_eq!(out.len(), self.noise_dim * chunk);
-        let d = self.noise_dim;
-        for q in 0..chunk {
-            let seed = self.path_seed(p0 + q);
-            for j in 0..d {
-                out[j * chunk + q] = normal_at(seed, (k * d + j) as u64) * self.sd;
-            }
-        }
+        self.fill_step_lanes(k, s, t, p0, chunk, out);
+    }
+}
+
+impl BatchNoise<f32> for CounterGridNoise {
+    fn brownian_dim(&self) -> usize {
+        self.noise_dim
+    }
+
+    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [f32]) {
+        self.fill_step_lanes(k, s, t, p0, chunk, out);
     }
 }
 
@@ -230,24 +286,29 @@ impl NoiseF64 for PathNoiseF64<'_> {
 ///
 /// * the neural-CDE discriminator, whose control increments are the observed
 ///   (or generated) path's `ΔY` (equation (2) of the paper);
-/// * replaying an externally sampled Brownian grid (e.g. a Brownian-Interval
-///   `fill_grid` widened to `f64`) through the batch engine's forward *and*
-///   backward sweeps with guaranteed identical bits.
+/// * replaying an externally sampled Brownian grid through the batch
+///   engine's forward *and* backward sweeps with guaranteed identical bits.
 ///
-/// Storage is SoA: `vals[(k * dim + j) * batch + p]` is channel `j` of path
-/// `p` at grid step `k`. Serves any step in any order (the doubly-sequential
-/// adjoint access pattern), per path via [`path`](Self::path) or per chunk
-/// via [`BatchNoise`].
-pub struct StoredBatchNoise {
+/// Storage is SoA at the lane precision `T`: `vals[(k * dim + j) * batch + p]`
+/// is channel `j` of path `p` at grid step `k`. Serves any step in any order
+/// (the doubly-sequential adjoint access pattern), per path via
+/// [`path`](Self::path) or per chunk via [`BatchNoise`].
+///
+/// The Brownian sources produce `f32` natively, so `StoredBatchNoise<f32>`
+/// consumes a [`BrownianSource`] grid **without any widening**
+/// ([`fill_from_source`](Self::fill_from_source) /
+/// [`from_f32_grid`](Self::from_f32_grid) — a single transpose pass into
+/// the SoA lanes, no intermediate `f64` buffer in either precision).
+pub struct StoredBatchNoise<T: Lane = f64> {
     t0: f64,
     dt: f64,
     n_steps: usize,
     dim: usize,
     batch: usize,
-    vals: Vec<f64>,
+    vals: Vec<T>,
 }
 
-impl StoredBatchNoise {
+impl<T: Lane> StoredBatchNoise<T> {
     /// Zero-filled increments for `n_steps` uniform intervals over
     /// `[t0, t1]`, `dim` channels per path.
     pub fn zeros(t0: f64, t1: f64, n_steps: usize, dim: usize, batch: usize) -> Self {
@@ -258,40 +319,90 @@ impl StoredBatchNoise {
             n_steps,
             dim,
             batch,
-            vals: vec![0.0; n_steps * dim * batch],
+            vals: vec![T::ZERO; n_steps * dim * batch],
+        }
+    }
+
+    /// Build from a step-major, path-major `f32` grid buffer — the
+    /// `[k][p][j]` layout [`BrownianSource::fill_grid`] (with
+    /// `size = batch * dim`) and `StepNoise::fill` produce. One transpose
+    /// pass straight into the SoA lanes: no intermediate widened buffer for
+    /// `f64` consumers, no conversion at all for `f32` consumers.
+    pub fn from_f32_grid(
+        t0: f64,
+        t1: f64,
+        n_steps: usize,
+        dim: usize,
+        batch: usize,
+        grid: &[f32],
+    ) -> Self {
+        assert_eq!(grid.len(), n_steps * batch * dim, "grid must be [n_steps][batch][dim]");
+        let mut out = Self::zeros(t0, t1, n_steps, dim, batch);
+        for k in 0..n_steps {
+            for p in 0..batch {
+                let row = &grid[(k * batch + p) * dim..(k * batch + p + 1) * dim];
+                for (j, &v) in row.iter().enumerate() {
+                    out.vals[(k * out.dim + j) * out.batch + p] = T::from_f32(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Refill in place from a [`BrownianSource`] (`src.size()` must equal
+    /// `batch * dim`, channel `c = p * dim + j`): **one** `fill_grid`
+    /// descent into the caller's reusable `f32` scratch buffer, then one
+    /// transpose pass into the SoA lanes — the hot-path replacement for
+    /// per-step [`BrownianSource::increment_vec`] calls, which allocate on
+    /// every step.
+    pub fn fill_from_source<B: BrownianSource>(&mut self, src: &mut B, scratch: &mut Vec<f32>) {
+        let size = src.size();
+        assert_eq!(size, self.batch * self.dim, "source size must be batch * dim");
+        let ts: Vec<f64> = (0..=self.n_steps).map(|k| self.t0 + k as f64 * self.dt).collect();
+        scratch.clear();
+        scratch.resize(self.n_steps * size, 0.0);
+        src.fill_grid(&ts, scratch);
+        for k in 0..self.n_steps {
+            for p in 0..self.batch {
+                let row = &scratch[(k * self.batch + p) * self.dim..];
+                for j in 0..self.dim {
+                    self.vals[(k * self.dim + j) * self.batch + p] = T::from_f32(row[j]);
+                }
+            }
         }
     }
 
     /// Set channel `j` of path `p` at step `k`.
     #[inline]
-    pub fn set(&mut self, k: usize, j: usize, p: usize, v: f64) {
+    pub fn set(&mut self, k: usize, j: usize, p: usize, v: T) {
         self.vals[(k * self.dim + j) * self.batch + p] = v;
     }
 
     /// Read channel `j` of path `p` at step `k`.
     #[inline]
-    pub fn get(&self, k: usize, j: usize, p: usize) -> f64 {
+    pub fn get(&self, k: usize, j: usize, p: usize) -> T {
         self.vals[(k * self.dim + j) * self.batch + p]
     }
 
     /// The full SoA value buffer (tests perturb it for finite differences).
-    pub fn values_mut(&mut self) -> &mut [f64] {
+    pub fn values_mut(&mut self) -> &mut [T] {
         &mut self.vals
     }
 
-    /// A [`NoiseF64`] view of path `p`'s stream.
-    pub fn path(&self, p: usize) -> StoredPathNoise<'_> {
+    /// A [`NoiseF64`] view of path `p`'s stream (widening at query time for
+    /// `f32` storage).
+    pub fn path(&self, p: usize) -> StoredPathNoise<'_, T> {
         assert!(p < self.batch);
         StoredPathNoise { src: self, p }
     }
 }
 
-impl BatchNoise for StoredBatchNoise {
+impl<T: Lane> BatchNoise<T> for StoredBatchNoise<T> {
     fn brownian_dim(&self) -> usize {
         self.dim
     }
 
-    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [f64]) {
+    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [T]) {
         debug_assert!((s - (self.t0 + k as f64 * self.dt)).abs() < self.dt * 1e-9);
         debug_assert!(t > s && p0 + chunk <= self.batch);
         debug_assert_eq!(out.len(), self.dim * chunk);
@@ -303,12 +414,12 @@ impl BatchNoise for StoredBatchNoise {
 }
 
 /// Single-path [`NoiseF64`] view into a [`StoredBatchNoise`].
-pub struct StoredPathNoise<'a> {
-    src: &'a StoredBatchNoise,
+pub struct StoredPathNoise<'a, T: Lane = f64> {
+    src: &'a StoredBatchNoise<T>,
     p: usize,
 }
 
-impl NoiseF64 for StoredPathNoise<'_> {
+impl<T: Lane> NoiseF64 for StoredPathNoise<'_, T> {
     fn increment(&mut self, s: f64, t: f64, out: &mut [f64]) {
         let k = ((s - self.src.t0) / self.src.dt).round() as usize;
         debug_assert!(k < self.src.n_steps, "query off the grid: s={s}");
@@ -317,7 +428,7 @@ impl NoiseF64 for StoredPathNoise<'_> {
             "StoredPathNoise serves single grid steps, got [{s}, {t}]"
         );
         for (j, o) in out.iter_mut().enumerate() {
-            *o = self.src.get(k, j, self.p);
+            *o = self.src.get(k, j, self.p).to_f64();
         }
     }
 }
@@ -326,48 +437,57 @@ impl NoiseF64 for StoredPathNoise<'_> {
 // Steppers
 // ---------------------------------------------------------------------------
 
-/// A batched fixed-step solver over SoA state. Mirrors
-/// [`super::FixedStepSolver`]; constructed per chunk so worker threads never
-/// share mutable scratch.
+/// A batched fixed-step solver over SoA state of element type
+/// [`Elem`](Self::Elem). Mirrors [`super::FixedStepSolver`]; constructed per
+/// chunk so worker threads never share mutable scratch.
 pub trait BatchStepper: Sized {
+    /// Lane element type the stepper advances (`f64` on the default 4-wide
+    /// kernels, `f32` on the 8-wide ones).
+    type Elem: Lane;
+
     /// Vector-field evaluations per step (as in the scalar counterpart).
     const FIELD_EVALS_PER_STEP: usize;
 
     /// Build a stepper for one chunk, initialised at `(t0, y0)` (`y0` is the
     /// chunk's SoA state, `[dim * batch]`).
-    fn for_chunk<S: BatchSde>(sde: &S, t0: f64, y0: &[f64], batch: usize) -> Self;
+    fn for_chunk<S: BatchSde<Self::Elem>>(
+        sde: &S,
+        t0: f64,
+        y0: &[Self::Elem],
+        batch: usize,
+    ) -> Self;
 
     /// Advance the chunk's SoA state `y` in place from `t` to `t + dt` using
     /// the SoA increments `dw`.
-    fn step<S: BatchSde>(
+    fn step<S: BatchSde<Self::Elem>>(
         &mut self,
         sde: &S,
         t: f64,
         dt: f64,
-        dw: &[f64],
-        y: &mut [f64],
+        dw: &[Self::Elem],
+        y: &mut [Self::Elem],
         batch: usize,
     );
 }
 
 /// Evaluate the diffusion into `g`, choosing the diagonal fast path when the
 /// SDE advertises one. Returns true when `g` holds the diagonal layout.
-fn eval_diffusion<S: BatchSde>(
+fn eval_diffusion<T: Lane, S: BatchSde<T>>(
     sde: &S,
     t: f64,
-    y: &[f64],
-    g: &mut Vec<f64>,
+    y: &[T],
+    g: &mut Vec<T>,
     batch: usize,
 ) -> bool {
     let e = sde.state_dim();
     let d = sde.brownian_dim();
     if sde.diagonal_noise() {
         debug_assert_eq!(e, d, "diagonal noise requires noise_dim == dim");
-        g.resize(e * batch, 0.0);
+        g.resize(e * batch, T::ZERO);
         sde.diffusion_diag_batch(t, y, g, batch);
         true
     } else {
-        g.resize(e * d * batch, 0.0);
+        g.resize(e * d * batch, T::ZERO);
         sde.diffusion_batch(t, y, g, batch);
         false
     }
@@ -376,7 +496,15 @@ fn eval_diffusion<S: BatchSde>(
 /// `y += g · dw` per path — the batched mirror of
 /// [`super::apply_diffusion`]: the inner accumulation runs over `j` in the
 /// same order as the scalar mat-vec, so per-path results are bit-identical.
-fn add_matvec(g: &[f64], diag: bool, dw: &[f64], y: &mut [f64], e: usize, d: usize, batch: usize) {
+fn add_matvec<T: Lane>(
+    g: &[T],
+    diag: bool,
+    dw: &[T],
+    y: &mut [T],
+    e: usize,
+    d: usize,
+    batch: usize,
+) {
     if diag {
         // Diagonal: `d == e`, one fused elementwise pass over all lanes.
         simd::mul_add(&g[..e * batch], &dw[..e * batch], &mut y[..e * batch]);
@@ -393,94 +521,100 @@ fn add_matvec(g: &[f64], diag: bool, dw: &[f64], y: &mut [f64], e: usize, d: usi
 }
 
 /// Batched Euler–Maruyama (Itô), mirroring [`super::EulerMaruyama`].
-pub struct BatchEulerMaruyama {
-    f: Vec<f64>,
-    g: Vec<f64>,
+pub struct BatchEulerMaruyama<T: Lane = f64> {
+    f: Vec<T>,
+    g: Vec<T>,
 }
 
-impl BatchStepper for BatchEulerMaruyama {
+impl<T: Lane> BatchStepper for BatchEulerMaruyama<T> {
+    type Elem = T;
+
     const FIELD_EVALS_PER_STEP: usize = 1;
 
-    fn for_chunk<S: BatchSde>(_sde: &S, _t0: f64, _y0: &[f64], _batch: usize) -> Self {
+    fn for_chunk<S: BatchSde<T>>(_sde: &S, _t0: f64, _y0: &[T], _batch: usize) -> Self {
         Self { f: Vec::new(), g: Vec::new() }
     }
 
-    fn step<S: BatchSde>(
+    fn step<S: BatchSde<T>>(
         &mut self,
         sde: &S,
         t: f64,
         dt: f64,
-        dw: &[f64],
-        y: &mut [f64],
+        dw: &[T],
+        y: &mut [T],
         batch: usize,
     ) {
         let e = sde.state_dim();
         let d = sde.brownian_dim();
-        self.f.resize(e * batch, 0.0);
+        self.f.resize(e * batch, T::ZERO);
         sde.drift_batch(t, y, &mut self.f, batch);
         let diag = eval_diffusion(sde, t, y, &mut self.g, batch);
-        simd::axpy(dt, &self.f, y);
+        simd::axpy(T::from_f64(dt), &self.f, y);
         add_matvec(&self.g, diag, dw, y, e, d, batch);
     }
 }
 
 /// Batched midpoint method (Stratonovich), mirroring [`super::Midpoint`].
-pub struct BatchMidpoint {
-    f: Vec<f64>,
-    g: Vec<f64>,
-    mid: Vec<f64>,
-    half_dw: Vec<f64>,
+pub struct BatchMidpoint<T: Lane = f64> {
+    f: Vec<T>,
+    g: Vec<T>,
+    mid: Vec<T>,
+    half_dw: Vec<T>,
 }
 
-impl BatchStepper for BatchMidpoint {
+impl<T: Lane> BatchStepper for BatchMidpoint<T> {
+    type Elem = T;
+
     const FIELD_EVALS_PER_STEP: usize = 2;
 
-    fn for_chunk<S: BatchSde>(_sde: &S, _t0: f64, _y0: &[f64], _batch: usize) -> Self {
+    fn for_chunk<S: BatchSde<T>>(_sde: &S, _t0: f64, _y0: &[T], _batch: usize) -> Self {
         Self { f: Vec::new(), g: Vec::new(), mid: Vec::new(), half_dw: Vec::new() }
     }
 
-    fn step<S: BatchSde>(
+    fn step<S: BatchSde<T>>(
         &mut self,
         sde: &S,
         t: f64,
         dt: f64,
-        dw: &[f64],
-        y: &mut [f64],
+        dw: &[T],
+        y: &mut [T],
         batch: usize,
     ) {
         let e = sde.state_dim();
         let d = sde.brownian_dim();
-        self.f.resize(e * batch, 0.0);
-        self.mid.resize(e * batch, 0.0);
-        self.half_dw.resize(d * batch, 0.0);
+        self.f.resize(e * batch, T::ZERO);
+        self.mid.resize(e * batch, T::ZERO);
+        self.half_dw.resize(d * batch, T::ZERO);
         // Half step.
         sde.drift_batch(t, y, &mut self.f, batch);
         let diag = eval_diffusion(sde, t, y, &mut self.g, batch);
         self.mid.copy_from_slice(y);
-        simd::axpy_half(dt, &self.f, &mut self.mid);
+        simd::axpy_half(T::from_f64(dt), &self.f, &mut self.mid);
         simd::scale_half(dw, &mut self.half_dw);
         add_matvec(&self.g, diag, &self.half_dw, &mut self.mid, e, d, batch);
         // Full step with midpoint fields.
         sde.drift_batch(t + 0.5 * dt, &self.mid, &mut self.f, batch);
         let diag = eval_diffusion(sde, t + 0.5 * dt, &self.mid, &mut self.g, batch);
-        simd::axpy(dt, &self.f, y);
+        simd::axpy(T::from_f64(dt), &self.f, y);
         add_matvec(&self.g, diag, dw, y, e, d, batch);
     }
 }
 
 /// Batched Heun / trapezoidal rule (Stratonovich), mirroring [`super::Heun`].
-pub struct BatchHeun {
-    f0: Vec<f64>,
-    g0: Vec<f64>,
-    f1: Vec<f64>,
-    g1: Vec<f64>,
-    pred: Vec<f64>,
+pub struct BatchHeun<T: Lane = f64> {
+    f0: Vec<T>,
+    g0: Vec<T>,
+    f1: Vec<T>,
+    g1: Vec<T>,
+    pred: Vec<T>,
 }
 
-impl BatchStepper for BatchHeun {
+impl<T: Lane> BatchStepper for BatchHeun<T> {
+    type Elem = T;
+
     const FIELD_EVALS_PER_STEP: usize = 2;
 
-    fn for_chunk<S: BatchSde>(_sde: &S, _t0: f64, _y0: &[f64], _batch: usize) -> Self {
+    fn for_chunk<S: BatchSde<T>>(_sde: &S, _t0: f64, _y0: &[T], _batch: usize) -> Self {
         Self {
             f0: Vec::new(),
             g0: Vec::new(),
@@ -490,31 +624,31 @@ impl BatchStepper for BatchHeun {
         }
     }
 
-    fn step<S: BatchSde>(
+    fn step<S: BatchSde<T>>(
         &mut self,
         sde: &S,
         t: f64,
         dt: f64,
-        dw: &[f64],
-        y: &mut [f64],
+        dw: &[T],
+        y: &mut [T],
         batch: usize,
     ) {
         let e = sde.state_dim();
         let d = sde.brownian_dim();
-        self.f0.resize(e * batch, 0.0);
-        self.f1.resize(e * batch, 0.0);
-        self.pred.resize(e * batch, 0.0);
+        self.f0.resize(e * batch, T::ZERO);
+        self.f1.resize(e * batch, T::ZERO);
+        self.pred.resize(e * batch, T::ZERO);
         sde.drift_batch(t, y, &mut self.f0, batch);
         let diag0 = eval_diffusion(sde, t, y, &mut self.g0, batch);
         // Euler predictor.
         self.pred.copy_from_slice(y);
-        simd::axpy(dt, &self.f0, &mut self.pred);
+        simd::axpy(T::from_f64(dt), &self.f0, &mut self.pred);
         add_matvec(&self.g0, diag0, dw, &mut self.pred, e, d, batch);
         // Trapezoidal corrector.
         sde.drift_batch(t + dt, &self.pred, &mut self.f1, batch);
         let diag1 = eval_diffusion(sde, t + dt, &self.pred, &mut self.g1, batch);
         debug_assert_eq!(diag0, diag1);
-        simd::avg_axpy(&self.f0, &self.f1, dt, y);
+        simd::avg_axpy(&self.f0, &self.f1, T::from_f64(dt), y);
         if diag0 {
             simd::avg_mul_add(&self.g0, &self.g1, &dw[..e * batch], &mut y[..e * batch]);
         } else {
@@ -538,39 +672,39 @@ impl BatchStepper for BatchHeun {
 /// engine ([`super::adjoint`]) drives `reverse_step` in lockstep with its
 /// cotangent recursion to reconstruct the forward trajectory in O(1)
 /// memory.
-pub struct BatchReversibleHeun {
+pub struct BatchReversibleHeun<T: Lane = f64> {
     dim: usize,
     noise_dim: usize,
     batch: usize,
     diag: bool,
-    z: Vec<f64>,
-    zh: Vec<f64>,
-    mu: Vec<f64>,
-    sigma: Vec<f64>,
-    s_zh: Vec<f64>,
-    s_mu: Vec<f64>,
-    s_sigma: Vec<f64>,
+    z: Vec<T>,
+    zh: Vec<T>,
+    mu: Vec<T>,
+    sigma: Vec<T>,
+    s_zh: Vec<T>,
+    s_mu: Vec<T>,
+    s_sigma: Vec<T>,
 }
 
-impl BatchReversibleHeun {
+impl<T: Lane> BatchReversibleHeun<T> {
     /// Solution estimates `z` (SoA), for inspection/tests.
-    pub fn z(&self) -> &[f64] {
+    pub fn z(&self) -> &[T] {
         &self.z
     }
 
     /// Auxiliary estimates `ẑ` (SoA).
-    pub fn zh(&self) -> &[f64] {
+    pub fn zh(&self) -> &[T] {
         &self.zh
     }
 
     /// Cached drift evaluations `μ` (SoA).
-    pub fn mu(&self) -> &[f64] {
+    pub fn mu(&self) -> &[T] {
         &self.mu
     }
 
     /// Cached diffusion evaluations `σ` (SoA; diagonal layout when the SDE
     /// advertises diagonal noise, dense otherwise).
-    pub fn sigma(&self) -> &[f64] {
+    pub fn sigma(&self) -> &[T] {
         &self.sigma
     }
 
@@ -578,7 +712,7 @@ impl BatchReversibleHeun {
     /// construction-time shapes). Used by the adjoint engine's debug-mode
     /// reconstruction-drift check to replay a forward step from a
     /// reconstructed state.
-    pub fn set_state(&mut self, z: &[f64], zh: &[f64], mu: &[f64], sigma: &[f64]) {
+    pub fn set_state(&mut self, z: &[T], zh: &[T], mu: &[T], sigma: &[T]) {
         self.z.copy_from_slice(z);
         self.zh.copy_from_slice(zh);
         self.mu.copy_from_slice(mu);
@@ -586,10 +720,13 @@ impl BatchReversibleHeun {
     }
 
     /// Max-abs difference of the full `(z, ẑ, μ, σ)` state to another
-    /// stepper's (for reversibility tests).
+    /// stepper's (for reversibility tests), widened to `f64`.
     pub fn max_abs_state_diff(&self, other: &Self) -> f64 {
-        let d = |a: &[f64], b: &[f64]| {
-            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
+        let d = |a: &[T], b: &[T]| {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| (x.to_f64() - y.to_f64()).abs())
+                .fold(0.0f64, f64::max)
         };
         d(&self.z, &other.z)
             .max(d(&self.zh, &other.zh))
@@ -598,10 +735,11 @@ impl BatchReversibleHeun {
     }
 
     /// Algorithm 1 per path: advance `(z, ẑ, μ, σ)` from `t` to `t + dt`.
-    pub fn forward_step<S: BatchSde>(&mut self, sde: &S, t: f64, dt: f64, dw: &[f64]) {
+    pub fn forward_step<S: BatchSde<T>>(&mut self, sde: &S, t: f64, dt: f64, dw: &[T]) {
         let (e, d, b) = (self.dim, self.noise_dim, self.batch);
+        let dtl = T::from_f64(dt);
         // ẑ_{n+1} = 2 z − ẑ + μ Δt + σ ΔW.
-        simd::leapfrog(&self.z, &self.zh, &self.mu, dt, &mut self.s_zh);
+        simd::leapfrog(&self.z, &self.zh, &self.mu, dtl, &mut self.s_zh);
         add_matvec(&self.sigma, self.diag, dw, &mut self.s_zh, e, d, b);
         // μ_{n+1}, σ_{n+1}.
         sde.drift_batch(t + dt, &self.s_zh, &mut self.s_mu, b);
@@ -611,7 +749,7 @@ impl BatchReversibleHeun {
             sde.diffusion_batch(t + dt, &self.s_zh, &mut self.s_sigma, b);
         }
         // z_{n+1} = z + ½ (μ + μ') Δt + ½ (σ + σ') ΔW.
-        simd::avg_axpy(&self.mu, &self.s_mu, dt, &mut self.z);
+        simd::avg_axpy(&self.mu, &self.s_mu, dtl, &mut self.z);
         if self.diag {
             simd::avg_mul_add(&self.sigma, &self.s_sigma, dw, &mut self.z);
         } else {
@@ -633,10 +771,11 @@ impl BatchReversibleHeun {
     /// Algorithm 2's reverse step per path: reconstruct the state at `t_n`
     /// from the state at `t_{n+1} = t_n + dt` in closed form. `dw` must be
     /// the same increments the forward step consumed.
-    pub fn reverse_step<S: BatchSde>(&mut self, sde: &S, t_next: f64, dt: f64, dw: &[f64]) {
+    pub fn reverse_step<S: BatchSde<T>>(&mut self, sde: &S, t_next: f64, dt: f64, dw: &[T]) {
         let (e, d, b) = (self.dim, self.noise_dim, self.batch);
+        let dtl = T::from_f64(dt);
         // ẑ_n = 2 z' − ẑ' − μ' Δt − σ' ΔW.
-        simd::leapfrog_sub(&self.z, &self.zh, &self.mu, dt, &mut self.s_zh);
+        simd::leapfrog_sub(&self.z, &self.zh, &self.mu, dtl, &mut self.s_zh);
         if self.diag {
             simd::mul_sub(&self.sigma, dw, &mut self.s_zh);
         } else {
@@ -657,7 +796,7 @@ impl BatchReversibleHeun {
             sde.diffusion_batch(t_next - dt, &self.s_zh, &mut self.s_sigma, b);
         }
         // z_n = z' − ½ (μ + μ') Δt − ½ (σ + σ') ΔW.
-        simd::avg_axpy_sub(&self.mu, &self.s_mu, dt, &mut self.z);
+        simd::avg_axpy_sub(&self.mu, &self.s_mu, dtl, &mut self.z);
         if self.diag {
             simd::avg_mul_sub(&self.sigma, &self.s_sigma, dw, &mut self.z);
         } else {
@@ -677,17 +816,19 @@ impl BatchReversibleHeun {
     }
 }
 
-impl BatchStepper for BatchReversibleHeun {
+impl<T: Lane> BatchStepper for BatchReversibleHeun<T> {
+    type Elem = T;
+
     const FIELD_EVALS_PER_STEP: usize = 1;
 
-    fn for_chunk<S: BatchSde>(sde: &S, t0: f64, y0: &[f64], batch: usize) -> Self {
+    fn for_chunk<S: BatchSde<T>>(sde: &S, t0: f64, y0: &[T], batch: usize) -> Self {
         let e = sde.state_dim();
         let d = sde.brownian_dim();
         assert_eq!(y0.len(), e * batch);
         let diag = sde.diagonal_noise();
         let sig_len = if diag { e * batch } else { e * d * batch };
-        let mut mu = vec![0.0; e * batch];
-        let mut sigma = vec![0.0; sig_len];
+        let mut mu = vec![T::ZERO; e * batch];
+        let mut sigma = vec![T::ZERO; sig_len];
         sde.drift_batch(t0, y0, &mut mu, batch);
         if diag {
             sde.diffusion_diag_batch(t0, y0, &mut sigma, batch);
@@ -701,21 +842,21 @@ impl BatchStepper for BatchReversibleHeun {
             diag,
             z: y0.to_vec(),
             zh: y0.to_vec(),
-            s_zh: vec![0.0; e * batch],
-            s_mu: vec![0.0; e * batch],
-            s_sigma: vec![0.0; sig_len],
+            s_zh: vec![T::ZERO; e * batch],
+            s_mu: vec![T::ZERO; e * batch],
+            s_sigma: vec![T::ZERO; sig_len],
             mu,
             sigma,
         }
     }
 
-    fn step<S: BatchSde>(
+    fn step<S: BatchSde<T>>(
         &mut self,
         sde: &S,
         t: f64,
         dt: f64,
-        dw: &[f64],
-        y: &mut [f64],
+        dw: &[T],
+        y: &mut [T],
         batch: usize,
     ) {
         debug_assert_eq!(batch, self.batch);
@@ -765,7 +906,9 @@ impl BatchOptions {
 /// Map `run` over the chunk indices `0..n_chunks` on up to `threads`
 /// work-stealing workers, returning the results **keyed by chunk index** —
 /// the shared scheduler behind [`integrate_batched`] and
-/// [`super::adjoint_solve_batched`].
+/// [`super::adjoint_solve_batched`]. Already element-type agnostic: the
+/// chunk payload is whatever `run` returns, so the same pool fans out `f64`
+/// and `f32` solves.
 ///
 /// Each worker starts with a contiguous run of chunks in its own deque
 /// (cache-friendly starts), pops from the front, and — when its deque runs
@@ -854,31 +997,36 @@ fn steal(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
 
 /// Integrate `batch` paths of `sde` from the SoA state `y0` over
 /// `[t0, t1]` in `n_steps` fixed steps with stepper `M`, fanning fixed-size
-/// path chunks across `opts.threads` work-stealing workers.
+/// path chunks across `opts.threads` work-stealing workers. The element
+/// type follows the stepper (`M::Elem`): `BatchEulerMaruyama` runs the
+/// historical `f64` path, `BatchEulerMaruyama<f32>` the 8-wide `f32` path,
+/// and likewise for the other steppers.
 ///
 /// Returns the SoA trajectory `[(n_steps + 1) * dim * batch]`: time point
 /// `k`'s state block starts at `k * dim * batch`.
 ///
 /// Determinism: each path's noise comes from [`BatchNoise`] keyed by the
 /// path index and each path's arithmetic touches only its own SoA lane, so
-/// the result is bit-identical for every `threads`/`chunk` setting — and
-/// bit-identical to `batch` separate [`super::integrate`] runs driven by
-/// [`CounterGridNoise::path`].
+/// the result is bit-identical for every `threads`/`chunk` setting — and,
+/// at `f64`, bit-identical to `batch` separate [`super::integrate`] runs
+/// driven by [`CounterGridNoise::path`] (at `f32`, to `batch` separate
+/// single-path batched runs on the same noise).
 pub fn integrate_batched<M, S, N>(
     sde: &S,
     noise: &N,
-    y0: &[f64],
+    y0: &[M::Elem],
     batch: usize,
     t0: f64,
     t1: f64,
     n_steps: usize,
     opts: &BatchOptions,
-) -> Vec<f64>
+) -> Vec<M::Elem>
 where
     M: BatchStepper,
-    S: BatchSde,
-    N: BatchNoise,
+    S: BatchSde<M::Elem>,
+    N: BatchNoise<M::Elem>,
 {
+    let zero = <M::Elem as Lane>::ZERO;
     let dim = sde.state_dim();
     let nd = sde.brownian_dim();
     assert_eq!(y0.len(), dim * batch, "y0 must be SoA [dim * batch]");
@@ -888,18 +1036,18 @@ where
     let n_chunks = (batch + chunk - 1) / chunk;
     let dt = (t1 - t0) / n_steps as f64;
 
-    let run_chunk = |c: usize| -> Vec<f64> {
+    let run_chunk = |c: usize| -> Vec<M::Elem> {
         let p0 = c * chunk;
         let cl = chunk.min(batch - p0);
         // Gather this chunk's SoA lanes.
-        let mut y = vec![0.0; dim * cl];
+        let mut y = vec![zero; dim * cl];
         for i in 0..dim {
             for q in 0..cl {
                 y[i * cl + q] = y0[i * batch + p0 + q];
             }
         }
         let mut stepper = M::for_chunk(sde, t0, &y, cl);
-        let mut dw = vec![0.0; nd * cl];
+        let mut dw = vec![zero; nd * cl];
         let mut traj = Vec::with_capacity((n_steps + 1) * dim * cl);
         traj.extend_from_slice(&y);
         for k in 0..n_steps {
@@ -914,10 +1062,10 @@ where
         traj
     };
 
-    let chunk_trajs: Vec<Vec<f64>> = map_chunks(n_chunks, opts.threads, run_chunk);
+    let chunk_trajs: Vec<Vec<M::Elem>> = map_chunks(n_chunks, opts.threads, run_chunk);
 
     // Scatter chunk lanes back into the full SoA trajectory.
-    let mut traj = vec![0.0; (n_steps + 1) * dim * batch];
+    let mut traj = vec![zero; (n_steps + 1) * dim * batch];
     for (c, ct) in chunk_trajs.iter().enumerate() {
         let p0 = c * chunk;
         let cl = chunk.min(batch - p0);
@@ -938,9 +1086,9 @@ where
 
 /// Repack array-of-structures state `[batch][dim]` (path-major, as the
 /// per-path API uses) into SoA `[dim * batch]`.
-pub fn aos_to_soa(aos: &[f64], dim: usize, batch: usize) -> Vec<f64> {
+pub fn aos_to_soa<T: Lane>(aos: &[T], dim: usize, batch: usize) -> Vec<T> {
     assert_eq!(aos.len(), dim * batch);
-    let mut soa = vec![0.0; dim * batch];
+    let mut soa = vec![T::ZERO; dim * batch];
     for p in 0..batch {
         for i in 0..dim {
             soa[i * batch + p] = aos[p * dim + i];
@@ -950,9 +1098,9 @@ pub fn aos_to_soa(aos: &[f64], dim: usize, batch: usize) -> Vec<f64> {
 }
 
 /// Inverse of [`aos_to_soa`].
-pub fn soa_to_aos(soa: &[f64], dim: usize, batch: usize) -> Vec<f64> {
+pub fn soa_to_aos<T: Lane>(soa: &[T], dim: usize, batch: usize) -> Vec<T> {
     assert_eq!(soa.len(), dim * batch);
-    let mut aos = vec![0.0; dim * batch];
+    let mut aos = vec![T::ZERO; dim * batch];
     for p in 0..batch {
         for i in 0..dim {
             aos[p * dim + i] = soa[i * batch + p];
@@ -979,10 +1127,10 @@ mod tests {
     fn counter_noise_is_partition_independent() {
         let noise = CounterGridNoise::new(7, 3, 0.0, 1.0, 8);
         // Fill paths 0..10 in one call and in two uneven calls.
-        let mut whole = vec![0.0; 3 * 10];
+        let mut whole = vec![0.0f64; 3 * 10];
         noise.fill_step(2, 0.25, 0.375, 0, 10, &mut whole);
-        let mut left = vec![0.0; 3 * 4];
-        let mut right = vec![0.0; 3 * 6];
+        let mut left = vec![0.0f64; 3 * 4];
+        let mut right = vec![0.0f64; 3 * 6];
         noise.fill_step(2, 0.25, 0.375, 0, 4, &mut left);
         noise.fill_step(2, 0.25, 0.375, 4, 6, &mut right);
         for j in 0..3 {
@@ -1000,6 +1148,19 @@ mod tests {
         for j in 0..3 {
             assert_eq!(dw[j], whole[j * 10 + 5]);
         }
+    }
+
+    #[test]
+    fn counter_noise_f32_is_the_rounded_f64_sample() {
+        let noise = CounterGridNoise::new(19, 2, 0.0, 1.0, 6);
+        let mut w64 = vec![0.0f64; 2 * 5];
+        let mut w32 = vec![0.0f32; 2 * 5];
+        BatchNoise::<f64>::fill_step(&noise, 3, 0.5, 0.5 + 1.0 / 6.0, 1, 5, &mut w64);
+        BatchNoise::<f32>::fill_step(&noise, 3, 0.5, 0.5 + 1.0 / 6.0, 1, 5, &mut w32);
+        for (a, b) in w64.iter().zip(&w32) {
+            assert_eq!(*a as f32, *b);
+        }
+        assert_eq!(noise.value_f32(1, 3, 0), noise.value(1, 3, 0) as f32);
     }
 
     #[test]
@@ -1039,6 +1200,45 @@ mod tests {
             let (s, t) = (0.25 * k as f64, 0.25 * (k + 1) as f64);
             crate::solvers::NoiseF64::increment(&mut pn, s, t, &mut dw);
             assert_eq!(dw, [sn.get(k, 0, 4), sn.get(k, 1, 4)]);
+        }
+    }
+
+    #[test]
+    fn stored_noise_from_f32_grid_both_precisions() {
+        // [k][p][j] grid of distinct values.
+        let (n, b, w) = (3usize, 4usize, 2usize);
+        let grid: Vec<f32> = (0..n * b * w).map(|x| x as f32 * 0.5 - 3.0).collect();
+        let s64: StoredBatchNoise<f64> = StoredBatchNoise::from_f32_grid(0.0, 1.0, n, w, b, &grid);
+        let s32: StoredBatchNoise<f32> = StoredBatchNoise::from_f32_grid(0.0, 1.0, n, w, b, &grid);
+        for k in 0..n {
+            for p in 0..b {
+                for j in 0..w {
+                    let v = grid[(k * b + p) * w + j];
+                    assert_eq!(s64.get(k, j, p), v as f64);
+                    assert_eq!(s32.get(k, j, p), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stored_noise_fill_from_source_matches_per_step_queries() {
+        use crate::brownian::BrownianInterval;
+        let (n, b, w) = (4usize, 3usize, 2usize);
+        let mut sn: StoredBatchNoise<f32> = StoredBatchNoise::zeros(0.0, 1.0, n, w, b);
+        let mut scratch = Vec::new();
+        let mut src = BrownianInterval::new(0.0, 1.0, b * w, 11);
+        sn.fill_from_source(&mut src, &mut scratch);
+        // Per-step queries of a fresh, same-seed source give the same bits.
+        let mut fresh = BrownianInterval::new(0.0, 1.0, b * w, 11);
+        let mut step = vec![0.0f32; b * w];
+        for k in 0..n {
+            fresh.increment(k as f64 / n as f64, (k + 1) as f64 / n as f64, &mut step);
+            for p in 0..b {
+                for j in 0..w {
+                    assert_eq!(sn.get(k, j, p), step[p * w + j], "k={k} p={p} j={j}");
+                }
+            }
         }
     }
 

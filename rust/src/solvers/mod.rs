@@ -18,7 +18,11 @@
 //!   `[dim × batch]` solve with a diagonal-noise fast path, SIMD inner
 //!   loops ([`simd`]) and a work-stealing chunked worker pool, bit-for-bit
 //!   equal to per-path integration for every solver, thread count and
-//!   steal schedule.
+//!   steal schedule. The batch engine is **precision-generic** over the
+//!   sealed [`simd::Lane`] element type: `f64` runs the historical 4-wide
+//!   kernels, `f32` runs 8-wide lanes end to end (systems, steppers, noise
+//!   — no widening on the hot path), with the same association rule in both
+//!   instantiations.
 //!
 //! Gradients are native too: the [`adjoint`] module runs the reversible
 //! Heun method *backwards* (Algorithm 2), reconstructing the forward
@@ -44,8 +48,9 @@ mod stability;
 pub mod systems;
 
 pub use adjoint::{
-    adjoint_solve, adjoint_solve_batched, adjoint_solve_batched_steps, adjoint_solve_steps,
-    max_vjp_fd_error, AdjointGrad, BackwardMode, BatchSdeVjp, GridReplayNoise, SdeVjp,
+    adjoint_solve, adjoint_solve_batched, adjoint_solve_batched_mixed,
+    adjoint_solve_batched_steps, adjoint_solve_steps, max_vjp_fd_error, AdjointGrad,
+    BackwardMode, BatchSdeVjp, GridReplayNoise, SdeVjp,
 };
 pub use batch::{
     aos_to_soa, integrate_batched, map_chunks, soa_to_aos, BatchEulerMaruyama, BatchHeun,
@@ -53,6 +58,7 @@ pub use batch::{
     CounterGridNoise, PathNoiseF64, StoredBatchNoise, StoredPathNoise,
 };
 pub use classic::{EulerMaruyama, Heun, Midpoint};
+pub use simd::Lane;
 pub use convergence::{
     estimate_orders, strong_weak_errors, ConvergenceReport, FineBrownianGrid,
 };

@@ -1,23 +1,27 @@
-//! SIMD kernels for the batch engine's structure-of-arrays hot loops.
+//! SIMD kernels for the batch engine's structure-of-arrays hot loops —
+//! **precision-generic** over a sealed [`Lane`] element type.
 //!
 //! The SoA layout in [`super::batch`] was chosen so that, for any component
 //! `i`, the values of all paths live contiguously (`y[i * batch + p]` for
 //! `p = 0..batch`). Every inner loop of the batched steppers is therefore a
-//! unit-stride sweep over a lane of `batch` doubles, and those sweeps are
-//! what this module implements: 4-wide manually-unrolled fused kernels
-//! (`f64x4`-style — `std::simd` is still nightly-only, and four independent
-//! scalar statements per iteration is the shape LLVM reliably turns into
-//! `vfmadd`/`vmulpd` packed ops on stable).
+//! unit-stride sweep over a lane of `batch` elements, and those sweeps are
+//! what this module implements: unrolled fused kernels whose unroll width is
+//! the element type's [`Lane::LANES`] — **4 for `f64`** (one AVX2 register,
+//! `f64x4`-shaped) and **8 for `f32`** (`f32x8`: double the lane width and
+//! half the memory traffic per path). `std::simd` is still nightly-only;
+//! `LANES` independent scalar statements per iteration is the shape LLVM
+//! reliably turns into packed `vfmadd`/`vmulps`/`vmulpd` ops on stable.
 //!
 //! # Bit-identity invariants
 //!
 //! The batch engine guarantees batched results are **bit-for-bit equal** to
-//! per-path integration. These kernels preserve that guarantee because the
-//! vectorisation is *across paths*, never within one path's arithmetic:
+//! per-path integration *at the same element precision*. These kernels
+//! preserve that guarantee because the vectorisation is *across paths*,
+//! never within one path's arithmetic:
 //!
 //! * each output element depends only on the same index of the inputs (or,
 //!   for the mat-vec kernels, on a per-path reduction whose `j` loop runs in
-//!   exactly the scalar order), so unrolling four paths per iteration
+//!   exactly the scalar order), so unrolling `LANES` paths per iteration
 //!   reorders nothing *within* a path;
 //! * every kernel's per-element expression is written token-for-token as the
 //!   scalar steppers write it (`0.5 * (a + b) * c`, not `(a + b) * (0.5 * c)`
@@ -26,28 +30,167 @@
 //!   zero-accumulator ones because `(y + a) + b` and `y + (a + b)` round
 //!   differently: each call site uses the variant matching the scalar code.
 //!
-//! Consequently these kernels are drop-in replacements for the previous
-//! per-component loops — same bits out, fewer instructions retired — and the
-//! `batch_engine` integration tests pin that equivalence on batch sizes that
-//! exercise both the unrolled body and the scalar remainder (1, 3, 4, 7, 8,
-//! 33).
+//! The invariant is **per element type**: changing the element type changes
+//! the lane width (and, of course, the rounding of each operation), but the
+//! association rule — operand order, reduction order, seeded-vs-zero
+//! accumulation — is shared by both instantiations, because both run the
+//! *same* generic token stream. An `f32` batched solve is therefore
+//! bit-identical to an `f32` per-path solve exactly as the `f64` one is to
+//! its per-path reference, and the `f64` kernels' bits are untouched by the
+//! genericisation (`Lane::from_f64` is the identity on `f64`).
+//!
+//! Consequently these kernels are drop-in replacements for per-component
+//! loops — same bits out, fewer instructions retired — and the
+//! `batch_engine` integration tests pin that equivalence in both precisions
+//! on batch sizes that exercise both the unrolled body and the scalar
+//! remainder (1, 3, 4, 7, 8, 33 around the 4- and 8-wide unrolls).
 
-/// Unroll width of every kernel (one AVX2 register of `f64`).
-pub const LANES: usize = 4;
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Mul, Neg, Sub, SubAssign};
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// Sealed element type of the SoA kernels: `f64` (4-wide lanes) or `f32`
+/// (8-wide lanes).
+///
+/// The trait carries exactly what the kernels and the batched steppers
+/// need — the unroll width, the literal constants appearing in the stepper
+/// expressions (`0.5`, `2.0`), and lossless-where-possible conversions. It
+/// is sealed: the bit-identity contract is proven per instantiation by the
+/// test suite, so foreign element types cannot claim it.
+pub trait Lane:
+    sealed::Sealed
+    + Copy
+    + Send
+    + Sync
+    + PartialEq
+    + PartialOrd
+    + Debug
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + 'static
+{
+    /// Unroll width of every kernel (one vector register of `Self`).
+    const LANES: usize;
+    /// Additive identity.
+    const ZERO: Self;
+    /// The literal `0.5` (exact in both precisions).
+    const HALF: Self;
+    /// The literal `2.0` (exact in both precisions).
+    const TWO: Self;
+
+    /// Convert from `f64` (identity on `f64`; rounds on `f32`). The batched
+    /// steppers route scalar step quantities (`Δt`) through this, so the
+    /// `f64` instantiation sees the exact bits the scalar steppers see.
+    fn from_f64(x: f64) -> Self;
+    /// Widen to `f64` (exact in both precisions).
+    fn to_f64(self) -> f64;
+    /// Convert from `f32` (identity on `f32`; exact widening on `f64`).
+    fn from_f32(x: f32) -> Self;
+    /// Convert a whole `f32` buffer — **zero-copy for `f32`** (the vector is
+    /// returned as-is), an exact widening map for `f64`. The noise glue uses
+    /// this to serve a Brownian source's native `f32` grid to `f32` lanes
+    /// without any widening copy.
+    fn vec_from_f32(v: Vec<f32>) -> Vec<Self>;
+    /// `tanh` at this precision.
+    fn lane_tanh(self) -> Self;
+    /// `|self|` at this precision.
+    fn lane_abs(self) -> Self;
+}
+
+impl Lane for f64 {
+    const LANES: usize = 4;
+    const ZERO: Self = 0.0;
+    const HALF: Self = 0.5;
+    const TWO: Self = 2.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn from_f32(x: f32) -> Self {
+        x as f64
+    }
+    #[inline]
+    fn vec_from_f32(v: Vec<f32>) -> Vec<Self> {
+        v.iter().map(|&x| x as f64).collect()
+    }
+    #[inline(always)]
+    fn lane_tanh(self) -> Self {
+        self.tanh()
+    }
+    #[inline(always)]
+    fn lane_abs(self) -> Self {
+        self.abs()
+    }
+}
+
+impl Lane for f32 {
+    const LANES: usize = 8;
+    const ZERO: Self = 0.0;
+    const HALF: Self = 0.5;
+    const TWO: Self = 2.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+    #[inline]
+    fn vec_from_f32(v: Vec<f32>) -> Vec<Self> {
+        v
+    }
+    #[inline(always)]
+    fn lane_tanh(self) -> Self {
+        self.tanh()
+    }
+    #[inline(always)]
+    fn lane_abs(self) -> Self {
+        self.abs()
+    }
+}
+
+/// Unroll width of the `f64` kernels (kept for callers that size buffers to
+/// the historical 4-wide constant; prefer [`Lane::LANES`]).
+pub const LANES: usize = <f64 as Lane>::LANES;
+
+/// The widest unroll of any instantiation — accumulator arrays inside the
+/// mat-vec kernels are sized to this and only their first `T::LANES` slots
+/// are touched.
+const MAX_LANES: usize = <f32 as Lane>::LANES;
 
 /// `y[i] += x[i] * a` — scaled accumulate (drift application).
 #[inline]
-pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy<T: Lane>(a: T, x: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert_eq!(x.len(), n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] += x[i] * a;
-        y[i + 1] += x[i + 1] * a;
-        y[i + 2] += x[i + 2] * a;
-        y[i + 3] += x[i + 3] * a;
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] += x[i + l] * a;
+        }
+        i += T::LANES;
     }
     while i < n {
         y[i] += x[i] * a;
@@ -57,40 +200,38 @@ pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
 
 /// `y[i] += 0.5 * x[i] * a` — half-scaled accumulate (midpoint half step).
 #[inline]
-pub fn axpy_half(a: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy_half<T: Lane>(a: T, x: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert_eq!(x.len(), n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] += 0.5 * x[i] * a;
-        y[i + 1] += 0.5 * x[i + 1] * a;
-        y[i + 2] += 0.5 * x[i + 2] * a;
-        y[i + 3] += 0.5 * x[i + 3] * a;
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] += T::HALF * x[i + l] * a;
+        }
+        i += T::LANES;
     }
     while i < n {
-        y[i] += 0.5 * x[i] * a;
+        y[i] += T::HALF * x[i] * a;
         i += 1;
     }
 }
 
 /// `y[i] = 0.5 * x[i]` — halve into (midpoint half increments).
 #[inline]
-pub fn scale_half(x: &[f64], y: &mut [f64]) {
+pub fn scale_half<T: Lane>(x: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert_eq!(x.len(), n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] = 0.5 * x[i];
-        y[i + 1] = 0.5 * x[i + 1];
-        y[i + 2] = 0.5 * x[i + 2];
-        y[i + 3] = 0.5 * x[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] = T::HALF * x[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
-        y[i] = 0.5 * x[i];
+        y[i] = T::HALF * x[i];
         i += 1;
     }
 }
@@ -98,17 +239,16 @@ pub fn scale_half(x: &[f64], y: &mut [f64]) {
 /// `y[i] += g[i] * w[i]` — elementwise fused multiply-accumulate (diagonal
 /// diffusion apply).
 #[inline]
-pub fn mul_add(g: &[f64], w: &[f64], y: &mut [f64]) {
+pub fn mul_add<T: Lane>(g: &[T], w: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert!(g.len() == n && w.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] += g[i] * w[i];
-        y[i + 1] += g[i + 1] * w[i + 1];
-        y[i + 2] += g[i + 2] * w[i + 2];
-        y[i + 3] += g[i + 3] * w[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] += g[i + l] * w[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
         y[i] += g[i] * w[i];
@@ -119,17 +259,16 @@ pub fn mul_add(g: &[f64], w: &[f64], y: &mut [f64]) {
 /// `y[i] -= g[i] * w[i]` — elementwise fused multiply-subtract (diagonal
 /// reverse step).
 #[inline]
-pub fn mul_sub(g: &[f64], w: &[f64], y: &mut [f64]) {
+pub fn mul_sub<T: Lane>(g: &[T], w: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert!(g.len() == n && w.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] -= g[i] * w[i];
-        y[i + 1] -= g[i + 1] * w[i + 1];
-        y[i + 2] -= g[i + 2] * w[i + 2];
-        y[i + 3] -= g[i + 3] * w[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] -= g[i + l] * w[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
         y[i] -= g[i] * w[i];
@@ -139,20 +278,19 @@ pub fn mul_sub(g: &[f64], w: &[f64], y: &mut [f64]) {
 
 /// `y[i] += 0.5 * (u[i] + v[i]) * a` — trapezoidal drift accumulate.
 #[inline]
-pub fn avg_axpy(u: &[f64], v: &[f64], a: f64, y: &mut [f64]) {
+pub fn avg_axpy<T: Lane>(u: &[T], v: &[T], a: T, y: &mut [T]) {
     let n = y.len();
     debug_assert!(u.len() == n && v.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] += 0.5 * (u[i] + v[i]) * a;
-        y[i + 1] += 0.5 * (u[i + 1] + v[i + 1]) * a;
-        y[i + 2] += 0.5 * (u[i + 2] + v[i + 2]) * a;
-        y[i + 3] += 0.5 * (u[i + 3] + v[i + 3]) * a;
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] += T::HALF * (u[i + l] + v[i + l]) * a;
+        }
+        i += T::LANES;
     }
     while i < n {
-        y[i] += 0.5 * (u[i] + v[i]) * a;
+        y[i] += T::HALF * (u[i] + v[i]) * a;
         i += 1;
     }
 }
@@ -160,20 +298,19 @@ pub fn avg_axpy(u: &[f64], v: &[f64], a: f64, y: &mut [f64]) {
 /// `y[i] -= 0.5 * (u[i] + v[i]) * a` — trapezoidal drift subtract (reverse
 /// step).
 #[inline]
-pub fn avg_axpy_sub(u: &[f64], v: &[f64], a: f64, y: &mut [f64]) {
+pub fn avg_axpy_sub<T: Lane>(u: &[T], v: &[T], a: T, y: &mut [T]) {
     let n = y.len();
     debug_assert!(u.len() == n && v.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] -= 0.5 * (u[i] + v[i]) * a;
-        y[i + 1] -= 0.5 * (u[i + 1] + v[i + 1]) * a;
-        y[i + 2] -= 0.5 * (u[i + 2] + v[i + 2]) * a;
-        y[i + 3] -= 0.5 * (u[i + 3] + v[i + 3]) * a;
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] -= T::HALF * (u[i + l] + v[i + l]) * a;
+        }
+        i += T::LANES;
     }
     while i < n {
-        y[i] -= 0.5 * (u[i] + v[i]) * a;
+        y[i] -= T::HALF * (u[i] + v[i]) * a;
         i += 1;
     }
 }
@@ -181,20 +318,19 @@ pub fn avg_axpy_sub(u: &[f64], v: &[f64], a: f64, y: &mut [f64]) {
 /// `y[i] += 0.5 * (g0[i] + g1[i]) * w[i]` — trapezoidal diagonal diffusion
 /// accumulate.
 #[inline]
-pub fn avg_mul_add(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64]) {
+pub fn avg_mul_add<T: Lane>(g0: &[T], g1: &[T], w: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert!(g0.len() == n && g1.len() == n && w.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] += 0.5 * (g0[i] + g1[i]) * w[i];
-        y[i + 1] += 0.5 * (g0[i + 1] + g1[i + 1]) * w[i + 1];
-        y[i + 2] += 0.5 * (g0[i + 2] + g1[i + 2]) * w[i + 2];
-        y[i + 3] += 0.5 * (g0[i + 3] + g1[i + 3]) * w[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] += T::HALF * (g0[i + l] + g1[i + l]) * w[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
-        y[i] += 0.5 * (g0[i] + g1[i]) * w[i];
+        y[i] += T::HALF * (g0[i] + g1[i]) * w[i];
         i += 1;
     }
 }
@@ -202,20 +338,19 @@ pub fn avg_mul_add(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64]) {
 /// `y[i] -= 0.5 * (g0[i] + g1[i]) * w[i]` — trapezoidal diagonal diffusion
 /// subtract (reverse step).
 #[inline]
-pub fn avg_mul_sub(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64]) {
+pub fn avg_mul_sub<T: Lane>(g0: &[T], g1: &[T], w: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert!(g0.len() == n && g1.len() == n && w.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] -= 0.5 * (g0[i] + g1[i]) * w[i];
-        y[i + 1] -= 0.5 * (g0[i + 1] + g1[i + 1]) * w[i + 1];
-        y[i + 2] -= 0.5 * (g0[i + 2] + g1[i + 2]) * w[i + 2];
-        y[i + 3] -= 0.5 * (g0[i + 3] + g1[i + 3]) * w[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] -= T::HALF * (g0[i + l] + g1[i + l]) * w[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
-        y[i] -= 0.5 * (g0[i] + g1[i]) * w[i];
+        y[i] -= T::HALF * (g0[i] + g1[i]) * w[i];
         i += 1;
     }
 }
@@ -223,20 +358,19 @@ pub fn avg_mul_sub(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64]) {
 /// `out[i] = 2.0 * z[i] - zh[i] + mu[i] * dt` — the reversible-Heun leapfrog
 /// extrapolation (forward step).
 #[inline]
-pub fn leapfrog(z: &[f64], zh: &[f64], mu: &[f64], dt: f64, out: &mut [f64]) {
+pub fn leapfrog<T: Lane>(z: &[T], zh: &[T], mu: &[T], dt: T, out: &mut [T]) {
     let n = out.len();
     debug_assert!(z.len() == n && zh.len() == n && mu.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        out[i] = 2.0 * z[i] - zh[i] + mu[i] * dt;
-        out[i + 1] = 2.0 * z[i + 1] - zh[i + 1] + mu[i + 1] * dt;
-        out[i + 2] = 2.0 * z[i + 2] - zh[i + 2] + mu[i + 2] * dt;
-        out[i + 3] = 2.0 * z[i + 3] - zh[i + 3] + mu[i + 3] * dt;
-        i += LANES;
+        for l in 0..T::LANES {
+            out[i + l] = T::TWO * z[i + l] - zh[i + l] + mu[i + l] * dt;
+        }
+        i += T::LANES;
     }
     while i < n {
-        out[i] = 2.0 * z[i] - zh[i] + mu[i] * dt;
+        out[i] = T::TWO * z[i] - zh[i] + mu[i] * dt;
         i += 1;
     }
 }
@@ -244,20 +378,19 @@ pub fn leapfrog(z: &[f64], zh: &[f64], mu: &[f64], dt: f64, out: &mut [f64]) {
 /// `out[i] = 2.0 * z[i] - zh[i] - mu[i] * dt` — the reversible-Heun leapfrog
 /// extrapolation with negated drift (reverse step).
 #[inline]
-pub fn leapfrog_sub(z: &[f64], zh: &[f64], mu: &[f64], dt: f64, out: &mut [f64]) {
+pub fn leapfrog_sub<T: Lane>(z: &[T], zh: &[T], mu: &[T], dt: T, out: &mut [T]) {
     let n = out.len();
     debug_assert!(z.len() == n && zh.len() == n && mu.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        out[i] = 2.0 * z[i] - zh[i] - mu[i] * dt;
-        out[i + 1] = 2.0 * z[i + 1] - zh[i + 1] - mu[i + 1] * dt;
-        out[i + 2] = 2.0 * z[i + 2] - zh[i + 2] - mu[i + 2] * dt;
-        out[i + 3] = 2.0 * z[i + 3] - zh[i + 3] - mu[i + 3] * dt;
-        i += LANES;
+        for l in 0..T::LANES {
+            out[i + l] = T::TWO * z[i + l] - zh[i + l] - mu[i + l] * dt;
+        }
+        i += T::LANES;
     }
     while i < n {
-        out[i] = 2.0 * z[i] - zh[i] - mu[i] * dt;
+        out[i] = T::TWO * z[i] - zh[i] - mu[i] * dt;
         i += 1;
     }
 }
@@ -268,34 +401,32 @@ pub fn leapfrog_sub(z: &[f64], zh: &[f64], mu: &[f64], dt: f64, out: &mut [f64])
 // One component row of the dense `e×d` diffusion apply: `g` holds the `d`
 // noise-channel lanes of component `i` (`g[j * b + p]`), `w` the SoA noise
 // (`w[j * b + p]`), `y` the component's state lane (`b` paths). The `j`
-// reduction runs in ascending order — the scalar order — with four paths'
+// reduction runs in ascending order — the scalar order — with `LANES` paths'
 // accumulators carried per iteration.
 // ---------------------------------------------------------------------------
 
 /// Zero-seeded accumulate-then-add: `y[p] += Σ_j g[j*b+p] * w[j*b+p]`.
 #[inline]
-pub fn matvec_row(g: &[f64], w: &[f64], y: &mut [f64], d: usize) {
+pub fn matvec_row<T: Lane>(g: &[T], w: &[T], y: &mut [T], d: usize) {
     let b = y.len();
     debug_assert!(g.len() == d * b && w.len() == d * b);
-    let nb = b - b % LANES;
+    let nb = b - b % T::LANES;
     let mut p = 0;
     while p < nb {
-        let mut acc = [0.0f64; LANES];
+        let mut acc = [T::ZERO; MAX_LANES];
         for j in 0..d {
             let o = j * b + p;
-            acc[0] += g[o] * w[o];
-            acc[1] += g[o + 1] * w[o + 1];
-            acc[2] += g[o + 2] * w[o + 2];
-            acc[3] += g[o + 3] * w[o + 3];
+            for l in 0..T::LANES {
+                acc[l] += g[o + l] * w[o + l];
+            }
         }
-        y[p] += acc[0];
-        y[p + 1] += acc[1];
-        y[p + 2] += acc[2];
-        y[p + 3] += acc[3];
-        p += LANES;
+        for l in 0..T::LANES {
+            y[p + l] += acc[l];
+        }
+        p += T::LANES;
     }
     while p < b {
-        let mut acc = 0.0;
+        let mut acc = T::ZERO;
         for j in 0..d {
             acc += g[j * b + p] * w[j * b + p];
         }
@@ -307,31 +438,29 @@ pub fn matvec_row(g: &[f64], w: &[f64], y: &mut [f64], d: usize) {
 /// Zero-seeded trapezoidal accumulate-then-add:
 /// `y[p] += Σ_j 0.5 * (g0[j*b+p] + g1[j*b+p]) * w[j*b+p]`.
 #[inline]
-pub fn matvec_row_avg(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64], d: usize) {
+pub fn matvec_row_avg<T: Lane>(g0: &[T], g1: &[T], w: &[T], y: &mut [T], d: usize) {
     let b = y.len();
     debug_assert!(g0.len() == d * b && g1.len() == d * b && w.len() == d * b);
-    let nb = b - b % LANES;
+    let nb = b - b % T::LANES;
     let mut p = 0;
     while p < nb {
-        let mut acc = [0.0f64; LANES];
+        let mut acc = [T::ZERO; MAX_LANES];
         for j in 0..d {
             let o = j * b + p;
-            acc[0] += 0.5 * (g0[o] + g1[o]) * w[o];
-            acc[1] += 0.5 * (g0[o + 1] + g1[o + 1]) * w[o + 1];
-            acc[2] += 0.5 * (g0[o + 2] + g1[o + 2]) * w[o + 2];
-            acc[3] += 0.5 * (g0[o + 3] + g1[o + 3]) * w[o + 3];
+            for l in 0..T::LANES {
+                acc[l] += T::HALF * (g0[o + l] + g1[o + l]) * w[o + l];
+            }
         }
-        y[p] += acc[0];
-        y[p + 1] += acc[1];
-        y[p + 2] += acc[2];
-        y[p + 3] += acc[3];
-        p += LANES;
+        for l in 0..T::LANES {
+            y[p + l] += acc[l];
+        }
+        p += T::LANES;
     }
     while p < b {
-        let mut acc = 0.0;
+        let mut acc = T::ZERO;
         for j in 0..d {
             let o = j * b + p;
-            acc += 0.5 * (g0[o] + g1[o]) * w[o];
+            acc += T::HALF * (g0[o] + g1[o]) * w[o];
         }
         y[p] += acc;
         p += 1;
@@ -342,25 +471,26 @@ pub fn matvec_row_avg(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64], d: usize
 /// with `t_j = g[j*b+p] * w[j*b+p]`. Kept separate from the zero-seeded
 /// variant because the association differs (see module docs).
 #[inline]
-pub fn matvec_row_sub_seeded(g: &[f64], w: &[f64], y: &mut [f64], d: usize) {
+pub fn matvec_row_sub_seeded<T: Lane>(g: &[T], w: &[T], y: &mut [T], d: usize) {
     let b = y.len();
     debug_assert!(g.len() == d * b && w.len() == d * b);
-    let nb = b - b % LANES;
+    let nb = b - b % T::LANES;
     let mut p = 0;
     while p < nb {
-        let mut acc = [y[p], y[p + 1], y[p + 2], y[p + 3]];
+        let mut acc = [T::ZERO; MAX_LANES];
+        for l in 0..T::LANES {
+            acc[l] = y[p + l];
+        }
         for j in 0..d {
             let o = j * b + p;
-            acc[0] -= g[o] * w[o];
-            acc[1] -= g[o + 1] * w[o + 1];
-            acc[2] -= g[o + 2] * w[o + 2];
-            acc[3] -= g[o + 3] * w[o + 3];
+            for l in 0..T::LANES {
+                acc[l] -= g[o + l] * w[o + l];
+            }
         }
-        y[p] = acc[0];
-        y[p + 1] = acc[1];
-        y[p + 2] = acc[2];
-        y[p + 3] = acc[3];
-        p += LANES;
+        for l in 0..T::LANES {
+            y[p + l] = acc[l];
+        }
+        p += T::LANES;
     }
     while p < b {
         let mut acc = y[p];
@@ -376,31 +506,32 @@ pub fn matvec_row_sub_seeded(g: &[f64], w: &[f64], y: &mut [f64], d: usize) {
 /// `y[p] = (..(y[p] + t_0)..) + t_{d-1}` with
 /// `t_j = 0.5 * (g0[j*b+p] + g1[j*b+p]) * w[j*b+p]`.
 #[inline]
-pub fn matvec_row_avg_seeded(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64], d: usize) {
+pub fn matvec_row_avg_seeded<T: Lane>(g0: &[T], g1: &[T], w: &[T], y: &mut [T], d: usize) {
     let b = y.len();
     debug_assert!(g0.len() == d * b && g1.len() == d * b && w.len() == d * b);
-    let nb = b - b % LANES;
+    let nb = b - b % T::LANES;
     let mut p = 0;
     while p < nb {
-        let mut acc = [y[p], y[p + 1], y[p + 2], y[p + 3]];
+        let mut acc = [T::ZERO; MAX_LANES];
+        for l in 0..T::LANES {
+            acc[l] = y[p + l];
+        }
         for j in 0..d {
             let o = j * b + p;
-            acc[0] += 0.5 * (g0[o] + g1[o]) * w[o];
-            acc[1] += 0.5 * (g0[o + 1] + g1[o + 1]) * w[o + 1];
-            acc[2] += 0.5 * (g0[o + 2] + g1[o + 2]) * w[o + 2];
-            acc[3] += 0.5 * (g0[o + 3] + g1[o + 3]) * w[o + 3];
+            for l in 0..T::LANES {
+                acc[l] += T::HALF * (g0[o + l] + g1[o + l]) * w[o + l];
+            }
         }
-        y[p] = acc[0];
-        y[p + 1] = acc[1];
-        y[p + 2] = acc[2];
-        y[p + 3] = acc[3];
-        p += LANES;
+        for l in 0..T::LANES {
+            y[p + l] = acc[l];
+        }
+        p += T::LANES;
     }
     while p < b {
         let mut acc = y[p];
         for j in 0..d {
             let o = j * b + p;
-            acc += 0.5 * (g0[o] + g1[o]) * w[o];
+            acc += T::HALF * (g0[o] + g1[o]) * w[o];
         }
         y[p] = acc;
         p += 1;
@@ -411,31 +542,32 @@ pub fn matvec_row_avg_seeded(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64], d
 /// `y[p] = (..(y[p] - t_0)..) - t_{d-1}` with
 /// `t_j = 0.5 * (g0[j*b+p] + g1[j*b+p]) * w[j*b+p]`.
 #[inline]
-pub fn matvec_row_avg_sub_seeded(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64], d: usize) {
+pub fn matvec_row_avg_sub_seeded<T: Lane>(g0: &[T], g1: &[T], w: &[T], y: &mut [T], d: usize) {
     let b = y.len();
     debug_assert!(g0.len() == d * b && g1.len() == d * b && w.len() == d * b);
-    let nb = b - b % LANES;
+    let nb = b - b % T::LANES;
     let mut p = 0;
     while p < nb {
-        let mut acc = [y[p], y[p + 1], y[p + 2], y[p + 3]];
+        let mut acc = [T::ZERO; MAX_LANES];
+        for l in 0..T::LANES {
+            acc[l] = y[p + l];
+        }
         for j in 0..d {
             let o = j * b + p;
-            acc[0] -= 0.5 * (g0[o] + g1[o]) * w[o];
-            acc[1] -= 0.5 * (g0[o + 1] + g1[o + 1]) * w[o + 1];
-            acc[2] -= 0.5 * (g0[o + 2] + g1[o + 2]) * w[o + 2];
-            acc[3] -= 0.5 * (g0[o + 3] + g1[o + 3]) * w[o + 3];
+            for l in 0..T::LANES {
+                acc[l] -= T::HALF * (g0[o + l] + g1[o + l]) * w[o + l];
+            }
         }
-        y[p] = acc[0];
-        y[p + 1] = acc[1];
-        y[p + 2] = acc[2];
-        y[p + 3] = acc[3];
-        p += LANES;
+        for l in 0..T::LANES {
+            y[p + l] = acc[l];
+        }
+        p += T::LANES;
     }
     while p < b {
         let mut acc = y[p];
         for j in 0..d {
             let o = j * b + p;
-            acc -= 0.5 * (g0[o] + g1[o]) * w[o];
+            acc -= T::HALF * (g0[o] + g1[o]) * w[o];
         }
         y[p] = acc;
         p += 1;
@@ -453,17 +585,16 @@ pub fn matvec_row_avg_sub_seeded(g0: &[f64], g1: &[f64], w: &[f64], y: &mut [f64
 
 /// `out[i] = x[i] * a` — scaled copy (drift cotangent weight `w · Δt`).
 #[inline]
-pub fn scale(a: f64, x: &[f64], out: &mut [f64]) {
+pub fn scale<T: Lane>(a: T, x: &[T], out: &mut [T]) {
     let n = out.len();
     debug_assert_eq!(x.len(), n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        out[i] = x[i] * a;
-        out[i + 1] = x[i + 1] * a;
-        out[i + 2] = x[i + 2] * a;
-        out[i + 3] = x[i + 3] * a;
-        i += LANES;
+        for l in 0..T::LANES {
+            out[i + l] = x[i + l] * a;
+        }
+        i += T::LANES;
     }
     while i < n {
         out[i] = x[i] * a;
@@ -474,17 +605,16 @@ pub fn scale(a: f64, x: &[f64], out: &mut [f64]) {
 /// `y[i] += x[i]` — plain lane accumulate (bias gradients and cotangent
 /// merges in the neural-MLP VJPs).
 #[inline]
-pub fn add(x: &[f64], y: &mut [f64]) {
+pub fn add<T: Lane>(x: &[T], y: &mut [T]) {
     let n = y.len();
     debug_assert_eq!(x.len(), n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        y[i] += x[i];
-        y[i + 1] += x[i + 1];
-        y[i + 2] += x[i + 2];
-        y[i + 3] += x[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            y[i + l] += x[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
         y[i] += x[i];
@@ -495,37 +625,35 @@ pub fn add(x: &[f64], y: &mut [f64]) {
 /// `out[i] = x[i] + 0.5 * y[i]` — the adjoint's combined diffusion
 /// cotangent `w + ½ λ_z`.
 #[inline]
-pub fn add_half(x: &[f64], y: &[f64], out: &mut [f64]) {
+pub fn add_half<T: Lane>(x: &[T], y: &[T], out: &mut [T]) {
     let n = out.len();
     debug_assert!(x.len() == n && y.len() == n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        out[i] = x[i] + 0.5 * y[i];
-        out[i + 1] = x[i + 1] + 0.5 * y[i + 1];
-        out[i + 2] = x[i + 2] + 0.5 * y[i + 2];
-        out[i + 3] = x[i + 3] + 0.5 * y[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            out[i + l] = x[i + l] + T::HALF * y[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
-        out[i] = x[i] + 0.5 * y[i];
+        out[i] = x[i] + T::HALF * y[i];
         i += 1;
     }
 }
 
 /// `out[i] = -x[i]` — cotangent negation (the `−w` seed of `λ_ẑ`).
 #[inline]
-pub fn neg(x: &[f64], out: &mut [f64]) {
+pub fn neg<T: Lane>(x: &[T], out: &mut [T]) {
     let n = out.len();
     debug_assert_eq!(x.len(), n);
-    let nb = n - n % LANES;
+    let nb = n - n % T::LANES;
     let mut i = 0;
     while i < nb {
-        out[i] = -x[i];
-        out[i + 1] = -x[i + 1];
-        out[i + 2] = -x[i + 2];
-        out[i + 3] = -x[i + 3];
-        i += LANES;
+        for l in 0..T::LANES {
+            out[i + l] = -x[i + l];
+        }
+        i += T::LANES;
     }
     while i < n {
         out[i] = -x[i];
@@ -540,28 +668,29 @@ pub fn neg(x: &[f64], out: &mut [f64]) {
 /// sequential so the per-path association matches the scalar
 /// `acc = gy[j]; for i { acc += m[i*d + j] * s[i]; }` loop exactly.
 #[inline]
-pub fn broadcast_matvec_strided_seeded(m: &[f64], stride: usize, x: &[f64], out: &mut [f64]) {
+pub fn broadcast_matvec_strided_seeded<T: Lane>(m: &[T], stride: usize, x: &[T], out: &mut [T]) {
     let b = out.len();
     debug_assert_eq!(x.len() % b, 0);
     let k = x.len() / b;
     debug_assert!(k == 0 || m.len() > (k - 1) * stride);
-    let nb = b - b % LANES;
+    let nb = b - b % T::LANES;
     let mut p = 0;
     while p < nb {
-        let mut acc = [out[p], out[p + 1], out[p + 2], out[p + 3]];
+        let mut acc = [T::ZERO; MAX_LANES];
+        for l in 0..T::LANES {
+            acc[l] = out[p + l];
+        }
         for i in 0..k {
             let mi = m[i * stride];
             let o = i * b + p;
-            acc[0] += mi * x[o];
-            acc[1] += mi * x[o + 1];
-            acc[2] += mi * x[o + 2];
-            acc[3] += mi * x[o + 3];
+            for l in 0..T::LANES {
+                acc[l] += mi * x[o + l];
+            }
         }
-        out[p] = acc[0];
-        out[p + 1] = acc[1];
-        out[p + 2] = acc[2];
-        out[p + 3] = acc[3];
-        p += LANES;
+        for l in 0..T::LANES {
+            out[p + l] = acc[l];
+        }
+        p += T::LANES;
     }
     while p < b {
         let mut acc = out[p];
@@ -576,33 +705,31 @@ pub fn broadcast_matvec_strided_seeded(m: &[f64], stride: usize, x: &[f64], out:
 /// Broadcast mat-vec row: `out[p] = Σ_j m[j] * x[j*b+p]` — one row of a
 /// shared (per-system, not per-path) matrix applied across all path lanes.
 /// The native hand-batched systems build on this: the matrix entry is a
-/// scalar broadcast over four path lanes, and the `j` reduction order is the
-/// scalar `matvec`'s, so per-path results are bit-identical to the per-path
-/// adapter.
+/// scalar broadcast over `LANES` path lanes at a time, and the `j` reduction
+/// order is the scalar `matvec`'s, so per-path results are bit-identical to
+/// the per-path adapter.
 #[inline]
-pub fn broadcast_matvec(m: &[f64], x: &[f64], out: &mut [f64]) {
+pub fn broadcast_matvec<T: Lane>(m: &[T], x: &[T], out: &mut [T]) {
     let b = out.len();
     let d = m.len();
     debug_assert_eq!(x.len(), d * b);
-    let nb = b - b % LANES;
+    let nb = b - b % T::LANES;
     let mut p = 0;
     while p < nb {
-        let mut acc = [0.0f64; LANES];
+        let mut acc = [T::ZERO; MAX_LANES];
         for (j, &mj) in m.iter().enumerate() {
             let o = j * b + p;
-            acc[0] += mj * x[o];
-            acc[1] += mj * x[o + 1];
-            acc[2] += mj * x[o + 2];
-            acc[3] += mj * x[o + 3];
+            for l in 0..T::LANES {
+                acc[l] += mj * x[o + l];
+            }
         }
-        out[p] = acc[0];
-        out[p + 1] = acc[1];
-        out[p + 2] = acc[2];
-        out[p + 3] = acc[3];
-        p += LANES;
+        for l in 0..T::LANES {
+            out[p + l] = acc[l];
+        }
+        p += T::LANES;
     }
     while p < b {
-        let mut acc = 0.0;
+        let mut acc = T::ZERO;
         for (j, &mj) in m.iter().enumerate() {
             acc += mj * x[j * b + p];
         }
@@ -616,12 +743,16 @@ mod tests {
     use super::*;
 
     /// Lengths exercising zero, partial and multiple unrolled blocks plus
-    /// every remainder size.
-    const SIZES: [usize; 8] = [1, 2, 3, 4, 5, 7, 8, 33];
+    /// every remainder size, for both the 4-wide and the 8-wide unroll.
+    const SIZES: [usize; 10] = [1, 2, 3, 4, 5, 7, 8, 9, 17, 33];
 
     fn data(n: usize, seed: u64) -> Vec<f64> {
         let mut rng = crate::brownian::SplitPrng::new(seed);
         (0..n).map(|_| rng.next_normal_pair().0).collect()
+    }
+
+    fn data32(n: usize, seed: u64) -> Vec<f32> {
+        data(n, seed).iter().map(|&x| x as f32).collect()
     }
 
     #[test]
@@ -738,6 +869,71 @@ mod tests {
     }
 
     #[test]
+    fn elementwise_kernels_match_scalar_loops_bitwise_f32() {
+        // The 8-wide f32 instantiation against plain f32 scalar expressions:
+        // same association, same bits — the f32 twin of the f64 pin above.
+        for &n in &SIZES {
+            let x = data32(n, 1);
+            let u = data32(n, 2);
+            let w = data32(n, 3);
+            let y0 = data32(n, 4);
+            let a = 0.0721f32;
+
+            let mut y = y0.clone();
+            axpy(a, &x, &mut y);
+            for i in 0..n {
+                assert_eq!(y[i], y0[i] + x[i] * a, "axpy f32 n={n} i={i}");
+            }
+
+            let mut y = y0.clone();
+            avg_axpy(&x, &u, a, &mut y);
+            for i in 0..n {
+                assert_eq!(
+                    y[i],
+                    y0[i] + 0.5 * (x[i] + u[i]) * a,
+                    "avg_axpy f32 n={n} i={i}"
+                );
+            }
+
+            let mut y = y0.clone();
+            avg_mul_add(&x, &u, &w, &mut y);
+            for i in 0..n {
+                assert_eq!(
+                    y[i],
+                    y0[i] + 0.5 * (x[i] + u[i]) * w[i],
+                    "avg_mul_add f32 n={n} i={i}"
+                );
+            }
+
+            let mut y = y0.clone();
+            mul_sub(&x, &w, &mut y);
+            for i in 0..n {
+                assert_eq!(y[i], y0[i] - x[i] * w[i], "mul_sub f32 n={n} i={i}");
+            }
+
+            let mut out = vec![0.0f32; n];
+            leapfrog(&x, &u, &w, a, &mut out);
+            for i in 0..n {
+                assert_eq!(
+                    out[i],
+                    2.0 * x[i] - u[i] + w[i] * a,
+                    "leapfrog f32 n={n} i={i}"
+                );
+            }
+
+            let mut out = vec![0.0f32; n];
+            leapfrog_sub(&x, &u, &w, a, &mut out);
+            for i in 0..n {
+                assert_eq!(
+                    out[i],
+                    2.0 * x[i] - u[i] - w[i] * a,
+                    "leapfrog_sub f32 n={n} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn strided_seeded_matvec_matches_scalar_column_loop() {
         for &b in &SIZES {
             for d in [1usize, 2, 3, 5] {
@@ -835,5 +1031,72 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn matvec_kernels_match_scalar_loops_bitwise_f32() {
+        for &b in &SIZES {
+            for d in [1usize, 2, 3, 5] {
+                let g0 = data32(d * b, 10);
+                let g1 = data32(d * b, 11);
+                let w = data32(d * b, 12);
+                let y0 = data32(b, 13);
+
+                let mut y = y0.clone();
+                matvec_row(&g0, &w, &mut y, d);
+                for p in 0..b {
+                    let mut acc = 0.0f32;
+                    for j in 0..d {
+                        acc += g0[j * b + p] * w[j * b + p];
+                    }
+                    assert_eq!(y[p], y0[p] + acc, "matvec_row f32 b={b} d={d} p={p}");
+                }
+
+                let mut y = y0.clone();
+                matvec_row_avg_seeded(&g0, &g1, &w, &mut y, d);
+                for p in 0..b {
+                    let mut acc = y0[p];
+                    for j in 0..d {
+                        let o = j * b + p;
+                        acc += 0.5 * (g0[o] + g1[o]) * w[o];
+                    }
+                    assert_eq!(y[p], acc, "matvec_row_avg_seeded f32 b={b} d={d} p={p}");
+                }
+
+                let mut y = y0.clone();
+                matvec_row_sub_seeded(&g0, &w, &mut y, d);
+                for p in 0..b {
+                    let mut acc = y0[p];
+                    for j in 0..d {
+                        acc -= g0[j * b + p] * w[j * b + p];
+                    }
+                    assert_eq!(y[p], acc, "matvec_row_sub_seeded f32 b={b} d={d} p={p}");
+                }
+
+                let m = data32(d, 14);
+                let mut out = vec![0.0f32; b];
+                broadcast_matvec(&m, &g0, &mut out);
+                for p in 0..b {
+                    let mut acc = 0.0f32;
+                    for j in 0..d {
+                        acc += m[j] * g0[j * b + p];
+                    }
+                    assert_eq!(out[p], acc, "broadcast_matvec f32 b={b} d={d} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_constants_and_conversions() {
+        assert_eq!(<f64 as Lane>::LANES, 4);
+        assert_eq!(<f32 as Lane>::LANES, 8);
+        assert_eq!(f64::from_f64(0.1), 0.1);
+        assert_eq!(f32::from_f64(0.1), 0.1f32);
+        assert_eq!(f64::from_f32(0.25f32), 0.25);
+        // vec_from_f32 is exact widening for f64, identity for f32.
+        let src = vec![0.5f32, -1.25, 3.0];
+        assert_eq!(<f64 as Lane>::vec_from_f32(src.clone()), vec![0.5f64, -1.25, 3.0]);
+        assert_eq!(<f32 as Lane>::vec_from_f32(src.clone()), src);
     }
 }

@@ -9,6 +9,7 @@
 //! native and adapted solves agree bit-for-bit.
 
 use super::adjoint::{BatchSdeVjp, SdeVjp};
+use super::simd::Lane;
 use super::{simd, BatchSde, Sde};
 use crate::brownian::SplitPrng;
 
@@ -297,26 +298,36 @@ impl SdeVjp for TanhDiagonal {
 
 /// Native hand-batched twin of [`TanhDiagonal`]: a [`BatchSde`] whose
 /// mat-vecs run directly over the SoA lanes ([`simd::broadcast_matvec`] —
-/// the matrix entry is broadcast over four path lanes at a time) instead of
-/// gather → per-path mat-vec → scatter through the blanket adapter.
+/// the matrix entry is broadcast over `LANES` path lanes at a time) instead
+/// of gather → per-path mat-vec → scatter through the blanket adapter.
 ///
 /// Same seed ⇒ same matrices ⇒ bit-identical trajectories to driving the
 /// per-path [`TanhDiagonal`] through the adapter (the `j` reduction order of
 /// the per-path `matvec` is preserved lane-wise).
+///
+/// Implements [`BatchSde`] at **both precisions**: the `f32` instantiation
+/// evaluates the same fields over 8-wide `f32` lanes, using single-precision
+/// copies of the matrices rounded once at construction (so an `f32` solve
+/// does no per-call narrowing work).
 pub struct TanhDiagonalBatch {
     inner: TanhDiagonal,
+    a32: Vec<f32>,
+    b32: Vec<f32>,
 }
 
 impl TanhDiagonalBatch {
     /// Random system of dimension `d`; identical to [`TanhDiagonal::new`]
     /// with the same arguments.
     pub fn new(d: usize, seed: u64) -> Self {
-        Self { inner: TanhDiagonal::new(d, seed) }
+        Self::from_system(TanhDiagonal::new(d, seed))
     }
 
-    /// Wrap an existing per-path system (shares its matrices).
+    /// Wrap an existing per-path system (shares its matrices; the `f32`
+    /// copies are rounded here, once).
     pub fn from_system(inner: TanhDiagonal) -> Self {
-        Self { inner }
+        let a32 = inner.a.iter().map(|&v| v as f32).collect();
+        let b32 = inner.b.iter().map(|&v| v as f32).collect();
+        Self { inner, a32, b32 }
     }
 
     /// The wrapped per-path system.
@@ -327,11 +338,13 @@ impl TanhDiagonalBatch {
 
 /// One field row over all path lanes: `row[p] = tanh(Σ_j m_row[j] * y[j*b+p])`
 /// — the lane arithmetic every `TanhDiagonalBatch` field shares, kept in one
-/// place because it is the bit-identity-sensitive part.
-fn tanh_matvec_row(m_row: &[f64], y: &[f64], row: &mut [f64]) {
+/// place because it is the bit-identity-sensitive part. Generic over the
+/// lane element type: both precisions run the same token stream, so each
+/// instantiation's association matches its own per-path reference.
+fn tanh_matvec_row<T: Lane>(m_row: &[T], y: &[T], row: &mut [T]) {
     simd::broadcast_matvec(m_row, y, row);
     for o in row.iter_mut() {
-        *o = o.tanh();
+        *o = o.lane_tanh();
     }
 }
 
@@ -372,6 +385,48 @@ impl BatchSde for TanhDiagonalBatch {
         for i in 0..d {
             let row = &mut out[i * batch..(i + 1) * batch];
             tanh_matvec_row(&self.inner.b[i * d..(i + 1) * d], y, row);
+        }
+    }
+}
+
+/// The 8-wide `f32` instantiation: same fields, same lane discipline, over
+/// the construction-time `f32` matrix copies. Bit-identical per path to a
+/// single-path `f32` batched solve (the `f32` twin of the `f64` guarantee).
+impl BatchSde<f32> for TanhDiagonalBatch {
+    fn state_dim(&self) -> usize {
+        self.inner.d
+    }
+
+    fn brownian_dim(&self) -> usize {
+        self.inner.d
+    }
+
+    fn diagonal_noise(&self) -> bool {
+        true
+    }
+
+    fn drift_batch(&self, _t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let d = self.inner.d;
+        for i in 0..d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            tanh_matvec_row(&self.a32[i * d..(i + 1) * d], y, row);
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let d = self.inner.d;
+        out.fill(0.0);
+        for i in 0..d {
+            let row = &mut out[(i * d + i) * batch..(i * d + i + 1) * batch];
+            tanh_matvec_row(&self.b32[i * d..(i + 1) * d], y, row);
+        }
+    }
+
+    fn diffusion_diag_batch(&self, _t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let d = self.inner.d;
+        for i in 0..d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            tanh_matvec_row(&self.b32[i * d..(i + 1) * d], y, row);
         }
     }
 }
@@ -547,6 +602,47 @@ impl BatchSde for DenseCoupledBatch {
     }
 
     fn diffusion_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let (y0, y1) = y.split_at(batch);
+        for p in 0..batch {
+            out[p] = 0.1 + 0.05 * y0[p];
+        }
+        for p in 0..batch {
+            out[batch + p] = 0.2 * y1[p];
+        }
+        out[2 * batch..3 * batch].fill(-0.1);
+        out[3 * batch..4 * batch].fill(0.3);
+        for p in 0..batch {
+            out[4 * batch + p] = 0.02 * y0[p] * y1[p];
+        }
+        out[5 * batch..6 * batch].fill(0.15);
+    }
+}
+
+/// The 8-wide `f32` instantiation of [`DenseCoupledBatch`]: the same
+/// per-path expressions with the fixture constants rounded to `f32`,
+/// exercising the dense `e×d` mat-vec path on `f32` lanes.
+impl BatchSde<f32> for DenseCoupledBatch {
+    fn state_dim(&self) -> usize {
+        2
+    }
+
+    fn brownian_dim(&self) -> usize {
+        3
+    }
+
+    fn drift_batch(&self, t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let t = t as f32;
+        let (y0, y1) = y.split_at(batch);
+        let (o0, o1) = out.split_at_mut(batch);
+        for p in 0..batch {
+            o0[p] = (0.2 * y1[p]).sin() - 0.1 * y0[p];
+        }
+        for p in 0..batch {
+            o1[p] = 0.05 * t + 0.3 * y0[p].cos();
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, y: &[f32], out: &mut [f32], batch: usize) {
         let (y0, y1) = y.split_at(batch);
         for p in 0..batch {
             out[p] = 0.1 + 0.05 * y0[p];

@@ -18,8 +18,8 @@ use neuralsde::solvers::systems::{
 };
 use neuralsde::solvers::{
     aos_to_soa, integrate, integrate_batched, BatchEulerMaruyama, BatchHeun, BatchMidpoint,
-    BatchNoise, BatchOptions, BatchReversibleHeun, CounterGridNoise, EulerMaruyama, Heun,
-    Midpoint, ReversibleHeun, Sde,
+    BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper, CounterGridNoise,
+    EulerMaruyama, Heun, Lane, Midpoint, ReversibleHeun, Sde,
 };
 
 /// Forwards a diagonal system through the dense code path (suppresses the
@@ -407,6 +407,218 @@ fn work_stealing_results_invariant_under_skewed_chunks() {
             &BatchOptions { threads, chunk: 4 },
         );
         assert_eq!(reference, traj, "threads={threads} changed the result");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 / 8-wide lane path.
+// ---------------------------------------------------------------------------
+
+/// Per-path starting states at `f32` precision (the same values
+/// `aos_start` produces, rounded once).
+fn aos_start_f32(dim: usize, batch: usize) -> Vec<f32> {
+    aos_start(dim, batch).iter().map(|&v| v as f32).collect()
+}
+
+/// Serves paths `off..` of an inner [`CounterGridNoise`] at `f32` — lets a
+/// batch-of-one solve see exactly the increments path `off` receives inside
+/// any larger batch (the per-path reference for the f32 bitwise pins).
+struct OffsetNoiseF32<'a> {
+    inner: &'a CounterGridNoise,
+    off: usize,
+}
+
+impl BatchNoise<f32> for OffsetNoiseF32<'_> {
+    fn brownian_dim(&self) -> usize {
+        <CounterGridNoise as BatchNoise<f32>>::brownian_dim(self.inner)
+    }
+
+    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [f32]) {
+        self.inner.fill_step(k, s, t, self.off + p0, chunk, out);
+    }
+}
+
+/// Run one f32 batched solve and assert each path's trajectory equals a
+/// single-path f32 solve on the same noise **bit-for-bit** — the 8-wide
+/// lanes' twin of the f64 per-path pins (the scalar remainder loop of the
+/// kernels is the per-path reference arithmetic at this precision).
+fn assert_f32_batched_bitwise<M, S>(sde: &S, batch: usize, n: usize, label: &str)
+where
+    M: BatchStepper<Elem = f32>,
+    S: BatchSde<f32>,
+{
+    let dim = sde.state_dim();
+    let aos = aos_start_f32(dim, batch);
+    let y0 = aos_to_soa(&aos, dim, batch);
+    let noise = CounterGridNoise::new(77, sde.brownian_dim(), 0.0, 1.0, n);
+    // Chunk 4 exercises chunk boundaries misaligned from the 8-wide unroll.
+    let opts = BatchOptions { threads: 1, chunk: 4 };
+    let traj = integrate_batched::<M, _, _>(sde, &noise, &y0, batch, 0.0, 1.0, n, &opts);
+    let opts1 = BatchOptions { threads: 1, chunk: 1 };
+    for p in 0..batch {
+        let y0p: Vec<f32> = (0..dim).map(|i| aos[p * dim + i]).collect();
+        let pn = OffsetNoiseF32 { inner: &noise, off: p };
+        let tp = integrate_batched::<M, _, _>(sde, &pn, &y0p, 1, 0.0, 1.0, n, &opts1);
+        for k in 0..=n {
+            for i in 0..dim {
+                let a = traj[k * dim * batch + i * batch + p];
+                let b = tp[k * dim + i];
+                assert!(
+                    a == b,
+                    "{label} path {p} step {k} component {i}: batched {a:e} vs per-path {b:e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_remainder_lanes_bitwise_diagonal_all_steppers() {
+    // dim 5 keeps per-component lanes misaligned from the batch sizes;
+    // remainder batches around the 8-wide unroll (below it, one block,
+    // block + remainder, and a large odd size).
+    let sde = TanhDiagonalBatch::new(5, 17);
+    for &batch in &REMAINDER_BATCHES {
+        assert_f32_batched_bitwise::<BatchEulerMaruyama<f32>, _>(&sde, batch, 12, "euler");
+        assert_f32_batched_bitwise::<BatchMidpoint<f32>, _>(&sde, batch, 12, "midpoint");
+        assert_f32_batched_bitwise::<BatchHeun<f32>, _>(&sde, batch, 12, "heun");
+        assert_f32_batched_bitwise::<BatchReversibleHeun<f32>, _>(&sde, batch, 12, "revheun");
+    }
+}
+
+#[test]
+fn f32_remainder_lanes_bitwise_dense_all_steppers() {
+    for &batch in &REMAINDER_BATCHES {
+        let s = &DenseCoupledBatch;
+        assert_f32_batched_bitwise::<BatchEulerMaruyama<f32>, _>(s, batch, 10, "euler");
+        assert_f32_batched_bitwise::<BatchMidpoint<f32>, _>(s, batch, 10, "midpoint");
+        assert_f32_batched_bitwise::<BatchHeun<f32>, _>(s, batch, 10, "heun");
+        assert_f32_batched_bitwise::<BatchReversibleHeun<f32>, _>(s, batch, 10, "revheun");
+    }
+}
+
+#[test]
+fn f32_results_identical_across_thread_counts_and_chunks() {
+    let sde = TanhDiagonalBatch::new(4, 3);
+    let (dim, batch, n) = (4usize, 97usize, 16usize);
+    let y0 = aos_to_soa(&aos_start_f32(dim, batch), dim, batch);
+    let noise = CounterGridNoise::new(9, dim, 0.0, 1.0, n);
+    let reference = integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+        &sde,
+        &noise,
+        &y0,
+        batch,
+        0.0,
+        1.0,
+        n,
+        &BatchOptions { threads: 1, chunk: 8 },
+    );
+    for threads in [2usize, 4] {
+        let traj = integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+            &sde,
+            &noise,
+            &y0,
+            batch,
+            0.0,
+            1.0,
+            n,
+            &BatchOptions { threads, chunk: 8 },
+        );
+        assert_eq!(reference, traj, "threads={threads} changed the f32 result");
+    }
+    for chunk in [1usize, 13, 64, 200] {
+        let traj = integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+            &sde,
+            &noise,
+            &y0,
+            batch,
+            0.0,
+            1.0,
+            n,
+            &BatchOptions { threads: 3, chunk },
+        );
+        assert_eq!(reference, traj, "chunk={chunk} changed the f32 result");
+    }
+}
+
+/// The time-dependent Ornstein–Uhlenbeck system of Appendix F.7 as a
+/// **precision-generic** native batch system: one generic impl, so the f32
+/// and f64 instantiations run the same token stream at their own precision.
+struct OuBatchGeneric {
+    rho: f64,
+    kappa: f64,
+    chi: f64,
+}
+
+impl<T: Lane> BatchSde<T> for OuBatchGeneric {
+    fn state_dim(&self) -> usize {
+        1
+    }
+    fn brownian_dim(&self) -> usize {
+        1
+    }
+    fn diagonal_noise(&self) -> bool {
+        true
+    }
+    fn drift_batch(&self, t: f64, y: &[T], out: &mut [T], batch: usize) {
+        let rt = T::from_f64(self.rho * t);
+        let ka = T::from_f64(self.kappa);
+        for p in 0..batch {
+            out[p] = rt - ka * y[p];
+        }
+    }
+    fn diffusion_batch(&self, _t: f64, _y: &[T], out: &mut [T], batch: usize) {
+        let c = T::from_f64(self.chi);
+        for p in 0..batch {
+            out[p] = c;
+        }
+    }
+    fn diffusion_diag_batch(&self, _t: f64, _y: &[T], out: &mut [T], batch: usize) {
+        let c = T::from_f64(self.chi);
+        for p in 0..batch {
+            out[p] = c;
+        }
+    }
+}
+
+#[test]
+fn f32_and_f64_agree_on_the_ou_system_within_1e4() {
+    // The f64 reversible-Heun solve of this system is pinned against the
+    // closed-form OU solution in `solver_properties.rs`; here we pin the
+    // cross-precision gap on the same Brownian sample (the f32 increments
+    // are the rounded f64 draws): rel L∞ ≤ 1e-4 over the whole trajectory,
+    // so the f32 path inherits the f64 path's accuracy up to single-
+    // precision truncation.
+    let sde = OuBatchGeneric { rho: 0.02, kappa: 0.1, chi: 0.4 };
+    let (batch, n) = (16usize, 64usize);
+    let noise = CounterGridNoise::new(91, 1, 0.0, 1.0, n);
+    let y64 = vec![1.0f64; batch];
+    let y32 = vec![1.0f32; batch];
+    let opts = BatchOptions { threads: 1, chunk: 8 };
+    for which in ["euler", "revheun"] {
+        let (t64, t32) = match which {
+            "euler" => (
+                integrate_batched::<BatchEulerMaruyama, _, _>(
+                    &sde, &noise, &y64, batch, 0.0, 1.0, n, &opts,
+                ),
+                integrate_batched::<BatchEulerMaruyama<f32>, _, _>(
+                    &sde, &noise, &y32, batch, 0.0, 1.0, n, &opts,
+                ),
+            ),
+            _ => (
+                integrate_batched::<BatchReversibleHeun, _, _>(
+                    &sde, &noise, &y64, batch, 0.0, 1.0, n, &opts,
+                ),
+                integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+                    &sde, &noise, &y32, batch, 0.0, 1.0, n, &opts,
+                ),
+            ),
+        };
+        let mut worst = 0.0f64;
+        for (a, b) in t64.iter().zip(&t32) {
+            worst = worst.max((a - *b as f64).abs() / a.abs().max(1.0));
+        }
+        assert!(worst < 1e-4, "{which}: f32 vs f64 rel L∞ {worst}");
     }
 }
 

@@ -9,17 +9,23 @@
 //!   whose solution is known in closed form given the Brownian path;
 //! * **algebraic reversibility** — the batched reversible Heun round-trips
 //!   forward∘reverse to `< 1e-10` across state dimensions, batch sizes and
-//!   step counts (the property the paper's exact-gradient claim rests on).
+//!   step counts (the property the paper's exact-gradient claim rests on);
+//! * **the `f32` solve path keeps both properties** — strong orders measured
+//!   on the 8-wide `f32` lanes match the theory with loosened windows (the
+//!   single-precision roundoff floor sits well below the discretisation
+//!   error at these step sizes), and the `f32` reversible Heun round-trips
+//!   to single-precision roundoff.
 //!
 //! Orders are measured: solve many paths at several step sizes on a shared
 //! fine Brownian grid, fit `log2(error)` against `log2(h)`, and pin the
 //! fitted slope to a window around the theoretical order.
 
 use neuralsde::brownian::SplitPrng;
-use neuralsde::solvers::systems::{ScalarLinear, TanhDiagonal, TimeDependentOu};
+use neuralsde::solvers::systems::{ScalarLinear, TanhDiagonal, TanhDiagonalBatch, TimeDependentOu};
 use neuralsde::solvers::{
-    aos_to_soa, BatchNoise, BatchReversibleHeun, BatchStepper, CounterGridNoise,
-    EulerMaruyama, FixedStepSolver, Heun, Midpoint, ReversibleHeun, Sde,
+    aos_to_soa, integrate_batched, BatchEulerMaruyama, BatchHeun, BatchMidpoint, BatchNoise,
+    BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper, CounterGridNoise, EulerMaruyama,
+    FixedStepSolver, Heun, Lane, Midpoint, ReversibleHeun, Sde, StoredBatchNoise,
 };
 use neuralsde::util::stats::linear_fit;
 
@@ -178,6 +184,161 @@ fn reversible_heun_converges_on_analytic_ou() {
         order > 0.7 && order < 2.5,
         "reversible Heun measured order {order} on the OU system, errors {pts:?}"
     );
+}
+
+// ---------------------------------------------------------------------------
+// f32 / 8-wide lane path.
+// ---------------------------------------------------------------------------
+
+/// The linear Stratonovich/Itô test SDE as a precision-generic native batch
+/// system (`dy = a y dt + b y dW` at the lane precision).
+struct LinBatchGeneric {
+    a: f64,
+    b: f64,
+}
+
+impl<T: Lane> BatchSde<T> for LinBatchGeneric {
+    fn state_dim(&self) -> usize {
+        1
+    }
+    fn brownian_dim(&self) -> usize {
+        1
+    }
+    fn diagonal_noise(&self) -> bool {
+        true
+    }
+    fn drift_batch(&self, _t: f64, y: &[T], out: &mut [T], batch: usize) {
+        let a = T::from_f64(self.a);
+        for p in 0..batch {
+            out[p] = a * y[p];
+        }
+    }
+    fn diffusion_batch(&self, _t: f64, y: &[T], out: &mut [T], batch: usize) {
+        let b = T::from_f64(self.b);
+        for p in 0..batch {
+            out[p] = b * y[p];
+        }
+    }
+    fn diffusion_diag_batch(&self, _t: f64, y: &[T], out: &mut [T], batch: usize) {
+        let b = T::from_f64(self.b);
+        for p in 0..batch {
+            out[p] = b * y[p];
+        }
+    }
+}
+
+/// Step counts for the f32 order fits: capped at 128 so the discretisation
+/// error stays well above the single-precision roundoff floor.
+const STEP_COUNTS_F32: [usize; 4] = [16, 32, 64, 128];
+const N_PATHS_F32: usize = 256;
+
+/// Mean f32 terminal error per step count on [`LinBatchGeneric`]: all paths
+/// are solved in one 8-wide batched call per step count, driven by the
+/// coarsened fine-grid increments stored as `f32`, and compared to the f64
+/// closed form of the shared Brownian path.
+fn f32_linear_errors<M, Ex>(sde: &LinBatchGeneric, exact: Ex) -> Vec<(f64, f64)>
+where
+    M: BatchStepper<Elem = f32>,
+    Ex: Fn(f64) -> f64,
+{
+    let opts = BatchOptions { threads: 1, chunk: 64 };
+    let mut pts = Vec::with_capacity(STEP_COUNTS_F32.len());
+    // Shared per-path fine grids (and their f64 totals for the truth).
+    let fines: Vec<Vec<f64>> =
+        (0..N_PATHS_F32).map(|p| fine_increments(N_FINE, 1.0, 1000 + p as u64)).collect();
+    for &n in &STEP_COUNTS_F32 {
+        let mut noise: StoredBatchNoise<f32> = StoredBatchNoise::zeros(0.0, 1.0, n, 1, N_PATHS_F32);
+        for (p, fine) in fines.iter().enumerate() {
+            for (k, dw) in coarsen(fine, n).iter().enumerate() {
+                noise.set(k, 0, p, *dw as f32);
+            }
+        }
+        let y0 = vec![1.0f32; N_PATHS_F32];
+        let traj = integrate_batched::<M, _, _>(sde, &noise, &y0, N_PATHS_F32, 0.0, 1.0, n, &opts);
+        let mut err = 0.0f64;
+        for (p, fine) in fines.iter().enumerate() {
+            let truth = exact(fine.iter().sum());
+            err += (traj[n * N_PATHS_F32 + p] as f64 - truth).abs();
+        }
+        pts.push((1.0 / n as f64, err / N_PATHS_F32 as f64));
+    }
+    pts
+}
+
+#[test]
+fn f32_euler_maruyama_strong_order_half() {
+    // Itô linear SDE on 8-wide f32 lanes: same theory, loosened window.
+    let sde = LinBatchGeneric { a: 0.3, b: 0.5 };
+    let pts = f32_linear_errors::<BatchEulerMaruyama<f32>, _>(&sde, |w| {
+        ((0.3 - 0.5 * 0.5 * 0.5) + 0.5 * w).exp()
+    });
+    let order = fitted_order(&pts);
+    assert!(
+        order > 0.25 && order < 0.8,
+        "f32 Euler–Maruyama strong order {order}, errors {pts:?}"
+    );
+}
+
+#[test]
+fn f32_midpoint_strong_order_one() {
+    let sde = LinBatchGeneric { a: 0.3, b: 0.5 };
+    let pts = f32_linear_errors::<BatchMidpoint<f32>, _>(&sde, |w| (0.3 + 0.5 * w).exp());
+    let order = fitted_order(&pts);
+    assert!(
+        order > 0.6 && order < 1.45,
+        "f32 midpoint strong order {order}, errors {pts:?}"
+    );
+}
+
+#[test]
+fn f32_heun_strong_order_one() {
+    let sde = LinBatchGeneric { a: 0.3, b: 0.5 };
+    let pts = f32_linear_errors::<BatchHeun<f32>, _>(&sde, |w| (0.3 + 0.5 * w).exp());
+    let order = fitted_order(&pts);
+    assert!(
+        order > 0.6 && order < 1.45,
+        "f32 Heun strong order {order}, errors {pts:?}"
+    );
+}
+
+#[test]
+fn f32_batched_revheun_roundtrip_to_single_precision_roundoff() {
+    // Forward n steps then reverse n steps recovers the initial (z, ẑ, μ, σ)
+    // to single-precision roundoff — the f64 suite pins the same sweep at
+    // 1e-10; the bound here is that pin loosened by the f32/f64 eps ratio
+    // (state scale ~0.1, so 5e-3 is still ~20× below breakage).
+    let (dim, batch, n) = (4usize, 8usize, 32usize);
+    let sde = TanhDiagonalBatch::new(dim, 23);
+    let aos: Vec<f32> = (0..batch * dim).map(|x| 0.03 * (x % 11) as f32 - 0.15).collect();
+    let y0 = aos_to_soa(&aos, dim, batch);
+    let noise = CounterGridNoise::new(7, dim, 0.0, 1.0, n);
+    let dt = 1.0 / n as f64;
+    let mut stepper = <BatchReversibleHeun<f32> as BatchStepper>::for_chunk(&sde, 0.0, &y0, batch);
+    let (z0, zh0, mu0, sigma0) = (
+        stepper.z().to_vec(),
+        stepper.zh().to_vec(),
+        stepper.mu().to_vec(),
+        stepper.sigma().to_vec(),
+    );
+    let mut dws: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        let (s, t) = (k as f64 * dt, (k + 1) as f64 * dt);
+        let mut dw = vec![0.0f32; dim * batch];
+        noise.fill_step(k, s, t, 0, batch, &mut dw);
+        stepper.forward_step(&sde, s, dt, &dw);
+        dws.push(dw);
+    }
+    for k in (0..n).rev() {
+        stepper.reverse_step(&sde, (k + 1) as f64 * dt, dt, &dws[k]);
+    }
+    let max_diff = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+    };
+    let err = max_diff(stepper.z(), &z0)
+        .max(max_diff(stepper.zh(), &zh0))
+        .max(max_diff(stepper.mu(), &mu0))
+        .max(max_diff(stepper.sigma(), &sigma0));
+    assert!(err < 5e-3, "f32 forward∘reverse round-trip error {err}");
 }
 
 #[test]
