@@ -9,8 +9,8 @@ use neuralsde::metrics::{series_features, signature};
 use neuralsde::nn::{Adadelta, Optimizer};
 use neuralsde::solvers::systems::{TanhDiagonal, TanhDiagonalBatch};
 use neuralsde::solvers::{
-    adjoint_solve, adjoint_solve_batched, integrate_batched, simd, BackwardMode, BatchOptions,
-    BatchReversibleHeun, CounterGridNoise,
+    adjoint_solve, adjoint_solve_batched, guard, integrate_batched, simd, BackwardMode,
+    BatchOptions, BatchReversibleHeun, CounterGridNoise, GuardConfig,
 };
 use neuralsde::util::bench::{black_box, BenchTable};
 
@@ -69,8 +69,10 @@ fn main() {
                 0.0,
                 1.0,
                 32,
-                &BatchOptions { threads: 1, chunk: 64 },
-            ));
+                &BatchOptions { threads: 1, chunk: 64, ..Default::default() },
+            ))
+            // Bench-only unwrap: the tanh fields are bounded, no faults.
+            .expect("fault-free by construction");
         });
         let nsde = TanhDiagonalBatch::new(16, 3);
         table.bench("batch/revheun_native/d=16/batch=256/n=32", |i| {
@@ -83,8 +85,10 @@ fn main() {
                 0.0,
                 1.0,
                 32,
-                &BatchOptions { threads: 1, chunk: 64 },
-            ));
+                &BatchOptions { threads: 1, chunk: 64, ..Default::default() },
+            ))
+            // Bench-only unwrap: the tanh fields are bounded, no faults.
+            .expect("fault-free by construction");
         });
         // The same native solve on the 8-wide f32 lanes (the precision-
         // generic engine's single-precision path, noise served as f32).
@@ -99,9 +103,43 @@ fn main() {
                 0.0,
                 1.0,
                 32,
-                &BatchOptions { threads: 1, chunk: 64 },
-            ));
+                &BatchOptions { threads: 1, chunk: 64, ..Default::default() },
+            ))
+            // Bench-only unwrap: the tanh fields are bounded, no faults.
+            .expect("fault-free by construction");
         });
+    }
+
+    // Non-finite guard cost: the raw blockwise sweep over one step's worth
+    // of lanes, and the full guarded-vs-unguarded solve — the `guard/*`
+    // rows pin the <2% overhead contract of the default `check_every = 8`.
+    {
+        let sde = TanhDiagonalBatch::new(16, 3);
+        let y0 = vec![0.1f64; 16 * 256];
+        let lanes = vec![0.1f64; 16 * 256];
+        table.bench("guard/nonfinite_sweep/4096", |_| {
+            black_box(guard::any_nonfinite(&lanes));
+        });
+        for (label, guard_cfg) in [
+            ("guard/revheun_unguarded/d=16/batch=256/n=32", GuardConfig::disabled()),
+            ("guard/revheun_guarded/d=16/batch=256/n=32", GuardConfig::default()),
+        ] {
+            table.bench(label, |i| {
+                let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
+                black_box(integrate_batched::<BatchReversibleHeun, _, _>(
+                    &sde,
+                    &noise,
+                    &y0,
+                    256,
+                    0.0,
+                    1.0,
+                    32,
+                    &BatchOptions { threads: 1, chunk: 64, guard: guard_cfg },
+                ))
+                // Bench-only unwrap: the tanh fields are bounded, no faults.
+                .expect("fault-free by construction");
+            });
+        }
     }
 
     // Adjoint engine: forward + backward (O(1)-memory reconstruction and
@@ -125,7 +163,9 @@ fn main() {
                 &mut pn,
                 BackwardMode::Reconstruct,
                 |_z, g| g.fill(1.0),
-            ));
+            ))
+            // Bench-only unwrap: the tanh fields are bounded, no faults.
+            .expect("fault-free by construction");
         });
         table.bench("adjoint/revheun_native/d=16/batch=256/n=32", |i| {
             let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
@@ -138,9 +178,11 @@ fn main() {
                 1.0,
                 32,
                 BackwardMode::Reconstruct,
-                &BatchOptions { threads: 1, chunk: 64 },
+                &BatchOptions { threads: 1, chunk: 64, ..Default::default() },
                 &ones,
-            ));
+            ))
+            // Bench-only unwrap: the tanh fields are bounded, no faults.
+            .expect("fault-free by construction");
         });
         table.bench("adjoint/revheun_native_tape/d=16/batch=256/n=32", |i| {
             let noise = CounterGridNoise::new(i as u64 + 1, 16, 0.0, 1.0, 32);
@@ -153,9 +195,11 @@ fn main() {
                 1.0,
                 32,
                 BackwardMode::Tape,
-                &BatchOptions { threads: 1, chunk: 64 },
+                &BatchOptions { threads: 1, chunk: 64, ..Default::default() },
                 &ones,
-            ));
+            ))
+            // Bench-only unwrap: the tanh fields are bounded, no faults.
+            .expect("fault-free by construction");
         });
     }
 

@@ -53,11 +53,13 @@ fn main() -> anyhow::Result<()> {
     let mut rng = SplitPrng::new(cfg.seed);
     let mut losses_g = Vec::new();
     let mut losses_d = Vec::new();
+    let mut retries_total = 0u64;
     let t0 = Instant::now();
     for step in 0..cfg.steps {
         let stats = trainer.train_step(&train, &mut rng)?;
         losses_g.push(stats.loss_g as f64);
         losses_d.push(stats.loss_d as f64);
+        retries_total += stats.retries as u64;
         if step % 25 == 0 || step + 1 == cfg.steps {
             println!(
                 "step {step:>4}  loss_g {:+.4}  loss_d {:+.4}  ({:.2}s elapsed)",
@@ -89,7 +91,12 @@ fn main() -> anyhow::Result<()> {
                 "discriminator weights escaped the Lipschitz clip region"
             );
         }
-        println!("smoke OK: finite losses, improving discriminator, clipped weights");
+        println!(
+            "smoke OK: finite losses, improving discriminator, clipped weights \
+             (watchdog: {} rollback(s), {} retried step(s))",
+            trainer.watchdog_rollbacks(),
+            retries_total
+        );
     }
 
     let fake = trainer.sample(test.n)?;
@@ -104,6 +111,7 @@ fn main() -> anyhow::Result<()> {
         ("solver", Json::Str(cfg.solver.as_str().into())),
         ("clip", Json::Bool(cfg.clip)),
         ("steps", Json::Num(cfg.steps as f64)),
+        ("watchdog_rollbacks", Json::Num(trainer.watchdog_rollbacks() as f64)),
         ("train_time_s", Json::Num(train_time)),
         ("s_per_step", Json::Num(per_step)),
         ("real_fake_acc", Json::Num(report.real_fake_acc)),

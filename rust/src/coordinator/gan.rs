@@ -25,6 +25,14 @@
 //! readout gradients, score means) runs in ascending path order — so
 //! training losses and parameters are bit-reproducible for any
 //! [`BatchOptions`].
+//!
+//! Fault tolerance: the solve engines surface structured [`SolveError`]s
+//! (non-finite lanes, reconstruction drift, vector-field panics), and
+//! [`GanTrainer::train_step`] wraps each adversarial round in a training
+//! watchdog — snapshot the trainable state, attempt the round, roll back
+//! and retry on divergence with deterministically re-drawn noise — and
+//! reports rollbacks/retries through [`GanStepStats`] and
+//! [`GanTrainer::watchdog_rollbacks`].
 
 use crate::config::{SolverKind, TrainConfig};
 use crate::coordinator::noise::{NoiseBackend, StepNoise};
@@ -37,7 +45,7 @@ use crate::nn::Optimizer;
 use crate::solvers::neural::{widen_params, NeuralDiscriminatorBatch, NeuralGeneratorBatch};
 use crate::solvers::{
     adjoint_solve_batched_steps, integrate_batched, AdjointGrad, BackwardMode, BatchOptions,
-    BatchReversibleHeun, StoredBatchNoise,
+    BatchReversibleHeun, FaultCause, SolveError, SolveFault, StoredBatchNoise,
 };
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
@@ -55,6 +63,19 @@ pub struct GanStepStats {
     pub loss_g: f32,
     /// Discriminator (negated Wasserstein) loss `E[F(real)] − E[F(fake)]`.
     pub loss_d: f32,
+    /// Watchdog retries consumed by this step (0 = clean first attempt).
+    pub retries: u32,
+}
+
+/// Everything the training watchdog must roll back when a step diverges:
+/// parameters, optimiser accumulators, and the SWA running average.
+struct TrainerSnapshot {
+    theta: Vec<f32>,
+    phi: Vec<f32>,
+    opt_g: Adadelta,
+    opt_d: Adadelta,
+    swa: StochasticWeightAverage,
+    steps_done: usize,
 }
 
 /// SDE-GAN training state.
@@ -86,6 +107,12 @@ pub struct GanTrainer {
     opts: BatchOptions,
     steps_done: usize,
     total_steps: usize,
+    watchdog_enabled: bool,
+    watchdog_max_retries: u32,
+    watchdog_rollbacks: u64,
+    /// Deterministic fault injection: the next `force_fail` step attempts
+    /// fail right after the discriminator update (tests and drills).
+    force_fail: u32,
 }
 
 impl GanTrainer {
@@ -100,9 +127,10 @@ impl GanTrainer {
             // executable; natively there is no GP, only no constraint.
             eprintln!(
                 "[gan] warning: clip=false on the native backend trains an \
-                 UNCONSTRAINED critic (no Lipschitz control); the Table-11 \
-                 gradient-penalty baseline needs --features pjrt + artifacts \
-                 (GanTrainer::from_runtime)"
+                 UNCONSTRAINED critic (no Lipschitz control); the training \
+                 watchdog stays enabled and rolls back diverged steps, but \
+                 expect instability. The Table-11 gradient-penalty baseline \
+                 needs --features pjrt + artifacts (GanTrainer::from_runtime)"
             );
         }
         let (seq_len, y_dim) = cfg.dataset.shape();
@@ -196,6 +224,10 @@ impl GanTrainer {
             opts: BatchOptions::auto(),
             steps_done: 0,
             total_steps,
+            watchdog_enabled: true,
+            watchdog_max_retries: 3,
+            watchdog_rollbacks: 0,
+            force_fail: 0,
         })
     }
 
@@ -216,8 +248,58 @@ impl GanTrainer {
         &self.disc_layout
     }
 
+    /// Configure the training watchdog (on by default, 3 retries).
+    /// `enabled = false` surfaces the first structured error instead of
+    /// rolling back.
+    pub fn with_watchdog(mut self, enabled: bool, max_retries: u32) -> Self {
+        self.watchdog_enabled = enabled;
+        self.watchdog_max_retries = max_retries;
+        self
+    }
+
+    /// Total watchdog rollbacks performed over this trainer's lifetime.
+    pub fn watchdog_rollbacks(&self) -> u64 {
+        self.watchdog_rollbacks
+    }
+
+    /// Deterministic fault injection (tests and recovery drills): the next
+    /// `attempts` step attempts fail right after the discriminator update,
+    /// so the rollback has a real parameter/optimiser update to undo.
+    pub fn inject_training_fault(&mut self, attempts: u32) {
+        self.force_fail = attempts;
+    }
+
+    fn snapshot(&self) -> TrainerSnapshot {
+        TrainerSnapshot {
+            theta: self.theta.clone(),
+            phi: self.phi.clone(),
+            opt_g: self.opt_g.clone(),
+            opt_d: self.opt_d.clone(),
+            swa: self.swa.clone(),
+            steps_done: self.steps_done,
+        }
+    }
+
+    fn restore(&mut self, snap: TrainerSnapshot) {
+        self.theta = snap.theta;
+        self.phi = snap.phi;
+        self.opt_g = snap.opt_g;
+        self.opt_d = snap.opt_d;
+        self.swa = snap.swa;
+        self.steps_done = snap.steps_done;
+    }
+
     /// One adversarial round — a discriminator step then a generator step —
     /// entirely on the native stack.
+    ///
+    /// Fault tolerance: each attempt runs against a snapshot of the
+    /// trainable state (θ/φ, both Adadelta accumulators, the SWA average).
+    /// If the solve engines surface a structured [`SolveError`], or a loss
+    /// or gradient lane goes non-finite, the watchdog rolls the state back
+    /// and retries — the [`StepNoise`] counter has already advanced past the
+    /// faulty draw, so the retry re-solves with fresh *deterministic* noise.
+    /// After `watchdog_max_retries` failed attempts (or with the watchdog
+    /// disabled) the structured error propagates to the caller.
     pub fn train_step(
         &mut self,
         data: &TimeSeriesDataset,
@@ -228,9 +310,50 @@ impl GanTrainer {
             "the native backend trains through the reversible-Heun adjoint; \
              other solvers need the AOT executables (`--features pjrt` + `make artifacts`)"
         );
+        let mut retries = 0u32;
+        loop {
+            let snap = self.snapshot();
+            match self.try_train_step(data, rng) {
+                Ok((loss_g, loss_d)) => {
+                    self.steps_done += 1;
+                    // SWA over the last 50% of training (Appendix F.2).
+                    if self.steps_done * 2 >= self.total_steps {
+                        self.swa.update(&self.theta);
+                    }
+                    return Ok(GanStepStats {
+                        loss_g: loss_g as f32,
+                        loss_d: loss_d as f32,
+                        retries,
+                    });
+                }
+                Err(err) => {
+                    if !self.watchdog_enabled || retries >= self.watchdog_max_retries {
+                        return Err(err.into());
+                    }
+                    self.restore(snap);
+                    self.watchdog_rollbacks += 1;
+                    retries += 1;
+                    eprintln!(
+                        "[gan] watchdog: step {} rolled back (retry {}/{}): {}",
+                        self.steps_done, retries, self.watchdog_max_retries, err
+                    );
+                }
+            }
+        }
+    }
+
+    /// One attempt at an adversarial round. Parameter and optimiser updates
+    /// happen in place; on `Err` the watchdog loop in [`train_step`] rolls
+    /// them back from its snapshot.
+    fn try_train_step(
+        &mut self,
+        data: &TimeSeriesDataset,
+        rng: &mut crate::brownian::SplitPrng,
+    ) -> Result<(f64, f64), SolveError> {
         // ---- Discriminator step.
         let (y_real, _) = data.sample_batch(self.batch, rng);
-        let (loss_d, gphi) = self.disc_grads(&y_real);
+        let (loss_d, gphi) = self.disc_grads(&y_real)?;
+        check_finite("train_step: discriminator update", self.steps_done, loss_d, &gphi)?;
         step_f64(&mut self.opt_d, &mut self.phi, &gphi);
         if self.clip {
             // Section 5: clip the CDE vector fields f_φ, g_φ to Lipschitz ≤ 1.
@@ -238,16 +361,24 @@ impl GanTrainer {
             // unconstrained; the gradient-penalty baseline is pjrt-only.)
             self.disc_layout.clip_lipschitz(&mut self.phi, field_filter);
         }
+        if self.force_fail > 0 {
+            self.force_fail -= 1;
+            return Err(SolveError::new(
+                "train_step: injected fault",
+                vec![SolveFault {
+                    step: self.steps_done,
+                    path: 0,
+                    component: 0,
+                    cause: FaultCause::NonFinite,
+                }],
+            ));
+        }
 
         // ---- Generator step (fresh noise).
-        let (loss_g, gtheta) = self.gen_grads();
+        let (loss_g, gtheta) = self.gen_grads()?;
+        check_finite("train_step: generator update", self.steps_done, loss_g, &gtheta)?;
         step_f64(&mut self.opt_g, &mut self.theta, &gtheta);
-        self.steps_done += 1;
-        // SWA over the last 50% of training (Appendix F.2).
-        if self.steps_done * 2 >= self.total_steps {
-            self.swa.update(&self.theta);
-        }
-        Ok(GanStepStats { loss_g: loss_g as f32, loss_d: loss_d as f32 })
+        Ok((loss_g, loss_d))
     }
 
     /// Draw one training step's noise: initial normals `V [batch, v]` and
@@ -386,7 +517,7 @@ impl GanTrainer {
     /// One discriminator update's loss and φ-gradient:
     /// `loss_d = E[F(real)] − E[F(fake)]`, CDE adjoints on both paths with
     /// terminal cotangents `∓m/B`, `ξ` chain, and the `m`-readout gradient.
-    fn disc_grads(&mut self, y_real: &[f32]) -> (f64, Vec<f64>) {
+    fn disc_grads(&mut self, y_real: &[f32]) -> Result<(f64, Vec<f64>), SolveError> {
         let b = self.batch;
         let (dh, y) = (self.spec.disc_state, self.spec.data_dim);
         let n = self.seq_len - 1;
@@ -400,7 +531,7 @@ impl GanTrainer {
         let z0 = self.initial_state(&theta64, &v, b);
         let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
             &gen, &dws, &z0, b, T0, T1, n, &self.opts,
-        );
+        )?;
         let y_fake = self.readout(&theta64, &x_traj, b);
         // Real path, repacked [B, L, y] → per-point SoA lanes.
         let stride = self.seq_len * y;
@@ -414,7 +545,7 @@ impl GanTrainer {
         }
 
         let disc = NeuralDiscriminatorBatch::from_f32(&self.spec, &self.phi);
-        let run = |y_path: &[f64], sign: f64| -> AdjointGrad {
+        let run = |y_path: &[f64], sign: f64| -> Result<AdjointGrad, SolveError> {
             let dys = self.path_increments(y_path, b);
             let h0 = self.cde_initial(&phi64, y_path, b);
             let m_ref = &m64;
@@ -441,8 +572,8 @@ impl GanTrainer {
                 },
             )
         };
-        let gf = run(&y_fake, -1.0);
-        let gr = run(&y_real_lanes, 1.0);
+        let gf = run(&y_fake, -1.0)?;
+        let gr = run(&y_real_lanes, 1.0)?;
         let loss_d = self.mean_score(&m64, &gr, b) - self.mean_score(&m64, &gf, b);
 
         // φ-gradient: CDE solves (fake then real, matching the reference
@@ -462,14 +593,14 @@ impl GanTrainer {
             }
             gphi[self.m_off + i] += (mean_r - mean_f) / b as f64;
         }
-        (loss_d, gphi)
+        Ok((loss_d, gphi))
     }
 
     /// One generator update's loss and θ-gradient: CDE adjoint with `ΔY`
     /// cotangents, chain onto the generated path (increments + `Y₀` via `ξ`
     /// + readout `ℓ`), then the generator adjoint with per-step cotangent
     /// injection, and the `ζ` chain at the initial condition.
-    fn gen_grads(&mut self) -> (f64, Vec<f64>) {
+    fn gen_grads(&mut self) -> Result<(f64, Vec<f64>), SolveError> {
         let b = self.batch;
         let (x, y, dh) = (self.spec.state, self.spec.data_dim, self.spec.disc_state);
         let n = self.seq_len - 1;
@@ -483,7 +614,7 @@ impl GanTrainer {
         let z0 = self.initial_state(&theta64, &v, b);
         let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
             &gen, &dws, &z0, b, T0, T1, n, &self.opts,
-        );
+        )?;
         let y_path = self.readout(&theta64, &x_traj, b);
 
         // Discriminator response + backward: loss_g = E_p[m · H_T], so the
@@ -513,7 +644,7 @@ impl GanTrainer {
                     }
                 }
             },
-        );
+        )?;
         let loss_g = self.mean_score(&m64, &gcde, b);
 
         // Path cotangent: ΔY_k = Y_{k+1} − Y_k chains the increment
@@ -570,7 +701,7 @@ impl GanTrainer {
                     }
                 }
             },
-        );
+        )?;
         let mut gtheta = ggen.dtheta;
 
         // ζ chain at the initial condition (ascending path order).
@@ -602,7 +733,7 @@ impl GanTrainer {
                 gtheta[self.ell_b_off + c] = acc;
             }
         }
-        (loss_g, gtheta)
+        Ok((loss_g, gtheta))
     }
 
     /// Final generator weights: the stochastic weight average if available.
@@ -636,7 +767,7 @@ impl GanTrainer {
             let z0 = self.initial_state(&theta64, &v, eb);
             let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
                 &gen, &dws, &z0, eb, T0, T1, n, &self.opts,
-            );
+            )?;
             let y_path = self.readout(&theta64, &x_traj, eb);
             let take = (n_samples - produced).min(eb);
             for p in 0..take {
@@ -753,7 +884,7 @@ impl GanTrainer {
         if self.steps_done * 2 >= self.total_steps {
             self.swa.update(&self.theta);
         }
-        Ok(GanStepStats { loss_g, loss_d })
+        Ok(GanStepStats { loss_g, loss_d, retries: 0 })
     }
 
     /// Generate `n_samples` series through the AOT sampling executable.
@@ -802,6 +933,29 @@ impl GanTrainer {
 /// the Lipschitz constraint to `f_φ` and `g_φ`).
 pub fn field_filter(name: &str) -> bool {
     name.starts_with("f.") || name.starts_with("g.")
+}
+
+/// Watchdog guard on one training update: a non-finite loss or gradient
+/// lane becomes a structured [`SolveError`] carrying the offending flat
+/// parameter index (`component`) and the training step (`step`).
+fn check_finite(
+    context: &'static str,
+    step: usize,
+    loss: f64,
+    grad: &[f64],
+) -> Result<(), SolveError> {
+    let bad = if loss.is_finite() {
+        grad.iter().position(|g| !g.is_finite())
+    } else {
+        Some(0)
+    };
+    match bad {
+        None => Ok(()),
+        Some(i) => Err(SolveError::new(
+            context,
+            vec![SolveFault { step, path: 0, component: i, cause: FaultCause::NonFinite }],
+        )),
+    }
 }
 
 /// Widen a filled `[n][batch, w]` `f32` increment buffer (the

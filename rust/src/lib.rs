@@ -132,12 +132,51 @@
 //! let sde = TanhDiagonal::new(4, 7);
 //! let noise = CounterGridNoise::new(1, 4, 0.0, 1.0, 32);
 //! let y0 = vec![0.1; 4 * 256];
-//! let opts = BatchOptions { threads: 2, chunk: 64 };
+//! let opts = BatchOptions { threads: 2, chunk: 64, ..Default::default() };
 //! let traj = integrate_batched::<BatchReversibleHeun, _, _>(
 //!     &sde, &noise, &y0, 256, 0.0, 1.0, 32, &opts,
-//! );
+//! )
+//! .expect("solve faulted"); // structured SolveError on non-finite lanes
 //! assert_eq!(traj.len(), 33 * 4 * 256);
 //! ```
+//!
+//! ## Error-handling contract
+//!
+//! The solve and training stack reports failures as **structured, exactly
+//! localised errors** instead of panicking or silently propagating NaNs:
+//!
+//! * Every fallible entry point — [`solvers::integrate_batched`], the
+//!   [`solvers::adjoint`] family, [`coordinator::GanTrainer::train_step`] —
+//!   returns a `Result` whose error type ([`solvers::SolveError`]) carries
+//!   one [`solvers::SolveFault`] per affected path: the grid **step whose
+//!   update first produced the faulty value**, the path index, the state
+//!   component, and a cause ([`solvers::FaultCause`]: non-finite lane,
+//!   reconstruction drift beyond tolerance, or a vector-field panic).
+//! * Detection is cheap: blockwise `is_finite` sweeps every
+//!   [`solvers::GuardConfig::check_every`] steps (default 8, <2% overhead —
+//!   pinned by the `guard/*` rows of `benches/hotpath_micro.rs`), with a
+//!   bit-identical re-run to localise the exact coordinates only on breach.
+//! * Guards never change healthy results: the batched ≡ per-path bitwise
+//!   invariant holds with guards enabled, and
+//!   [`solvers::GuardConfig::disabled`] turns sweeps off entirely.
+//! * **Panic isolation**: a vector field that panics poisons neither the
+//!   worker pool nor sibling paths — [`solvers::map_chunks_isolated`]
+//!   catches the unwind per chunk, and the guarded forward engine
+//!   ([`solvers::integrate_batched_guarded`]) quarantines exactly the
+//!   offending lanes (optionally refilling them from fresh seeds) while
+//!   surviving paths keep their bit-exact trajectories.
+//! * **Divergence watchdogs** recover instead of failing where an exact
+//!   fallback exists: the adjoint backward sweep checkpoints sparse forward
+//!   states and falls back from O(1)-memory reconstruction to the stored
+//!   tape for the remaining segment on drift breach (gradients stay exact;
+//!   [`solvers::AdjointGrad::fallbacks`] counts the events), and the GAN
+//!   trainer rolls a diverged step back to a last-good snapshot (θ/φ,
+//!   Adadelta accumulators, SWA) and retries with deterministically
+//!   re-drawn noise ([`coordinator::GanStepStats`] reports `retries`).
+//! * Fault recovery is **deterministic and testable**:
+//!   [`solvers::FaultPlan`] injects NaNs, panics and corrupted gradient
+//!   lanes at exact coordinates; `tests/fault_tolerance.rs` drives every
+//!   recovery path bit-reproducibly.
 
 pub mod brownian;
 pub mod config;

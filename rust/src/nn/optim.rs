@@ -111,6 +111,9 @@ impl Optimizer for Adam {
 }
 
 /// Adadelta (Zeiler 2012): the optimiser Kidger et al. use for SDE-GANs.
+/// `Clone` so the GAN training watchdog can snapshot the accumulator state
+/// and roll a diverged step back.
+#[derive(Clone)]
 pub struct Adadelta {
     /// Learning rate (PyTorch calls this `lr`; torchsde GANs use ~1.0×
     /// group-specific scaling).
@@ -184,6 +187,9 @@ pub fn step_f64<O: Optimizer>(opt: &mut O, params: &mut [f32], grad: &[f64]) {
 
 /// Stochastic weight averaging (Appendix F.2): a Cesàro mean of generator
 /// weights over the latter part of training, used as the final model.
+/// `Clone` so the GAN training watchdog can snapshot and roll back the
+/// running average together with the weights it averages.
+#[derive(Clone)]
 pub struct StochasticWeightAverage {
     sum: Vec<f32>,
     count: u64,

@@ -44,10 +44,13 @@
 //! integration *at the same precision* (see the kernel module's docs for
 //! the exact invariants).
 
+use super::guard::{self, FaultCause, GuardConfig, GuardedSolve, SolveError, SolveFault};
 use super::simd::{self, Lane};
 use super::{NoiseF64, Sde};
 use crate::brownian::{normal_at, splitmix64, BrownianSource};
+use std::cell::Cell;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
 /// A batched SDE over structure-of-arrays state of element type `T` (see
@@ -887,11 +890,16 @@ pub struct BatchOptions {
     /// Paths per chunk; chunks are the unit of work distribution (and of
     /// stealing).
     pub chunk: usize,
+    /// Fault-tolerance knobs for the fallible entry points: non-finite
+    /// sweep cadence and the adjoint's reconstruction-drift watchdog. The
+    /// defaults keep all guards on; guards never change fault-free results,
+    /// only whether faults are detected. See [`GuardConfig`].
+    pub guard: GuardConfig,
 }
 
 impl Default for BatchOptions {
     fn default() -> Self {
-        Self { threads: 1, chunk: 64 }
+        Self { threads: 1, chunk: 64, guard: GuardConfig::default() }
     }
 }
 
@@ -899,7 +907,7 @@ impl BatchOptions {
     /// Use every available core (results are identical regardless).
     pub fn auto() -> Self {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Self { threads, chunk: 64 }
+        Self { threads, chunk: 64, guard: GuardConfig::default() }
     }
 }
 
@@ -944,7 +952,13 @@ where
             handles.push(scope.spawn(move || {
                 let mut mine = Vec::new();
                 loop {
-                    let own = deques[w].lock().expect("deque poisoned").pop_front();
+                    // The deque locks are never held across `run`, so a
+                    // poisoned mutex only means a sibling worker panicked
+                    // between pops — the deque itself is still consistent.
+                    let own = deques[w]
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .pop_front();
                     let c = match own {
                         Some(c) => c,
                         None => match steal(deques, w) {
@@ -958,12 +972,52 @@ where
             }));
         }
         for h in handles {
+            // Propagates a panicking `run` to the caller — raw `map_chunks`
+            // keeps the historical panic semantics. The fallible engines
+            // route through `map_chunks_isolated`, whose `run` never
+            // panics, so this is unreachable from the guarded hot path.
             for (c, r) in h.join().expect("chunk worker panicked") {
                 slots[c] = Some(r);
             }
         }
     });
+    // Unreachable by construction: every index 0..n_chunks is queued in
+    // exactly one deque and every popped chunk lands in `slots`.
     slots.into_iter().map(|o| o.expect("chunk result missing")).collect()
+}
+
+/// A chunk worker panic captured by [`map_chunks_isolated`].
+#[derive(Clone, Debug)]
+pub struct ChunkPanic {
+    /// Chunk index whose `run` panicked.
+    pub chunk: usize,
+    /// Stringified panic payload.
+    pub payload: String,
+}
+
+/// [`map_chunks`] with panic isolation: each chunk's `run` executes inside
+/// `catch_unwind`, so one poisoned chunk (a panicking vector field, a
+/// corrupted noise source) yields an `Err(ChunkPanic)` in its slot instead
+/// of tearing down the whole pool — every other chunk still completes and
+/// returns its result. Scheduling, keying, and determinism guarantees are
+/// exactly [`map_chunks`]'s.
+///
+/// The default panic hook still prints to stderr when a chunk panics;
+/// callers that expect panics (fault-injection tests) should install a
+/// silent hook around the call.
+pub fn map_chunks_isolated<R, F>(
+    n_chunks: usize,
+    threads: usize,
+    run: F,
+) -> Vec<Result<R, ChunkPanic>>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    map_chunks(n_chunks, threads, |c| {
+        catch_unwind(AssertUnwindSafe(|| run(c)))
+            .map_err(|e| ChunkPanic { chunk: c, payload: guard::panic_message(e) })
+    })
 }
 
 /// Steal one chunk for worker `me`: scan for the peer with the most queued
@@ -978,7 +1032,9 @@ fn steal(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
             if v == me {
                 continue;
             }
-            let len = q.lock().expect("deque poisoned").len();
+            // As in the worker loop: poisoning cannot corrupt the deque
+            // (locks are never held across user code), so recover the guard.
+            let len = q.lock().unwrap_or_else(|e| e.into_inner()).len();
             let better = match victim {
                 None => len > 0,
                 Some((_, best)) => len > best,
@@ -988,7 +1044,7 @@ fn steal(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
             }
         }
         let (v, _) = victim?;
-        if let Some(c) = deques[v].lock().expect("deque poisoned").pop_back() {
+        if let Some(c) = deques[v].lock().unwrap_or_else(|e| e.into_inner()).pop_back() {
             return Some(c);
         }
         // Raced with the owner draining its deque — rescan.
@@ -1011,6 +1067,14 @@ fn steal(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
 /// at `f64`, bit-identical to `batch` separate [`super::integrate`] runs
 /// driven by [`CounterGridNoise::path`] (at `f32`, to `batch` separate
 /// single-path batched runs on the same noise).
+///
+/// Fault handling: the solve is **strict** — any detected fault (a
+/// non-finite lane caught by the `opts.guard.check_every` sweeps, or a
+/// panicking vector field / noise source) aborts with a [`SolveError`]
+/// carrying exact `(step, path, component)` coordinates for every faulted
+/// path. Use [`integrate_batched_guarded`] to quarantine faulted lanes and
+/// keep the surviving paths instead.
+#[allow(clippy::too_many_arguments)] // mirrors the historical positional API
 pub fn integrate_batched<M, S, N>(
     sde: &S,
     noise: &N,
@@ -1020,7 +1084,55 @@ pub fn integrate_batched<M, S, N>(
     t1: f64,
     n_steps: usize,
     opts: &BatchOptions,
-) -> Vec<M::Elem>
+) -> Result<Vec<M::Elem>, SolveError>
+where
+    M: BatchStepper,
+    S: BatchSde<M::Elem>,
+    N: BatchNoise<M::Elem>,
+{
+    let gs = integrate_batched_guarded::<M, S, N>(sde, noise, y0, batch, t0, t1, n_steps, opts, None)?;
+    if gs.faults.is_empty() {
+        Ok(gs.traj)
+    } else {
+        Err(SolveError::new("integrate_batched", gs.faults))
+    }
+}
+
+/// [`integrate_batched`] with a **quarantine policy**: faulted paths are
+/// reported (not fatal) and their lanes replaced, while every surviving
+/// path's lane stays bit-identical to an uninjected solve with the same
+/// lane assignment — faults never propagate across paths because no stepper
+/// mixes lanes (the same isolation the batched ≡ per-path invariant rests
+/// on).
+///
+/// Detection:
+/// * non-finite lanes — cheap blockwise sweeps every
+///   `opts.guard.check_every` steps mark a chunk dirty; a dirty chunk is
+///   re-run (bit-identically) with a per-step sweep to localise each faulted
+///   path's first `(step, component)` exactly;
+/// * panics — a panicking chunk is re-run path by path under
+///   `catch_unwind`, so only the offending path reports a
+///   [`FaultCause::VectorFieldPanic`] (with the last-started step) and its
+///   chunk-mates complete normally.
+///
+/// Replacement: `refill(p, lane)` may fill a `[(n_steps + 1) * dim]`
+/// single-path trajectory (layout `lane[k * dim + i]`, e.g. a fresh solve
+/// from a [`crate::brownian::BrownianInterval::reseed`] seed) and return
+/// true; on `None`/false the path's initial state is held constant — a
+/// finite, deterministic placeholder. Errors only when *every* path
+/// faulted.
+#[allow(clippy::too_many_arguments)] // mirrors the historical positional API
+pub fn integrate_batched_guarded<M, S, N>(
+    sde: &S,
+    noise: &N,
+    y0: &[M::Elem],
+    batch: usize,
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    opts: &BatchOptions,
+    refill: Option<&dyn Fn(usize, &mut [M::Elem]) -> bool>,
+) -> Result<GuardedSolve<M::Elem>, SolveError>
 where
     M: BatchStepper,
     S: BatchSde<M::Elem>,
@@ -1035,8 +1147,9 @@ where
     let chunk = opts.chunk.max(1);
     let n_chunks = (batch + chunk - 1) / chunk;
     let dt = (t1 - t0) / n_steps as f64;
+    let ce = opts.guard.check_every;
 
-    let run_chunk = |c: usize| -> Vec<M::Elem> {
+    let run_chunk = |c: usize| -> (Vec<M::Elem>, Vec<SolveFault>) {
         let p0 = c * chunk;
         let cl = chunk.min(batch - p0);
         // Gather this chunk's SoA lanes.
@@ -1050,6 +1163,7 @@ where
         let mut dw = vec![zero; nd * cl];
         let mut traj = Vec::with_capacity((n_steps + 1) * dim * cl);
         traj.extend_from_slice(&y);
+        let mut dirty = false;
         for k in 0..n_steps {
             // Same grid arithmetic as `integrate`, so per-path time points
             // (and hence field evaluations) are bit-identical.
@@ -1058,26 +1172,173 @@ where
             noise.fill_step(k, s, t, p0, cl, &mut dw);
             stepper.step(sde, s, t - s, &dw, &mut y, cl);
             traj.extend_from_slice(&y);
+            // Blockwise sweep at the guard cadence (and at the terminal
+            // step, so nothing escapes detection). Detection only — the
+            // solve always completes, so surviving lanes are whole.
+            if ce != 0 && ((k + 1) % ce == 0 || k + 1 == n_steps) && guard::any_nonfinite(&y) {
+                dirty = true;
+            }
         }
-        traj
+        if !dirty {
+            return (traj, Vec::new());
+        }
+        // Localise: re-run the chunk (bit-identically — same noise, same
+        // arithmetic) with a per-step, per-path sweep to pin each faulted
+        // path's first non-finite `(step, component)` exactly. The first
+        // pass's trajectory stays valid for surviving lanes.
+        let mut y = vec![zero; dim * cl];
+        for i in 0..dim {
+            for q in 0..cl {
+                y[i * cl + q] = y0[i * batch + p0 + q];
+            }
+        }
+        let mut stepper = M::for_chunk(sde, t0, &y, cl);
+        let mut firsts: Vec<Option<SolveFault>> = vec![None; cl];
+        for k in 0..n_steps {
+            let s = t0 + k as f64 * dt;
+            let t = t0 + (k + 1) as f64 * dt;
+            noise.fill_step(k, s, t, p0, cl, &mut dw);
+            stepper.step(sde, s, t - s, &dw, &mut y, cl);
+            for (q, slot) in firsts.iter_mut().enumerate() {
+                if slot.is_some() {
+                    continue;
+                }
+                for i in 0..dim {
+                    if !y[i * cl + q].to_f64().is_finite() {
+                        *slot = Some(SolveFault {
+                            step: k,
+                            path: p0 + q,
+                            component: i,
+                            cause: FaultCause::NonFinite,
+                        });
+                        break;
+                    }
+                }
+            }
+        }
+        (traj, firsts.into_iter().flatten().collect())
     };
 
-    let chunk_trajs: Vec<Vec<M::Elem>> = map_chunks(n_chunks, opts.threads, run_chunk);
+    // Single-path fallback for panicked chunks: bit-identical to the lane it
+    // replaces (batch = 1 is just the chunk engine at chunk length 1), with
+    // a progress marker so a panic reports its last-started step.
+    let run_single = |p: usize, progress: &Cell<usize>| -> (Vec<M::Elem>, Option<SolveFault>) {
+        let mut y = vec![zero; dim];
+        for i in 0..dim {
+            y[i] = y0[i * batch + p];
+        }
+        let mut stepper = M::for_chunk(sde, t0, &y, 1);
+        let mut dw = vec![zero; nd];
+        let mut traj = Vec::with_capacity((n_steps + 1) * dim);
+        traj.extend_from_slice(&y);
+        let mut fault = None;
+        for k in 0..n_steps {
+            progress.set(k);
+            let s = t0 + k as f64 * dt;
+            let t = t0 + (k + 1) as f64 * dt;
+            noise.fill_step(k, s, t, p, 1, &mut dw);
+            stepper.step(sde, s, t - s, &dw, &mut y, 1);
+            traj.extend_from_slice(&y);
+            if fault.is_none() {
+                if let Some((i, _)) = guard::first_nonfinite(&y, dim, 1) {
+                    fault = Some(SolveFault {
+                        step: k,
+                        path: p,
+                        component: i,
+                        cause: FaultCause::NonFinite,
+                    });
+                }
+            }
+        }
+        (traj, fault)
+    };
 
-    // Scatter chunk lanes back into the full SoA trajectory.
+    let chunk_results = map_chunks_isolated(n_chunks, opts.threads, run_chunk);
+
+    // Scatter chunk lanes back into the full SoA trajectory, collecting
+    // faults (and re-running panicked chunks path by path).
     let mut traj = vec![zero; (n_steps + 1) * dim * batch];
-    for (c, ct) in chunk_trajs.iter().enumerate() {
-        let p0 = c * chunk;
-        let cl = chunk.min(batch - p0);
+    let mut faults = Vec::new();
+    let mut quarantined = Vec::new();
+    let scatter_lane = |traj: &mut Vec<M::Elem>, p: usize, lane: &[M::Elem]| {
         for k in 0..=n_steps {
             for i in 0..dim {
-                let src = &ct[(k * dim + i) * cl..(k * dim + i) * cl + cl];
-                let base = k * dim * batch + i * batch + p0;
-                traj[base..base + cl].copy_from_slice(src);
+                traj[k * dim * batch + i * batch + p] = lane[k * dim + i];
+            }
+        }
+    };
+    for (c, res) in chunk_results.into_iter().enumerate() {
+        let p0 = c * chunk;
+        let cl = chunk.min(batch - p0);
+        match res {
+            Ok((ct, chunk_faults)) => {
+                for k in 0..=n_steps {
+                    for i in 0..dim {
+                        let src = &ct[(k * dim + i) * cl..(k * dim + i) * cl + cl];
+                        let base = k * dim * batch + i * batch + p0;
+                        traj[base..base + cl].copy_from_slice(src);
+                    }
+                }
+                for f in &chunk_faults {
+                    quarantined.push(f.path);
+                }
+                faults.extend(chunk_faults);
+            }
+            // The chunk-level payload is superseded by the per-path re-run,
+            // which reproduces the panic deterministically with exact
+            // coordinates.
+            Err(_chunk_panic) => {
+                for q in 0..cl {
+                    let p = p0 + q;
+                    let progress = Cell::new(0usize);
+                    match catch_unwind(AssertUnwindSafe(|| run_single(p, &progress))) {
+                        Ok((lane, fault)) => {
+                            scatter_lane(&mut traj, p, &lane);
+                            if let Some(f) = fault {
+                                quarantined.push(p);
+                                faults.push(f);
+                            }
+                        }
+                        Err(payload) => {
+                            quarantined.push(p);
+                            faults.push(SolveFault {
+                                step: progress.get(),
+                                path: p,
+                                component: 0,
+                                cause: FaultCause::VectorFieldPanic {
+                                    payload: guard::panic_message(payload),
+                                },
+                            });
+                        }
+                    }
+                }
             }
         }
     }
-    traj
+
+    if !quarantined.is_empty() && quarantined.len() == batch {
+        return Err(SolveError::new("integrate_batched_guarded: every path faulted", faults));
+    }
+
+    // Replace quarantined lanes: refilled trajectory, or the initial state
+    // held constant (finite, deterministic).
+    let mut lane = vec![zero; (n_steps + 1) * dim];
+    for &p in &quarantined {
+        for v in lane.iter_mut() {
+            *v = zero;
+        }
+        let refilled = refill.map(|f| f(p, &mut lane)).unwrap_or(false);
+        if !refilled {
+            for k in 0..=n_steps {
+                for i in 0..dim {
+                    lane[k * dim + i] = y0[i * batch + p];
+                }
+            }
+        }
+        scatter_lane(&mut traj, p, &lane);
+    }
+
+    Ok(GuardedSolve { traj, faults, quarantined })
 }
 
 // ---------------------------------------------------------------------------
@@ -1176,6 +1437,33 @@ mod tests {
     }
 
     #[test]
+    fn map_chunks_isolated_contains_a_panicking_chunk() {
+        // Silence the default panic hook for the planned panic.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let out = map_chunks_isolated(5, 2, |c| {
+            if c == 3 {
+                panic!("chunk {c} poisoned");
+            }
+            c * 10
+        });
+        std::panic::set_hook(prev);
+        for (c, r) in out.iter().enumerate() {
+            match r {
+                Ok(v) => {
+                    assert_ne!(c, 3);
+                    assert_eq!(*v, c * 10);
+                }
+                Err(p) => {
+                    assert_eq!(c, 3);
+                    assert_eq!(p.chunk, 3);
+                    assert!(p.payload.contains("poisoned"), "{}", p.payload);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn stored_noise_serves_chunks_and_paths_identically() {
         let mut sn = StoredBatchNoise::zeros(0.0, 1.0, 4, 2, 5);
         for k in 0..4 {
@@ -1258,10 +1546,11 @@ mod tests {
         let aos: Vec<f64> = (0..batch * 3).map(|x| 0.02 * x as f64 - 0.1).collect();
         let y0 = aos_to_soa(&aos, 3, batch);
         let noise = CounterGridNoise::new(21, 3, 0.0, 1.0, n);
-        let opts = BatchOptions { threads: 1, chunk: 2 };
+        let opts = BatchOptions { threads: 1, chunk: 2, ..Default::default() };
         let traj = integrate_batched::<BatchEulerMaruyama, _, _>(
             &sde, &noise, &y0, batch, 0.0, 1.0, n, &opts,
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         for p in 0..batch {
             let mut pn = noise.path(p);
             let mut solver = EulerMaruyama::new(Sde::dim(&sde), Sde::noise_dim(&sde));

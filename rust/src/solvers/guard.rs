@@ -1,0 +1,458 @@
+//! Fault tolerance for the solve/adjoint/training hot path: structured
+//! errors, non-finite guards, and deterministic fault injection.
+//!
+//! The ROADMAP's serving-scale north star means a single non-finite sample
+//! or a panicking vector field must not abort the whole process. This module
+//! provides the shared vocabulary the engines speak when something goes
+//! wrong:
+//!
+//! * [`SolveFault`] / [`SolveError`] — one fault is one `(step, path,
+//!   component, cause)` record with exact coordinates; an error is the full
+//!   list of faults a solve detected before giving up. Every fallible entry
+//!   point ([`super::integrate_batched`], the `adjoint_solve*` family,
+//!   `GanTrainer::train_step`) returns `Result<_, SolveError>`-shaped
+//!   results built from these.
+//! * [`GuardConfig`] — the knobs: blockwise `is_finite` sweeps every
+//!   `check_every` steps (near-zero overhead — the `guard/*` rows of the
+//!   `hotpath_micro` bench pin it below 2%), and the reconstruction-drift
+//!   watchdog (`checkpoint_every` / `drift_tol`) that degrades the adjoint's
+//!   `Reconstruct` mode to `Tape` instead of returning wrong gradients.
+//! * [`FaultPlan`] / [`FaultyBatchNoise`] / [`PanicOnSentinel`] —
+//!   deterministic fault injection for tests: plant a NaN in one increment
+//!   lane, panic the noise fill for one path, or panic a drift evaluation
+//!   when a sentinel state value is seen. `tests/fault_tolerance.rs` drives
+//!   every recovery path through these, bit-deterministically.
+//!
+//! # Coordinate conventions
+//!
+//! `SolveFault::step` is the grid step whose *update* first produced the
+//! faulty value: a NaN injected into the increment consumed by step `s`
+//! is reported as `step == s` (the state at grid point `s + 1` is the first
+//! non-finite one). Forward solves localise faults exactly by re-running the
+//! offending chunk with a per-step sweep; adjoint sweeps report at the
+//! guard's sweep cadence (set `check_every = 1` for exact coordinates).
+//! Panic faults from the batched adjoint carry chunk-granularity coordinates
+//! (the chunk's first path, step 0); the forward engine re-runs panicked
+//! chunks path-by-path and reports the exact path and last-started step.
+
+use super::batch::{BatchNoise, BatchSde};
+use super::simd::Lane;
+use std::any::Any;
+use std::fmt;
+
+/// Why a lane (or a training step) was faulted.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultCause {
+    /// A non-finite value (NaN or ±∞) appeared in a state, cotangent,
+    /// gradient, or loss lane.
+    NonFinite,
+    /// The reversible-Heun backward reconstruction drifted past tolerance
+    /// against a sparse forward checkpoint (the instability mode analysed by
+    /// McCallum & Foster for stiff systems). Recoverable: the adjoint falls
+    /// back to `Tape` mode instead of surfacing this as an error, so it only
+    /// appears in faults when the fallback itself was impossible.
+    ReconstructionDrift {
+        /// Max-abs deviation of the reconstructed state from the checkpoint.
+        drift: f64,
+        /// The tolerance that was breached (relative to the checkpoint's
+        /// max-abs state, floored at 1).
+        tol: f64,
+    },
+    /// A vector-field / noise evaluation panicked; the payload is the panic
+    /// message (or a placeholder for non-string payloads).
+    VectorFieldPanic {
+        /// Stringified panic payload.
+        payload: String,
+    },
+}
+
+impl fmt::Display for FaultCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultCause::NonFinite => write!(f, "non-finite value"),
+            FaultCause::ReconstructionDrift { drift, tol } => {
+                write!(f, "reconstruction drift {drift:e} > tol {tol:e}")
+            }
+            FaultCause::VectorFieldPanic { payload } => {
+                write!(f, "vector-field panic: {payload}")
+            }
+        }
+    }
+}
+
+/// One structured fault: exact coordinates plus cause. See the module docs
+/// for the step/path/component conventions per engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolveFault {
+    /// Grid step whose update first produced the faulty value (training
+    /// faults: the trainer's step counter).
+    pub step: usize,
+    /// Global path index (0 for per-path solves and training faults).
+    pub path: usize,
+    /// State/gradient component index (0 for panics and loss faults).
+    pub component: usize,
+    /// What went wrong.
+    pub cause: FaultCause,
+}
+
+impl fmt::Display for SolveFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "step {} path {} component {}: {}",
+            self.step, self.path, self.component, self.cause
+        )
+    }
+}
+
+/// Structured solve error: the faults a fallible entry point detected
+/// before aborting (or, for quarantine-mode solves, before every path
+/// died). Implements [`std::error::Error`], so it threads through
+/// `anyhow::Result` at the coordinator layer unchanged.
+#[derive(Clone, Debug)]
+pub struct SolveError {
+    /// Which entry point (and phase) detected the faults.
+    pub context: &'static str,
+    /// Every fault detected, in ascending chunk order.
+    pub faults: Vec<SolveFault>,
+}
+
+impl SolveError {
+    /// Bundle faults under a context label.
+    pub fn new(context: &'static str, faults: Vec<SolveFault>) -> Self {
+        Self { context, faults }
+    }
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {} fault(s)", self.context, self.faults.len())?;
+        for fault in self.faults.iter().take(4) {
+            write!(f, "; {fault}")?;
+        }
+        if self.faults.len() > 4 {
+            write!(f, "; …")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// Guard knobs for the fallible solve/adjoint entry points. Lives inside
+/// [`super::BatchOptions`] for the batched engines; the per-path adjoint
+/// uses the defaults.
+///
+/// Tuning: `check_every` trades detection latency for sweep cost — at the
+/// default of 8 the sweep touches each lane once per 8 steps, which the
+/// `hotpath_micro` `guard/*` rows pin below 2% of a batched
+/// reversible-Heun solve; 0 disables the sweeps (and with them non-finite
+/// detection). `checkpoint_every` / `drift_tol` control the adjoint's
+/// divergence watchdog: a sparse forward checkpoint every `checkpoint_every`
+/// steps is compared against the backward reconstruction, and a relative
+/// drift above `drift_tol` (scaled by the checkpoint's max-abs state,
+/// floored at 1) degrades the remaining sweep from `Reconstruct` to `Tape`
+/// — O(1) memory becomes O(n), gradients stay exact. A negative `drift_tol`
+/// forces the fallback at the first checkpoint (the test hook); 0 for
+/// `checkpoint_every` disables the watchdog.
+#[derive(Clone, Copy, Debug)]
+pub struct GuardConfig {
+    /// Sweep state/cotangent lanes for non-finite values every this many
+    /// steps (and at the terminal step). 0 disables.
+    pub check_every: usize,
+    /// Store a sparse forward checkpoint every this many steps for the
+    /// adjoint's reconstruction-drift watchdog. 0 disables.
+    pub checkpoint_every: usize,
+    /// Relative reconstruction-drift tolerance; breach triggers the
+    /// `Reconstruct` → `Tape` fallback. Negative forces the fallback at the
+    /// first checkpoint (deterministic test hook).
+    pub drift_tol: f64,
+}
+
+impl Default for GuardConfig {
+    fn default() -> Self {
+        // Same tolerance the debug-mode replay assert uses, so the release
+        // watchdog and the debug invariant agree on what "drifted" means.
+        Self { check_every: 8, checkpoint_every: 16, drift_tol: 1e-6 }
+    }
+}
+
+impl GuardConfig {
+    /// All guards off — the pre-fault-tolerance hot path, for overhead
+    /// comparisons (`hotpath_micro` `guard/*` rows).
+    pub fn disabled() -> Self {
+        Self { check_every: 0, checkpoint_every: 0, drift_tol: 1e-6 }
+    }
+}
+
+/// True if any lane holds a non-finite value — the cheap blockwise sweep
+/// the engines run every [`GuardConfig::check_every`] steps. Precision-
+/// generic: `f32` lanes widen through [`Lane::to_f64`] (the identity for
+/// `f64`), so both instantiations share one definition of "finite".
+#[inline]
+pub fn any_nonfinite<T: Lane>(lanes: &[T]) -> bool {
+    lanes.iter().any(|v| !v.to_f64().is_finite())
+}
+
+/// First non-finite lane in chunk-SoA layout `[dim * chunk]`, scanned path-
+/// major (ascending path, then ascending component) so the report is the
+/// lowest faulted path's first bad component. Returns `(component, q)`.
+pub fn first_nonfinite<T: Lane>(lanes: &[T], dim: usize, chunk: usize) -> Option<(usize, usize)> {
+    for q in 0..chunk {
+        for i in 0..dim {
+            if !lanes[i * chunk + q].to_f64().is_finite() {
+                return Some((i, q));
+            }
+        }
+    }
+    None
+}
+
+/// Stringify a caught panic payload (`&str` and `String` payloads pass
+/// through; anything else gets a placeholder).
+pub fn panic_message(payload: Box<dyn Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A quarantine-mode solve result: the full SoA trajectory with faulted
+/// lanes replaced (by the refill closure's trajectory, or by the path's
+/// initial state held constant), plus the structured fault report.
+/// Surviving paths are bit-identical to an uninjected solve with the same
+/// lane assignment — the engine's batched ≡ per-path invariant.
+#[derive(Clone, Debug)]
+pub struct GuardedSolve<T> {
+    /// SoA trajectory `[(n_steps + 1) * dim * batch]`, as
+    /// [`super::integrate_batched`] returns.
+    pub traj: Vec<T>,
+    /// One fault per quarantined path (its first), ascending path order
+    /// within each chunk.
+    pub faults: Vec<SolveFault>,
+    /// Global indices of the dropped paths, ascending.
+    pub quarantined: Vec<usize>,
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault injection
+// ---------------------------------------------------------------------------
+
+/// Coordinates of a planned NaN injection into a noise increment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NanSite {
+    /// Grid step whose increment is corrupted.
+    pub step: usize,
+    /// Global path index.
+    pub path: usize,
+    /// Brownian channel.
+    pub channel: usize,
+}
+
+/// Coordinates of a planned panic during a noise fill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PanicSite {
+    /// Grid step at which the fill panics.
+    pub step: usize,
+    /// Global path index whose presence in the fill triggers the panic.
+    pub path: usize,
+}
+
+/// Coordinates of a planned cotangent-lane corruption (applied by a test's
+/// `grad_step` closure via [`FaultPlan::corrupt_grad_lanes`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GradSite {
+    /// Backward-sweep grid step at which the corruption lands.
+    pub step: usize,
+    /// Global path index.
+    pub path: usize,
+    /// State component of the cotangent lane.
+    pub component: usize,
+}
+
+/// A deterministic fault-injection plan: which increments turn NaN, which
+/// fills panic, which cotangent lanes get corrupted. Pure data — the same
+/// plan replayed against the same solve produces the same faults bit-for-
+/// bit, which is what lets `tests/fault_tolerance.rs` assert exact
+/// coordinates and bit-identical recovery.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// NaN injections into noise increments.
+    pub nans: Vec<NanSite>,
+    /// Panics during noise fills.
+    pub panics: Vec<PanicSite>,
+    /// Cotangent-lane corruptions for adjoint sweeps.
+    pub grads: Vec<GradSite>,
+}
+
+impl FaultPlan {
+    /// Empty plan.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Plan a NaN in channel `channel` of path `path`'s increment at grid
+    /// step `step`.
+    pub fn inject_nan(mut self, step: usize, path: usize, channel: usize) -> Self {
+        self.nans.push(NanSite { step, path, channel });
+        self
+    }
+
+    /// Plan a panic when the fill for grid step `step` covers path `path`.
+    pub fn panic_in_fill(mut self, step: usize, path: usize) -> Self {
+        self.panics.push(PanicSite { step, path });
+        self
+    }
+
+    /// Plan a cotangent corruption at `(step, path, component)` of the
+    /// backward sweep.
+    pub fn corrupt_grad(mut self, step: usize, path: usize, component: usize) -> Self {
+        self.grads.push(GradSite { step, path, component });
+        self
+    }
+
+    /// Apply the planned gradient corruptions to a chunk's cotangent lanes
+    /// (`lz`, `[dim * chunk_len]` covering global paths
+    /// `p0 .. p0 + chunk_len`) at backward step `k` — call this from a
+    /// `grad_step` closure to inject bit-deterministically.
+    pub fn corrupt_grad_lanes(&self, k: usize, p0: usize, chunk_len: usize, lz: &mut [f64]) {
+        for site in &self.grads {
+            if site.step == k && site.path >= p0 && site.path < p0 + chunk_len {
+                lz[site.component * chunk_len + (site.path - p0)] = f64::NAN;
+            }
+        }
+    }
+}
+
+/// A [`BatchNoise`] wrapper that applies a [`FaultPlan`] on top of an inner
+/// source: planned panics fire first (the fill never completes), then
+/// planned NaNs overwrite the inner source's increments. Paths the plan
+/// doesn't name see bit-identical increments to the bare inner source, so
+/// surviving lanes of a quarantine-mode solve match an uninjected run
+/// exactly.
+pub struct FaultyBatchNoise<'a, N> {
+    inner: &'a N,
+    plan: FaultPlan,
+}
+
+impl<'a, N> FaultyBatchNoise<'a, N> {
+    /// Wrap `inner` with `plan`.
+    pub fn new(inner: &'a N, plan: FaultPlan) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl<T: Lane, N: BatchNoise<T>> BatchNoise<T> for FaultyBatchNoise<'_, N> {
+    fn brownian_dim(&self) -> usize {
+        self.inner.brownian_dim()
+    }
+
+    fn fill_step(&self, k: usize, s: f64, t: f64, p0: usize, chunk: usize, out: &mut [T]) {
+        for site in &self.plan.panics {
+            if site.step == k && site.path >= p0 && site.path < p0 + chunk {
+                panic!(
+                    "[fault-injection] planned noise panic at step {} path {}",
+                    site.step, site.path
+                );
+            }
+        }
+        self.inner.fill_step(k, s, t, p0, chunk, out);
+        for site in &self.plan.nans {
+            if site.step == k && site.path >= p0 && site.path < p0 + chunk {
+                out[site.channel * chunk + (site.path - p0)] = T::from_f64(f64::NAN);
+            }
+        }
+    }
+}
+
+/// A [`BatchSde`] wrapper whose **drift** panics whenever any state lane
+/// equals `sentinel` exactly — plant the sentinel in one path's initial
+/// state to make exactly that path's drift evaluations panic (at step 0,
+/// during the stepper's initial field evaluation) while every other path's
+/// lanes stay bit-identical to the bare inner system.
+pub struct PanicOnSentinel<'a, S> {
+    inner: &'a S,
+    sentinel: f64,
+}
+
+impl<'a, S> PanicOnSentinel<'a, S> {
+    /// Wrap `inner`, panicking on `sentinel` state values.
+    pub fn new(inner: &'a S, sentinel: f64) -> Self {
+        Self { inner, sentinel }
+    }
+}
+
+impl<T: Lane, S: BatchSde<T>> BatchSde<T> for PanicOnSentinel<'_, S> {
+    fn state_dim(&self) -> usize {
+        self.inner.state_dim()
+    }
+
+    fn brownian_dim(&self) -> usize {
+        self.inner.brownian_dim()
+    }
+
+    fn diagonal_noise(&self) -> bool {
+        self.inner.diagonal_noise()
+    }
+
+    fn drift_batch(&self, t: f64, y: &[T], out: &mut [T], batch: usize) {
+        if y.iter().any(|v| v.to_f64() == self.sentinel) {
+            panic!("[fault-injection] sentinel drift panic");
+        }
+        self.inner.drift_batch(t, y, out, batch);
+    }
+
+    fn diffusion_batch(&self, t: f64, y: &[T], out: &mut [T], batch: usize) {
+        self.inner.diffusion_batch(t, y, out, batch);
+    }
+
+    fn diffusion_diag_batch(&self, t: f64, y: &[T], out: &mut [T], batch: usize) {
+        self.inner.diffusion_diag_batch(t, y, out, batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_helpers_find_exact_lane() {
+        let mut lanes = vec![0.0f64; 3 * 4]; // dim 3, chunk 4
+        assert!(!any_nonfinite(&lanes));
+        assert_eq!(first_nonfinite(&lanes, 3, 4), None);
+        lanes[1 * 4 + 2] = f64::NAN; // component 1, path 2
+        lanes[2 * 4 + 3] = f64::INFINITY; // component 2, path 3
+        assert!(any_nonfinite(&lanes));
+        // Path-major scan: path 2's component 1 comes before path 3's.
+        assert_eq!(first_nonfinite(&lanes, 3, 4), Some((1, 2)));
+    }
+
+    #[test]
+    fn fault_display_carries_coordinates() {
+        let err = SolveError::new(
+            "test",
+            vec![SolveFault {
+                step: 5,
+                path: 3,
+                component: 1,
+                cause: FaultCause::NonFinite,
+            }],
+        );
+        let s = format!("{err}");
+        assert!(s.contains("step 5") && s.contains("path 3"), "{s}");
+    }
+
+    #[test]
+    fn plan_corrupts_only_named_lane() {
+        let plan = FaultPlan::new().corrupt_grad(3, 5, 1);
+        let mut lz = vec![1.0f64; 2 * 4]; // dim 2, chunk 4, p0 = 4
+        plan.corrupt_grad_lanes(2, 4, 4, &mut lz);
+        assert!(lz.iter().all(|v| v.is_finite()), "wrong step must not fire");
+        plan.corrupt_grad_lanes(3, 4, 4, &mut lz);
+        assert!(lz[1 * 4 + 1].is_nan(), "component 1 of path 5 (q = 1)");
+        assert_eq!(lz.iter().filter(|v| v.is_nan()).count(), 1);
+    }
+}

@@ -41,6 +41,7 @@ pub mod adjoint;
 mod batch;
 mod classic;
 mod convergence;
+pub mod guard;
 pub mod neural;
 mod reversible_heun;
 pub mod simd;
@@ -53,9 +54,14 @@ pub use adjoint::{
     BackwardMode, BatchSdeVjp, GridReplayNoise, SdeVjp,
 };
 pub use batch::{
-    aos_to_soa, integrate_batched, map_chunks, soa_to_aos, BatchEulerMaruyama, BatchHeun,
-    BatchMidpoint, BatchNoise, BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper,
-    CounterGridNoise, PathNoiseF64, StoredBatchNoise, StoredPathNoise,
+    aos_to_soa, integrate_batched, integrate_batched_guarded, map_chunks, map_chunks_isolated,
+    soa_to_aos, BatchEulerMaruyama, BatchHeun, BatchMidpoint, BatchNoise, BatchOptions,
+    BatchReversibleHeun, BatchSde, BatchStepper, ChunkPanic, CounterGridNoise, PathNoiseF64,
+    StoredBatchNoise, StoredPathNoise,
+};
+pub use guard::{
+    FaultCause, FaultPlan, FaultyBatchNoise, GuardConfig, GuardedSolve, PanicOnSentinel,
+    SolveError, SolveFault,
 };
 pub use classic::{EulerMaruyama, Heun, Midpoint};
 pub use simd::Lane;

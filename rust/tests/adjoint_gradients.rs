@@ -78,7 +78,8 @@ fn adjoint_matches_fd_tanh_diagonal_across_dims_and_steps() {
                 &mut pn,
                 BackwardMode::Reconstruct,
                 |_z, gz| gz.fill(1.0),
-            );
+            )
+            .expect("fault-free by construction"); // test-only unwrap: no injection here
             let mut fd = central_gradient(|yy| loss(&theta0, yy), &y0, 1e-5);
             fd.extend(central_gradient(|th| loss(th, &y0), &theta0, 1e-5));
             let rel = relative_l1(&concat_grads(&adj), &fd);
@@ -111,7 +112,8 @@ fn adjoint_matches_fd_on_ou_to_1e6() {
         &mut pn,
         BackwardMode::Reconstruct,
         |_z, gz| gz[0] = 1.0,
-    );
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
     let mut fd = central_gradient(|yy| loss(&theta0, yy), &[1.0], 1e-4);
     fd.extend(central_gradient(|th| loss(th, &[1.0]), &theta0, 1e-4));
     let rel = relative_l1(&concat_grads(&adj), &fd);
@@ -139,7 +141,8 @@ fn adjoint_matches_fd_dense_coupled_state_gradient() {
         &mut pn,
         BackwardMode::Reconstruct,
         |_z, gz| gz.fill(1.0),
-    );
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
     assert!(adj.dtheta.is_empty());
     let fd = central_gradient(loss, &y0, 1e-5);
     let rel = relative_l1(&adj.dy0, &fd);
@@ -170,7 +173,8 @@ fn per_path_reference(
         let mut pn = noise.path(p);
         let g = adjoint_solve(sde, y0p, 0.0, 1.0, n, &mut pn, mode, |_z, gz| {
             seed_per_path(gz)
-        });
+        })
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         for i in 0..dim {
             terminal[i * batch + p] = g.terminal[i];
             dy0[i * batch + p] = g.dy0[i];
@@ -179,7 +183,7 @@ fn per_path_reference(
             dtheta[m] += g.dtheta[m];
         }
     }
-    AdjointGrad { terminal, dy0, dtheta, ddw: Vec::new() }
+    AdjointGrad { terminal, dy0, dtheta, ddw: Vec::new(), fallbacks: 0 }
 }
 
 #[test]
@@ -205,10 +209,11 @@ fn batched_adjoint_bit_identical_to_per_path() {
             // pool as the forward engine (`map_chunks`); results stay keyed
             // by chunk index, so every schedule must produce the same bits.
             for (threads, chunk) in [(1usize, batch), (1, 2), (3, 2), (2, 4), (4, 1), (8, 3)] {
-                let opts = BatchOptions { threads, chunk };
+                let opts = BatchOptions { threads, chunk, ..Default::default() };
                 let got = adjoint_solve_batched(
                     &native, &noise, &y0, batch, 0.0, 1.0, n, mode, &opts, &seed,
-                );
+                )
+                .expect("fault-free by construction"); // test-only unwrap: no injection here
                 assert_eq!(
                     got.terminal, reference.terminal,
                     "terminal diverged: batch={batch} mode={mode:?} t={threads} c={chunk}"
@@ -242,7 +247,7 @@ fn native_batch_vjps_match_blanket_adapter_bitwise() {
     for &batch in &[1usize, 5, 33] {
         let y0 = aos_to_soa(&aos_start(dim, batch), dim, batch);
         let noise = CounterGridNoise::new(3, dim, 0.0, 1.0, n);
-        let opts = BatchOptions { threads: 1, chunk: 16 };
+        let opts = BatchOptions { threads: 1, chunk: 16, ..Default::default() };
         let a = adjoint_solve_batched(
             &adapter,
             &noise,
@@ -254,7 +259,8 @@ fn native_batch_vjps_match_blanket_adapter_bitwise() {
             BackwardMode::Reconstruct,
             &opts,
             &seed,
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         let b = adjoint_solve_batched(
             &native,
             &noise,
@@ -266,7 +272,8 @@ fn native_batch_vjps_match_blanket_adapter_bitwise() {
             BackwardMode::Reconstruct,
             &opts,
             &seed,
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         assert_eq!(a.terminal, b.terminal, "terminal diverged at batch {batch}");
         assert_eq!(a.dy0, b.dy0, "dy0 diverged at batch {batch}");
         assert_eq!(a.dtheta, b.dtheta, "dtheta diverged at batch {batch}");
@@ -288,7 +295,7 @@ fn dense_coupled_batched_adjoint_matches_per_path() {
         let aos = aos_start(dim, batch);
         let y0 = aos_to_soa(&aos, dim, batch);
         let noise = CounterGridNoise::new(11, 3, 0.0, 1.0, n);
-        let opts = BatchOptions { threads: 1, chunk: 8 };
+        let opts = BatchOptions { threads: 1, chunk: 8, ..Default::default() };
         let got = adjoint_solve_batched(
             &DenseCoupledBatch,
             &noise,
@@ -300,7 +307,8 @@ fn dense_coupled_batched_adjoint_matches_per_path() {
             BackwardMode::Reconstruct,
             &opts,
             &seed,
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         for p in 0..batch {
             let y0p = &aos[p * dim..(p + 1) * dim];
             let mut pn = noise.path(p);
@@ -316,7 +324,8 @@ fn dense_coupled_batched_adjoint_matches_per_path() {
                     gz[0] = 1.0;
                     gz[1] = 2.0;
                 },
-            );
+            )
+            .expect("fault-free by construction"); // test-only unwrap: no injection here
             for i in 0..dim {
                 assert_eq!(got.dy0[i * batch + p], g.dy0[i], "path {p} component {i}");
             }
@@ -340,6 +349,7 @@ fn ou_machine_precision_gradient_roundtrip() {
         let run = |mode| {
             let mut pn = noise.path(0);
             adjoint_solve(&sde, &[1.0], 0.0, 1.0, n, &mut pn, mode, |_z, gz| gz[0] = 1.0)
+                .expect("fault-free by construction") // test-only unwrap: no injection here
         };
         let rec = run(BackwardMode::Reconstruct);
         let tape = run(BackwardMode::Tape);
@@ -476,6 +486,7 @@ fn brownian_interval_backward_replay_is_bit_identical() {
             BackwardMode::Reconstruct,
             |_z, gz| gz.fill(1.0),
         )
+        .expect("fault-free by construction") // test-only unwrap: no injection here
     };
     let via_replay = {
         let mut bi = BrownianInterval::new(0.0, 1.0, d, 99);
@@ -490,6 +501,7 @@ fn brownian_interval_backward_replay_is_bit_identical() {
             BackwardMode::Reconstruct,
             |_z, gz| gz.fill(1.0),
         )
+        .expect("fault-free by construction") // test-only unwrap: no injection here
     };
     assert_eq!(via_queries.terminal, via_replay.terminal);
     assert_eq!(via_queries.dy0, via_replay.dy0);
@@ -515,7 +527,8 @@ fn native_gradient_drives_optimizer_end_to_end() {
             &mut pn,
             BackwardMode::Reconstruct,
             |z, gz| gz[0] = 2.0 * (z[0] - target),
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         let resid = g.terminal[0] - target;
         (resid * resid, g.dtheta)
     };

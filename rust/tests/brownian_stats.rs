@@ -1,6 +1,8 @@
 //! Distributional tests over the Brownian sources (paper Section 4):
 //! increment mean/variance via chi-squared bounds, cross-interval
-//! independence, and `fill_grid`/per-step agreement through `reseed()`.
+//! independence, and `fill_grid`/per-step agreement through `reseed()` —
+//! plus robustness pins: LRU eviction under adversarial out-of-order
+//! access and mid-trajectory `reseed` must both be bit-exact.
 //!
 //! Each source simulates `size` independent scalar Brownian motions, so one
 //! wide instance gives thousands of iid samples of any increment. With the
@@ -9,7 +11,7 @@
 //! never to flake on a correct generator, tight enough to catch a wrong
 //! variance scale, a mean offset, or correlated bridge noise.
 
-use neuralsde::brownian::{BrownianInterval, BrownianSource, VirtualBrownianTree};
+use neuralsde::brownian::{BrownianInterval, BrownianSource, IntervalOptions, VirtualBrownianTree};
 
 const N: usize = 16_384;
 
@@ -135,6 +137,78 @@ fn brownian_interval_fill_grid_matches_steps_after_reseed() {
                 "seed {seed} step {k}"
             );
         }
+    }
+}
+
+#[test]
+fn lru_eviction_under_adversarial_out_of_order_access_is_bit_exact() {
+    // A capacity-2 cache evicts on almost every query, so each value below
+    // is recomputed through an ancestor walk; the 4096-entry twin serves
+    // the same sequence mostly from cache. The increments must not depend
+    // on which of the two happened.
+    let steps = 64usize;
+    let size = 8usize;
+    let small = IntervalOptions { cache_capacity: 2, preseed_depth: 0 };
+    let big = IntervalOptions { cache_capacity: 4096, preseed_depth: 0 };
+    let mut a = BrownianInterval::with_options(0.0, 1.0, size, 31, small);
+    let mut b = BrownianInterval::with_options(0.0, 1.0, size, 31, big);
+    // Out-of-order step permutation (37 is coprime with 64), interleaved
+    // with coarse multi-scale spans that keep churning the tiny cache.
+    let query = |k: usize| -> (usize, f64, f64) {
+        let j = (k * 37 + 11) % steps;
+        (j, j as f64 / steps as f64, (j + 1) as f64 / steps as f64)
+    };
+    let mut firsts = vec![Vec::new(); steps];
+    for k in 0..steps {
+        let (j, s, t) = query(k);
+        let wa = a.increment_vec(s, t);
+        assert_eq!(wa, b.increment_vec(s, t), "query {k}: tiny cache diverged");
+        firsts[j] = wa;
+        let coarse = (k % 4) as f64 * 0.25;
+        assert_eq!(
+            a.increment_vec(coarse, coarse + 0.25),
+            b.increment_vec(coarse, coarse + 0.25),
+            "coarse query {k}: tiny cache diverged"
+        );
+    }
+    // Second pass in natural order: everything has long been evicted from
+    // the capacity-2 cache, so every value is recomputed — the bits must
+    // reproduce the first pass exactly.
+    for j in 0..steps {
+        let (s, t) = (j as f64 / steps as f64, (j + 1) as f64 / steps as f64);
+        assert_eq!(a.increment_vec(s, t), firsts[j], "step {j}: eviction changed the bits");
+    }
+}
+
+#[test]
+fn reseed_mid_trajectory_matches_cold_interval_bitwise() {
+    let steps = 48usize;
+    let size = 8usize;
+    let ts: Vec<f64> = (0..=steps).map(|k| k as f64 / steps as f64).collect();
+    let mut warm = BrownianInterval::new(0.0, 1.0, size, 77);
+    // Walk half the trajectory under the old seed (builds the tree shape
+    // and fills the cache with old-stream values)...
+    for k in 0..steps / 2 {
+        let _ = warm.increment_vec(ts[k], ts[k + 1]);
+    }
+    // ...then redraw the path mid-trajectory: every stale cached value must
+    // be invalidated, and the redrawn path must be the cold-start path.
+    warm.reseed(1234);
+    let mut cold = BrownianInterval::new(0.0, 1.0, size, 1234);
+    for k in 0..steps {
+        assert_eq!(
+            warm.increment_vec(ts[k], ts[k + 1]),
+            cold.increment_vec(ts[k], ts[k + 1]),
+            "step {k}: reseeded interval diverged from a cold one"
+        );
+    }
+    // The backward re-query (the adjoint's access pattern) must agree too.
+    for k in (0..steps).rev() {
+        assert_eq!(
+            warm.increment_vec(ts[k], ts[k + 1]),
+            cold.increment_vec(ts[k], ts[k + 1]),
+            "backward step {k}: reseeded interval diverged from a cold one"
+        );
     }
 }
 

@@ -1,0 +1,368 @@
+//! The deterministic fault-injection suite: every recovery path of the
+//! fault-tolerance stack, exercised bit-reproducibly.
+//!
+//! * A planned NaN in one noise increment surfaces as a structured
+//!   [`SolveError`] with the **exact** `(step, path)` coordinates, both at
+//!   per-step sweep cadence and when detected by a sparse sweep (the
+//!   localisation re-run pins the step regardless of `check_every`).
+//! * A panicking drift evaluation quarantines **only its own lane** —
+//!   survivors are bit-identical to an uninjected solve, and the quarantined
+//!   lane is either held at its initial state or refilled by the caller.
+//! * A forced reconstruction-drift breach degrades the batched adjoint from
+//!   `Reconstruct` to `Tape` mid-sweep, and the gradients match an all-`Tape`
+//!   run **bitwise** (the fallback is exact, not approximate).
+//! * A corrupted cotangent lane is caught by the backward sweep with exact
+//!   coordinates at `check_every = 1`.
+//! * The GAN training watchdog rolls a failed step back and retries
+//!   bit-deterministically; with the watchdog disabled the structured error
+//!   surfaces instead.
+//! * Quarantine decisions and surviving bits are invariant under the batch
+//!   engine's thread/chunk fan-out.
+
+use std::sync::Mutex;
+
+use neuralsde::brownian::SplitPrng;
+use neuralsde::config::TrainConfig;
+use neuralsde::coordinator::GanTrainer;
+use neuralsde::data::ou;
+use neuralsde::solvers::systems::TanhDiagonalBatch;
+use neuralsde::solvers::{
+    adjoint_solve_batched_steps, integrate_batched, integrate_batched_guarded, BackwardMode,
+    BatchOptions, BatchReversibleHeun, CounterGridNoise, FaultCause, FaultPlan, FaultyBatchNoise,
+    GuardConfig, PanicOnSentinel,
+};
+
+/// The panic hook is process-global; tests that suppress it to keep planned
+/// panics quiet must not interleave with each other.
+static PANIC_HOOK_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the default panic hook replaced by a silent one (planned
+/// panics would otherwise spam the test output). Assertions belong outside
+/// `f` so their messages stay visible.
+fn with_quiet_panics<R>(f: impl FnOnce() -> R) -> R {
+    let _guard = PANIC_HOOK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let out = f();
+    std::panic::set_hook(prev);
+    out
+}
+
+/// Slightly different per-lane initial states so lane mixups would show.
+fn soa_start(dim: usize, batch: usize) -> Vec<f64> {
+    (0..dim * batch).map(|q| 0.02 * (q % 13) as f64 + 0.05).collect()
+}
+
+// ---------------------------------------------------------------------------
+// NaN injection → exact coordinates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nan_injection_reported_with_exact_coordinates() {
+    let (dim, batch, n) = (2usize, 6usize, 10usize);
+    let sde = TanhDiagonalBatch::new(dim, 11);
+    let inner = CounterGridNoise::new(21, dim, 0.0, 1.0, n);
+    let noise = FaultyBatchNoise::new(&inner, FaultPlan::new().inject_nan(5, 3, 1));
+    let y0 = soa_start(dim, batch);
+    let opts = BatchOptions { threads: 1, chunk: 4, ..Default::default() };
+    let err = integrate_batched::<BatchReversibleHeun, _, _>(
+        &sde, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+    )
+    .expect_err("the planned NaN must fault the solve");
+    assert_eq!(err.context, "integrate_batched");
+    assert_eq!(err.faults.len(), 1, "exactly one path faulted: {err}");
+    let f = &err.faults[0];
+    assert_eq!(f.step, 5, "step whose update consumed the NaN increment");
+    assert_eq!(f.path, 3, "only the injected path");
+    assert_eq!(f.cause, FaultCause::NonFinite);
+}
+
+#[test]
+fn sparse_sweep_still_localizes_the_exact_step() {
+    // With check_every = 3 the blockwise sweep only *detects* at steps 3, 6,
+    // 9, … — the bit-identical localisation re-run must still pin the fault
+    // to the exact step the NaN entered.
+    let (dim, batch, n) = (2usize, 6usize, 10usize);
+    let sde = TanhDiagonalBatch::new(dim, 11);
+    let inner = CounterGridNoise::new(21, dim, 0.0, 1.0, n);
+    let noise = FaultyBatchNoise::new(&inner, FaultPlan::new().inject_nan(5, 3, 1));
+    let y0 = soa_start(dim, batch);
+    let opts = BatchOptions {
+        threads: 1,
+        chunk: 4,
+        guard: GuardConfig { check_every: 3, ..GuardConfig::default() },
+    };
+    let err = integrate_batched::<BatchReversibleHeun, _, _>(
+        &sde, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+    )
+    .expect_err("the planned NaN must fault the solve");
+    assert_eq!(err.faults.len(), 1, "{err}");
+    assert_eq!(err.faults[0].step, 5, "sparse detection, exact localisation");
+    assert_eq!(err.faults[0].path, 3);
+}
+
+// ---------------------------------------------------------------------------
+// Panic isolation and quarantine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panicking_drift_quarantines_only_its_lane() {
+    let (dim, batch, n) = (2usize, 10usize, 8usize);
+    let inner = TanhDiagonalBatch::new(dim, 31);
+    let sentinel = 777.0f64;
+    let sde = PanicOnSentinel::new(&inner, sentinel);
+    let noise = CounterGridNoise::new(41, dim, 0.0, 1.0, n);
+    let mut y0 = soa_start(dim, batch);
+    y0[2] = sentinel; // component 0, path 2
+    let opts = BatchOptions { threads: 2, chunk: 4, ..Default::default() };
+
+    let gs = with_quiet_panics(|| {
+        integrate_batched_guarded::<BatchReversibleHeun, _, _>(
+            &sde, &noise, &y0, batch, 0.0, 1.0, n, &opts, None,
+        )
+    })
+    .expect("survivors exist, so quarantine mode must return Ok");
+    assert_eq!(gs.quarantined, vec![2], "exactly the sentinel path");
+    assert_eq!(gs.faults.len(), 1);
+    assert_eq!(gs.faults[0].path, 2);
+    assert!(
+        matches!(gs.faults[0].cause, FaultCause::VectorFieldPanic { .. }),
+        "cause: {}",
+        gs.faults[0].cause
+    );
+
+    // Survivors must be bit-identical to an uninjected solve of the same
+    // initial state (the bare tanh system handles the sentinel value fine).
+    let reference = integrate_batched::<BatchReversibleHeun, _, _>(
+        &inner, &noise, &y0, batch, 0.0, 1.0, n, &opts,
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
+    for k in 0..=n {
+        for i in 0..dim {
+            for p in (0..batch).filter(|&p| p != 2) {
+                let idx = (k * dim + i) * batch + p;
+                assert_eq!(
+                    gs.traj[idx], reference[idx],
+                    "surviving path {p} drifted at step {k} component {i}"
+                );
+            }
+        }
+    }
+    // Without a refill, the quarantined lane is its initial state held
+    // constant over the whole grid.
+    for k in 0..=n {
+        for i in 0..dim {
+            assert_eq!(gs.traj[(k * dim + i) * batch + 2], y0[i * batch + 2]);
+        }
+    }
+}
+
+#[test]
+fn quarantined_lane_can_be_refilled() {
+    let (dim, batch, n) = (2usize, 6usize, 5usize);
+    let inner = TanhDiagonalBatch::new(dim, 31);
+    let sentinel = 777.0f64;
+    let sde = PanicOnSentinel::new(&inner, sentinel);
+    let noise = CounterGridNoise::new(41, dim, 0.0, 1.0, n);
+    let mut y0 = soa_start(dim, batch);
+    y0[batch + 4] = sentinel; // component 1, path 4
+    let opts = BatchOptions { threads: 1, chunk: 3, ..Default::default() };
+    // Replacement trajectory: a recognisable constant per grid point.
+    let refill: &dyn Fn(usize, &mut [f64]) -> bool = &|_p, lane| {
+        for (r, v) in lane.iter_mut().enumerate() {
+            *v = 0.25 + r as f64;
+        }
+        true
+    };
+    let gs = with_quiet_panics(|| {
+        integrate_batched_guarded::<BatchReversibleHeun, _, _>(
+            &sde, &noise, &y0, batch, 0.0, 1.0, n, &opts, Some(refill),
+        )
+    })
+    .expect("survivors exist");
+    assert_eq!(gs.quarantined, vec![4]);
+    for k in 0..=n {
+        for i in 0..dim {
+            assert_eq!(
+                gs.traj[(k * dim + i) * batch + 4],
+                0.25 + (k * dim + i) as f64,
+                "refilled lane layout is lane[k * dim + i]"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reconstruction-drift watchdog → Tape fallback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_drift_breach_falls_back_to_tape_bitwise() {
+    let (dim, batch, n) = (3usize, 4usize, 16usize);
+    let sde = TanhDiagonalBatch::new(dim, 99);
+    let noise = CounterGridNoise::new(7, dim, 0.0, 1.0, n);
+    let y0 = soa_start(dim, batch);
+    let seed = |k: usize, _p0: usize, _cl: usize, _z: &[f64], lz: &mut [f64]| {
+        if k == n {
+            lz.fill(1.0);
+        }
+    };
+    let base = BatchOptions { threads: 2, chunk: 2, ..Default::default() };
+    let tape = adjoint_solve_batched_steps(
+        &sde, &noise, &y0, batch, 0.0, 1.0, n, BackwardMode::Tape, false, &base, &seed,
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
+    assert_eq!(tape.fallbacks, 0, "Tape mode has nothing to fall back from");
+
+    // A negative drift tolerance is the deterministic test hook: the first
+    // checkpoint comparison breaches, so the entire backward sweep runs on
+    // the rebuilt tape — gradients must equal the all-Tape run bit for bit.
+    let forced = BatchOptions {
+        threads: 2,
+        chunk: 2,
+        guard: GuardConfig { checkpoint_every: 1, drift_tol: -1.0, ..GuardConfig::default() },
+    };
+    let rec = adjoint_solve_batched_steps(
+        &sde, &noise, &y0, batch, 0.0, 1.0, n, BackwardMode::Reconstruct, false, &forced, &seed,
+    )
+    .expect("the fallback recovers; no error surfaces");
+    assert!(rec.fallbacks > 0, "the forced breach must trip the watchdog");
+    assert_eq!(rec.terminal, tape.terminal, "terminal state");
+    assert_eq!(rec.dy0, tape.dy0, "dy0 must match all-Tape bitwise");
+    assert_eq!(rec.dtheta, tape.dtheta, "dtheta must match all-Tape bitwise");
+
+    // A healthy reconstruction never trips the watchdog.
+    let healthy = adjoint_solve_batched_steps(
+        &sde, &noise, &y0, batch, 0.0, 1.0, n, BackwardMode::Reconstruct, false, &base, &seed,
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
+    assert_eq!(healthy.fallbacks, 0, "healthy solve must not fall back");
+}
+
+// ---------------------------------------------------------------------------
+// Corrupted gradient lane → exact coordinates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupted_gradient_lane_reported_with_exact_coordinates() {
+    let (dim, batch, n) = (2usize, 4usize, 9usize);
+    let sde = TanhDiagonalBatch::new(dim, 55);
+    let noise = CounterGridNoise::new(17, dim, 0.0, 1.0, n);
+    let y0 = soa_start(dim, batch);
+    let plan = FaultPlan::new().corrupt_grad(4, 1, 0);
+    let seed = move |k: usize, p0: usize, cl: usize, _z: &[f64], lz: &mut [f64]| {
+        if k == n {
+            lz.fill(1.0);
+        }
+        plan.corrupt_grad_lanes(k, p0, cl, lz);
+    };
+    // check_every = 1 sweeps the cotangents at every backward step, so the
+    // corruption is caught exactly where it lands.
+    let opts = BatchOptions {
+        threads: 1,
+        chunk: batch,
+        guard: GuardConfig { check_every: 1, ..GuardConfig::default() },
+    };
+    let err = adjoint_solve_batched_steps(
+        &sde, &noise, &y0, batch, 0.0, 1.0, n, BackwardMode::Reconstruct, false, &opts, &seed,
+    )
+    .expect_err("the corrupted cotangent must fault the sweep");
+    assert_eq!(err.context, "adjoint_solve_batched_steps");
+    assert_eq!(err.faults.len(), 1, "{err}");
+    let f = &err.faults[0];
+    assert_eq!(f.step, 4, "backward step the corruption landed on");
+    assert_eq!(f.path, 1);
+    assert_eq!(f.component, 0);
+    assert_eq!(f.cause, FaultCause::NonFinite);
+}
+
+// ---------------------------------------------------------------------------
+// GAN training watchdog
+// ---------------------------------------------------------------------------
+
+fn watchdog_config() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.steps = 1;
+    cfg.batch = 8;
+    cfg.data_size = 32;
+    cfg
+}
+
+#[test]
+fn training_watchdog_rolls_back_and_retries_deterministically() {
+    let cfg = watchdog_config();
+    let mut data = ou::generate(cfg.data_size, 3, ou::OuParams::default());
+    data.normalise_initial();
+    let run = || -> (u32, u64, Vec<f32>, Vec<f32>, f32, f32) {
+        let mut tr = GanTrainer::new(&cfg, cfg.steps).expect("trainer");
+        tr.inject_training_fault(1);
+        let mut rng = SplitPrng::new(9);
+        let stats = tr.train_step(&data, &mut rng).expect("watchdog recovers the step");
+        (
+            stats.retries,
+            tr.watchdog_rollbacks(),
+            tr.theta.clone(),
+            tr.phi.clone(),
+            stats.loss_g,
+            stats.loss_d,
+        )
+    };
+    let (retries_a, rb_a, theta_a, phi_a, lg_a, ld_a) = run();
+    assert_eq!(retries_a, 1, "one injected failure → one retry");
+    assert_eq!(rb_a, 1, "one rollback recorded");
+    // The whole recovery — snapshot, rollback, fresh noise draw, retry — is
+    // deterministic: a second trainer through the same fault lands on
+    // bit-identical parameters and losses.
+    let (retries_b, rb_b, theta_b, phi_b, lg_b, ld_b) = run();
+    assert_eq!(retries_a, retries_b);
+    assert_eq!(rb_a, rb_b);
+    assert_eq!(theta_a, theta_b, "retried θ must be bit-identical");
+    assert_eq!(phi_a, phi_b, "retried φ must be bit-identical");
+    assert_eq!((lg_a, ld_a), (lg_b, ld_b), "retried losses must be bit-identical");
+}
+
+#[test]
+fn disabled_watchdog_surfaces_the_structured_error() {
+    let cfg = watchdog_config();
+    let mut data = ou::generate(cfg.data_size, 3, ou::OuParams::default());
+    data.normalise_initial();
+    let mut tr = GanTrainer::new(&cfg, cfg.steps).expect("trainer").with_watchdog(false, 0);
+    tr.inject_training_fault(1);
+    let mut rng = SplitPrng::new(9);
+    let err = tr.train_step(&data, &mut rng).expect_err("no watchdog, no recovery");
+    let msg = format!("{err}");
+    assert!(msg.contains("injected fault"), "structured context survives anyhow: {msg}");
+    assert_eq!(tr.watchdog_rollbacks(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Schedule invariance of quarantine decisions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quarantine_is_schedule_invariant() {
+    let (dim, batch, n) = (2usize, 10usize, 6usize);
+    let inner = TanhDiagonalBatch::new(dim, 31);
+    let sentinel = 777.0f64;
+    let sde = PanicOnSentinel::new(&inner, sentinel);
+    let noise = CounterGridNoise::new(41, dim, 0.0, 1.0, n);
+    let mut y0 = soa_start(dim, batch);
+    y0[2] = sentinel; // component 0, path 2
+    let mut first: Option<(Vec<usize>, Vec<f64>)> = None;
+    for (threads, chunk) in [(1usize, 10usize), (2, 4), (4, 3)] {
+        let opts = BatchOptions { threads, chunk, ..Default::default() };
+        let gs = with_quiet_panics(|| {
+            integrate_batched_guarded::<BatchReversibleHeun, _, _>(
+                &sde, &noise, &y0, batch, 0.0, 1.0, n, &opts, None,
+            )
+        })
+        .expect("survivors exist");
+        match &first {
+            None => first = Some((gs.quarantined, gs.traj)),
+            Some((q, traj)) => {
+                assert_eq!(&gs.quarantined, q, "quarantine set at t={threads} c={chunk}");
+                assert_eq!(&gs.traj, traj, "bits changed at t={threads} c={chunk}");
+            }
+        }
+    }
+}

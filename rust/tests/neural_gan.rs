@@ -209,7 +209,8 @@ fn per_step_cotangent_injection_matches_fd() {
                 *l += step_weight(k, i);
             }
         },
-    );
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
     let mut got = adj.dy0.clone();
     got.extend_from_slice(&adj.dtheta);
     let mut fd = central_gradient(|yy| loss(&theta0, yy), &y0, 1e-5);
@@ -232,7 +233,8 @@ fn per_step_cotangent_injection_matches_fd() {
                 *l += step_weight(k, i);
             }
         },
-    );
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
     let mut tp = tape.dy0.clone();
     tp.extend_from_slice(&tape.dtheta);
     assert!(relative_l1(&got, &tp) < 1e-10, "rec vs tape with injection");
@@ -278,7 +280,8 @@ fn noise_cotangents_match_fd() {
                 lz.fill(1.0);
             }
         },
-    );
+    )
+    .expect("fault-free by construction"); // test-only unwrap: no injection here
     assert_eq!(adj.ddw.len(), n * w);
     let fd = central_gradient(loss, &base, 1e-6);
     let rel = relative_l1(&adj.ddw, &fd);
@@ -326,7 +329,8 @@ fn per_path_reference(
             for (i, l) in lz.iter_mut().enumerate() {
                 *l += inject_weight(k, i, p);
             }
-        });
+        })
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         for i in 0..dim {
             terminal[i * batch + p] = g.terminal[i];
             dy0[i * batch + p] = g.dy0[i];
@@ -338,7 +342,7 @@ fn per_path_reference(
             ddw[r * batch + p] = g.ddw[r];
         }
     }
-    AdjointGrad { terminal, dy0, dtheta, ddw }
+    AdjointGrad { terminal, dy0, dtheta, ddw, fallbacks: 0 }
 }
 
 #[test]
@@ -363,10 +367,11 @@ fn neural_batched_adjoint_bit_identical_to_per_path() {
                 }
             };
             for (threads, chunk) in [(1usize, batch), (1, 2), (3, 2), (2, 4), (4, 3)] {
-                let opts = BatchOptions { threads, chunk };
+                let opts = BatchOptions { threads, chunk, ..Default::default() };
                 let got = adjoint_solve_batched_steps(
                     &native, &noise, &y0, batch, 0.0, 1.0, n, mode, true, &opts, &seed,
-                );
+                )
+                .expect("fault-free by construction"); // test-only unwrap: no injection here
                 assert_eq!(
                     got.terminal, reference.terminal,
                     "terminal: batch={batch} mode={mode:?} t={threads} c={chunk}"
@@ -409,7 +414,7 @@ fn neural_native_batch_matches_blanket_adapter_bitwise() {
     for &batch in &[1usize, 5, 33] {
         let y0 = aos_to_soa(&aos_start(dim, batch), dim, batch);
         let noise = CounterGridNoise::new(3, spec.noise, 0.0, 1.0, n);
-        let opts = BatchOptions { threads: 1, chunk: 16 };
+        let opts = BatchOptions { threads: 1, chunk: 16, ..Default::default() };
         let a = adjoint_solve_batched_steps(
             &adapter,
             &noise,
@@ -422,7 +427,8 @@ fn neural_native_batch_matches_blanket_adapter_bitwise() {
             true,
             &opts,
             &seed,
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         let b = adjoint_solve_batched_steps(
             &native,
             &noise,
@@ -435,7 +441,8 @@ fn neural_native_batch_matches_blanket_adapter_bitwise() {
             true,
             &opts,
             &seed,
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         assert_eq!(a.terminal, b.terminal, "terminal at batch {batch}");
         assert_eq!(a.dy0, b.dy0, "dy0 at batch {batch}");
         assert_eq!(a.dtheta, b.dtheta, "dtheta at batch {batch}");
@@ -475,7 +482,7 @@ fn cde_batched_adjoint_matches_per_path() {
                 }
             }
         };
-        let opts = BatchOptions { threads: 2, chunk: 3 };
+        let opts = BatchOptions { threads: 2, chunk: 3, ..Default::default() };
         let got = adjoint_solve_batched_steps(
             &native,
             &dys,
@@ -488,7 +495,8 @@ fn cde_batched_adjoint_matches_per_path() {
             true,
             &opts,
             &seed,
-        );
+        )
+        .expect("fault-free by construction"); // test-only unwrap: no injection here
         let pl = spec.disc_layout().total;
         let mut dtheta = vec![0.0; pl];
         for p in 0..batch {
@@ -510,7 +518,8 @@ fn cde_batched_adjoint_matches_per_path() {
                         }
                     }
                 },
-            );
+            )
+            .expect("fault-free by construction"); // test-only unwrap: no injection here
             for i in 0..dh {
                 assert_eq!(got.terminal[i * batch + p], g.terminal[i], "terminal p={p}");
                 assert_eq!(got.dy0[i * batch + p], g.dy0[i], "dy0 p={p}");
@@ -579,9 +588,9 @@ fn native_gan_training_is_bit_deterministic_across_fanout() {
             })
             .collect()
     };
-    let a = run(BatchOptions { threads: 1, chunk: 12 });
-    let b = run(BatchOptions { threads: 3, chunk: 2 });
-    let c = run(BatchOptions { threads: 4, chunk: 5 });
+    let a = run(BatchOptions { threads: 1, chunk: 12, ..Default::default() });
+    let b = run(BatchOptions { threads: 3, chunk: 2, ..Default::default() });
+    let c = run(BatchOptions { threads: 4, chunk: 5, ..Default::default() });
     assert_eq!(a, b, "fan-out changed the training bits");
     assert_eq!(a, c, "fan-out changed the training bits");
 }

@@ -241,7 +241,7 @@ where
     M: BatchStepper<Elem = f32>,
     Ex: Fn(f64) -> f64,
 {
-    let opts = BatchOptions { threads: 1, chunk: 64 };
+    let opts = BatchOptions { threads: 1, chunk: 64, ..Default::default() };
     let mut pts = Vec::with_capacity(STEP_COUNTS_F32.len());
     // Shared per-path fine grids (and their f64 totals for the truth).
     let fines: Vec<Vec<f64>> =
@@ -254,7 +254,8 @@ where
             }
         }
         let y0 = vec![1.0f32; N_PATHS_F32];
-        let traj = integrate_batched::<M, _, _>(sde, &noise, &y0, N_PATHS_F32, 0.0, 1.0, n, &opts);
+        let traj = integrate_batched::<M, _, _>(sde, &noise, &y0, N_PATHS_F32, 0.0, 1.0, n, &opts)
+            .expect("fault-free by construction"); // test-only unwrap: no injection here
         let mut err = 0.0f64;
         for (p, fine) in fines.iter().enumerate() {
             let truth = exact(fine.iter().sum());
