@@ -1,0 +1,150 @@
+//! Serving-engine throughput under Poisson load: open-loop arrivals at
+//! several request rates against one persistent [`ServeEngine`], reporting
+//! sustained `paths/sec` and per-request p50/p99 latency.
+//!
+//! The workload models the serving story the engine exists for: many small
+//! sampling requests (8 paths each, round-robined over 8 sessions so
+//! coalescing actually happens) arriving with exponential inter-arrival
+//! times — deterministic via an inverse-CDF draw from `splitmix64`, so two
+//! runs see the identical arrival schedule. Each request's latency is
+//! submit-to-collect wall time, measured by a dedicated collector thread
+//! while the driver thread keeps the open-loop schedule.
+//!
+//! Expected shape: at low rates the engine is latency-bound (one request
+//! per mega-batch, latency ≈ a solo solve); as the rate climbs past the
+//! solve time, admission coalesces deeper batches and throughput rises
+//! well past `rate × width` saturation while p99 grows gracefully instead
+//! of collapsing.
+//!
+//! Results go to `results/bench_serve_throughput.json` and, for the perf
+//! trajectory, `BENCH_pr7.json` (`BENCH_DIR` overrides the directory).
+//! Pass `--smoke` (or `QUICK=1`) for the trimmed CI workload.
+
+use std::time::{Duration, Instant};
+
+use neuralsde::brownian::splitmix64;
+use neuralsde::solvers::systems::TanhDiagonalBatch;
+use neuralsde::solvers::{BatchReversibleHeun, ServeConfig, ServeEngine, Ticket};
+use neuralsde::util::bench::{write_bench_json, BenchTable};
+use neuralsde::util::json::{obj, Json};
+
+const DIM: usize = 4;
+const WIDTH: usize = 8; // paths per request
+const N_STEPS: usize = 32;
+const N_SESSIONS: usize = 8;
+
+/// Uniform in (0, 1] from a counter-keyed splitmix64 draw.
+fn uniform(seed: u64, k: u64) -> f64 {
+    let bits = splitmix64(seed ^ k.wrapping_mul(0x9E37_79B9));
+    ((bits >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+}
+
+struct LoadStats {
+    paths_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn percentile_ms(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx] * 1e3
+}
+
+/// Drive `n_requests` Poisson arrivals at `rate` req/s through a fresh
+/// engine; returns sustained throughput and latency percentiles.
+fn run_load(rate: f64, n_requests: usize) -> LoadStats {
+    let mut cfg = ServeConfig::new(0.0, 1.0, N_STEPS);
+    cfg.max_batch = N_SESSIONS * WIDTH;
+    cfg.chunk = 16;
+    let engine =
+        ServeEngine::<BatchReversibleHeun, _>::new(TanhDiagonalBatch::new(DIM, 99), cfg);
+    let sessions: Vec<_> =
+        (0..N_SESSIONS).map(|s| engine.open_session(1000 + s as u64, WIDTH)).collect();
+    let y0 = vec![0.1f64; DIM * WIDTH];
+
+    // Warm the slots, sessions and worker scratch off the clock.
+    for &sid in &sessions {
+        let t = engine.submit(sid, &y0);
+        engine.wait(t).expect("warmup request faulted");
+    }
+
+    let (tx, rx) = std::sync::mpsc::channel::<(Ticket, Instant)>();
+    let mut latencies: Vec<f64> = Vec::with_capacity(n_requests);
+    let wall = Instant::now();
+    std::thread::scope(|sc| {
+        let eng = &engine;
+        let lat = &mut latencies;
+        sc.spawn(move || {
+            let mut out = Vec::new();
+            for (ticket, submitted) in rx {
+                eng.wait_into(ticket, &mut out).expect("request faulted under load");
+                lat.push(submitted.elapsed().as_secs_f64());
+            }
+        });
+        // Open-loop driver: arrivals keep their schedule no matter how the
+        // engine is doing (the property that makes p99 honest).
+        let arrival_seed = 0x5EED_u64 ^ rate.to_bits();
+        let mut next = Instant::now();
+        for r in 0..n_requests {
+            let gap = -uniform(arrival_seed, r as u64).ln() / rate;
+            next += Duration::from_secs_f64(gap);
+            while Instant::now() < next {
+                std::hint::spin_loop();
+            }
+            let sid = sessions[r % sessions.len()];
+            tx.send((engine.submit(sid, &y0), Instant::now())).expect("collector died");
+        }
+        drop(tx); // collector drains and exits
+    });
+    let wall_s = wall.elapsed().as_secs_f64();
+    latencies.sort_by(f64::total_cmp);
+    LoadStats {
+        paths_per_sec: (n_requests * WIDTH) as f64 / wall_s,
+        p50_ms: percentile_ms(&latencies, 0.50),
+        p99_ms: percentile_ms(&latencies, 0.99),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok() || std::env::args().any(|a| a == "--smoke");
+    let rates: &[f64] = if quick { &[500.0] } else { &[250.0, 1000.0, 4000.0] };
+    let n_requests = if quick { 80 } else { 1500 };
+
+    let mut table = BenchTable::new("Serve engine: Poisson open-loop load", 1, 0);
+    let mut rows: Vec<Json> = Vec::new();
+    for &rate in rates {
+        let mut stats = None;
+        table.bench_n(&format!("poisson/rate={rate}/req={n_requests}"), 1, |_| {
+            stats = Some(run_load(rate, n_requests));
+        });
+        let s = stats.expect("load run did not execute");
+        println!(
+            "  rate={rate:>6.0}/s  {:>10.0} paths/s  p50 {:>7.3} ms  p99 {:>7.3} ms",
+            s.paths_per_sec, s.p50_ms, s.p99_ms
+        );
+        rows.push(obj(vec![
+            ("rate_hz", Json::Num(rate)),
+            ("requests", Json::Num(n_requests as f64)),
+            ("paths_per_request", Json::Num(WIDTH as f64)),
+            ("paths_per_sec", Json::Num(s.paths_per_sec)),
+            ("p50_ms", Json::Num(s.p50_ms)),
+            ("p99_ms", Json::Num(s.p99_ms)),
+        ]));
+    }
+    println!("{}", table.render());
+
+    std::fs::create_dir_all("results").ok();
+    table.write_json("results/bench_serve_throughput.json").ok();
+    if quick {
+        // Trimmed workloads are not comparable to the tracked trajectory —
+        // never let a smoke run overwrite BENCH_pr7.json.
+        println!("smoke/QUICK run: skipping BENCH_pr7.json (full run required)");
+        return;
+    }
+    let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
+    match write_bench_json(&bench_dir, "pr7", &[&table], vec![("poisson_load", Json::Arr(rows))])
+    {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write BENCH json: {e}"),
+    }
+}

@@ -69,7 +69,14 @@ pub struct QueryStats {
 /// Tunables for [`BrownianInterval::with_options`].
 #[derive(Clone, Copy, Debug)]
 pub struct IntervalOptions {
-    /// LRU capacity, in cached increments. Each entry costs `size * 4` bytes.
+    /// LRU capacity, in cached increments. Each entry costs `size * 4`
+    /// bytes. Must be `>= 1` ([`BrownianInterval::with_options`] rejects 0
+    /// — there is no silent clamping); the constructed interval reports the
+    /// capacity actually in effect via
+    /// [`BrownianInterval::cache_capacity`]. Capacity 1 is valid and
+    /// bit-exact (the tree descent only ever re-reads the most recently
+    /// cached parent), just slow: every ancestor value is recomputed on
+    /// each query.
     pub cache_capacity: usize,
     /// Pre-build a balanced dyadic tree of this depth (Appendix E,
     /// "Backward pass"): guarantees `O(log)` worst-case recompute cost when
@@ -127,13 +134,22 @@ impl BrownianInterval {
     ) -> Self {
         assert!(t1 > t0, "need t1 > t0");
         assert!(size >= 1, "need at least one channel");
+        // Honour the requested capacity exactly (historically 0 and 1 were
+        // silently clamped to 2, while the LRU's own constructor asserts
+        // `>= 1` — a confusing split). Capacity only affects speed, never
+        // bits: see `cache_size_does_not_change_the_path`.
+        assert!(
+            opts.cache_capacity >= 1,
+            "IntervalOptions::cache_capacity must be >= 1 (capacity only trades \
+             recompute cost for memory; there is no meaningful zero-capacity cache)"
+        );
         let root = Node { a: t0, b: t1, seed, parent: NIL, left: NIL, right: NIL };
         let mut bi = Self {
             t0,
             t1,
             size,
             nodes: vec![root],
-            cache: LruCache::new(opts.cache_capacity.max(2)),
+            cache: LruCache::new(opts.cache_capacity),
             free: Vec::new(),
             hint: 0,
             up_stack: Vec::new(),
@@ -159,6 +175,13 @@ impl BrownianInterval {
     /// Number of tree nodes currently allocated (CPU-side metadata).
     pub fn node_count(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// The LRU capacity actually in effect — always exactly the
+    /// `cache_capacity` this interval was constructed with (construction
+    /// rejects 0 instead of clamping).
+    pub fn cache_capacity(&self) -> usize {
+        self.cache.capacity()
     }
 
     /// Re-seed in place: draw a fresh Brownian sample while **keeping the
@@ -604,6 +627,50 @@ mod tests {
         let r = a.increment_vec(0.5, 1.0);
         for i in 0..4 {
             assert_eq!(parent[i], l[i] + r[i], "channel {i}");
+        }
+    }
+
+    #[test]
+    fn cache_capacity_is_honoured_exactly() {
+        // No silent clamping: the effective capacity is the requested one.
+        for cap in [1usize, 2, 7, 128] {
+            let opts = IntervalOptions { cache_capacity: cap, preseed_depth: 0 };
+            let bi = BrownianInterval::with_options(0.0, 1.0, 4, 5, opts);
+            assert_eq!(bi.cache_capacity(), cap);
+        }
+        assert_eq!(BrownianInterval::new(0.0, 1.0, 4, 5).cache_capacity(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache_capacity must be >= 1")]
+    fn cache_capacity_zero_is_rejected() {
+        let opts = IntervalOptions { cache_capacity: 0, preseed_depth: 0 };
+        let _ = BrownianInterval::with_options(0.0, 1.0, 4, 5, opts);
+    }
+
+    #[test]
+    fn capacity_one_is_bit_exact() {
+        // The descent only ever re-reads the most recently cached parent,
+        // so a single-slot cache still produces the exact sample path —
+        // pinned against a cache big enough to never evict, through the
+        // doubly-sequential (forward + backward) solver pattern and a
+        // reseed.
+        let tiny = IntervalOptions { cache_capacity: 1, preseed_depth: 0 };
+        let big = IntervalOptions { cache_capacity: 4096, preseed_depth: 0 };
+        let mut a = BrownianInterval::with_options(0.0, 1.0, 4, 5, tiny);
+        let mut b = BrownianInterval::with_options(0.0, 1.0, 4, 5, big);
+        let n = 64;
+        for round in 0..2u64 {
+            for k in 0..n {
+                let (s, t) = (k as f64 / n as f64, (k + 1) as f64 / n as f64);
+                assert_eq!(a.increment_vec(s, t), b.increment_vec(s, t), "fwd k={k}");
+            }
+            for k in (0..n).rev() {
+                let (s, t) = (k as f64 / n as f64, (k + 1) as f64 / n as f64);
+                assert_eq!(a.increment_vec(s, t), b.increment_vec(s, t), "bwd k={k}");
+            }
+            a.reseed(round + 9);
+            b.reseed(round + 9);
         }
     }
 

@@ -43,20 +43,34 @@ pub fn space_time_levy_area(seed: u64, s: f64, t: f64, dim: usize) -> Vec<f32> {
     h
 }
 
-/// Davie's approximation to the second iterated (Stratonovich) integral.
+/// Davie's approximation to the second iterated (Stratonovich) integral,
+/// into caller-supplied buffers — the allocation-free form a solver loop
+/// should call per step.
 ///
-/// Returns the `dim x dim` matrix `𝕎̃` in row-major order, built from the
-/// increment `w`, the space–time Lévy area `h`, and fresh antisymmetric
-/// bridge noise keyed by `seed`.
-pub fn davie_levy_area(seed: u64, s: f64, t: f64, w: &[f32], h: &[f32]) -> Vec<f32> {
+/// Writes the `dim x dim` matrix `𝕎̃` row-major into `out` (`d * d` long),
+/// built from the increment `w`, the space–time Lévy area `h`, and fresh
+/// antisymmetric bridge noise keyed by `seed`. `lam` is reusable scratch
+/// for the `λ_ij` draws: it is resized to the strictly-upper-triangle count
+/// (at least 1), so a warmed buffer is never reallocated. Bit-identical to
+/// [`davie_levy_area`] for the same inputs.
+pub fn davie_levy_area_into(
+    seed: u64,
+    s: f64,
+    t: f64,
+    w: &[f32],
+    h: &[f32],
+    lam: &mut Vec<f32>,
+    out: &mut [f32],
+) {
     assert_eq!(w.len(), h.len());
     let d = w.len();
-    let mut out = vec![0.0f32; d * d];
+    assert_eq!(out.len(), d * d, "out must be dim x dim");
     // λ_ij for i<j, antisymmetric; N(0, (t-s)^2 / 12).
     let n_upper = d * (d - 1) / 2;
-    let mut lam = vec![0.0f32; n_upper.max(1)];
+    lam.clear();
+    lam.resize(n_upper.max(1), 0.0);
     let sd = (((t - s) * (t - s)) / 12.0).sqrt();
-    box_muller_fill(splitmix64(seed ^ 0x4441_5649_45), sd, &mut lam);
+    box_muller_fill(splitmix64(seed ^ 0x4441_5649_45), sd, lam);
     let mut k = 0;
     for i in 0..d {
         for j in 0..d {
@@ -74,6 +88,14 @@ pub fn davie_levy_area(seed: u64, s: f64, t: f64, w: &[f32], h: &[f32]) -> Vec<f
             k += d - i - 1;
         }
     }
+}
+
+/// Allocating convenience over [`davie_levy_area_into`].
+pub fn davie_levy_area(seed: u64, s: f64, t: f64, w: &[f32], h: &[f32]) -> Vec<f32> {
+    let d = w.len();
+    let mut out = vec![0.0f32; d * d];
+    let mut lam = Vec::new();
+    davie_levy_area_into(seed, s, t, w, h, &mut lam, &mut out);
     out
 }
 
@@ -119,15 +141,40 @@ impl BrownianWithLevy {
         (w, h)
     }
 
+    /// Increment, Lévy area, and Davie second-iterated-integral matrix into
+    /// caller-supplied buffers (`w`/`h` each `size` long, `area`
+    /// `size * size`, `lam` reusable scratch) — the allocation-free form
+    /// for hot solver loops. Bit-identical to
+    /// [`increment_levy_and_area`](Self::increment_levy_and_area).
+    pub fn increment_levy_and_area_into(
+        &mut self,
+        s: f64,
+        t: f64,
+        w: &mut [f32],
+        h: &mut [f32],
+        lam: &mut Vec<f32>,
+        area: &mut [f32],
+    ) {
+        self.increment_and_levy_into(s, t, w, h);
+        let key = self.seed ^ s.to_bits() ^ (t.to_bits().rotate_left(31));
+        davie_levy_area_into(key, s, t, w, h, lam, area);
+    }
+
     /// Increment, Lévy area, and Davie second-iterated-integral matrix.
+    /// Allocating convenience over
+    /// [`increment_levy_and_area_into`](Self::increment_levy_and_area_into)
+    /// (three `Vec`s per query — not for hot paths).
     pub fn increment_levy_and_area(
         &mut self,
         s: f64,
         t: f64,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (w, h) = self.increment_and_levy(s, t);
-        let key = self.seed ^ s.to_bits() ^ (t.to_bits().rotate_left(31));
-        let area = davie_levy_area(key, s, t, &w, &h);
+        let n = self.inner.size();
+        let mut w = vec![0.0f32; n];
+        let mut h = vec![0.0f32; n];
+        let mut area = vec![0.0f32; n * n];
+        let mut lam = Vec::new();
+        self.increment_levy_and_area_into(s, t, &mut w, &mut h, &mut lam, &mut area);
         (w, h, area)
     }
 
@@ -185,6 +232,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms_bitwise() {
+        let a = davie_levy_area(3, 0.0, 1.0, &[1.5f32, -0.5, 2.0], &[0.3f32, 0.1, -0.2]);
+        let mut b = vec![0.0f32; 9];
+        let mut lam = Vec::new();
+        davie_levy_area_into(3, 0.0, 1.0, &[1.5, -0.5, 2.0], &[0.3, 0.1, -0.2], &mut lam, &mut b);
+        assert_eq!(a, b);
+        // The scratch is reusable without affecting bits (solver-loop shape).
+        davie_levy_area_into(3, 0.0, 1.0, &[1.5, -0.5, 2.0], &[0.3, 0.1, -0.2], &mut lam, &mut b);
+        assert_eq!(a, b);
+
+        let mk = || BrownianWithLevy::new(BrownianInterval::new(0.0, 1.0, 4, 11), 13);
+        let (w, h, area) = mk().increment_levy_and_area(0.0, 0.25);
+        let (mut w2, mut h2, mut a2) = (vec![0.0f32; 4], vec![0.0f32; 4], vec![0.0f32; 16]);
+        mk().increment_levy_and_area_into(0.0, 0.25, &mut w2, &mut h2, &mut lam, &mut a2);
+        assert_eq!((w, h, area), (w2, h2, a2));
     }
 
     #[test]

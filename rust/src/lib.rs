@@ -177,6 +177,44 @@
 //!   [`solvers::FaultPlan`] injects NaNs, panics and corrupted gradient
 //!   lanes at exact coordinates; `tests/fault_tolerance.rs` drives every
 //!   recovery path bit-reproducibly.
+//!
+//! ## Serving architecture
+//!
+//! Training solves one big batch; *serving* a trained model solves many
+//! small, concurrent sampling requests. [`solvers::serve`] covers that
+//! shape with a persistent engine instead of per-call machinery:
+//!
+//! * **Spawn once, park between batches** — [`solvers::ServeEngine::new`]
+//!   starts a fixed worker pool that sleeps on a condvar when idle; no
+//!   per-request thread spawning, no per-chunk stepper construction
+//!   ([`solvers::BatchStepper::reinit`] re-initialises each worker's one
+//!   stepper in place).
+//! * **Request coalescing** — a request is a set of rows in the
+//!   `[component × batch]` SoA state, so admission is *lane assignment*:
+//!   queued requests pack FIFO into one mega-batch of up to
+//!   [`solvers::ServeConfig::max_batch`] lanes. Because SIMD vectorises
+//!   across paths and never inside one path's arithmetic, the coalesced
+//!   solve is **bit-identical** to solving each request alone
+//!   (`tests/serve_engine.rs` pins widths 1/3/7/33 across thread/chunk
+//!   fan-outs).
+//! * **Sessions own their noise** — each session holds a persistent
+//!   [`brownian::BrownianInterval`] (arenas survive across requests via
+//!   `reseed`), with per-request seeds derived by [`solvers::request_seed`]
+//!   from the session seed and request counter alone — results never
+//!   depend on lane placement or unrelated traffic.
+//! * **Zero-allocation steady state** — slots, mega-batch arena, session
+//!   grids and worker scratch are preallocated and recycled;
+//!   [`solvers::ServeEngine::wait_into`] swaps results into caller-owned
+//!   buffers. A warm submit→coalesce→solve→collect round trip performs
+//!   zero heap allocations, pinned by a counting global allocator in
+//!   `tests/serve_zero_alloc.rs` and by a capacity-signature
+//!   `debug_assert` inside the solve loop.
+//! * **Per-request quarantine** — faults follow the error-handling
+//!   contract above, charged to the owning request with request-relative
+//!   coordinates; the faulted request's slot returns to the admission
+//!   pool and every other in-flight request keeps its exact bits.
+//! * `benches/serve_throughput.rs` drives Poisson open-loop load through
+//!   the engine and reports sustained `paths/sec` with p50/p99 latency.
 
 pub mod brownian;
 pub mod config;

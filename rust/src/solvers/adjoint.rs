@@ -431,10 +431,15 @@ where
     // The per-path API has no options struct; it runs the default guards
     // (the batched twin reads `opts.guard` and must use the same values for
     // the batched ≡ per-path pin to cover watchdog decisions).
-    let gcfg = GuardConfig::default();
-    let ce = gcfg.check_every;
-    // Tape mode never reconstructs, so it needs no drift checkpoints.
-    let ckpt_every = if tape_on { 0 } else { gcfg.checkpoint_every };
+    let gcfg = GuardConfig::default().normalised();
+    // Tape mode never reconstructs, so it needs no drift checkpoints: the
+    // watchdog copy zeroes `checkpoint_every` (0 = disabled, per the
+    // canonical semantics `GuardConfig::normalised` documents).
+    let wcfg = GuardConfig {
+        checkpoint_every: if tape_on { 0 } else { gcfg.checkpoint_every },
+        ..gcfg
+    };
+    let ckpt_every = wcfg.checkpoint_every;
 
     // Forward pass — the same grid arithmetic as `integrate`, so the solve
     // being differentiated is bit-identical to what a driver loop runs. The
@@ -453,7 +458,7 @@ where
             tape.extend_from_slice(&solver.state().zh);
             tape_z.extend_from_slice(&solver.state().z);
         }
-        if ckpt_every != 0 && k % ckpt_every == 0 {
+        if wcfg.checkpoint_due(k) {
             ck_z.extend_from_slice(&solver.state().z);
             ck_zh.extend_from_slice(&solver.state().zh);
         }
@@ -465,7 +470,7 @@ where
         // terminal step). Reported at cadence precision: the first bad step
         // may be up to `check_every - 1` earlier (set `check_every = 1` for
         // exact coordinates).
-        if ce != 0 && ((k + 1) % ce == 0 || k + 1 == n_steps) {
+        if gcfg.sweep_due(k + 1, n_steps) {
             if let Some((i, _)) = guard::first_nonfinite(&solver.state().z, e, 1) {
                 return Err(SolveError::new(
                     "adjoint_solve_steps: forward state",
@@ -570,7 +575,7 @@ where
             // tape (bit-identical to a Tape-mode forward — same noise,
             // same arithmetic) and stop reconstructing. Gradients stay
             // exact; O(1) memory becomes O(k) for the remaining segment.
-            if ckpt_every != 0 && k % ckpt_every == 0 {
+            if wcfg.checkpoint_due(k) {
                 let ci = k / ckpt_every;
                 let cz = &ck_z[ci * e..(ci + 1) * e];
                 let czh = &ck_zh[ci * e..(ci + 1) * e];
@@ -624,7 +629,7 @@ where
         // VJP, a corrupted loss cotangent) surfaces here instead of
         // poisoning dθ silently. Same cadence-precision caveat as the
         // forward sweep.
-        if ce != 0 && (k % ce == 0 || k == 0) {
+        if gcfg.backward_sweep_due(k) {
             if let Some((i, _)) = guard::first_nonfinite(&lz, e, 1)
                 .or_else(|| guard::first_nonfinite(&lzh, e, 1))
             {
@@ -747,9 +752,13 @@ where
     let n_chunks = (batch + chunk - 1) / chunk;
     let dtg = (t1 - t0) / n_steps as f64;
     let tape_on = matches!(mode, BackwardMode::Tape);
-    let gcfg = opts.guard;
-    let ce = gcfg.check_every;
-    let ckpt_every = if tape_on { 0 } else { gcfg.checkpoint_every };
+    let gcfg = opts.guard.normalised();
+    // Tape mode never reconstructs: disable the watchdog in its copy.
+    let wcfg = GuardConfig {
+        checkpoint_every: if tape_on { 0 } else { gcfg.checkpoint_every },
+        ..gcfg
+    };
+    let ckpt_every = wcfg.checkpoint_every;
 
     // One chunk's forward + backward sweep: returns (terminal z lanes,
     // dy0 lanes, per-path θ lanes, ddw lanes, watchdog fallbacks), all
@@ -782,7 +791,7 @@ where
                 tape.extend_from_slice(stepper.zh());
                 tape_z.extend_from_slice(stepper.z());
             }
-            if ckpt_every != 0 && k % ckpt_every == 0 {
+            if wcfg.checkpoint_due(k) {
                 ck_z.extend_from_slice(stepper.z());
                 ck_zh.extend_from_slice(stepper.zh());
             }
@@ -793,7 +802,7 @@ where
             // Blockwise non-finite sweep at the guard cadence (and at the
             // terminal step); cadence-precision coordinates, exact at
             // `check_every = 1`.
-            if ce != 0 && ((k + 1) % ce == 0 || k + 1 == n_steps) {
+            if gcfg.sweep_due(k + 1, n_steps) {
                 if let Some((i, q)) = guard::first_nonfinite(stepper.z(), e, cl) {
                     return Err(vec![SolveFault {
                         step: k,
@@ -898,7 +907,7 @@ where
                 // untouched; a breach (or NaN drift) replays the forward
                 // prefix into an exact tape, bit-identical to a Tape-mode
                 // forward of the same chunk.
-                if ckpt_every != 0 && k % ckpt_every == 0 {
+                if wcfg.checkpoint_due(k) {
                     let ci = k / ckpt_every;
                     let cz = &ck_z[ci * e * cl..(ci + 1) * e * cl];
                     let czh = &ck_zh[ci * e * cl..(ci + 1) * e * cl];
@@ -955,7 +964,7 @@ where
 
             // Cotangent sweep at the guard cadence: exact (step, path,
             // component) at `check_every = 1`, cadence precision otherwise.
-            if ce != 0 && k % ce == 0 {
+            if gcfg.backward_sweep_due(k) {
                 if let Some((i, q)) = guard::first_nonfinite(&lz, e, cl)
                     .or_else(|| guard::first_nonfinite(&lzh, e, cl))
                 {
@@ -1091,7 +1100,7 @@ where
     let chunk = opts.chunk.max(1);
     let n_chunks = (batch + chunk - 1) / chunk;
     let dtg = (t1 - t0) / n_steps as f64;
-    let ce = opts.guard.check_every;
+    let gcfg = opts.guard.normalised();
 
     let run_chunk = |c: usize| -> Result<(Vec<f64>, Vec<f64>, Vec<f64>), Vec<SolveFault>> {
         let p0 = c * chunk;
@@ -1114,7 +1123,7 @@ where
             fwd.forward_step(sde32, s, t - s, &dw32);
             // Non-finite sweep on the f32 forward (narrowing passes
             // overflow through as ±∞, so divergence stays visible here).
-            if ce != 0 && ((k + 1) % ce == 0 || k + 1 == n_steps) {
+            if gcfg.sweep_due(k + 1, n_steps) {
                 if let Some((i, q)) = guard::first_nonfinite(fwd.z(), e, cl) {
                     return Err(vec![SolveFault {
                         step: k,
@@ -1171,7 +1180,7 @@ where
         }
         // Backward-result sweep: a non-finite cotangent or θ lane reports
         // at step 0 (the sweep's end) with the first offending lane.
-        if ce != 0 {
+        if gcfg.check_every != 0 {
             if let Some((i, q)) = guard::first_nonfinite(&lz, e, cl)
                 .or_else(|| guard::first_nonfinite(&lzh, e, cl))
                 .or_else(|| guard::first_nonfinite(&gth, pl, cl))

@@ -309,6 +309,11 @@ pub struct StoredBatchNoise<T: Lane = f64> {
     dim: usize,
     batch: usize,
     vals: Vec<T>,
+    /// Grid times `t0 + k·Δt` for `k = 0..=n_steps`, computed once at
+    /// construction — [`fill_from_source`](Self::fill_from_source) hands
+    /// them to [`BrownianSource::fill_grid`] on every refill, so refills
+    /// allocate nothing.
+    ts: Vec<f64>,
 }
 
 impl<T: Lane> StoredBatchNoise<T> {
@@ -316,13 +321,15 @@ impl<T: Lane> StoredBatchNoise<T> {
     /// `[t0, t1]`, `dim` channels per path.
     pub fn zeros(t0: f64, t1: f64, n_steps: usize, dim: usize, batch: usize) -> Self {
         assert!(t1 > t0 && n_steps >= 1 && dim >= 1 && batch >= 1);
+        let dt = (t1 - t0) / n_steps as f64;
         Self {
             t0,
-            dt: (t1 - t0) / n_steps as f64,
+            dt,
             n_steps,
             dim,
             batch,
             vals: vec![T::ZERO; n_steps * dim * batch],
+            ts: (0..=n_steps).map(|k| t0 + k as f64 * dt).collect(),
         }
     }
 
@@ -361,10 +368,9 @@ impl<T: Lane> StoredBatchNoise<T> {
     pub fn fill_from_source<B: BrownianSource>(&mut self, src: &mut B, scratch: &mut Vec<f32>) {
         let size = src.size();
         assert_eq!(size, self.batch * self.dim, "source size must be batch * dim");
-        let ts: Vec<f64> = (0..=self.n_steps).map(|k| self.t0 + k as f64 * self.dt).collect();
         scratch.clear();
         scratch.resize(self.n_steps * size, 0.0);
-        src.fill_grid(&ts, scratch);
+        src.fill_grid(&self.ts, scratch);
         for k in 0..self.n_steps {
             for p in 0..self.batch {
                 let row = &scratch[(k * self.batch + p) * self.dim..];
@@ -460,6 +466,29 @@ pub trait BatchStepper: Sized {
         batch: usize,
     ) -> Self;
 
+    /// Re-initialise an existing stepper at `(t0, y0)` for a (possibly
+    /// differently sized) chunk, **reusing its scratch buffers** — the
+    /// persistent-worker hot path ([`super::serve`]) holds one stepper per
+    /// worker forever and `reinit`s it per chunk instead of paying
+    /// [`for_chunk`](Self::for_chunk)'s allocations per call.
+    ///
+    /// Contract: after `reinit`, the stepper's state and subsequent
+    /// [`step`](Self::step) results are bit-identical to a freshly
+    /// `for_chunk`-constructed stepper's, and — once the stepper has been
+    /// warmed at some chunk size — re-initialising at any equal-or-smaller
+    /// `batch` performs no allocation. The default delegates to
+    /// `for_chunk` (correct but allocating); the in-tree steppers all
+    /// override it.
+    fn reinit<S: BatchSde<Self::Elem>>(
+        &mut self,
+        sde: &S,
+        t0: f64,
+        y0: &[Self::Elem],
+        batch: usize,
+    ) {
+        *self = Self::for_chunk(sde, t0, y0, batch);
+    }
+
     /// Advance the chunk's SoA state `y` in place from `t` to `t + dt` using
     /// the SoA increments `dw`.
     fn step<S: BatchSde<Self::Elem>>(
@@ -538,6 +567,12 @@ impl<T: Lane> BatchStepper for BatchEulerMaruyama<T> {
         Self { f: Vec::new(), g: Vec::new() }
     }
 
+    /// The scratch-only steppers carry no cross-step state (`for_chunk`
+    /// ignores `y0`; `step` sizes the scratch), so re-initialisation keeps
+    /// the warmed buffers and does nothing — every scratch lane is fully
+    /// overwritten by the vector-field evaluations each step.
+    fn reinit<S: BatchSde<T>>(&mut self, _sde: &S, _t0: f64, _y0: &[T], _batch: usize) {}
+
     fn step<S: BatchSde<T>>(
         &mut self,
         sde: &S,
@@ -573,6 +608,12 @@ impl<T: Lane> BatchStepper for BatchMidpoint<T> {
     fn for_chunk<S: BatchSde<T>>(_sde: &S, _t0: f64, _y0: &[T], _batch: usize) -> Self {
         Self { f: Vec::new(), g: Vec::new(), mid: Vec::new(), half_dw: Vec::new() }
     }
+
+    /// The scratch-only steppers carry no cross-step state (`for_chunk`
+    /// ignores `y0`; `step` sizes the scratch), so re-initialisation keeps
+    /// the warmed buffers and does nothing — every scratch lane is fully
+    /// overwritten by the vector-field evaluations each step.
+    fn reinit<S: BatchSde<T>>(&mut self, _sde: &S, _t0: f64, _y0: &[T], _batch: usize) {}
 
     fn step<S: BatchSde<T>>(
         &mut self,
@@ -626,6 +667,12 @@ impl<T: Lane> BatchStepper for BatchHeun<T> {
             pred: Vec::new(),
         }
     }
+
+    /// The scratch-only steppers carry no cross-step state (`for_chunk`
+    /// ignores `y0`; `step` sizes the scratch), so re-initialisation keeps
+    /// the warmed buffers and does nothing — every scratch lane is fully
+    /// overwritten by the vector-field evaluations each step.
+    fn reinit<S: BatchSde<T>>(&mut self, _sde: &S, _t0: f64, _y0: &[T], _batch: usize) {}
 
     fn step<S: BatchSde<T>>(
         &mut self,
@@ -850,6 +897,43 @@ impl<T: Lane> BatchStepper for BatchReversibleHeun<T> {
             s_sigma: vec![T::ZERO; sig_len],
             mu,
             sigma,
+        }
+    }
+
+    /// In-place re-initialisation: same shapes and arithmetic as
+    /// [`for_chunk`](BatchStepper::for_chunk) — `z = ẑ = y0`, `μ`/`σ`
+    /// evaluated at `(t0, y0)`, auxiliary scratch zeroed — but reusing
+    /// every buffer, so a warmed stepper re-initialises at any
+    /// equal-or-smaller chunk size without allocating.
+    fn reinit<S: BatchSde<T>>(&mut self, sde: &S, t0: f64, y0: &[T], batch: usize) {
+        let e = sde.state_dim();
+        let d = sde.brownian_dim();
+        assert_eq!(y0.len(), e * batch);
+        let diag = sde.diagonal_noise();
+        let sig_len = if diag { e * batch } else { e * d * batch };
+        self.dim = e;
+        self.noise_dim = d;
+        self.batch = batch;
+        self.diag = diag;
+        self.z.clear();
+        self.z.extend_from_slice(y0);
+        self.zh.clear();
+        self.zh.extend_from_slice(y0);
+        self.mu.clear();
+        self.mu.resize(e * batch, T::ZERO);
+        self.sigma.clear();
+        self.sigma.resize(sig_len, T::ZERO);
+        self.s_zh.clear();
+        self.s_zh.resize(e * batch, T::ZERO);
+        self.s_mu.clear();
+        self.s_mu.resize(e * batch, T::ZERO);
+        self.s_sigma.clear();
+        self.s_sigma.resize(sig_len, T::ZERO);
+        sde.drift_batch(t0, y0, &mut self.mu, batch);
+        if diag {
+            sde.diffusion_diag_batch(t0, y0, &mut self.sigma, batch);
+        } else {
+            sde.diffusion_batch(t0, y0, &mut self.sigma, batch);
         }
     }
 
@@ -1147,7 +1231,10 @@ where
     let chunk = opts.chunk.max(1);
     let n_chunks = (batch + chunk - 1) / chunk;
     let dt = (t1 - t0) / n_steps as f64;
-    let ce = opts.guard.check_every;
+    // One canonical copy of the guard knobs; all cadence decisions go
+    // through its helpers (`GuardConfig::normalised` docs the 0/1/MAX edge
+    // semantics both fields share).
+    let gcfg = opts.guard.normalised();
 
     let run_chunk = |c: usize| -> (Vec<M::Elem>, Vec<SolveFault>) {
         let p0 = c * chunk;
@@ -1175,7 +1262,7 @@ where
             // Blockwise sweep at the guard cadence (and at the terminal
             // step, so nothing escapes detection). Detection only — the
             // solve always completes, so surviving lanes are whole.
-            if ce != 0 && ((k + 1) % ce == 0 || k + 1 == n_steps) && guard::any_nonfinite(&y) {
+            if gcfg.sweep_due(k + 1, n_steps) && guard::any_nonfinite(&y) {
                 dirty = true;
             }
         }

@@ -155,6 +155,13 @@ impl std::error::Error for SolveError {}
 /// — O(1) memory becomes O(n), gradients stay exact. A negative `drift_tol`
 /// forces the fallback at the first checkpoint (the test hook); 0 for
 /// `checkpoint_every` disables the watchdog.
+///
+/// Every engine canonicalises its copy through [`normalised`](Self::normalised)
+/// once at entry and then asks [`sweep_due`](Self::sweep_due) /
+/// [`backward_sweep_due`](Self::backward_sweep_due) /
+/// [`checkpoint_due`](Self::checkpoint_due) instead of reimplementing the
+/// cadence arithmetic — `check_every` and `checkpoint_every` share one
+/// definition of the `0` / `1` / `usize::MAX` edges by construction.
 #[derive(Clone, Copy, Debug)]
 pub struct GuardConfig {
     /// Sweep state/cotangent lanes for non-finite values every this many
@@ -182,6 +189,58 @@ impl GuardConfig {
     /// comparisons (`hotpath_micro` `guard/*` rows).
     pub fn disabled() -> Self {
         Self { check_every: 0, checkpoint_every: 0, drift_tol: 1e-6 }
+    }
+
+    /// The canonical form every engine runs on — **the single place the
+    /// cadence knobs are validated**. Semantics (identical for both
+    /// fields, by construction):
+    ///
+    /// * `0` disables that guard entirely — no sweep / no checkpoint is
+    ///   ever due, and no engine may compute `step % 0` (the cadence
+    ///   helpers below gate the modulo on the zero check);
+    /// * `1` fires on every step;
+    /// * `usize::MAX` is valid and effectively means "terminal only":
+    ///   [`sweep_due`](Self::sweep_due) still fires at the final step, and
+    ///   [`checkpoint_due`](Self::checkpoint_due) stores exactly the
+    ///   step-0 checkpoint.
+    ///
+    /// A NaN `drift_tol` is normalised to the default tolerance: the
+    /// watchdog compares with `!(drift <= tol · scale)`, so a NaN would
+    /// silently force the `Reconstruct → Tape` fallback at every
+    /// checkpoint instead of being reported as a configuration error.
+    /// (Negative `drift_tol` stays as-is — it is the documented
+    /// force-the-fallback test hook.)
+    #[must_use]
+    pub fn normalised(mut self) -> Self {
+        if self.drift_tol.is_nan() {
+            self.drift_tol = GuardConfig::default().drift_tol;
+        }
+        self
+    }
+
+    /// True when the non-finite sweep is due after completing
+    /// `steps_done` of `n_steps` forward steps: at the `check_every`
+    /// cadence and unconditionally at the terminal step (so nothing
+    /// escapes detection), never when disabled (`check_every == 0`).
+    #[inline]
+    pub fn sweep_due(&self, steps_done: usize, n_steps: usize) -> bool {
+        self.check_every != 0 && (steps_done % self.check_every == 0 || steps_done == n_steps)
+    }
+
+    /// True when a backward sweep is due at grid step `k` — the adjoint's
+    /// cadence form (no terminal special case: the backward sweep's `k = 0`
+    /// endpoint is on-cadence for every `check_every`).
+    #[inline]
+    pub fn backward_sweep_due(&self, k: usize) -> bool {
+        self.check_every != 0 && k % self.check_every == 0
+    }
+
+    /// True when the drift watchdog stores (or compares) a sparse forward
+    /// checkpoint at grid step `k`; never when disabled
+    /// (`checkpoint_every == 0`).
+    #[inline]
+    pub fn checkpoint_due(&self, k: usize) -> bool {
+        self.checkpoint_every != 0 && k % self.checkpoint_every == 0
     }
 }
 
@@ -443,6 +502,62 @@ mod tests {
         );
         let s = format!("{err}");
         assert!(s.contains("step 5") && s.contains("path 3"), "{s}");
+    }
+
+    #[test]
+    fn cadence_helpers_zero_one_max_edges() {
+        // check_every = 0: disabled — never due, and no `% 0` is evaluated.
+        let off = GuardConfig { check_every: 0, checkpoint_every: 0, ..Default::default() };
+        for k in 0..200usize {
+            assert!(!off.sweep_due(k, 100));
+            assert!(!off.backward_sweep_due(k));
+            assert!(!off.checkpoint_due(k));
+        }
+        assert!(!off.sweep_due(100, 100), "terminal step stays off when disabled");
+
+        // check_every = 1: every step.
+        let every = GuardConfig { check_every: 1, checkpoint_every: 1, ..Default::default() };
+        for k in 1..=100usize {
+            assert!(every.sweep_due(k, 100));
+            assert!(every.backward_sweep_due(k - 1));
+            assert!(every.checkpoint_due(k - 1));
+        }
+
+        // check_every = usize::MAX: terminal-only sweeps, step-0-only
+        // checkpoint — valid, no overflow, no panic.
+        let max = GuardConfig {
+            check_every: usize::MAX,
+            checkpoint_every: usize::MAX,
+            ..Default::default()
+        };
+        for k in 1..100usize {
+            assert!(!max.sweep_due(k, 100));
+            assert!(!max.backward_sweep_due(k));
+        }
+        assert!(max.sweep_due(100, 100), "terminal step always swept when enabled");
+        assert!(max.backward_sweep_due(0));
+        assert!(max.checkpoint_due(0));
+        assert!(!max.checkpoint_due(99));
+
+        // The default cadence fires where the historical inline arithmetic
+        // did: (k+1) % 8 == 0 or terminal.
+        let dflt = GuardConfig::default();
+        assert!(dflt.sweep_due(8, 100) && dflt.sweep_due(16, 100) && dflt.sweep_due(100, 100));
+        assert!(!dflt.sweep_due(9, 100));
+        assert!(dflt.checkpoint_due(0) && dflt.checkpoint_due(16) && !dflt.checkpoint_due(8));
+    }
+
+    #[test]
+    fn normalised_fixes_nan_tolerance_only() {
+        let cfg = GuardConfig { drift_tol: f64::NAN, ..Default::default() }.normalised();
+        assert_eq!(cfg.drift_tol, GuardConfig::default().drift_tol);
+        // Negative tolerance is the documented force-fallback hook: preserved.
+        let hook = GuardConfig { drift_tol: -1.0, ..Default::default() }.normalised();
+        assert_eq!(hook.drift_tol, -1.0);
+        // Zero cadences are already canonical: identity.
+        let off = GuardConfig::disabled().normalised();
+        assert_eq!(off.check_every, 0);
+        assert_eq!(off.checkpoint_every, 0);
     }
 
     #[test]

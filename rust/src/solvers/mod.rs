@@ -44,6 +44,7 @@ mod convergence;
 pub mod guard;
 pub mod neural;
 mod reversible_heun;
+pub mod serve;
 pub mod simd;
 mod stability;
 pub mod systems;
@@ -64,6 +65,7 @@ pub use guard::{
     SolveError, SolveFault,
 };
 pub use classic::{EulerMaruyama, Heun, Midpoint};
+pub use serve::{request_seed, ServeConfig, ServeEngine, SessionId, SessionNoise, Ticket};
 pub use simd::Lane;
 pub use convergence::{
     estimate_orders, strong_weak_errors, ConvergenceReport, FineBrownianGrid,

@@ -1,0 +1,1003 @@
+//! Sampling-as-a-service: a persistent, zero-allocation serving engine.
+//!
+//! The ROADMAP's north star is serving trained SDE-GANs at scale, and the
+//! production workload of a trained model is **sampling** — many concurrent,
+//! small requests, not one big offline batch. [`super::integrate_batched`]
+//! is built for the offline-training shape: every call spawns scoped
+//! threads, and a 7-path request wastes the 8-wide `f32` SIMD lanes. This
+//! module serves the same solves through a long-lived engine instead:
+//!
+//! * **Persistent worker pool** — [`ServeEngine::new`] spawns its workers
+//!   once; they park on a condvar between batches (no per-call
+//!   `std::thread::scope`), and are joined on drop.
+//! * **Request coalescing** — a request is just a set of rows in the
+//!   `[component × batch]` SoA state, so admission is *lane assignment*:
+//!   the front door drains queued requests FIFO into one SoA mega-batch of
+//!   up to [`ServeConfig::max_batch`] lanes, which the pool solves as a
+//!   single chunked solve. Because the engine's SIMD kernels vectorise
+//!   *across paths and never within one path's arithmetic*, the coalesced
+//!   solve is **bit-for-bit identical** to solving each request as its own
+//!   batch — for every lane assignment, chunk size and thread count
+//!   (pinned by `tests/serve_engine.rs`).
+//! * **Per-session persistent Brownian state** — each session owns a
+//!   [`SessionNoise`]: one [`BrownianInterval`] whose node arena, LRU slot
+//!   arena and recycled buffers survive across requests
+//!   ([`BrownianInterval::reseed`]), with the per-request seed derived
+//!   deterministically from the session seed and request counter
+//!   ([`request_seed`]). A request's noise depends only on its session —
+//!   never on which mega-batch lane it landed in or what other sessions
+//!   are doing — which is what makes coalescing invisible in the bits.
+//! * **Zero-allocation steady state** — the mega-batch buffers, slot pool,
+//!   per-worker scratch and steppers ([`BatchStepper::reinit`]) are all
+//!   preallocated and reused; a warm engine serves requests without
+//!   allocating (the per-worker scratch carries a debug assertion on its
+//!   capacity signature, and `tests/serve_engine.rs` pins the whole
+//!   submit→solve→collect cycle at zero allocations with a counting global
+//!   allocator).
+//! * **Fault quarantine per request** — non-finite lanes and panicking
+//!   vector fields follow the PR-6 fault contract: a dirty chunk is re-run
+//!   bit-identically to localise exact `(step, path, component)`
+//!   coordinates, a panicked chunk is re-run lane by lane under
+//!   `catch_unwind`, and the faults are charged to the *owning request*
+//!   (request-relative path indices). The faulted request's
+//!   [`ServeEngine::wait`] returns the structured [`SolveError`], its slot
+//!   is released back to the admission queue, and every other in-flight
+//!   request's bits are untouched.
+//!
+//! Waiters collect results with [`ServeEngine::wait_into`], which swaps the
+//! trajectory out of the slot into a caller-owned buffer — callers that
+//! reuse their buffer keep the whole round trip allocation-free.
+
+use super::batch::{BatchSde, BatchStepper};
+use super::guard::{self, FaultCause, GuardConfig, SolveError, SolveFault};
+use super::simd::Lane;
+use crate::brownian::{splitmix64, BrownianInterval, BrownianSource};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::thread::JoinHandle;
+
+/// The deterministic per-request seed of a session: request `counter` of a
+/// session opened with `base` reseeds its Brownian tree with this value
+/// (the same splitmix derivation the training loop's `StepNoise` uses).
+/// Public so references — a per-request solve that must match the serving
+/// engine bit-for-bit — can reconstruct any request's noise offline.
+pub fn request_seed(base: u64, counter: u64) -> u64 {
+    splitmix64(base ^ counter.wrapping_mul(0x9E37_79B9))
+}
+
+/// A session's persistent Brownian state: one [`BrownianInterval`] (node
+/// arena, LRU arena and recycled buffers survive across requests via
+/// [`BrownianInterval::reseed`]), the fixed solve grid, and the request
+/// counter. Each request draws a fresh, deterministic sample keyed by
+/// [`request_seed`] — so a request's noise is a pure function of
+/// `(session seed, request index, path index)`, independent of coalescing.
+///
+/// The grid layout is `[k][p][j]` (step-major, then path, then channel) —
+/// exactly what [`super::StoredBatchNoise::from_f32_grid`] consumes, which
+/// is how tests rebuild a request's noise for the per-request reference
+/// solve.
+pub struct SessionNoise {
+    bi: BrownianInterval,
+    grid: Vec<f32>,
+    ts: Vec<f64>,
+    base: u64,
+    counter: u64,
+    n_paths: usize,
+}
+
+impl SessionNoise {
+    /// Persistent noise for requests of `n_paths` paths with `noise_dim`
+    /// Brownian channels each, over the fixed grid of `n_steps` uniform
+    /// steps spanning `[t0, t1]`.
+    pub fn new(
+        seed: u64,
+        noise_dim: usize,
+        n_paths: usize,
+        t0: f64,
+        t1: f64,
+        n_steps: usize,
+    ) -> Self {
+        assert!(noise_dim >= 1 && n_paths >= 1 && n_steps >= 1 && t1 > t0);
+        let size = noise_dim * n_paths;
+        let dt = (t1 - t0) / n_steps as f64;
+        Self {
+            bi: BrownianInterval::new(t0, t1, size, seed),
+            grid: vec![0.0f32; n_steps * size],
+            ts: (0..=n_steps).map(|k| t0 + k as f64 * dt).collect(),
+            base: seed,
+            counter: 0,
+            n_paths,
+        }
+    }
+
+    /// Paths per request for this session.
+    pub fn n_paths(&self) -> usize {
+        self.n_paths
+    }
+
+    /// Requests drawn so far (the next request uses this counter value).
+    pub fn requests_drawn(&self) -> u64 {
+        self.counter
+    }
+
+    /// Draw the next request's noise grid (`[n_steps][n_paths][noise_dim]`)
+    /// — reseed the persistent tree with [`request_seed`] and bulk-fill the
+    /// grid in one descent. Steady state (same grid every request, the
+    /// serving case) reuses the node arena and every buffer: no allocation.
+    pub fn next_request(&mut self) -> &[f32] {
+        let seed = request_seed(self.base, self.counter);
+        self.counter += 1;
+        self.bi.reseed(seed);
+        self.bi.fill_grid(&self.ts, &mut self.grid);
+        &self.grid
+    }
+}
+
+/// Knobs for [`ServeEngine`]. The solve grid (`t0`, `t1`, `n_steps`) is
+/// fixed per engine — serving a trained model samples one horizon — which
+/// is what lets every buffer be preallocated.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Solve interval start.
+    pub t0: f64,
+    /// Solve interval end.
+    pub t1: f64,
+    /// Fixed solver steps per request.
+    pub n_steps: usize,
+    /// Mega-batch capacity in lanes (paths). Admission packs queued
+    /// requests FIFO until the next one would not fit.
+    pub max_batch: usize,
+    /// Persistent worker threads (min 1).
+    pub threads: usize,
+    /// Lanes per work unit inside a mega-batch solve. Never affects bits —
+    /// the engine invariant — only load balance.
+    pub chunk: usize,
+    /// Fault-tolerance knobs (normalised once per worker via
+    /// [`GuardConfig::normalised`]).
+    pub guard: GuardConfig,
+    /// When true (the default), workers admit queued requests as soon as
+    /// the pool is free — lowest latency. When false, requests only queue
+    /// until [`ServeEngine::flush`] opens the gate for one admission round
+    /// — the deterministic-coalescing mode the bitwise tests use.
+    pub auto_admit: bool,
+}
+
+impl ServeConfig {
+    /// Defaults for a grid: 256-lane mega-batches, one worker per core,
+    /// 64-lane chunks, default guards, immediate admission.
+    pub fn new(t0: f64, t1: f64, n_steps: usize) -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self {
+            t0,
+            t1,
+            n_steps,
+            max_batch: 256,
+            threads,
+            chunk: 64,
+            guard: GuardConfig::default(),
+            auto_admit: true,
+        }
+    }
+}
+
+/// Handle to a session opened with [`ServeEngine::open_session`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionId(usize);
+
+/// Handle to a submitted request; redeem exactly once with
+/// [`ServeEngine::wait`] / [`ServeEngine::wait_into`].
+#[derive(Clone, Copy, Debug)]
+pub struct Ticket {
+    slot: usize,
+    gen: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotState {
+    Free,
+    Queued,
+    InFlight,
+    Done,
+    Faulted,
+}
+
+/// One request's slot in the pool: reused across requests (the buffers keep
+/// their capacity), so steady-state submission allocates nothing.
+struct Slot<T> {
+    state: SlotState,
+    gen: u64,
+    session: usize,
+    n_paths: usize,
+    /// Request initial state, SoA `[dim * n_paths]`.
+    y0: Vec<T>,
+    /// Result trajectory, SoA `[(n_steps + 1) * dim * n_paths]` — exactly
+    /// what [`super::integrate_batched`] returns for `batch = n_paths`.
+    out: Vec<T>,
+    /// Faults charged to this request (request-relative path indices).
+    faults: Vec<SolveFault>,
+}
+
+impl<T> Slot<T> {
+    fn new() -> Self {
+        Self {
+            state: SlotState::Free,
+            gen: 0,
+            session: 0,
+            n_paths: 0,
+            y0: Vec::new(),
+            out: Vec::new(),
+            faults: Vec::new(),
+        }
+    }
+}
+
+/// The in-flight mega-batch: chunk cursor plus completion count.
+struct Active {
+    lanes: usize,
+    n_chunks: usize,
+    next_chunk: usize,
+    remaining: usize,
+}
+
+/// Front-door state, under one mutex: the admission queue, the slot pool,
+/// the sessions, and the lane map of the active batch.
+struct Door<T> {
+    pending: VecDeque<usize>,
+    free_slots: Vec<usize>,
+    slots: Vec<Slot<T>>,
+    sessions: Vec<SessionNoise>,
+    /// Mega lane → `(slot, request-relative path)` for the active batch.
+    lane_map: Vec<(usize, usize)>,
+    active: Option<Active>,
+    gate_open: bool,
+    shutdown: bool,
+}
+
+/// The solve inputs of the active batch, preallocated at `max_batch`
+/// capacity. Behind an `RwLock` so admission (one writer, under the door
+/// lock) and the solving workers (readers) don't serialise the solve on
+/// the door mutex.
+struct Arena<T> {
+    /// `[(k * nd + j) * max_batch + lane]` — [`super::StoredBatchNoise`]'s
+    /// SoA layout at `batch = max_batch`.
+    noise: Vec<T>,
+    /// `[i * max_batch + lane]`.
+    y0: Vec<T>,
+}
+
+struct Shared<T, S> {
+    cfg: ServeConfig,
+    sde: S,
+    dim: usize,
+    nd: usize,
+    door: Mutex<Door<T>>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    arena: RwLock<Arena<T>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // As in `map_chunks`: the lock is never held across user vector-field
+    // code, so poisoning cannot leave the door inconsistent — recover.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn rlock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wlock<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-worker scratch, preallocated at full-chunk shapes so the
+/// steady-state solve path never allocates. The capacity signature is
+/// recorded once and debug-asserted after every chunk — a reallocation on
+/// the serving loop is a contract violation, not a slowdown.
+struct Scratch<T> {
+    y: Vec<T>,
+    y2: Vec<T>,
+    dw: Vec<T>,
+    traj: Vec<T>,
+    firsts: Vec<Option<SolveFault>>,
+    faults: Vec<SolveFault>,
+    lane_y: Vec<T>,
+    lane_dw: Vec<T>,
+    lane_traj: Vec<T>,
+    sig: [usize; 9],
+}
+
+impl<T: Lane> Scratch<T> {
+    fn new(dim: usize, nd: usize, n_steps: usize, chunk: usize) -> Self {
+        let mut s = Self {
+            y: vec![T::ZERO; dim * chunk],
+            y2: vec![T::ZERO; dim * chunk],
+            dw: vec![T::ZERO; nd * chunk],
+            traj: Vec::with_capacity((n_steps + 1) * dim * chunk),
+            firsts: Vec::with_capacity(chunk),
+            faults: Vec::with_capacity(chunk),
+            lane_y: vec![T::ZERO; dim],
+            lane_dw: vec![T::ZERO; nd],
+            lane_traj: Vec::with_capacity((n_steps + 1) * dim),
+            sig: [0; 9],
+        };
+        s.sig = s.capacity_signature();
+        s
+    }
+
+    fn capacity_signature(&self) -> [usize; 9] {
+        [
+            self.y.capacity(),
+            self.y2.capacity(),
+            self.dw.capacity(),
+            self.traj.capacity(),
+            self.firsts.capacity(),
+            self.faults.capacity(),
+            self.lane_y.capacity(),
+            self.lane_dw.capacity(),
+            self.lane_traj.capacity(),
+        ]
+    }
+}
+
+/// A long-lived sampling engine over one SDE and one solve grid.
+///
+/// Generic exactly like [`super::integrate_batched`]: the stepper `M`
+/// fixes the element type (`BatchReversibleHeun` for the historical `f64`
+/// bits, `BatchReversibleHeun<f32>` for the 8-wide lanes), the system `S`
+/// is any [`BatchSde`] at that precision. See the module docs for the
+/// architecture; `tests/serve_engine.rs` pins the bitwise, isolation and
+/// zero-allocation contracts.
+pub struct ServeEngine<M, S>
+where
+    M: BatchStepper,
+    S: BatchSde<M::Elem>,
+{
+    shared: Arc<Shared<M::Elem, S>>,
+    workers: Vec<JoinHandle<()>>,
+    _stepper: PhantomData<fn() -> M>,
+}
+
+impl<M, S> ServeEngine<M, S>
+where
+    M: BatchStepper + 'static,
+    S: BatchSde<M::Elem> + Send + 'static,
+{
+    /// Spawn the worker pool (once — workers park between batches) and
+    /// preallocate the mega-batch arena.
+    pub fn new(sde: S, cfg: ServeConfig) -> Self {
+        assert!(cfg.t1 > cfg.t0, "need t1 > t0");
+        assert!(cfg.n_steps >= 1 && cfg.max_batch >= 1);
+        let dim = sde.state_dim();
+        let nd = sde.brownian_dim();
+        let cap = cfg.max_batch;
+        let threads = cfg.threads.max(1);
+        let shared = Arc::new(Shared {
+            sde,
+            dim,
+            nd,
+            door: Mutex::new(Door {
+                pending: VecDeque::with_capacity(cap),
+                free_slots: Vec::with_capacity(cap),
+                slots: Vec::new(),
+                sessions: Vec::new(),
+                lane_map: Vec::with_capacity(cap),
+                active: None,
+                gate_open: cfg.auto_admit,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            arena: RwLock::new(Arena {
+                noise: vec![<M::Elem as Lane>::ZERO; cfg.n_steps * nd * cap],
+                y0: vec![<M::Elem as Lane>::ZERO; dim * cap],
+            }),
+            cfg,
+        });
+        let mut workers = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let sh = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sde-serve-{w}"))
+                    .spawn(move || worker_loop::<M, S>(&sh))
+                    .expect("serve: failed to spawn worker"),
+            );
+        }
+        Self { shared, workers, _stepper: PhantomData }
+    }
+
+    /// Open a session: persistent Brownian state for requests of `n_paths`
+    /// paths each, keyed by `seed`. Sessions live as long as the engine.
+    pub fn open_session(&self, seed: u64, n_paths: usize) -> SessionId {
+        assert!(n_paths >= 1, "need at least one path per request");
+        assert!(
+            n_paths <= self.shared.cfg.max_batch,
+            "session width {n_paths} exceeds max_batch {}",
+            self.shared.cfg.max_batch
+        );
+        let cfg = &self.shared.cfg;
+        let sess = SessionNoise::new(seed, self.shared.nd, n_paths, cfg.t0, cfg.t1, cfg.n_steps);
+        let mut door = lock(&self.shared.door);
+        door.sessions.push(sess);
+        SessionId(door.sessions.len() - 1)
+    }
+
+    /// Queue one sampling request: solve the session's `n_paths` paths from
+    /// the SoA initial state `y0` (`[dim * n_paths]`) with the session's
+    /// next Brownian sample. Returns immediately; redeem the ticket with
+    /// [`wait`](Self::wait) / [`wait_into`](Self::wait_into).
+    pub fn submit(&self, session: SessionId, y0: &[M::Elem]) -> Ticket {
+        let sh = &*self.shared;
+        let mut door = lock(&sh.door);
+        assert!(!door.shutdown, "serve: engine is shutting down");
+        let m = door.sessions[session.0].n_paths();
+        assert_eq!(y0.len(), sh.dim * m, "y0 must be SoA [dim * n_paths] at the session width");
+        let si = match door.free_slots.pop() {
+            Some(si) => si,
+            None => {
+                door.slots.push(Slot::new());
+                door.slots.len() - 1
+            }
+        };
+        let gen = {
+            let slot = &mut door.slots[si];
+            slot.state = SlotState::Queued;
+            slot.session = session.0;
+            slot.n_paths = m;
+            slot.y0.clear();
+            slot.y0.extend_from_slice(y0);
+            slot.faults.clear();
+            slot.gen
+        };
+        door.pending.push_back(si);
+        drop(door);
+        sh.work_cv.notify_all();
+        Ticket { slot: si, gen }
+    }
+
+    /// Open the admission gate for one round (the `auto_admit: false`
+    /// coalescing mode): everything queued is packed FIFO into mega-batches
+    /// until the queue drains or a request doesn't fit. No-op when
+    /// `auto_admit` is on.
+    pub fn flush(&self) {
+        let mut door = lock(&self.shared.door);
+        door.gate_open = true;
+        drop(door);
+        self.shared.work_cv.notify_all();
+    }
+
+    /// Block until the request completes, swapping its trajectory into
+    /// `out` (`[(n_steps + 1) * dim * n_paths]`, bit-identical to
+    /// [`super::integrate_batched`] over the same noise) and releasing the
+    /// slot back to the pool. Callers that reuse `out` across requests
+    /// keep the steady-state round trip allocation-free. A faulted request
+    /// returns the structured [`SolveError`] (request-relative path
+    /// coordinates) — its quarantine never touches other requests' bits.
+    pub fn wait_into(
+        &self,
+        ticket: Ticket,
+        out: &mut Vec<M::Elem>,
+    ) -> Result<(), SolveError> {
+        let sh = &*self.shared;
+        let mut door = lock(&sh.door);
+        loop {
+            let slot = &mut door.slots[ticket.slot];
+            assert_eq!(slot.gen, ticket.gen, "serve: stale ticket (already collected?)");
+            match slot.state {
+                SlotState::Done => {
+                    out.clear();
+                    std::mem::swap(&mut slot.out, out);
+                    slot.state = SlotState::Free;
+                    slot.gen += 1;
+                    door.free_slots.push(ticket.slot);
+                    return Ok(());
+                }
+                SlotState::Faulted => {
+                    let faults = std::mem::take(&mut slot.faults);
+                    slot.state = SlotState::Free;
+                    slot.gen += 1;
+                    door.free_slots.push(ticket.slot);
+                    return Err(SolveError::new("serve: request faulted", faults));
+                }
+                _ => {
+                    if door.shutdown {
+                        return Err(SolveError::new(
+                            "serve: engine shut down before the request completed",
+                            Vec::new(),
+                        ));
+                    }
+                    door = sh.done_cv.wait(door).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience over [`wait_into`](Self::wait_into).
+    pub fn wait(&self, ticket: Ticket) -> Result<Vec<M::Elem>, SolveError> {
+        let mut out = Vec::new();
+        self.wait_into(ticket, &mut out)?;
+        Ok(out)
+    }
+}
+
+impl<M, S> Drop for ServeEngine<M, S>
+where
+    M: BatchStepper,
+    S: BatchSde<M::Elem>,
+{
+    fn drop(&mut self) {
+        {
+            let mut door = lock(&self.shared.door);
+            door.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        self.shared.done_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pack queued requests FIFO into the arena as one mega-batch. Caller
+/// holds the door mutex and the arena write lock (lock order: door →
+/// arena, always). Returns false when nothing was admitted.
+fn try_admit<T: Lane>(
+    cfg: &ServeConfig,
+    dim: usize,
+    nd: usize,
+    door: &mut Door<T>,
+    arena: &mut Arena<T>,
+) -> bool {
+    if door.active.is_some() || !door.gate_open || door.pending.is_empty() {
+        return false;
+    }
+    let cap = cfg.max_batch;
+    let n_steps = cfg.n_steps;
+    let Door { pending, slots, sessions, lane_map, .. } = door;
+    lane_map.clear();
+    let mut lanes = 0usize;
+    while let Some(&si) = pending.front() {
+        let m = slots[si].n_paths;
+        if lanes + m > cap {
+            break; // FIFO: never skip ahead of a request that doesn't fit
+        }
+        pending.pop_front();
+        let base = lanes;
+        lanes += m;
+        // The request's noise is keyed by its session alone — lane
+        // placement cannot affect it. The transpose below writes exactly
+        // `StoredBatchNoise::from_f32_grid`'s lanes at batch = max_batch.
+        let sess_idx = slots[si].session;
+        let grid = sessions[sess_idx].next_request();
+        for k in 0..n_steps {
+            for p in 0..m {
+                let row = (k * m + p) * nd;
+                for j in 0..nd {
+                    arena.noise[(k * nd + j) * cap + base + p] = T::from_f32(grid[row + j]);
+                }
+            }
+        }
+        let slot = &mut slots[si];
+        for i in 0..dim {
+            for p in 0..m {
+                arena.y0[i * cap + base + p] = slot.y0[i * m + p];
+            }
+        }
+        slot.out.clear();
+        slot.out.resize((n_steps + 1) * dim * m, T::ZERO);
+        slot.faults.clear();
+        slot.state = SlotState::InFlight;
+        for p in 0..m {
+            lane_map.push((si, p));
+        }
+    }
+    if lanes == 0 {
+        return false;
+    }
+    if !cfg.auto_admit {
+        door.gate_open = false; // one flush = one admission round
+    }
+    let chunk = cfg.chunk.max(1);
+    let n_chunks = (lanes + chunk - 1) / chunk;
+    door.active = Some(Active { lanes, n_chunks, next_chunk: 0, remaining: n_chunks });
+    true
+}
+
+/// Mark every slot of the finished batch Done or Faulted. Caller holds the
+/// door mutex; `wait_into` picks the slots up via `done_cv`.
+fn finalize<T>(door: &mut Door<T>, lanes: usize) {
+    for l in 0..lanes {
+        let (si, _) = door.lane_map[l];
+        let slot = &mut door.slots[si];
+        if slot.state == SlotState::InFlight {
+            slot.state =
+                if slot.faults.is_empty() { SlotState::Done } else { SlotState::Faulted };
+        }
+    }
+    door.active = None;
+}
+
+/// Copy one solved chunk's lanes from the worker's scratch into the owning
+/// slots, and charge its faults to the owning requests (request-relative
+/// path indices). Caller holds the door mutex.
+fn record_chunk<T: Lane>(
+    door: &mut Door<T>,
+    dim: usize,
+    n_steps: usize,
+    chunk: usize,
+    c: usize,
+    lanes: usize,
+    traj: &[T],
+    faults: &mut Vec<SolveFault>,
+) {
+    let l0 = c * chunk;
+    let cl = chunk.min(lanes - l0);
+    for f in faults.drain(..) {
+        let (si, p) = door.lane_map[l0 + f.path];
+        door.slots[si].faults.push(SolveFault { path: p, ..f });
+    }
+    for q in 0..cl {
+        let (si, p) = door.lane_map[l0 + q];
+        let m = door.slots[si].n_paths;
+        let out = &mut door.slots[si].out;
+        for k in 0..=n_steps {
+            for i in 0..dim {
+                out[(k * dim + i) * m + p] = traj[(k * dim + i) * cl + q];
+            }
+        }
+    }
+}
+
+/// Solve one chunk of the active mega-batch into `scr.traj`
+/// (`[(k * dim + i) * cl + q]`), with the engine's guard contract: sweep at
+/// the guard cadence, localise dirty chunks by a bit-identical re-run, and
+/// re-run panicked chunks lane by lane under `catch_unwind`. Faults land in
+/// `scr.faults` with chunk-relative `path` indices.
+#[allow(clippy::too_many_arguments)]
+fn solve_chunk<M, S>(
+    cfg: &ServeConfig,
+    gcfg: &GuardConfig,
+    sde: &S,
+    dim: usize,
+    nd: usize,
+    arena: &Arena<M::Elem>,
+    c: usize,
+    lanes: usize,
+    stepper: &mut M,
+    scr: &mut Scratch<M::Elem>,
+) where
+    M: BatchStepper,
+    S: BatchSde<M::Elem>,
+{
+    let zero = <M::Elem as Lane>::ZERO;
+    let cap = cfg.max_batch;
+    let chunk = cfg.chunk.max(1);
+    let l0 = c * chunk;
+    let cl = chunk.min(lanes - l0);
+    let n_steps = cfg.n_steps;
+    let t0 = cfg.t0;
+    let dt = (cfg.t1 - cfg.t0) / n_steps as f64;
+    scr.faults.clear();
+
+    // First pass — the steady-state hot loop. Same gather, grid arithmetic
+    // and step sequence as `integrate_batched`'s run_chunk, so every lane's
+    // bits equal the per-request solve's.
+    let outcome = {
+        let Scratch { y, dw, traj, .. } = &mut *scr;
+        y.clear();
+        y.resize(dim * cl, zero);
+        for i in 0..dim {
+            for q in 0..cl {
+                y[i * cl + q] = arena.y0[i * cap + l0 + q];
+            }
+        }
+        traj.clear();
+        dw.clear();
+        dw.resize(nd * cl, zero);
+        // `reinit` evaluates the vector field at (t0, y0), so it must sit
+        // inside the unwind guard too — a panicking field at step zero
+        // quarantines like any other, instead of killing the worker.
+        catch_unwind(AssertUnwindSafe(|| {
+            stepper.reinit(sde, t0, y, cl);
+            traj.extend_from_slice(y);
+            let mut dirty = false;
+            for k in 0..n_steps {
+                let s = t0 + k as f64 * dt;
+                let t = t0 + (k + 1) as f64 * dt;
+                for j in 0..nd {
+                    for q in 0..cl {
+                        dw[j * cl + q] = arena.noise[(k * nd + j) * cap + l0 + q];
+                    }
+                }
+                stepper.step(sde, s, t - s, dw, y, cl);
+                traj.extend_from_slice(y);
+                if gcfg.sweep_due(k + 1, n_steps) && guard::any_nonfinite(y) {
+                    dirty = true;
+                }
+            }
+            dirty
+        }))
+    };
+
+    match outcome {
+        Ok(false) => {}
+        Ok(true) => {
+            // Localisation: re-run the chunk bit-identically with a
+            // per-step, per-lane sweep — exactly the forward engine's
+            // strategy. The first pass's trajectory stays valid for
+            // surviving lanes.
+            let Scratch { y2, dw, firsts, faults, .. } = &mut *scr;
+            y2.clear();
+            y2.resize(dim * cl, zero);
+            for i in 0..dim {
+                for q in 0..cl {
+                    y2[i * cl + q] = arena.y0[i * cap + l0 + q];
+                }
+            }
+            stepper.reinit(sde, t0, y2, cl);
+            firsts.clear();
+            firsts.resize(cl, None);
+            for k in 0..n_steps {
+                let s = t0 + k as f64 * dt;
+                let t = t0 + (k + 1) as f64 * dt;
+                for j in 0..nd {
+                    for q in 0..cl {
+                        dw[j * cl + q] = arena.noise[(k * nd + j) * cap + l0 + q];
+                    }
+                }
+                stepper.step(sde, s, t - s, dw, y2, cl);
+                for (q, slot) in firsts.iter_mut().enumerate() {
+                    if slot.is_some() {
+                        continue;
+                    }
+                    for i in 0..dim {
+                        if !y2[i * cl + q].to_f64().is_finite() {
+                            *slot = Some(SolveFault {
+                                step: k,
+                                path: q,
+                                component: i,
+                                cause: FaultCause::NonFinite,
+                            });
+                            break;
+                        }
+                    }
+                }
+            }
+            faults.extend(firsts.drain(..).flatten());
+        }
+        Err(_chunk_panic) => {
+            // Re-run lane by lane: only the offending lane reports a
+            // panic fault (with its last-started step); chunk-mates get
+            // their exact single-lane bits — the same lanes the
+            // per-request reference produces.
+            let Scratch { traj, lane_y, lane_dw, lane_traj, faults, .. } = &mut *scr;
+            traj.clear();
+            traj.resize((n_steps + 1) * dim * cl, zero);
+            for q in 0..cl {
+                let l = l0 + q;
+                let progress = Cell::new(0usize);
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    lane_y.clear();
+                    lane_y.resize(dim, zero);
+                    for i in 0..dim {
+                        lane_y[i] = arena.y0[i * cap + l];
+                    }
+                    stepper.reinit(sde, t0, lane_y, 1);
+                    lane_traj.clear();
+                    lane_traj.extend_from_slice(lane_y);
+                    lane_dw.clear();
+                    lane_dw.resize(nd, zero);
+                    for k in 0..n_steps {
+                        progress.set(k);
+                        let s = t0 + k as f64 * dt;
+                        let t = t0 + (k + 1) as f64 * dt;
+                        for j in 0..nd {
+                            lane_dw[j] = arena.noise[(k * nd + j) * cap + l];
+                        }
+                        stepper.step(sde, s, t - s, lane_dw, lane_y, 1);
+                        lane_traj.extend_from_slice(lane_y);
+                    }
+                }));
+                let fault = match res {
+                    Ok(()) => {
+                        let mut found = None;
+                        'scan: for b in 1..=n_steps {
+                            for i in 0..dim {
+                                if !lane_traj[b * dim + i].to_f64().is_finite() {
+                                    found = Some(SolveFault {
+                                        step: b - 1,
+                                        path: q,
+                                        component: i,
+                                        cause: FaultCause::NonFinite,
+                                    });
+                                    break 'scan;
+                                }
+                            }
+                        }
+                        found
+                    }
+                    Err(payload) => Some(SolveFault {
+                        step: progress.get(),
+                        path: q,
+                        component: 0,
+                        cause: FaultCause::VectorFieldPanic {
+                            payload: guard::panic_message(payload),
+                        },
+                    }),
+                };
+                match fault {
+                    None => {
+                        for k in 0..=n_steps {
+                            for i in 0..dim {
+                                traj[(k * dim + i) * cl + q] = lane_traj[k * dim + i];
+                            }
+                        }
+                    }
+                    Some(f) => {
+                        faults.push(f);
+                        // Hold the lane at its initial state: finite,
+                        // deterministic — the request errors anyway, its
+                        // trajectory is never handed out.
+                        for k in 0..=n_steps {
+                            for i in 0..dim {
+                                traj[(k * dim + i) * cl + q] = arena.y0[i * cap + l];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // The zero-allocation contract of the serving loop: a warmed worker's
+    // scratch never reallocates (the test suite additionally pins the whole
+    // engine with a counting global allocator).
+    debug_assert_eq!(
+        scr.capacity_signature(),
+        scr.sig,
+        "serve: steady-state solve reallocated worker scratch"
+    );
+}
+
+fn worker_loop<M, S>(sh: &Shared<M::Elem, S>)
+where
+    M: BatchStepper,
+    S: BatchSde<M::Elem>,
+{
+    let dim = sh.dim;
+    let nd = sh.nd;
+    let cfg = &sh.cfg;
+    let chunk = cfg.chunk.max(1);
+    let gcfg = cfg.guard.normalised();
+    let mut scr = Scratch::<M::Elem>::new(dim, nd, cfg.n_steps, chunk);
+    // One stepper per worker, forever: `reinit` (not `for_chunk`) per
+    // chunk, so the steady state pays zero stepper allocations.
+    let mut stepper = M::for_chunk(&sh.sde, cfg.t0, &scr.y, chunk);
+    let mut door = lock(&sh.door);
+    loop {
+        if door.shutdown {
+            return;
+        }
+        let job = match door.active.as_mut() {
+            Some(a) if a.next_chunk < a.n_chunks => {
+                let c = a.next_chunk;
+                a.next_chunk += 1;
+                Some((c, a.lanes))
+            }
+            _ => None,
+        };
+        let Some((c, lanes)) = job else {
+            if door.active.is_none() {
+                let mut arena = wlock(&sh.arena);
+                if try_admit(cfg, dim, nd, &mut door, &mut arena) {
+                    drop(arena);
+                    sh.work_cv.notify_all();
+                    continue;
+                }
+            }
+            door = sh.work_cv.wait(door).unwrap_or_else(|e| e.into_inner());
+            continue;
+        };
+        drop(door);
+        {
+            let arena = rlock(&sh.arena);
+            solve_chunk::<M, S>(
+                cfg, &gcfg, &sh.sde, dim, nd, &arena, c, lanes, &mut stepper, &mut scr,
+            );
+        }
+        door = lock(&sh.door);
+        record_chunk(&mut door, dim, cfg.n_steps, chunk, c, lanes, &scr.traj, &mut scr.faults);
+        let a = door.active.as_mut().expect("serve: active batch vanished mid-solve");
+        a.remaining -= 1;
+        if a.remaining == 0 {
+            finalize(&mut door, lanes);
+            sh.done_cv.notify_all();
+            // Quarantined or done, every admitted slot's lanes are free
+            // again: pack the next waiting requests immediately.
+            let mut arena = wlock(&sh.arena);
+            if try_admit(cfg, dim, nd, &mut door, &mut arena) {
+                drop(arena);
+                sh.work_cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::systems::TanhDiagonalBatch;
+    use super::super::{integrate_batched, BatchOptions, BatchReversibleHeun, StoredBatchNoise};
+    use super::*;
+
+    fn reference_solve(
+        seed: u64,
+        counter_start: u64,
+        n_requests: usize,
+        n_paths: usize,
+        sde: &TanhDiagonalBatch,
+        y0: &[f64],
+    ) -> Vec<Vec<f64>> {
+        // Rebuild each request's noise exactly as the engine's session
+        // does, then solve it as its own batch.
+        let d = 4usize;
+        let mut sess = SessionNoise::new(seed, d, n_paths, 0.0, 1.0, 16);
+        assert_eq!(sess.requests_drawn(), counter_start);
+        let mut outs = Vec::new();
+        for _ in 0..n_requests {
+            let grid = sess.next_request();
+            let noise = StoredBatchNoise::<f64>::from_f32_grid(0.0, 1.0, 16, d, n_paths, grid);
+            let opts = BatchOptions { threads: 1, chunk: 5, ..Default::default() };
+            outs.push(
+                integrate_batched::<BatchReversibleHeun, _, _>(
+                    sde, &noise, y0, n_paths, 0.0, 1.0, 16, &opts,
+                )
+                .expect("reference solve faulted"),
+            );
+        }
+        outs
+    }
+
+    #[test]
+    fn single_request_matches_integrate_batched_bitwise() {
+        let sde = TanhDiagonalBatch::new(4, 99);
+        let n_paths = 6usize;
+        let y0 = vec![0.1f64; 4 * n_paths];
+        let mut cfg = ServeConfig::new(0.0, 1.0, 16);
+        cfg.max_batch = 32;
+        cfg.threads = 2;
+        cfg.chunk = 4;
+        let engine = ServeEngine::<BatchReversibleHeun, _>::new(sde, cfg);
+        let sess = engine.open_session(7, n_paths);
+        let sde_ref = TanhDiagonalBatch::new(4, 99);
+        let expect = reference_solve(7, 0, 2, n_paths, &sde_ref, &y0);
+        let t0 = engine.submit(sess, &y0);
+        let got0 = engine.wait(t0).expect("request faulted");
+        let t1 = engine.submit(sess, &y0);
+        let got1 = engine.wait(t1).expect("request faulted");
+        assert_eq!(got0, expect[0], "request 0 must be bit-identical");
+        assert_eq!(got1, expect[1], "request 1 advances the session counter");
+    }
+
+    #[test]
+    #[should_panic(expected = "stale ticket")]
+    fn tickets_are_single_use() {
+        let sde = TanhDiagonalBatch::new(2, 1);
+        let engine =
+            ServeEngine::<BatchReversibleHeun, _>::new(sde, ServeConfig::new(0.0, 1.0, 4));
+        let sess = engine.open_session(3, 2);
+        let t = engine.submit(sess, &[0.1; 4]);
+        engine.wait(t).expect("request faulted");
+        let _ = engine.wait(t); // panics: the slot was released
+    }
+
+    #[test]
+    fn request_seed_is_the_step_noise_derivation() {
+        assert_eq!(request_seed(42, 0), splitmix64(42));
+        assert_ne!(request_seed(42, 1), request_seed(42, 0));
+        assert_ne!(request_seed(43, 0), request_seed(42, 0));
+    }
+}

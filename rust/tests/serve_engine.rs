@@ -1,0 +1,302 @@
+//! Contract tests for the serving engine (`solvers::serve`):
+//!
+//! * **Coalescing is invisible in the bits** — requests of widths 1/3/7/33
+//!   packed into one SoA mega-batch are each bit-identical to solving that
+//!   request as its own batch over the same session noise, across engine
+//!   thread/chunk settings.
+//! * **Sessions are isolated** — a session's request stream depends only on
+//!   its own seed and request counter, never on which other sessions share
+//!   the engine or how requests interleave.
+//! * **Quarantine is per request** — a fault-injected request (NaN initial
+//!   state, or a panicking vector field) surfaces as that request's
+//!   structured `SolveError` with request-relative coordinates, while every
+//!   other request in the same mega-batch keeps its exact fault-free bits.
+//! * **`BatchStepper::reinit` is exact** — a reused stepper re-initialised
+//!   in place is bit-identical to a freshly constructed one, for every
+//!   in-tree stepper.
+//!
+//! (The steady-state zero-allocation pin lives in `serve_zero_alloc.rs` —
+//! its counting global allocator needs a binary to itself.)
+
+use neuralsde::solvers::systems::TanhDiagonalBatch;
+use neuralsde::solvers::{
+    integrate_batched, BatchEulerMaruyama, BatchHeun, BatchMidpoint, BatchOptions,
+    BatchReversibleHeun, BatchSde, BatchStepper, FaultCause, ServeConfig, ServeEngine,
+    SessionNoise, StoredBatchNoise,
+};
+
+const T0: f64 = 0.0;
+const T1: f64 = 1.0;
+const N_STEPS: usize = 20;
+const DIM: usize = 4;
+
+fn sde() -> TanhDiagonalBatch {
+    TanhDiagonalBatch::new(DIM, 1234)
+}
+
+fn y0_for(n_paths: usize, salt: usize) -> Vec<f64> {
+    (0..DIM * n_paths)
+        .map(|i| 0.05 * ((i + 3 * salt) % 11) as f64 - 0.2)
+        .collect()
+}
+
+/// The per-request reference: rebuild the session's `k`-th request noise
+/// with a replica `SessionNoise` and solve it as its own batch. This is
+/// the ground truth the engine's coalesced answers must match bit-for-bit.
+fn reference_request(seed: u64, request_idx: u64, n_paths: usize, y0: &[f64]) -> Vec<f64> {
+    let mut sess = SessionNoise::new(seed, DIM, n_paths, T0, T1, N_STEPS);
+    for _ in 0..request_idx {
+        sess.next_request();
+    }
+    let grid = sess.next_request();
+    let noise = StoredBatchNoise::<f64>::from_f32_grid(T0, T1, N_STEPS, DIM, n_paths, grid);
+    let opts = BatchOptions { threads: 1, chunk: 7, ..Default::default() };
+    integrate_batched::<BatchReversibleHeun, _, _>(
+        &sde(),
+        &noise,
+        y0,
+        n_paths,
+        T0,
+        T1,
+        N_STEPS,
+        &opts,
+    )
+    .expect("reference solve faulted")
+}
+
+#[test]
+fn coalesced_mega_batch_matches_per_request_bitwise() {
+    // Four sessions of widths 1, 3, 7, 33 — packed into ONE 44-lane
+    // mega-batch (gated admission) — must each reproduce their own
+    // per-request solve exactly, for several thread/chunk fan-outs
+    // (including chunks that straddle request boundaries).
+    let widths = [1usize, 3, 7, 33];
+    for &(threads, chunk) in &[(1usize, 64usize), (2, 5), (4, 3)] {
+        let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+        cfg.max_batch = 64;
+        cfg.threads = threads;
+        cfg.chunk = chunk;
+        cfg.auto_admit = false;
+        let engine = ServeEngine::<BatchReversibleHeun, _>::new(sde(), cfg);
+        let sessions: Vec<_> = widths
+            .iter()
+            .enumerate()
+            .map(|(s, &w)| engine.open_session(100 + s as u64, w))
+            .collect();
+        let tickets: Vec<_> = sessions
+            .iter()
+            .zip(widths.iter())
+            .enumerate()
+            .map(|(s, (&sid, &w))| engine.submit(sid, &y0_for(w, s)))
+            .collect();
+        engine.flush(); // one admission round: all four requests coalesce
+        for (s, (t, &w)) in tickets.into_iter().zip(widths.iter()).enumerate() {
+            let got = engine.wait(t).expect("request faulted");
+            let expect = reference_request(100 + s as u64, 0, w, &y0_for(w, s));
+            assert_eq!(
+                got, expect,
+                "width-{w} request differs from its per-request solve \
+                 (threads={threads}, chunk={chunk})"
+            );
+        }
+    }
+}
+
+#[test]
+fn session_noise_is_isolated_from_interleaving() {
+    // Engine 1 interleaves sessions A and B; engine 2 serves A alone.
+    // A's requests must be bit-identical in both — the session counter,
+    // not global engine traffic, keys the noise.
+    let width = 5usize;
+    let y0a = y0_for(width, 0);
+    let y0b = y0_for(width, 9);
+    let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+    cfg.max_batch = 32;
+    cfg.threads = 2;
+    cfg.chunk = 4;
+
+    let mixed = ServeEngine::<BatchReversibleHeun, _>::new(sde(), cfg);
+    let a = mixed.open_session(77, width);
+    let b = mixed.open_session(99, width);
+    let mut mixed_a = Vec::new();
+    for round in 0..3 {
+        let ta = mixed.submit(a, &y0a);
+        let tb = mixed.submit(b, &y0b);
+        mixed_a.push(mixed.wait(ta).expect("A faulted"));
+        mixed
+            .wait(tb)
+            .unwrap_or_else(|_| panic!("B faulted in round {round}"));
+    }
+    drop(mixed);
+
+    let solo = ServeEngine::<BatchReversibleHeun, _>::new(sde(), cfg);
+    let a2 = solo.open_session(77, width);
+    for (round, from_mixed) in mixed_a.iter().enumerate() {
+        let t = solo.submit(a2, &y0a);
+        let from_solo = solo.wait(t).expect("A faulted");
+        assert_eq!(
+            from_mixed, &from_solo,
+            "session A round {round} depends on unrelated engine traffic"
+        );
+        // And both equal the offline per-request reconstruction.
+        let expect = reference_request(77, round as u64, width, &y0a);
+        assert_eq!(from_solo, expect, "round {round} differs from reference");
+    }
+}
+
+/// Owned fault-injection wrapper (the engine takes its SDE by value, so the
+/// borrowing `guard::PanicOnSentinel` doesn't fit): panics in `drift_batch`
+/// whenever any state component equals the sentinel, exactly like its
+/// borrowing counterpart.
+struct PanickingTanh {
+    inner: TanhDiagonalBatch,
+    sentinel: f64,
+}
+
+impl BatchSde for PanickingTanh {
+    fn state_dim(&self) -> usize {
+        self.inner.state_dim()
+    }
+    fn brownian_dim(&self) -> usize {
+        self.inner.brownian_dim()
+    }
+    fn diagonal_noise(&self) -> bool {
+        self.inner.diagonal_noise()
+    }
+    fn drift_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        if y.iter().any(|&v| v == self.sentinel) {
+            panic!("injected: sentinel state reached drift");
+        }
+        self.inner.drift_batch(t, y, out, batch);
+    }
+    fn diffusion_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        self.inner.diffusion_batch(t, y, out, batch);
+    }
+    fn diffusion_diag_batch(&self, t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        self.inner.diffusion_diag_batch(t, y, out, batch);
+    }
+}
+
+#[test]
+fn faulted_request_is_quarantined_without_touching_others() {
+    const SENTINEL: f64 = 1e30;
+    let widths = [3usize, 4, 3];
+    let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+    cfg.max_batch = 16;
+    cfg.threads = 2;
+    cfg.chunk = 4; // chunks straddle request boundaries on purpose
+    cfg.auto_admit = false;
+
+    // Baseline: all three requests clean.
+    let clean_engine = ServeEngine::<BatchReversibleHeun, _>::new(
+        PanickingTanh { inner: sde(), sentinel: SENTINEL },
+        cfg,
+    );
+    let clean_tickets: Vec<_> = widths
+        .iter()
+        .enumerate()
+        .map(|(s, &w)| {
+            let sid = clean_engine.open_session(500 + s as u64, w);
+            clean_engine.submit(sid, &y0_for(w, s))
+        })
+        .collect();
+    clean_engine.flush();
+    let clean: Vec<_> = clean_tickets
+        .into_iter()
+        .map(|t| clean_engine.wait(t).expect("clean request faulted"))
+        .collect();
+    drop(clean_engine);
+
+    // Same traffic, but request 1 carries the sentinel in path 2's first
+    // component: its drift panics on step one.
+    for inject_nan_instead in [false, true] {
+        let engine = ServeEngine::<BatchReversibleHeun, _>::new(
+            PanickingTanh { inner: sde(), sentinel: SENTINEL },
+            cfg,
+        );
+        let mut tickets = Vec::new();
+        for (s, &w) in widths.iter().enumerate() {
+            let sid = engine.open_session(500 + s as u64, w);
+            let mut y0 = y0_for(w, s);
+            if s == 1 {
+                // component 0 of path 2: SoA index 0 * w + 2
+                y0[2] = if inject_nan_instead { f64::NAN } else { SENTINEL };
+            }
+            tickets.push(engine.submit(sid, &y0));
+        }
+        engine.flush();
+        for (s, t) in tickets.into_iter().enumerate() {
+            if s == 1 {
+                let err = engine
+                    .wait(t)
+                    .expect_err("injected request must surface its fault");
+                assert!(
+                    err.faults.iter().any(|f| f.path == 2),
+                    "fault must carry the request-relative path: {err}"
+                );
+                if inject_nan_instead {
+                    assert!(
+                        err.faults.iter().any(|f| f.cause == FaultCause::NonFinite),
+                        "NaN y0 must localise as NonFinite: {err}"
+                    );
+                } else {
+                    assert!(
+                        err.faults
+                            .iter()
+                            .any(|f| matches!(&f.cause, FaultCause::VectorFieldPanic { payload }
+                                if payload.contains("sentinel"))),
+                        "sentinel must localise as VectorFieldPanic: {err}"
+                    );
+                }
+            } else {
+                let got = engine.wait(t).expect("bystander request faulted");
+                assert_eq!(
+                    got, clean[s],
+                    "request {s} bits changed by another request's quarantine \
+                     (nan={inject_nan_instead})"
+                );
+            }
+        }
+        // The engine stays serviceable: the quarantined slot was released
+        // and a fresh, clean request on a new session round-trips.
+        let sid = engine.open_session(909, 2);
+        let t = engine.submit(sid, &y0_for(2, 7));
+        engine.flush();
+        engine.wait(t).expect("engine wedged after a quarantined request");
+    }
+}
+
+/// `reinit` on a warmed stepper must be bit-identical to a fresh
+/// `for_chunk` — including at a smaller batch than the stepper was warmed
+/// at (the serving engine's remainder-chunk shape).
+fn reinit_matches_fresh<M: BatchStepper<Elem = f64>>() {
+    let sys = sde();
+    let warm_batch = 8usize;
+    let run_batch = 5usize;
+    let y0 = y0_for(run_batch, 3);
+    let dw: Vec<f64> = (0..DIM * run_batch).map(|i| 0.01 * (i as f64 - 7.0)).collect();
+    let dt = (T1 - T0) / N_STEPS as f64;
+
+    // Warm at a larger batch, then reinit down to the run shape.
+    let warm_y0 = vec![0.0f64; DIM * warm_batch];
+    let mut reused = M::for_chunk(&sys, T0, &warm_y0, warm_batch);
+    reused.reinit(&sys, T0, &y0, run_batch);
+    let mut fresh = M::for_chunk(&sys, T0, &y0, run_batch);
+
+    let mut y_reused = y0.clone();
+    let mut y_fresh = y0.clone();
+    for k in 0..6 {
+        let s = T0 + k as f64 * dt;
+        reused.step(&sys, s, dt, &dw, &mut y_reused, run_batch);
+        fresh.step(&sys, s, dt, &dw, &mut y_fresh, run_batch);
+        assert_eq!(y_reused, y_fresh, "step {k}: reinit diverged from for_chunk");
+    }
+}
+
+#[test]
+fn reinit_is_bit_identical_for_every_stepper() {
+    reinit_matches_fresh::<BatchEulerMaruyama>();
+    reinit_matches_fresh::<BatchMidpoint>();
+    reinit_matches_fresh::<BatchHeun>();
+    reinit_matches_fresh::<BatchReversibleHeun>();
+}

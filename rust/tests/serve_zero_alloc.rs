@@ -1,0 +1,79 @@
+//! The serving engine's zero-allocation contract, pinned with a counting
+//! global allocator: once the engine, its slots, its session and the
+//! caller's result buffer are warm, a full submit → coalesce → solve →
+//! collect round trip performs **zero** heap allocations — across every
+//! thread involved (submitter, admission, workers).
+//!
+//! This lives in its own integration-test binary because the global
+//! allocator is process-wide: any concurrently running test would pollute
+//! the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use neuralsde::solvers::systems::TanhDiagonalBatch;
+use neuralsde::solvers::{BatchReversibleHeun, ServeConfig, ServeEngine};
+
+/// Counts every allocation and reallocation in the process.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_round_trip_allocates_nothing() {
+    let dim = 4usize;
+    let n_paths = 8usize;
+    let mut cfg = ServeConfig::new(0.0, 1.0, 24);
+    cfg.max_batch = 16;
+    cfg.threads = 2;
+    cfg.chunk = 4;
+    let engine = ServeEngine::<BatchReversibleHeun, _>::new(TanhDiagonalBatch::new(dim, 42), cfg);
+    let sess = engine.open_session(7, n_paths);
+    let y0 = vec![0.1f64; dim * n_paths];
+    let mut out = Vec::new();
+
+    // Warm everything: the slot's buffers reach their steady capacities on
+    // the first two rounds (the result buffer ping-pongs between the slot
+    // and the caller, so the pair is fully warmed after round two), the
+    // Brownian tree builds its node arena on the first fill, the workers
+    // build their scratch at spawn. A few extra rounds for slack.
+    for _ in 0..6 {
+        let t = engine.submit(sess, &y0);
+        engine.wait_into(t, &mut out).expect("warmup request faulted");
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        let t = engine.submit(sess, &y0);
+        engine.wait_into(t, &mut out).expect("steady-state request faulted");
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state serving must not allocate (saw {} allocations over 25 round trips)",
+        after - before
+    );
+    assert_eq!(out.len(), (24 + 1) * dim * n_paths);
+}
