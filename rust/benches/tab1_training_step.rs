@@ -2,15 +2,20 @@
 //!
 //! `native/*` rows time the pure-Rust SDE-GAN step (batched reversible-Heun
 //! solves + the native adjoint engine + Adadelta/clip/SWA) and need no
-//! artifacts. With `--features pjrt` and `make artifacts`, the AOT
-//! gradient-executable rows (reversible Heun vs midpoint — the paper's
-//! 1.98×/1.25× headline comparison) and the Latent SDE rows run as well.
+//! artifacts; `mixed/*` rows rerun the same step with
+//! `TrainPrecision::Mixed` (8-wide `f32` forward solves, exact `f64`
+//! adjoints through the widened tape) — the `f32_vs_f64` ratios are this
+//! optimisation's headline (target ≥1.5× on the solve-bound step). With
+//! `--features pjrt` and `make artifacts`, the AOT gradient-executable rows
+//! (reversible Heun vs midpoint — the paper's 1.98×/1.25× headline
+//! comparison) and the Latent SDE rows run as well.
 
 use neuralsde::brownian::SplitPrng;
-use neuralsde::config::{DatasetKind, TrainConfig};
+use neuralsde::config::{DatasetKind, TrainConfig, TrainPrecision};
 use neuralsde::coordinator::GanTrainer;
 use neuralsde::data::{ou, weights};
-use neuralsde::util::bench::BenchTable;
+use neuralsde::util::bench::{write_bench_json, BenchTable};
+use neuralsde::util::json::Json;
 
 fn dataset(ds: DatasetKind) -> neuralsde::data::TimeSeriesDataset {
     let mut data = match ds {
@@ -32,22 +37,67 @@ fn main() {
     );
 
     // Native rows: the default-build training path, no artifacts needed.
+    // Each dataset runs at both precisions on the same data and noise seed;
+    // the only difference between the row pairs is the solve element type.
     for ds in [DatasetKind::Ou, DatasetKind::Weights] {
         let data = dataset(ds);
-        let mut cfg = TrainConfig::default();
-        cfg.dataset = ds;
-        let mut trainer = GanTrainer::new(&cfg, 1000).expect("native trainer");
-        let mut rng = SplitPrng::new(7);
-        table.bench(&format!("native/gan_{}/reversible_heun", ds.as_str()), |_| {
-            trainer.train_step(&data, &mut rng).expect("step");
-        });
+        for precision in [TrainPrecision::F64, TrainPrecision::Mixed] {
+            let mut cfg = TrainConfig::default();
+            cfg.dataset = ds;
+            cfg.precision = precision;
+            let mut trainer = GanTrainer::new(&cfg, 1000).expect("native trainer");
+            let mut rng = SplitPrng::new(7);
+            let label = match precision {
+                TrainPrecision::F64 => "native",
+                TrainPrecision::Mixed => "mixed",
+            };
+            table.bench(
+                &format!("{label}/gan_{}/reversible_heun", ds.as_str()),
+                |_| {
+                    trainer.train_step(&data, &mut rng).expect("step");
+                },
+            );
+        }
     }
+
+    // The tentpole headline: full f64 training step over the mixed step.
+    let mut headline: Vec<(&str, Json)> = Vec::new();
+    let mut ratios = Vec::new();
+    for ds in [DatasetKind::Ou, DatasetKind::Weights] {
+        let name = ds.as_str();
+        let f64t = table.min_of(&format!("native/gan_{name}/reversible_heun"));
+        let f32t = table.min_of(&format!("mixed/gan_{name}/reversible_heun"));
+        let ratio = f64t / f32t;
+        println!("  gan_{name:<10} f64/mixed training step: {ratio:.2}x");
+        ratios.push((format!("f32_vs_f64/gan_{name}"), ratio));
+    }
+    let extras: Vec<Json> = ratios
+        .iter()
+        .map(|(k, v)| {
+            neuralsde::util::json::obj(vec![
+                ("name", Json::Str(k.clone())),
+                ("speedup", Json::Num(*v)),
+            ])
+        })
+        .collect();
+    headline.push(("speedups", Json::Arr(extras)));
 
     runtime_rows(&mut table);
 
     println!("{}", table.render());
     std::fs::create_dir_all("results").ok();
     table.write_json("results/bench_tab1_training_step.json").ok();
+    if quick {
+        // Trimmed workloads are not comparable to the tracked trajectory —
+        // never let a smoke run overwrite BENCH_pr8.json.
+        println!("smoke/QUICK run: skipping BENCH_pr8.json (full run required)");
+        return;
+    }
+    let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
+    match write_bench_json(&bench_dir, "pr8", &[&table], headline) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write BENCH json: {e}"),
+    }
 }
 
 /// The AOT-executable rows (PJRT feature + artifacts).

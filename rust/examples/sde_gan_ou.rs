@@ -42,8 +42,9 @@ fn main() -> anyhow::Result<()> {
     data.normalise_initial();
     let (train, _val, test) = data.split();
     println!(
-        "SDE-GAN / OU (native) — solver={} clip={} steps={} batch={}",
+        "SDE-GAN / OU (native) — solver={} precision={} clip={} steps={} batch={}",
         cfg.solver.as_str(),
+        cfg.precision.as_str(),
         cfg.clip,
         cfg.steps,
         cfg.batch
@@ -109,6 +110,7 @@ fn main() -> anyhow::Result<()> {
         ("experiment", Json::Str("sde_gan_ou".into())),
         ("backend", Json::Str("native".into())),
         ("solver", Json::Str(cfg.solver.as_str().into())),
+        ("precision", Json::Str(cfg.precision.as_str().into())),
         ("clip", Json::Bool(cfg.clip)),
         ("steps", Json::Num(cfg.steps as f64)),
         ("watchdog_rollbacks", Json::Num(trainer.watchdog_rollbacks() as f64)),
@@ -120,10 +122,16 @@ fn main() -> anyhow::Result<()> {
         ("loss_g_curve", num_arr(&losses_g)),
         ("loss_d_curve", num_arr(&losses_d)),
     ]);
+    // The f64 path keeps its historical filename; mixed runs get their own.
+    let precision_suffix = match cfg.precision {
+        neuralsde::config::TrainPrecision::F64 => String::new(),
+        neuralsde::config::TrainPrecision::Mixed => format!("_{}", cfg.precision.as_str()),
+    };
     let path = format!(
-        "results/sde_gan_ou_{}_{}.json",
+        "results/sde_gan_ou_{}_{}{}.json",
         cfg.solver.as_str(),
-        if cfg.clip { "clip" } else { "unconstrained" }
+        if cfg.clip { "clip" } else { "unconstrained" },
+        precision_suffix
     );
     std::fs::write(&path, out.to_string_pretty())?;
     println!("wrote {path}");

@@ -40,6 +40,38 @@ impl SolverKind {
     }
 }
 
+/// Numeric precision of the training step's SDE solves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainPrecision {
+    /// Every solve widens θ/φ and the Brownian grid to `f64` and runs on
+    /// the 4-wide lanes — the bit-pinned baseline.
+    F64,
+    /// Forward solves run on the 8-wide `f32` lanes; adjoints backpropagate
+    /// exactly (in `f64`) through the widened tape of the `f32` forward
+    /// (Micikevicius et al., *Mixed Precision Training*: master weights and
+    /// gradient accumulation stay in higher precision).
+    Mixed,
+}
+
+impl TrainPrecision {
+    /// Parse from the manifest/CLI string form.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f64" | "double" => Ok(Self::F64),
+            "mixed" | "f32" => Ok(Self::Mixed),
+            other => anyhow::bail!("unknown precision '{other}'"),
+        }
+    }
+
+    /// String form used in artifact names.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::F64 => "f64",
+            Self::Mixed => "mixed",
+        }
+    }
+}
+
 /// Which dataset an experiment trains on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DatasetKind {
@@ -114,6 +146,10 @@ pub struct TrainConfig {
     pub alpha: f32,
     /// Initialisation scale β for the vector-field networks (eq. 33).
     pub beta: f32,
+    /// Solve precision of the training step ([`TrainPrecision::F64`] keeps
+    /// every existing bitwise pin; [`TrainPrecision::Mixed`] runs forward
+    /// solves on the 8-wide `f32` lanes with exact `f64` adjoints).
+    pub precision: TrainPrecision,
 }
 
 impl Default for TrainConfig {
@@ -132,6 +168,7 @@ impl Default for TrainConfig {
             brownian_interval: true,
             alpha: 1.0,
             beta: 0.5,
+            precision: TrainPrecision::F64,
         }
     }
 }
@@ -196,6 +233,9 @@ impl TrainConfig {
         if let Some(s) = j.get("artifacts_dir").and_then(Json::as_str) {
             self.artifacts_dir = s.to_string();
         }
+        if let Some(s) = j.get("precision").and_then(Json::as_str) {
+            self.precision = TrainPrecision::parse(s)?;
+        }
         Ok(())
     }
 
@@ -222,6 +262,9 @@ impl TrainConfig {
         self.artifacts_dir = args.get_or("artifacts", &self.artifacts_dir);
         self.alpha = args.get_parse_or("alpha", self.alpha);
         self.beta = args.get_parse_or("beta", self.beta);
+        if let Some(s) = args.get("precision") {
+            self.precision = TrainPrecision::parse(&s)?;
+        }
         Ok(())
     }
 }
@@ -265,6 +308,25 @@ mod tests {
         assert_eq!(c.steps, 9);
         assert!(!c.clip);
         assert!(args.finish().is_ok());
+    }
+
+    #[test]
+    fn precision_knob() {
+        assert_eq!(TrainConfig::default().precision, TrainPrecision::F64);
+        let j = Json::parse(r#"{"precision": "mixed"}"#).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.precision, TrainPrecision::Mixed);
+        let mut args = Args::parse(
+            "train --precision f64".split_whitespace().map(String::from),
+        );
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.precision, TrainPrecision::F64);
+        assert!(args.finish().is_ok());
+        for p in [TrainPrecision::F64, TrainPrecision::Mixed] {
+            assert_eq!(TrainPrecision::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(TrainPrecision::parse("bf16").is_err());
     }
 
     #[test]

@@ -26,6 +26,21 @@
 //! training losses and parameters are bit-reproducible for any
 //! [`BatchOptions`].
 //!
+//! Precision ([`TrainPrecision`]): with the default `F64` every solve widens
+//! θ/φ and the Brownian grid and runs on the 4-wide lanes — bit-for-bit the
+//! historical trainer. With `Mixed`, the three SDE solves per adversarial
+//! round (generator forward, CDE adjoint, generator adjoint) and the eval
+//! [`GanTrainer::sample`] path run their forwards on the **8-wide `f32`
+//! lanes** straight from the Brownian sources' native `f32` output — no
+//! `widen_params`/`widen_increments` copies on the solve hot path — while
+//! every adjoint backpropagates **exactly in `f64`** through the widened
+//! tape of the `f32` forward ([`adjoint_solve_batched_steps_mixed`]).
+//! Master weights, optimiser accumulators, and the small per-path chains
+//! (ζ, ξ, readout ℓ, score means) stay in `f64`/`f32`-master form, so the
+//! gradient deviates from the all-`f64` step only by the forward's
+//! single-precision rounding, and the Tape-mode mixed adjoints keep the
+//! bit-reproducibility guarantee across every [`BatchOptions`] fan-out.
+//!
 //! Fault tolerance: the solve engines surface structured [`SolveError`]s
 //! (non-finite lanes, reconstruction drift, vector-field panics), and
 //! [`GanTrainer::train_step`] wraps each adversarial round in a training
@@ -34,7 +49,7 @@
 //! reports rollbacks/retries through [`GanStepStats`] and
 //! [`GanTrainer::watchdog_rollbacks`].
 
-use crate::config::{SolverKind, TrainConfig};
+use crate::config::{SolverKind, TrainConfig, TrainPrecision};
 use crate::coordinator::noise::{NoiseBackend, StepNoise};
 use crate::data::TimeSeriesDataset;
 use crate::nn::{
@@ -44,8 +59,9 @@ use crate::nn::{
 use crate::nn::Optimizer;
 use crate::solvers::neural::{widen_params, NeuralDiscriminatorBatch, NeuralGeneratorBatch};
 use crate::solvers::{
-    adjoint_solve_batched_steps, integrate_batched, AdjointGrad, BackwardMode, BatchOptions,
-    BatchReversibleHeun, FaultCause, SolveError, SolveFault, StoredBatchNoise,
+    adjoint_solve_batched_steps, adjoint_solve_batched_steps_mixed, integrate_batched,
+    AdjointGrad, BackwardMode, BatchOptions, BatchReversibleHeun, FaultCause, SolveError,
+    SolveFault, StoredBatchNoise,
 };
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
@@ -85,6 +101,7 @@ pub struct GanTrainer {
     spec: GanNetSpec,
     solver: SolverKind,
     clip: bool,
+    precision: TrainPrecision,
     batch: usize,
     eval_batch: usize,
     seq_len: usize,
@@ -103,6 +120,16 @@ pub struct GanTrainer {
     opt_d: Adadelta,
     swa: StochasticWeightAverage,
     noise: StepNoise,
+    /// Cached batch systems — built once, parameters refreshed in place
+    /// before each use (the previous per-call `from_f32` rebuilds were two
+    /// full layout walks + allocations per training step).
+    gen_batch: NeuralGeneratorBatch,
+    disc_batch: NeuralDiscriminatorBatch,
+    /// Persistent eval-path noise + scratch for [`Self::sample`], reset per
+    /// call so sampling stays bit-reproducible call over call.
+    eval_noise: StepNoise,
+    eval_v32: Vec<f32>,
+    eval_dws32: Vec<f32>,
     ts: Vec<f32>,
     opts: BatchOptions,
     steps_done: usize,
@@ -185,6 +212,12 @@ impl GanTrainer {
             NoiseBackend::VirtualTree { eps: 1e-5 }
         };
         let noise = StepNoise::new(backend, T0, T1, batch * spec.noise, cfg.seed ^ 0x77);
+        let gen_batch = NeuralGeneratorBatch::from_f32(&spec, &theta);
+        let disc_batch = NeuralDiscriminatorBatch::from_f32(&spec, &phi);
+        let eval_noise =
+            StepNoise::new(NoiseBackend::Interval, T0, T1, eval_batch * spec.noise, 0xE7A1);
+        let eval_v32 = vec![0.0f32; eval_batch * spec.init_noise];
+        let eval_dws32 = vec![0.0f32; (seq_len - 1) * eval_batch * spec.noise];
         let zeta = Mlp::from_layout(&gl, "zeta", Activation::Identity)?;
         let xi = Mlp::from_layout(&dl, "xi", Activation::Identity)?;
         let ell_w_off = gl
@@ -204,6 +237,7 @@ impl GanTrainer {
             spec,
             solver: cfg.solver,
             clip: cfg.clip,
+            precision: cfg.precision,
             batch,
             eval_batch,
             seq_len,
@@ -220,6 +254,11 @@ impl GanTrainer {
             opt_g,
             opt_d,
             noise,
+            gen_batch,
+            disc_batch,
+            eval_noise,
+            eval_v32,
+            eval_dws32,
             ts,
             opts: BatchOptions::auto(),
             steps_done: 0,
@@ -381,17 +420,51 @@ impl GanTrainer {
         Ok((loss_g, loss_d))
     }
 
-    /// Draw one training step's noise: initial normals `V [batch, v]` and
-    /// the Brownian grid increments, widened to the batch engine's stored
-    /// SoA form.
-    fn draw_noise(&mut self) -> (Vec<f64>, StoredBatchNoise) {
+    /// Draw one training step's noise in the Brownian sources' native
+    /// `f32`: initial normals `V [batch, v]` and the `[n][batch, w]` grid
+    /// increments. Precision-specific packing (widening for the `f64`
+    /// route, an SoA transpose with no conversion for the `f32` route)
+    /// happens at the call site — the mixed route never widens.
+    fn draw_noise_raw(&mut self) -> (Vec<f32>, Vec<f32>) {
         let (b, w, v_dim) = (self.batch, self.spec.noise, self.spec.init_noise);
         let n = self.seq_len - 1;
         let mut v32 = vec![0.0f32; b * v_dim];
         self.noise.fill_normals(&mut v32);
         let mut dws32 = vec![0.0f32; n * b * w];
         self.noise.fill(&self.ts, &mut dws32);
-        (widen_params(&v32), widen_increments(&dws32, n, w, b))
+        (v32, dws32)
+    }
+
+    /// Generator forward solve at the configured precision over `batch`
+    /// paths: the trajectory in `f64` lanes (mixed: the **exact** widening
+    /// of the `f32` solve the adjoint will re-run) plus the [`GenNoise`]
+    /// artefacts that adjoint replays. The caller must have refreshed
+    /// `self.gen_batch` with the θ it means to differentiate.
+    fn gen_forward(
+        &self,
+        z0: &[f64],
+        dws32: &[f32],
+        batch: usize,
+    ) -> Result<(Vec<f64>, GenNoise), SolveError> {
+        let w = self.spec.noise;
+        let n = self.seq_len - 1;
+        match self.precision {
+            TrainPrecision::F64 => {
+                let dws = widen_increments(dws32, n, w, batch);
+                let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
+                    &self.gen_batch, &dws, z0, batch, T0, T1, n, &self.opts,
+                )?;
+                Ok((x_traj, GenNoise::F64(dws)))
+            }
+            TrainPrecision::Mixed => {
+                let dws = StoredBatchNoise::<f32>::from_f32_grid(T0, T1, n, w, batch, dws32);
+                let z032: Vec<f32> = z0.iter().map(|&x| x as f32).collect();
+                let traj32 = integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+                    &self.gen_batch, &dws, &z032, batch, T0, T1, n, &self.opts,
+                )?;
+                Ok((traj32.iter().map(|&x| x as f64).collect(), GenNoise::F32(dws, z032)))
+            }
+        }
     }
 
     /// `ζ_θ(V)` per path, scattered to SoA `[x * batch]` lanes.
@@ -440,6 +513,25 @@ impl GanTrainer {
                     let hi = y_path[((k + 1) * y + c) * batch + p];
                     let lo = y_path[(k * y + c) * batch + p];
                     dys.set(k, c, p, hi - lo);
+                }
+            }
+        }
+        dys
+    }
+
+    /// [`Self::path_increments`] narrowed for the mixed route: the CDE's
+    /// `f32` forward consumes `ΔY` rounded once to single precision (the
+    /// mixed adjoint then backpropagates exactly through that rounded map).
+    fn path_increments_f32(&self, y_path: &[f64], batch: usize) -> StoredBatchNoise<f32> {
+        let y = self.spec.data_dim;
+        let n = self.seq_len - 1;
+        let mut dys = StoredBatchNoise::<f32>::zeros(T0, T1, n, y, batch);
+        for k in 0..n {
+            for c in 0..y {
+                for p in 0..batch {
+                    let hi = y_path[((k + 1) * y + c) * batch + p];
+                    let lo = y_path[(k * y + c) * batch + p];
+                    dys.set(k, c, p, (hi - lo) as f32);
                 }
             }
         }
@@ -521,17 +613,18 @@ impl GanTrainer {
         let b = self.batch;
         let (dh, y) = (self.spec.disc_state, self.spec.data_dim);
         let n = self.seq_len - 1;
-        let (v, dws) = self.draw_noise();
+        let (v32, dws32) = self.draw_noise_raw();
+        let v = widen_params(&v32);
         let theta64 = widen_params(&self.theta);
         let phi64 = widen_params(&self.phi);
         let m64 = phi64[self.m_off..self.m_off + dh].to_vec();
+        // Refresh the cached batch systems in place (no per-step rebuild).
+        self.gen_batch.set_params_f32(&self.theta);
+        self.disc_batch.set_params_f32(&self.phi);
 
         // Fake path (forward only — no generator gradients in this step).
-        let gen = NeuralGeneratorBatch::from_f32(&self.spec, &self.theta);
         let z0 = self.initial_state(&theta64, &v, b);
-        let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
-            &gen, &dws, &z0, b, T0, T1, n, &self.opts,
-        )?;
+        let (x_traj, _) = self.gen_forward(&z0, &dws32, b)?;
         let y_fake = self.readout(&theta64, &x_traj, b);
         // Real path, repacked [B, L, y] → per-point SoA lanes.
         let stride = self.seq_len * y;
@@ -544,33 +637,54 @@ impl GanTrainer {
             }
         }
 
-        let disc = NeuralDiscriminatorBatch::from_f32(&self.spec, &self.phi);
+        let disc = &self.disc_batch;
+        let mixed = self.precision == TrainPrecision::Mixed;
         let run = |y_path: &[f64], sign: f64| -> Result<AdjointGrad, SolveError> {
-            let dys = self.path_increments(y_path, b);
             let h0 = self.cde_initial(&phi64, y_path, b);
             let m_ref = &m64;
-            adjoint_solve_batched_steps(
-                &disc,
-                &dys,
-                &h0,
-                b,
-                T0,
-                T1,
-                n,
-                BackwardMode::Reconstruct,
-                false,
-                &self.opts,
-                &|k, _p0, cl, _z, lz| {
-                    if k == n {
-                        for (i, &mi) in m_ref.iter().enumerate() {
-                            let w = sign * mi / b as f64;
-                            for q in 0..cl {
-                                lz[i * cl + q] += w;
-                            }
+            let inject = |k: usize, _p0: usize, cl: usize, _z: &[f64], lz: &mut [f64]| {
+                if k == n {
+                    for (i, &mi) in m_ref.iter().enumerate() {
+                        let w = sign * mi / b as f64;
+                        for q in 0..cl {
+                            lz[i * cl + q] += w;
                         }
                     }
-                },
-            )
+                }
+            };
+            if mixed {
+                let dys = self.path_increments_f32(y_path, b);
+                let h032: Vec<f32> = h0.iter().map(|&x| x as f32).collect();
+                adjoint_solve_batched_steps_mixed(
+                    disc,
+                    disc,
+                    &dys,
+                    &h032,
+                    b,
+                    T0,
+                    T1,
+                    n,
+                    BackwardMode::Tape,
+                    false,
+                    &self.opts,
+                    &inject,
+                )
+            } else {
+                let dys = self.path_increments(y_path, b);
+                adjoint_solve_batched_steps(
+                    disc,
+                    &dys,
+                    &h0,
+                    b,
+                    T0,
+                    T1,
+                    n,
+                    BackwardMode::Reconstruct,
+                    false,
+                    &self.opts,
+                    &inject,
+                )
+            }
         };
         let gf = run(&y_fake, -1.0)?;
         let gr = run(&y_real_lanes, 1.0)?;
@@ -605,46 +719,67 @@ impl GanTrainer {
         let (x, y, dh) = (self.spec.state, self.spec.data_dim, self.spec.disc_state);
         let n = self.seq_len - 1;
         let v_dim = self.spec.init_noise;
-        let (v, dws) = self.draw_noise();
+        let (v32, dws32) = self.draw_noise_raw();
+        let v = widen_params(&v32);
         let theta64 = widen_params(&self.theta);
         let phi64 = widen_params(&self.phi);
         let m64 = phi64[self.m_off..self.m_off + dh].to_vec();
+        // Refresh the cached batch systems in place (no per-step rebuild).
+        self.gen_batch.set_params_f32(&self.theta);
+        self.disc_batch.set_params_f32(&self.phi);
 
-        let gen = NeuralGeneratorBatch::from_f32(&self.spec, &self.theta);
         let z0 = self.initial_state(&theta64, &v, b);
-        let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
-            &gen, &dws, &z0, b, T0, T1, n, &self.opts,
-        )?;
+        let (x_traj, gn) = self.gen_forward(&z0, &dws32, b)?;
         let y_path = self.readout(&theta64, &x_traj, b);
 
         // Discriminator response + backward: loss_g = E_p[m · H_T], so the
         // terminal cotangent is +m/B; ddw gives ∂loss/∂ΔY.
-        let disc = NeuralDiscriminatorBatch::from_f32(&self.spec, &self.phi);
-        let dys = self.path_increments(&y_path, b);
+        let disc = &self.disc_batch;
         let h0 = self.cde_initial(&phi64, &y_path, b);
         let m_ref = &m64;
-        let gcde = adjoint_solve_batched_steps(
-            &disc,
-            &dys,
-            &h0,
-            b,
-            T0,
-            T1,
-            n,
-            BackwardMode::Reconstruct,
-            true,
-            &self.opts,
-            &|k, _p0, cl, _z, lz| {
-                if k == n {
-                    for (i, &mi) in m_ref.iter().enumerate() {
-                        let w = mi / b as f64;
-                        for q in 0..cl {
-                            lz[i * cl + q] += w;
-                        }
+        let inject_cde = |k: usize, _p0: usize, cl: usize, _z: &[f64], lz: &mut [f64]| {
+            if k == n {
+                for (i, &mi) in m_ref.iter().enumerate() {
+                    let w = mi / b as f64;
+                    for q in 0..cl {
+                        lz[i * cl + q] += w;
                     }
                 }
-            },
-        )?;
+            }
+        };
+        let gcde = if self.precision == TrainPrecision::Mixed {
+            let dys = self.path_increments_f32(&y_path, b);
+            let h032: Vec<f32> = h0.iter().map(|&x| x as f32).collect();
+            adjoint_solve_batched_steps_mixed(
+                disc,
+                disc,
+                &dys,
+                &h032,
+                b,
+                T0,
+                T1,
+                n,
+                BackwardMode::Tape,
+                true,
+                &self.opts,
+                &inject_cde,
+            )?
+        } else {
+            let dys = self.path_increments(&y_path, b);
+            adjoint_solve_batched_steps(
+                disc,
+                &dys,
+                &h0,
+                b,
+                T0,
+                T1,
+                n,
+                BackwardMode::Reconstruct,
+                true,
+                &self.opts,
+                &inject_cde,
+            )?
+        };
         let loss_g = self.mean_score(&m64, &gcde, b);
 
         // Path cotangent: ΔY_k = Y_{k+1} − Y_k chains the increment
@@ -680,28 +815,47 @@ impl GanTrainer {
         }
 
         // Generator adjoint: the loss read the whole X trajectory, so the
-        // cotangents inject per step during the backward sweep.
+        // cotangents inject per step during the backward sweep. The mixed
+        // route replays the exact f32 forward (same stepper, same noise,
+        // same narrowed z₀) and backpropagates in f64 through its tape.
         let x_cot_ref = &x_cot;
-        let ggen = adjoint_solve_batched_steps(
-            &gen,
-            &dws,
-            &z0,
-            b,
-            T0,
-            T1,
-            n,
-            BackwardMode::Reconstruct,
-            false,
-            &self.opts,
-            &|k, p0, cl, _z, lz| {
-                let blk = &x_cot_ref[k * x * b..(k + 1) * x * b];
-                for i in 0..x {
-                    for q in 0..cl {
-                        lz[i * cl + q] += blk[i * b + p0 + q];
-                    }
+        let inject_gen = |k: usize, p0: usize, cl: usize, _z: &[f64], lz: &mut [f64]| {
+            let blk = &x_cot_ref[k * x * b..(k + 1) * x * b];
+            for i in 0..x {
+                for q in 0..cl {
+                    lz[i * cl + q] += blk[i * b + p0 + q];
                 }
-            },
-        )?;
+            }
+        };
+        let ggen = match &gn {
+            GenNoise::F64(dws) => adjoint_solve_batched_steps(
+                &self.gen_batch,
+                dws,
+                &z0,
+                b,
+                T0,
+                T1,
+                n,
+                BackwardMode::Reconstruct,
+                false,
+                &self.opts,
+                &inject_gen,
+            )?,
+            GenNoise::F32(dws, z032) => adjoint_solve_batched_steps_mixed(
+                &self.gen_batch,
+                &self.gen_batch,
+                dws,
+                z032,
+                b,
+                T0,
+                T1,
+                n,
+                BackwardMode::Tape,
+                false,
+                &self.opts,
+                &inject_gen,
+            )?,
+        };
         let mut gtheta = ggen.dtheta;
 
         // ζ chain at the initial condition (ascending path order).
@@ -746,28 +900,26 @@ impl GanTrainer {
     }
 
     /// Generate `n_samples` series from the (averaged) generator — native
-    /// forward solves, no runtime required.
+    /// forward solves (at the configured [`TrainPrecision`]), no runtime
+    /// required. Noise and staging buffers are the trainer's persistent
+    /// eval scratch; [`StepNoise::reset`] replays the same deterministic
+    /// sequence every call, matching the old build-a-fresh-source behaviour
+    /// without its per-call tree/cache/buffer construction.
     pub fn sample(&mut self, n_samples: usize) -> Result<TimeSeriesDataset> {
         let theta = self.final_theta();
         let theta64 = widen_params(&theta);
-        let (y, w, v_dim) = (self.spec.data_dim, self.spec.noise, self.spec.init_noise);
-        let n = self.seq_len - 1;
+        let y = self.spec.data_dim;
         let eb = self.eval_batch;
-        let gen = NeuralGeneratorBatch::from_f32(&self.spec, &theta);
-        let mut eval_noise = StepNoise::new(NoiseBackend::Interval, T0, T1, eb * w, 0xE7A1);
+        self.gen_batch.set_params_f32(&theta);
+        self.eval_noise.reset();
         let mut values = Vec::with_capacity(n_samples * self.seq_len * y);
-        let mut v32 = vec![0.0f32; eb * v_dim];
-        let mut dws32 = vec![0.0f32; n * eb * w];
         let mut produced = 0;
         while produced < n_samples {
-            eval_noise.fill_normals(&mut v32);
-            eval_noise.fill(&self.ts, &mut dws32);
-            let v = widen_params(&v32);
-            let dws = widen_increments(&dws32, n, w, eb);
+            self.eval_noise.fill_normals(&mut self.eval_v32);
+            self.eval_noise.fill(&self.ts, &mut self.eval_dws32);
+            let v = widen_params(&self.eval_v32);
             let z0 = self.initial_state(&theta64, &v, eb);
-            let x_traj = integrate_batched::<BatchReversibleHeun, _, _>(
-                &gen, &dws, &z0, eb, T0, T1, n, &self.opts,
-            )?;
+            let (x_traj, _) = self.gen_forward(&z0, &self.eval_dws32, eb)?;
             let y_path = self.readout(&theta64, &x_traj, eb);
             let take = (n_samples - produced).min(eb);
             for p in 0..take {
@@ -927,6 +1079,16 @@ impl GanTrainer {
             labels: None,
         })
     }
+}
+
+/// The generator forward's solve-precision artefacts: the stored noise
+/// (and, on the f32 route, the narrowed `z₀` lanes) the adjoint replays so
+/// its internal forward is bit-identical to the trajectory the loss read.
+enum GenNoise {
+    /// f64 route: widened stored increments.
+    F64(StoredBatchNoise),
+    /// Mixed route: native-f32 stored increments + narrowed initial state.
+    F32(StoredBatchNoise<f32>, Vec<f32>),
 }
 
 /// Clip filter: the discriminator's CDE vector fields (Section 5 applies

@@ -96,6 +96,14 @@ impl StepNoise {
         self.counter += 1;
         box_muller_fill(seed, 1.0, out);
     }
+
+    /// Rewind the draw counter to 0: the next fills replay the same
+    /// deterministic sequence a freshly built `StepNoise` would produce.
+    /// Lets callers keep one persistent source (arena, cache and buffers
+    /// alive) where they previously rebuilt it per call for reproducibility.
+    pub fn reset(&mut self) {
+        self.counter = 0;
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +163,24 @@ mod tests {
         fresh.fill(&ts, &mut scratch);
         fresh.fill(&ts, &mut third_fresh);
         assert_eq!(third_persistent, third_fresh);
+    }
+
+    #[test]
+    fn step_noise_reset_replays_from_scratch() {
+        let ts = [0.0f32, 0.5, 1.0];
+        let mut sn = StepNoise::new(NoiseBackend::Interval, 0.0, 1.0, 4, 17);
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        let mut na = vec![0.0f32; 6];
+        let mut nb = vec![0.0f32; 6];
+        sn.fill_normals(&mut na);
+        sn.fill(&ts, &mut a);
+        sn.fill(&ts, &mut b); // drift the counter further
+        sn.reset();
+        sn.fill_normals(&mut nb);
+        sn.fill(&ts, &mut b);
+        assert_eq!(na, nb);
+        assert_eq!(a, b);
     }
 
     #[test]

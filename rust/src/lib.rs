@@ -95,11 +95,28 @@
 //! a Brownian source in one `fill_grid` descent and serves it right-to-left
 //! — the Brownian Interval's reason for existing).
 //!
+//! ### Mixed-precision training
+//!
 //! The adjoint engine itself stays `f64` (gradient accuracy is the paper's
-//! point), but [`solvers::adjoint_solve_batched_mixed`] runs the *forward*
-//! trajectory on the 8-wide `f32` lanes and backpropagates exactly through
-//! the widened tape — mixed-precision training's cost in gradient accuracy
-//! is measured by `coordinator::gradient_error::run_native_mixed`.
+//! point), but the *forward* solves don't have to:
+//! [`solvers::adjoint_solve_batched_mixed`] and the full-featured
+//! [`solvers::adjoint_solve_batched_steps_mixed`] (per-step cotangent
+//! injection, `ddw` increment cotangents, the guard/fallback contract) run
+//! the forward trajectory on the 8-wide `f32` lanes and backpropagate
+//! exactly in `f64` through the widened tape. The gradients are the exact
+//! discretise-then-optimise derivatives *of the `f32` discrete map*, so
+//! they deviate from all-`f64` training only by single-precision forward
+//! rounding — measured by `coordinator::gradient_error::run_native_mixed`
+//! and bounded (< 1e-2 relative) by `tests/neural_gan.rs`. The whole
+//! SDE-GAN step rides it via [`config::TrainPrecision`]: `Mixed` routes
+//! the generator solve, both adjoint sweeps and sampling through the
+//! `f32` path with **zero per-step widening copies** (gradient
+//! accumulation and the optimiser chain rules stay `f64`, à la
+//! Micikevicius et al.), while the `F64` default keeps every historical
+//! bit. Mixed training keeps the fan-out guarantee too: its
+//! backward sweeps run in tape mode, whose results are chunk-schedule
+//! invariant, so mixed steps are bit-deterministic across every
+//! thread/chunk setting.
 //!
 //! The adjoint extends beyond terminal losses: [`solvers::adjoint_solve_steps`]
 //! injects per-step loss cotangents during the backward sweep (a

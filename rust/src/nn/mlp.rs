@@ -24,7 +24,7 @@
 //! descriptor's offsets; the input gradient is written zero-seeded.
 
 use crate::nn::{ParamKind, ParamLayout};
-use crate::solvers::simd;
+use crate::solvers::simd::{self, Lane};
 
 /// LipSwish scale: `ρ(x) = 0.909 · x · sigmoid(x)` has Lipschitz constant
 /// exactly 1 (Chen et al. 2019) — the paper's Section-5 activation.
@@ -51,6 +51,23 @@ pub fn dlipswish(u: f64) -> f64 {
     LIPSWISH_SCALE * (s + u * s * (1.0 - s))
 }
 
+// Precision-generic twins of the scalar activations, written token-for-token
+// as the `f64` forms ([`Lane::from_f64`] is the identity on `f64`, and
+// `lane_sigmoid` is the same literal expression as [`sigmoid`]), so the
+// generic layers below keep the historical `f64` bits exactly while the
+// `f32` instantiation runs the same association at single precision.
+
+#[inline]
+fn lipswish_t<T: Lane>(u: T) -> T {
+    T::from_f64(LIPSWISH_SCALE) * u * u.lane_sigmoid()
+}
+
+#[inline]
+fn dlipswish_t<T: Lane>(u: T) -> T {
+    let s = u.lane_sigmoid();
+    T::from_f64(LIPSWISH_SCALE) * (s + u * s * (T::from_f64(1.0) - s))
+}
+
 /// Final nonlinearity of a [`Mlp`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
@@ -64,26 +81,26 @@ pub enum Activation {
 }
 
 #[inline]
-fn apply_final(act: Activation, u: f64) -> f64 {
+fn apply_final<T: Lane>(act: Activation, u: T) -> T {
     match act {
         Activation::Identity => u,
-        Activation::Tanh => u.tanh(),
-        Activation::Sigmoid => sigmoid(u),
+        Activation::Tanh => u.lane_tanh(),
+        Activation::Sigmoid => u.lane_sigmoid(),
     }
 }
 
 /// Derivative factor of the final nonlinearity at pre-activation `u`.
 #[inline]
-fn dfinal(act: Activation, u: f64) -> f64 {
+fn dfinal<T: Lane>(act: Activation, u: T) -> T {
     match act {
-        Activation::Identity => 1.0,
+        Activation::Identity => T::from_f64(1.0),
         Activation::Tanh => {
-            let th = u.tanh();
-            1.0 - th * th
+            let th = u.lane_tanh();
+            T::from_f64(1.0) - th * th
         }
         Activation::Sigmoid => {
-            let s = sigmoid(u);
-            s * (1.0 - s)
+            let s = u.lane_sigmoid();
+            s * (T::from_f64(1.0) - s)
         }
     }
 }
@@ -150,23 +167,25 @@ impl Mlp {
         (w1, b1, w2, b2)
     }
 
-    /// Per-path forward: `out = final(lipswish(x·w1 + b1)·w2 + b2)`.
+    /// Per-path forward: `out = final(lipswish(x·w1 + b1)·w2 + b2)`,
+    /// generic over the [`Lane`] element type (`f64` keeps the historical
+    /// bits; `f32` runs the same token stream at single precision).
     ///
     /// The reductions run over the input index in ascending order with the
     /// bias as the seed — the association the batched form reproduces
     /// lane-for-lane.
-    pub fn forward(&self, params: &[f64], x: &[f64], out: &mut [f64]) {
+    pub fn forward<T: Lane>(&self, params: &[T], x: &[T], out: &mut [T]) {
         let (h, o) = (self.hidden, self.out_dim);
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(out.len(), o);
         let (w1o, b1o, w2o, b2o) = self.offsets();
-        let mut a1 = vec![0.0f64; h];
+        let mut a1 = vec![T::ZERO; h];
         for j in 0..h {
             let mut acc = params[b1o + j];
             for i in 0..self.in_dim {
                 acc += params[w1o + i * h + j] * x[i];
             }
-            a1[j] = lipswish(acc);
+            a1[j] = lipswish_t(acc);
         }
         for k in 0..o {
             let mut acc = params[b2o + k];
@@ -184,21 +203,21 @@ impl Mlp {
     /// nonlinearities lane-wise).
     ///
     /// [`forward`]: Self::forward
-    pub fn forward_batch(&self, params: &[f64], x: &[f64], out: &mut [f64], batch: usize) {
+    pub fn forward_batch<T: Lane>(&self, params: &[T], x: &[T], out: &mut [T], batch: usize) {
         let (h, o, b) = (self.hidden, self.out_dim, batch);
         debug_assert_eq!(x.len(), self.in_dim * b);
         debug_assert_eq!(out.len(), o * b);
         let (w1o, b1o, w2o, b2o) = self.offsets();
         let w1 = &params[w1o..w1o + self.in_dim * h];
         let w2 = &params[w2o..w2o + h * o];
-        let mut a1 = vec![0.0f64; h * b];
+        let mut a1 = vec![T::ZERO; h * b];
         for j in 0..h {
             let lane = &mut a1[j * b..(j + 1) * b];
             lane.fill(params[b1o + j]);
             simd::broadcast_matvec_strided_seeded(&w1[j..], h, x, lane);
         }
         for v in a1.iter_mut() {
-            *v = lipswish(*v);
+            *v = lipswish_t(*v);
         }
         for k in 0..o {
             let lane = &mut out[k * b..(k + 1) * b];
@@ -214,24 +233,24 @@ impl Mlp {
     /// `∂L/∂θ` (`+=`) into the flat gradient `gth` at this MLP's offsets and
     /// write the input gradient into `gx` (overwritten, zero-seeded). The
     /// forward activations are recomputed from `x`.
-    pub fn vjp(&self, params: &[f64], x: &[f64], wout: &[f64], gx: &mut [f64], gth: &mut [f64]) {
+    pub fn vjp<T: Lane>(&self, params: &[T], x: &[T], wout: &[T], gx: &mut [T], gth: &mut [T]) {
         let (h, o) = (self.hidden, self.out_dim);
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(wout.len(), o);
         debug_assert_eq!(gx.len(), self.in_dim);
         let (w1o, b1o, w2o, b2o) = self.offsets();
         // Recompute pre-activations and hidden activations.
-        let mut u1 = vec![0.0f64; h];
-        let mut a1 = vec![0.0f64; h];
+        let mut u1 = vec![T::ZERO; h];
+        let mut a1 = vec![T::ZERO; h];
         for j in 0..h {
             let mut acc = params[b1o + j];
             for i in 0..self.in_dim {
                 acc += params[w1o + i * h + j] * x[i];
             }
             u1[j] = acc;
-            a1[j] = lipswish(acc);
+            a1[j] = lipswish_t(acc);
         }
-        let mut u2 = vec![0.0f64; o];
+        let mut u2 = vec![T::ZERO; o];
         for k in 0..o {
             let mut acc = params[b2o + k];
             for j in 0..h {
@@ -240,7 +259,7 @@ impl Mlp {
             u2[k] = acc;
         }
         // Backward through the final nonlinearity and the second layer.
-        let mut s2 = vec![0.0f64; o];
+        let mut s2 = vec![T::ZERO; o];
         for k in 0..o {
             s2[k] = wout[k] * dfinal(self.final_act, u2[k]);
         }
@@ -252,13 +271,13 @@ impl Mlp {
                 gth[w2o + j * o + k] += a1[j] * s2[k];
             }
         }
-        let mut s1 = vec![0.0f64; h];
+        let mut s1 = vec![T::ZERO; h];
         for j in 0..h {
-            let mut acc = 0.0;
+            let mut acc = T::ZERO;
             for k in 0..o {
                 acc += params[w2o + j * o + k] * s2[k];
             }
-            s1[j] = acc * dlipswish(u1[j]);
+            s1[j] = acc * dlipswish_t(u1[j]);
         }
         // First layer.
         for j in 0..h {
@@ -270,7 +289,7 @@ impl Mlp {
             }
         }
         for i in 0..self.in_dim {
-            let mut acc = 0.0;
+            let mut acc = T::ZERO;
             for j in 0..h {
                 acc += params[w1o + i * h + j] * s1[j];
             }
@@ -285,13 +304,13 @@ impl Mlp {
     ///
     /// [`vjp`]: Self::vjp
     /// [`BatchSdeVjp`]: crate::solvers::BatchSdeVjp
-    pub fn vjp_batch(
+    pub fn vjp_batch<T: Lane>(
         &self,
-        params: &[f64],
-        x: &[f64],
-        wout: &[f64],
-        gx: &mut [f64],
-        gth: &mut [f64],
+        params: &[T],
+        x: &[T],
+        wout: &[T],
+        gx: &mut [T],
+        gth: &mut [T],
         batch: usize,
     ) {
         let (h, o, b) = (self.hidden, self.out_dim, batch);
@@ -303,24 +322,24 @@ impl Mlp {
         let w2 = &params[w2o..w2o + h * o];
         // Recompute pre-activations (u1 kept for ρ', a1 for the rank-one
         // weight updates) — same bias-seeded strided reductions as forward.
-        let mut u1 = vec![0.0f64; h * b];
+        let mut u1 = vec![T::ZERO; h * b];
         for j in 0..h {
             let lane = &mut u1[j * b..(j + 1) * b];
             lane.fill(params[b1o + j]);
             simd::broadcast_matvec_strided_seeded(&w1[j..], h, x, lane);
         }
-        let mut a1 = vec![0.0f64; h * b];
+        let mut a1 = vec![T::ZERO; h * b];
         for (av, &uv) in a1.iter_mut().zip(u1.iter()) {
-            *av = lipswish(uv);
+            *av = lipswish_t(uv);
         }
-        let mut u2 = vec![0.0f64; o * b];
+        let mut u2 = vec![T::ZERO; o * b];
         for k in 0..o {
             let lane = &mut u2[k * b..(k + 1) * b];
             lane.fill(params[b2o + k]);
             simd::broadcast_matvec_strided_seeded(&w2[k..], o, &a1, lane);
         }
         // s2 = wout ⊙ final'(u2).
-        let mut s2 = vec![0.0f64; o * b];
+        let mut s2 = vec![T::ZERO; o * b];
         for idx in 0..o * b {
             s2[idx] = wout[idx] * dfinal(self.final_act, u2[idx]);
         }
@@ -339,12 +358,12 @@ impl Mlp {
         }
         // s1 = (w2 s2) ⊙ ρ'(u1): row j of w2 is contiguous, so the hidden
         // cotangent is a zero-seeded broadcast reduction (scalar order).
-        let mut s1 = vec![0.0f64; h * b];
+        let mut s1 = vec![T::ZERO; h * b];
         for j in 0..h {
             simd::broadcast_matvec(&w2[j * o..(j + 1) * o], &s2, &mut s1[j * b..(j + 1) * b]);
         }
         for (sv, &uv) in s1.iter_mut().zip(u1.iter()) {
-            *sv *= dlipswish(uv);
+            *sv = *sv * dlipswish_t(uv);
         }
         for j in 0..h {
             simd::add(&s1[j * b..(j + 1) * b], &mut gth[(b1o + j) * b..(b1o + j + 1) * b]);
@@ -484,6 +503,78 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn forward_and_vjp_f32_batch_bit_identical_to_per_path() {
+        // The 8-wide f32 instantiation: batched ≡ per-path at the same
+        // element precision, on batches straddling the 8-wide unroll.
+        for act in [Activation::Identity, Activation::Tanh, Activation::Sigmoid] {
+            let (mlp, params) = demo_mlp(act);
+            let params32: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+            let total = params.len();
+            for &b in &[1usize, 3, 4, 7, 8, 33] {
+                let mut rng = SplitPrng::new(200 + b as u64);
+                let x_soa: Vec<f32> =
+                    (0..3 * b).map(|_| rng.next_normal_pair().0 as f32 * 0.5).collect();
+                let w_soa: Vec<f32> =
+                    (0..2 * b).map(|_| rng.next_normal_pair().0 as f32).collect();
+                let mut out_soa = vec![0.0f32; 2 * b];
+                mlp.forward_batch(&params32, &x_soa, &mut out_soa, b);
+                let mut gx_soa = vec![0.0f32; 3 * b];
+                let mut gth_lanes = vec![0.0f32; total * b];
+                mlp.vjp_batch(&params32, &x_soa, &w_soa, &mut gx_soa, &mut gth_lanes, b);
+                for p in 0..b {
+                    let xp: Vec<f32> = (0..3).map(|i| x_soa[i * b + p]).collect();
+                    let wp: Vec<f32> = (0..2).map(|k| w_soa[k * b + p]).collect();
+                    let mut op = [0.0f32; 2];
+                    mlp.forward(&params32, &xp, &mut op);
+                    for k in 0..2 {
+                        assert_eq!(
+                            out_soa[k * b + p],
+                            op[k],
+                            "f32 fwd act {act:?} b={b} p={p} k={k}"
+                        );
+                    }
+                    let mut gx = vec![0.0f32; 3];
+                    let mut gth = vec![0.0f32; total];
+                    mlp.vjp(&params32, &xp, &wp, &mut gx, &mut gth);
+                    for i in 0..3 {
+                        assert_eq!(gx_soa[i * b + p], gx[i], "f32 gx act {act:?} b={b} p={p}");
+                    }
+                    for m in 0..total {
+                        assert_eq!(
+                            gth_lanes[m * b + p],
+                            gth[m],
+                            "f32 gth act {act:?} b={b} p={p} m={m}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_forward_tracks_f64_forward() {
+        // Narrowed parameters and inputs produce outputs within single-
+        // precision rounding of the f64 reference — the deviation budget the
+        // mixed-precision training route inherits.
+        let (mlp, params) = demo_mlp(Activation::Tanh);
+        let params32: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+        let x = [0.3f64, -0.5, 0.8];
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut out = [0.0f64; 2];
+        mlp.forward(&params, &x, &mut out);
+        let mut out32 = [0.0f32; 2];
+        mlp.forward(&params32, &x32, &mut out32);
+        for k in 0..2 {
+            assert!(
+                (out32[k] as f64 - out[k]).abs() < 1e-5 * (1.0 + out[k].abs()),
+                "k={k}: {} vs {}",
+                out32[k],
+                out[k]
+            );
         }
     }
 

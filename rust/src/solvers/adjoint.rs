@@ -1065,11 +1065,16 @@ fn reduce_theta_ascending(gth_lanes: &[f64], pl: usize, batch: usize) -> Vec<f64
 ///
 /// `sde` and `sde32` must be the two precision instantiations of the same
 /// system (e.g. a [`super::systems::TanhDiagonalBatch`], which implements
-/// `BatchSde` at both precisions); `noise32` drives the forward and, after
-/// exact widening, the backward. The returned gradients deviate from the
-/// all-`f64` [`adjoint_solve_batched`] only by the forward's single-
-/// precision rounding — [`crate::coordinator::gradient_error::run_native_mixed`]
+/// `BatchSde` at both precisions — or a
+/// [`super::neural::NeuralGeneratorBatch`], which implements both on one
+/// value); `noise32` drives the forward and, after exact widening, the
+/// backward. The returned gradients deviate from the all-`f64`
+/// [`adjoint_solve_batched`] only by the forward's single-precision
+/// rounding — [`crate::coordinator::gradient_error::run_native_mixed`]
 /// measures exactly that deviation.
+///
+/// Terminal-only convenience over [`adjoint_solve_batched_steps_mixed`]
+/// (Tape mode, no increment cotangents), narrowing `y0` once up front.
 #[allow(clippy::too_many_arguments)]
 pub fn adjoint_solve_batched_mixed<S, S32, N32, G>(
     sde: &S,
@@ -1089,6 +1094,92 @@ where
     N32: BatchNoise<f32>,
     G: Fn(usize, usize, &[f64], &mut [f64]) + Sync,
 {
+    let y032: Vec<f32> = y0.iter().map(|&v| v as f32).collect();
+    adjoint_solve_batched_steps_mixed(
+        sde,
+        sde32,
+        noise32,
+        &y032,
+        batch,
+        t0,
+        t1,
+        n_steps,
+        BackwardMode::Tape,
+        false,
+        opts,
+        &|k, p0, cl, z, lz| {
+            if k == n_steps {
+                grad_terminal(p0, cl, z, lz);
+            }
+        },
+    )
+}
+
+/// Drift-tolerance floor for the mixed `Reconstruct` watchdog: the `f32`
+/// algebraic inversion reconstructs at single-precision roundoff
+/// (ε ≈ 1.2e-7, compounded across the sweep), so the `f64` default
+/// [`GuardConfig::drift_tol`] of `1e-6` would flag perfectly healthy
+/// solves. The effective threshold is `max(opts.guard.drift_tol, this)` —
+/// the same headroom over `f32` ε that `1e-6` gives over `f64` ε would be
+/// ≳ 1, so `1e-3` is the conservative end: genuine stiff-system divergence
+/// (growth by orders of magnitude) still trips it immediately.
+pub const MIXED_DRIFT_TOL: f64 = 1e-3;
+
+/// The general mixed-precision batched adjoint — the mixed twin of
+/// [`adjoint_solve_batched_steps`]: per-step loss cotangents, increment
+/// cotangents ([`AdjointGrad::ddw`]), and the full guard/fault/watchdog
+/// contract, over an `f32` forward and an **exact** `f64` backward.
+///
+/// The forward solve runs on the 8-wide `f32` lanes (`y0` arrives already
+/// narrowed, `[dim * batch]` SoA); every state the backward sweep touches is
+/// the exact `f64` widening of an `f32` forward state, so the accumulated
+/// cotangents are the exact discretise-then-optimise derivatives of the
+/// `f32` discrete map — the deviation from the all-`f64` gradient is the
+/// forward's single-precision rounding only.
+///
+/// Modes:
+/// * [`BackwardMode::Tape`] — the forward `(z, ẑ)` trajectory is widened
+///   into `f64` tapes once per step; the backward is the pure `f64`
+///   cotangent recursion over those tapes. Results are **bit-deterministic
+///   across every `threads`/`chunk` setting** (lane arithmetic per path,
+///   ascending θ reduction) — this is the mode the mixed training route
+///   uses.
+/// * [`BackwardMode::Reconstruct`] — O(1) memory: the `f32` reverse step
+///   reconstructs the forward states, widened into per-step scratch for the
+///   `f64` VJPs. The divergence watchdog compares reconstruction against
+///   sparse `f32` checkpoints at `max(drift_tol,` [`MIXED_DRIFT_TOL`]`)`
+///   relative drift and on breach replays the `f32` forward prefix into
+///   exact widened tapes (Reconstruct→Tape fallback,
+///   [`AdjointGrad::fallbacks`] counts the events). Because `f32`
+///   reconstruction roundoff is chunk-shape-dependent *when the watchdog
+///   fires*, only Tape mode carries the cross-fanout bit-determinism
+///   guarantee.
+///
+/// Faults follow [`adjoint_solve_batched_steps`]: non-finite forward lanes
+/// at the `check_every` cadence, backward cotangent sweeps, a terminal θ
+/// sweep, and panic isolation per chunk — all reported as structured
+/// [`SolveError`]s.
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_solve_batched_steps_mixed<S, S32, N32, G>(
+    sde: &S,
+    sde32: &S32,
+    noise32: &N32,
+    y0: &[f32],
+    batch: usize,
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    mode: BackwardMode,
+    want_ddw: bool,
+    opts: &BatchOptions,
+    grad_step: &G,
+) -> Result<AdjointGrad, SolveError>
+where
+    S: BatchSdeVjp,
+    S32: BatchSde<f32>,
+    N32: BatchNoise<f32>,
+    G: Fn(usize, usize, usize, &[f64], &mut [f64]) + Sync,
+{
     let e = sde.state_dim();
     let nd = sde.brownian_dim();
     let pl = sde.param_len();
@@ -1100,23 +1191,45 @@ where
     let chunk = opts.chunk.max(1);
     let n_chunks = (batch + chunk - 1) / chunk;
     let dtg = (t1 - t0) / n_steps as f64;
+    let tape_on = matches!(mode, BackwardMode::Tape);
     let gcfg = opts.guard.normalised();
+    // Tape mode never reconstructs: disable the watchdog in its copy.
+    let wcfg = GuardConfig {
+        checkpoint_every: if tape_on { 0 } else { gcfg.checkpoint_every },
+        ..gcfg
+    };
+    let ckpt_every = wcfg.checkpoint_every;
+    let drift_tol = gcfg.drift_tol.max(MIXED_DRIFT_TOL);
 
-    let run_chunk = |c: usize| -> Result<(Vec<f64>, Vec<f64>, Vec<f64>), Vec<SolveFault>> {
+    type ChunkGrad = (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, usize);
+    let run_chunk = |c: usize| -> Result<ChunkGrad, Vec<SolveFault>> {
         let p0 = c * chunk;
         let cl = chunk.min(batch - p0);
-        // f32 forward on 8-wide lanes, taping ẑ widened to f64.
+        // f32 forward on 8-wide lanes, taping (z, ẑ) widened to f64.
         let mut yc32 = vec![0.0f32; e * cl];
         for i in 0..e {
             for q in 0..cl {
-                yc32[i * cl + q] = y0[i * batch + p0 + q] as f32;
+                yc32[i * cl + q] = y0[i * batch + p0 + q];
             }
         }
         let mut fwd = <BatchReversibleHeun<f32> as BatchStepper>::for_chunk(sde32, t0, &yc32, cl);
         let mut dw32 = vec![0.0f32; nd * cl];
-        let mut tape: Vec<f64> = Vec::with_capacity((n_steps + 1) * e * cl);
+        let mut tape: Vec<f64> =
+            Vec::with_capacity(if tape_on { (n_steps + 1) * e * cl } else { 0 });
+        let mut tape_z: Vec<f64> =
+            Vec::with_capacity(if tape_on { (n_steps + 1) * e * cl } else { 0 });
+        // Sparse f32 (z, ẑ) checkpoint lanes for the divergence watchdog.
+        let mut ck_z: Vec<f32> = Vec::new();
+        let mut ck_zh: Vec<f32> = Vec::new();
         for k in 0..n_steps {
-            tape.extend(fwd.zh().iter().map(|&v| v as f64));
+            if tape_on {
+                tape.extend(fwd.zh().iter().map(|&v| v as f64));
+                tape_z.extend(fwd.z().iter().map(|&v| v as f64));
+            }
+            if wcfg.checkpoint_due(k) {
+                ck_z.extend_from_slice(fwd.z());
+                ck_zh.extend_from_slice(fwd.zh());
+            }
             let s = t0 + k as f64 * dtg;
             let t = t0 + (k + 1) as f64 * dtg;
             noise32.fill_step(k, s, t, p0, cl, &mut dw32);
@@ -1134,18 +1247,33 @@ where
                 }
             }
         }
-        tape.extend(fwd.zh().iter().map(|&v| v as f64));
+        if tape_on {
+            tape.extend(fwd.zh().iter().map(|&v| v as f64));
+            tape_z.extend(fwd.z().iter().map(|&v| v as f64));
+        }
         let terminal: Vec<f64> = fwd.z().iter().map(|&v| v as f64).collect();
 
-        // Exact f64 Tape-mode backward over the widened f32 trajectory.
+        // Exact f64 backward over the (widened) f32 trajectory.
         let mut lz = vec![0.0f64; e * cl];
         let mut lzh = vec![0.0f64; e * cl];
-        grad_terminal(p0, cl, &terminal, &mut lz);
+        grad_step(n_steps, p0, cl, &terminal, &mut lz);
         let mut gth = vec![0.0f64; pl * cl];
+        let mut ddw = vec![0.0f64; if want_ddw { n_steps * nd * cl } else { 0 }];
         let mut vg = vec![0.0f64; e * cl];
         let mut wf = vec![0.0f64; e * cl];
         let mut wa = vec![0.0f64; e * cl];
         let mut dw = vec![0.0f64; nd * cl];
+        let mut dwr32 = vec![0.0f32; nd * cl];
+        // Per-step widened-state scratch for Reconstruct mode (the Tape
+        // path borrows tape slices instead). The mixed Reconstruct sweep
+        // has no debug replay-assert — the f64 engine's 1e-6 bound is an
+        // f64-roundoff invariant; here the watchdog below owns divergence
+        // detection at the f32-appropriate threshold.
+        let mut zh_hi64 = vec![0.0f64; e * cl];
+        let mut zh_lo64 = vec![0.0f64; e * cl];
+        let mut z_lo64 = vec![0.0f64; e * cl];
+        let mut use_tape = tape_on;
+        let mut fallbacks = 0usize;
         for k in (0..n_steps).rev() {
             let s = t0 + k as f64 * dtg;
             let t = t0 + (k + 1) as f64 * dtg;
@@ -1161,30 +1289,123 @@ where
             simd::scale_half(&lz, &mut vg);
             simd::scale(h, &vg, &mut wf);
             wa.copy_from_slice(&lzh);
-            let zh_hi = &tape[(k + 1) * e * cl..(k + 2) * e * cl];
+            let zh_hi: &[f64] = if use_tape {
+                &tape[(k + 1) * e * cl..(k + 2) * e * cl]
+            } else {
+                for (o, &v) in zh_hi64.iter_mut().zip(fwd.zh()) {
+                    *o = v as f64;
+                }
+                &zh_hi64
+            };
             sde.drift_vjp_batch(t_hi, zh_hi, &wf, &mut wa, &mut gth, cl);
             sde.diffusion_vjp_batch(t_hi, zh_hi, &vg, &dw, &mut wa, &mut gth, cl);
+            if want_ddw {
+                sde.diffusion_dw_vjp_batch(
+                    t_hi,
+                    zh_hi,
+                    &vg,
+                    &mut ddw[k * nd * cl..(k + 1) * nd * cl],
+                    cl,
+                );
+            }
+
+            if !use_tape {
+                fwd.reverse_step(sde32, t, h, &dw32);
+                // Divergence watchdog over the chunk's f32 lanes at the
+                // mixed threshold; a breach replays the f32 forward prefix
+                // into exact widened tapes (Reconstruct→Tape fallback).
+                if wcfg.checkpoint_due(k) {
+                    let ci = k / ckpt_every;
+                    let cz = &ck_z[ci * e * cl..(ci + 1) * e * cl];
+                    let czh = &ck_zh[ci * e * cl..(ci + 1) * e * cl];
+                    let mut drift = 0.0f64;
+                    for i in 0..e * cl {
+                        drift = drift
+                            .max((fwd.z()[i] as f64 - cz[i] as f64).abs())
+                            .max((fwd.zh()[i] as f64 - czh[i] as f64).abs());
+                    }
+                    let scale = cz.iter().fold(1.0f64, |m, v| m.max((*v as f64).abs()));
+                    if !(drift <= drift_tol * scale) {
+                        tape.clear();
+                        tape_z.clear();
+                        let mut re = <BatchReversibleHeun<f32> as BatchStepper>::for_chunk(
+                            sde32, t0, &yc32, cl,
+                        );
+                        for kk in 0..k {
+                            tape.extend(re.zh().iter().map(|&v| v as f64));
+                            tape_z.extend(re.z().iter().map(|&v| v as f64));
+                            let ss = t0 + kk as f64 * dtg;
+                            let tt = t0 + (kk + 1) as f64 * dtg;
+                            noise32.fill_step(kk, ss, tt, p0, cl, &mut dwr32);
+                            re.forward_step(sde32, ss, tt - ss, &dwr32);
+                        }
+                        tape.extend(re.zh().iter().map(|&v| v as f64));
+                        tape_z.extend(re.z().iter().map(|&v| v as f64));
+                        use_tape = true;
+                        fallbacks += 1;
+                    }
+                }
+            }
+            let zh_lo: &[f64] = if use_tape {
+                &tape[k * e * cl..(k + 1) * e * cl]
+            } else {
+                for (o, &v) in zh_lo64.iter_mut().zip(fwd.zh()) {
+                    *o = v as f64;
+                }
+                &zh_lo64
+            };
 
             // Stage B.
-            let zh_lo = &tape[k * e * cl..(k + 1) * e * cl];
             simd::add_half(&wa, &lz, &mut vg);
             simd::scale(h, &vg, &mut wf);
             simd::neg(&wa, &mut lzh);
             sde.drift_vjp_batch(s, zh_lo, &wf, &mut lzh, &mut gth, cl);
             sde.diffusion_vjp_batch(s, zh_lo, &vg, &dw, &mut lzh, &mut gth, cl);
+            if want_ddw {
+                sde.diffusion_dw_vjp_batch(
+                    s,
+                    zh_lo,
+                    &vg,
+                    &mut ddw[k * nd * cl..(k + 1) * nd * cl],
+                    cl,
+                );
+            }
             simd::axpy(2.0, &wa, &mut lz);
+
+            // Per-step loss cotangents on z_k (the widened f32 state — the
+            // state the loss actually read).
+            let z_lo: &[f64] = if use_tape {
+                &tape_z[k * e * cl..(k + 1) * e * cl]
+            } else {
+                for (o, &v) in z_lo64.iter_mut().zip(fwd.z()) {
+                    *o = v as f64;
+                }
+                &z_lo64
+            };
+            grad_step(k, p0, cl, z_lo, &mut lz);
+
+            // Cotangent sweep at the guard cadence.
+            if gcfg.backward_sweep_due(k) {
+                if let Some((i, q)) = guard::first_nonfinite(&lz, e, cl)
+                    .or_else(|| guard::first_nonfinite(&lzh, e, cl))
+                {
+                    return Err(vec![SolveFault {
+                        step: k,
+                        path: p0 + q,
+                        component: i,
+                        cause: FaultCause::NonFinite,
+                    }]);
+                }
+            }
         }
         let mut dy0 = vec![0.0f64; e * cl];
         for i in 0..e * cl {
             dy0[i] = lz[i] + lzh[i];
         }
-        // Backward-result sweep: a non-finite cotangent or θ lane reports
-        // at step 0 (the sweep's end) with the first offending lane.
+        // Terminal θ sweep (the mixed contract): a non-finite θ lane
+        // reports at step 0 with the first offending lane.
         if gcfg.check_every != 0 {
-            if let Some((i, q)) = guard::first_nonfinite(&lz, e, cl)
-                .or_else(|| guard::first_nonfinite(&lzh, e, cl))
-                .or_else(|| guard::first_nonfinite(&gth, pl, cl))
-            {
+            if let Some((i, q)) = guard::first_nonfinite(&gth, pl, cl) {
                 return Err(vec![SolveFault {
                     step: 0,
                     path: p0 + q,
@@ -1193,11 +1414,11 @@ where
                 }]);
             }
         }
-        Ok((terminal, dy0, gth))
+        Ok((terminal, dy0, gth, ddw, fallbacks))
     };
 
     let chunk_results = map_chunks_isolated(n_chunks, opts.threads, run_chunk);
-    let mut chunk_grads: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = Vec::with_capacity(n_chunks);
+    let mut chunk_grads: Vec<ChunkGrad> = Vec::with_capacity(n_chunks);
     let mut faults: Vec<SolveFault> = Vec::new();
     for (c, res) in chunk_results.into_iter().enumerate() {
         match res {
@@ -1212,7 +1433,7 @@ where
         }
     }
     if !faults.is_empty() {
-        return Err(SolveError::new("adjoint_solve_batched_mixed", faults));
+        return Err(SolveError::new("adjoint_solve_batched_steps_mixed", faults));
     }
 
     // Scatter and reduce exactly as the all-f64 engine does: θ over paths
@@ -1220,7 +1441,9 @@ where
     let mut terminal = vec![0.0f64; e * batch];
     let mut dy0 = vec![0.0f64; e * batch];
     let mut gth_lanes = vec![0.0f64; pl * batch];
-    for (c, (tz, dz, gt)) in chunk_grads.iter().enumerate() {
+    let mut ddw = vec![0.0f64; if want_ddw { n_steps * nd * batch } else { 0 }];
+    let mut fallbacks = 0usize;
+    for (c, (tz, dz, gt, dd, fb)) in chunk_grads.iter().enumerate() {
         let p0 = c * chunk;
         let cl = chunk.min(batch - p0);
         for i in 0..e {
@@ -1232,11 +1455,16 @@ where
             gth_lanes[m * batch + p0..m * batch + p0 + cl]
                 .copy_from_slice(&gt[m * cl..(m + 1) * cl]);
         }
+        if want_ddw {
+            for r in 0..n_steps * nd {
+                ddw[r * batch + p0..r * batch + p0 + cl]
+                    .copy_from_slice(&dd[r * cl..(r + 1) * cl]);
+            }
+        }
+        fallbacks += fb;
     }
     let dtheta = reduce_theta_ascending(&gth_lanes, pl, batch);
-    // Mixed mode is Tape-based end to end, so the reconstruction watchdog
-    // never applies: fallbacks is structurally 0.
-    Ok(AdjointGrad { terminal, dy0, dtheta, ddw: Vec::new(), fallbacks: 0 })
+    Ok(AdjointGrad { terminal, dy0, dtheta, ddw, fallbacks })
 }
 
 /// Backward-pass Brownian replay: pulls every increment of a uniform grid

@@ -51,8 +51,9 @@ pub mod systems;
 
 pub use adjoint::{
     adjoint_solve, adjoint_solve_batched, adjoint_solve_batched_mixed,
-    adjoint_solve_batched_steps, adjoint_solve_steps, max_vjp_fd_error, AdjointGrad,
-    BackwardMode, BatchSdeVjp, GridReplayNoise, SdeVjp,
+    adjoint_solve_batched_steps, adjoint_solve_batched_steps_mixed, adjoint_solve_steps,
+    max_vjp_fd_error, AdjointGrad, BackwardMode, BatchSdeVjp, GridReplayNoise, SdeVjp,
+    MIXED_DRIFT_TOL,
 };
 pub use batch::{
     aos_to_soa, integrate_batched, integrate_batched_guarded, map_chunks, map_chunks_isolated,

@@ -32,6 +32,7 @@
 //! [`AdjointGrad::ddw`]: super::AdjointGrad::ddw
 
 use super::adjoint::{BatchSdeVjp, SdeVjp};
+use super::simd::Lane;
 use super::{BatchSde, Sde};
 use crate::nn::{Activation, GanNetSpec, Mlp};
 
@@ -46,9 +47,9 @@ fn with_time(t: f64, y: &[f64], inp: &mut [f64]) {
     inp[1..1 + y.len()].copy_from_slice(y);
 }
 
-fn with_time_batch(t: f64, y: &[f64], inp: &mut [f64], dim: usize, batch: usize) {
+fn with_time_batch<T: Lane>(t: f64, y: &[T], inp: &mut [T], dim: usize, batch: usize) {
     debug_assert_eq!(y.len(), dim * batch);
-    inp[..batch].fill(t);
+    inp[..batch].fill(T::from_f64(t));
     inp[batch..(1 + dim) * batch].copy_from_slice(y);
 }
 
@@ -154,19 +155,40 @@ impl SdeVjp for NeuralGenerator {
 
 /// Native SoA twin of [`NeuralGenerator`] — MLPs evaluated over whole path
 /// lanes, bit-identical per path to the blanket adapter.
+///
+/// Holds θ at **both** precisions: the widened `f64` copy drives the exact
+/// backward VJPs (and the historical `f64` forward), the native `f32` copy
+/// drives the 8-wide [`BatchSde<f32>`] forward without any per-step widening.
 pub struct NeuralGeneratorBatch {
     inner: NeuralGenerator,
+    params32: Vec<f32>,
 }
 
 impl NeuralGeneratorBatch {
-    /// Wrap a per-path system (shares its parameters).
+    /// Wrap a per-path system (shares its parameters; the `f32` copy is the
+    /// narrowing of the `f64` vector — exact when θ originated in `f32`).
     pub fn from_system(inner: NeuralGenerator) -> Self {
-        Self { inner }
+        let params32 = inner.params.iter().map(|&p| p as f32).collect();
+        Self { inner, params32 }
     }
 
-    /// Build directly from the trainer's flat `f32` θ.
+    /// Build directly from the trainer's flat `f32` θ — the `f32` copy keeps
+    /// the trainer's exact bits, the `f64` copy is its exact widening.
     pub fn from_f32(spec: &GanNetSpec, params: &[f32]) -> Self {
-        Self::from_system(NeuralGenerator::from_f32(spec, params))
+        let mut sys = Self::from_system(NeuralGenerator::from_f32(spec, params));
+        sys.params32.copy_from_slice(params);
+        sys
+    }
+
+    /// Refresh both parameter copies in place from the trainer's flat `f32`
+    /// θ — no reallocation, no layout re-validation (the per-step
+    /// replacement for rebuilding via [`from_f32`](Self::from_f32)).
+    pub fn set_params_f32(&mut self, params: &[f32]) {
+        assert_eq!(params.len(), self.inner.params.len(), "theta length changed");
+        for (w, &p) in self.inner.params.iter_mut().zip(params.iter()) {
+            *w = p as f64;
+        }
+        self.params32.copy_from_slice(params);
     }
 
     /// The wrapped per-path system.
@@ -195,6 +217,30 @@ impl BatchSde for NeuralGeneratorBatch {
         let mut inp = vec![0.0f64; (1 + x) * batch];
         with_time_batch(t, y, &mut inp, x, batch);
         self.inner.sigma.forward_batch(&self.inner.params, &inp, out, batch);
+    }
+}
+
+/// The 8-wide `f32` forward — same generic MLP kernels over the native
+/// `f32` θ copy, no widening anywhere on the hot path. Batched ≡ per-path
+/// bitwise at `f32` exactly as the `f64` impl is at `f64`.
+impl BatchSde<f32> for NeuralGeneratorBatch {
+    fn state_dim(&self) -> usize {
+        self.inner.x_dim
+    }
+    fn brownian_dim(&self) -> usize {
+        self.inner.w_dim
+    }
+    fn drift_batch(&self, t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let x = self.inner.x_dim;
+        let mut inp = vec![0.0f32; (1 + x) * batch];
+        with_time_batch(t, y, &mut inp, x, batch);
+        self.inner.mu.forward_batch(&self.params32, &inp, out, batch);
+    }
+    fn diffusion_batch(&self, t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let x = self.inner.x_dim;
+        let mut inp = vec![0.0f32; (1 + x) * batch];
+        with_time_batch(t, y, &mut inp, x, batch);
+        self.inner.sigma.forward_batch(&self.params32, &inp, out, batch);
     }
 }
 
@@ -372,20 +418,37 @@ impl SdeVjp for NeuralDiscriminator {
 }
 
 /// Native SoA twin of [`NeuralDiscriminator`], bit-identical per path to the
-/// blanket adapter.
+/// blanket adapter. Like [`NeuralGeneratorBatch`], it holds φ at both
+/// precisions so the `f32` forward never widens.
 pub struct NeuralDiscriminatorBatch {
     inner: NeuralDiscriminator,
+    params32: Vec<f32>,
 }
 
 impl NeuralDiscriminatorBatch {
-    /// Wrap a per-path system (shares its parameters).
+    /// Wrap a per-path system (shares its parameters; the `f32` copy is the
+    /// narrowing of the `f64` vector — exact when φ originated in `f32`).
     pub fn from_system(inner: NeuralDiscriminator) -> Self {
-        Self { inner }
+        let params32 = inner.params.iter().map(|&p| p as f32).collect();
+        Self { inner, params32 }
     }
 
-    /// Build directly from the trainer's flat `f32` φ.
+    /// Build directly from the trainer's flat `f32` φ — the `f32` copy keeps
+    /// the trainer's exact bits, the `f64` copy is its exact widening.
     pub fn from_f32(spec: &GanNetSpec, params: &[f32]) -> Self {
-        Self::from_system(NeuralDiscriminator::from_f32(spec, params))
+        let mut sys = Self::from_system(NeuralDiscriminator::from_f32(spec, params));
+        sys.params32.copy_from_slice(params);
+        sys
+    }
+
+    /// Refresh both parameter copies in place from the trainer's flat `f32`
+    /// φ — no reallocation, no layout re-validation.
+    pub fn set_params_f32(&mut self, params: &[f32]) {
+        assert_eq!(params.len(), self.inner.params.len(), "phi length changed");
+        for (w, &p) in self.inner.params.iter_mut().zip(params.iter()) {
+            *w = p as f64;
+        }
+        self.params32.copy_from_slice(params);
     }
 
     /// The wrapped per-path system.
@@ -412,6 +475,28 @@ impl BatchSde for NeuralDiscriminatorBatch {
         let mut inp = vec![0.0f64; (1 + e) * batch];
         with_time_batch(t, y, &mut inp, e, batch);
         self.inner.g.forward_batch(&self.inner.params, &inp, out, batch);
+    }
+}
+
+/// The 8-wide `f32` CDE forward over the native `f32` φ copy.
+impl BatchSde<f32> for NeuralDiscriminatorBatch {
+    fn state_dim(&self) -> usize {
+        self.inner.h_dim
+    }
+    fn brownian_dim(&self) -> usize {
+        self.inner.y_dim
+    }
+    fn drift_batch(&self, t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let e = self.inner.h_dim;
+        let mut inp = vec![0.0f32; (1 + e) * batch];
+        with_time_batch(t, y, &mut inp, e, batch);
+        self.inner.f.forward_batch(&self.params32, &inp, out, batch);
+    }
+    fn diffusion_batch(&self, t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let e = self.inner.h_dim;
+        let mut inp = vec![0.0f32; (1 + e) * batch];
+        with_time_batch(t, y, &mut inp, e, batch);
+        self.inner.g.forward_batch(&self.params32, &inp, out, batch);
     }
 }
 
@@ -568,7 +653,50 @@ mod tests {
             &spec,
             random_params(spec.disc_layout().total, 9),
         ));
-        assert_eq!(BatchSde::state_dim(&discb), 3);
-        assert_eq!(BatchSde::brownian_dim(&discb), 1);
+        assert_eq!(BatchSde::<f64>::state_dim(&discb), 3);
+        assert_eq!(BatchSde::<f64>::brownian_dim(&discb), 1);
+        assert_eq!(BatchSde::<f32>::state_dim(&discb), 3);
+        assert_eq!(BatchSde::<f32>::brownian_dim(&discb), 1);
+    }
+
+    #[test]
+    fn f32_batched_fields_bit_identical_to_per_path_mlp() {
+        // The f32 forward lanes against per-path generic MLP evaluation at
+        // f32 — the batched ≡ per-path pin at single precision, on batches
+        // straddling the 8-wide unroll.
+        let spec = tiny_spec();
+        let theta: Vec<f32> =
+            random_params(spec.gen_layout().total, 5).iter().map(|&v| v as f32).collect();
+        let genb = NeuralGeneratorBatch::from_f32(&spec, &theta);
+        let theta32 = genb.params32.clone();
+        let (x, w) = (3usize, 2usize);
+        for &b in &[1usize, 3, 4, 7, 8, 33] {
+            let aos: Vec<f32> = (0..x * b).map(|i| 0.03 * (i % 11) as f32 - 0.1).collect();
+            let mut soa = vec![0.0f32; x * b];
+            for p in 0..b {
+                for i in 0..x {
+                    soa[i * b + p] = aos[p * x + i];
+                }
+            }
+            let mut fb = vec![0.0f32; x * b];
+            let mut gb = vec![0.0f32; x * w * b];
+            genb.drift_batch(0.3, &soa, &mut fb, b);
+            genb.diffusion_batch(0.3, &soa, &mut gb, b);
+            for p in 0..b {
+                let mut inp = vec![0.0f32; 1 + x];
+                inp[0] = 0.3f64 as f32; // Lane::from_f64's exact rounding
+                inp[1..].copy_from_slice(&aos[p * x..(p + 1) * x]);
+                let mut fp = [0.0f32; 3];
+                let mut gp = [0.0f32; 6];
+                genb.system().mu.forward(&theta32, &inp, &mut fp);
+                genb.system().sigma.forward(&theta32, &inp, &mut gp);
+                for i in 0..x {
+                    assert_eq!(fb[i * b + p], fp[i], "f32 drift b={b} p={p} i={i}");
+                }
+                for r in 0..x * w {
+                    assert_eq!(gb[r * b + p], gp[r], "f32 diffusion b={b} p={p} r={r}");
+                }
+            }
+        }
     }
 }

@@ -104,6 +104,10 @@ pub trait Lane:
     fn lane_tanh(self) -> Self;
     /// `|self|` at this precision.
     fn lane_abs(self) -> Self;
+    /// The logistic sigmoid `1 / (1 + e^{-x})` at this precision, written
+    /// token-for-token as [`crate::nn::mlp`]'s scalar `sigmoid` so the `f64`
+    /// instantiation of the generic LipSwish layers keeps its exact bits.
+    fn lane_sigmoid(self) -> Self;
 }
 
 impl Lane for f64 {
@@ -136,6 +140,10 @@ impl Lane for f64 {
     fn lane_abs(self) -> Self {
         self.abs()
     }
+    #[inline(always)]
+    fn lane_sigmoid(self) -> Self {
+        1.0 / (1.0 + (-self).exp())
+    }
 }
 
 impl Lane for f32 {
@@ -167,6 +175,10 @@ impl Lane for f32 {
     #[inline(always)]
     fn lane_abs(self) -> Self {
         self.abs()
+    }
+    #[inline(always)]
+    fn lane_sigmoid(self) -> Self {
+        1.0 / (1.0 + (-self).exp())
     }
 }
 
@@ -1098,5 +1110,8 @@ mod tests {
         let src = vec![0.5f32, -1.25, 3.0];
         assert_eq!(<f64 as Lane>::vec_from_f32(src.clone()), vec![0.5f64, -1.25, 3.0]);
         assert_eq!(<f32 as Lane>::vec_from_f32(src.clone()), src);
+        // lane_sigmoid pins the exact scalar expression in both precisions.
+        assert_eq!(0.3f64.lane_sigmoid(), 1.0 / (1.0 + (-0.3f64).exp()));
+        assert_eq!(0.3f32.lane_sigmoid(), 1.0 / (1.0 + (-0.3f32).exp()));
     }
 }

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Run every benchmark in the suite and refresh the machine-tracked
+# BENCH_pr*.json trajectory files at the repo root.
+#
+# Usage:
+#   tools/bench_all.sh            # full runs (the numbers that get committed)
+#   QUICK=1 tools/bench_all.sh    # trimmed workloads; BENCH json is skipped
+#
+# Full runs take minutes; each bench also writes its local copy under
+# rust/results/. Benches that own a BENCH_pr<N>.json write it to the repo
+# root via BENCH_DIR=.. (and refuse to do so under QUICK so a smoke run
+# never overwrites tracked numbers).
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+BENCHES=(
+  tab1_training_step
+  tab2_brownian_access
+  tab3_clipping
+  tab10_sde_solve
+  serve_throughput
+)
+
+for bench in "${BENCHES[@]}"; do
+  echo "==> cargo bench --bench ${bench}"
+  BENCH_DIR=.. cargo bench --bench "${bench}"
+done
+
+echo "==> done; tracked trajectories:"
+ls -1 ../BENCH_pr*.json
