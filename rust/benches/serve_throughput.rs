@@ -16,15 +16,27 @@
 //! well past `rate × width` saturation while p99 grows gracefully instead
 //! of collapsing.
 //!
+//! Two headline workloads ride on top of the single-class sweep:
+//!
+//! * `packed_vs_fifo/*` — a **mixed-size** workload (width-4 interactive
+//!   Poisson arrivals with sharded mega-requests injected mid-stream) run
+//!   once under strict-FIFO admission and once under size-aware packing
+//!   with the priority lane, reporting per-class p50/p99 and the FIFO ÷
+//!   packed interactive-p99 ratio — the number the admission tentpole
+//!   exists to improve.
+//! * `diag_fast_path/*` — the f32 diagonal-noise market model served at
+//!   Monte-Carlo width against its dense-control twin (same fields, dense
+//!   `e×d` mat-vec), reporting the diagonal ÷ dense throughput ratio.
+//!
 //! Results go to `results/bench_serve_throughput.json` and, for the perf
-//! trajectory, `BENCH_pr7.json` (`BENCH_DIR` overrides the directory).
+//! trajectory, `BENCH_pr9.json` (`BENCH_DIR` overrides the directory).
 //! Pass `--smoke` (or `QUICK=1`) for the trimmed CI workload.
 
 use std::time::{Duration, Instant};
 
 use neuralsde::brownian::splitmix64;
-use neuralsde::solvers::systems::TanhDiagonalBatch;
-use neuralsde::solvers::{BatchReversibleHeun, ServeConfig, ServeEngine, Ticket};
+use neuralsde::solvers::systems::{MarketModel, TanhDiagonalBatch};
+use neuralsde::solvers::{AdmitPolicy, BatchReversibleHeun, ServeConfig, ServeEngine, Ticket};
 use neuralsde::util::bench::{write_bench_json, BenchTable};
 use neuralsde::util::json::{obj, Json};
 
@@ -32,6 +44,7 @@ const DIM: usize = 4;
 const WIDTH: usize = 8; // paths per request
 const N_STEPS: usize = 32;
 const N_SESSIONS: usize = 8;
+const SMALL_W: usize = 4; // interactive width in the mixed-size workload
 
 /// Uniform in (0, 1] from a counter-keyed splitmix64 draw.
 fn uniform(seed: u64, k: u64) -> f64 {
@@ -105,6 +118,147 @@ fn run_load(rate: f64, n_requests: usize) -> LoadStats {
     }
 }
 
+struct MixedStats {
+    paths_per_sec: f64,
+    small_p50_ms: f64,
+    small_p99_ms: f64,
+    huge_p50_ms: f64,
+    huge_p99_ms: f64,
+}
+
+/// The mixed-size workload: `n_small` width-[`SMALL_W`] interactive
+/// requests arrive Poisson at `small_rate`, with `n_huge` sharded
+/// `huge_w`-path mega-requests injected at even offsets through the run.
+/// One merged deterministic schedule, driven open-loop; per-class latency
+/// is collected on a dedicated thread per class so a mega-solve never
+/// head-of-line-blocks the measurement itself.
+fn run_mixed(
+    policy: AdmitPolicy,
+    small_rate: f64,
+    n_small: usize,
+    n_huge: usize,
+    huge_w: usize,
+) -> MixedStats {
+    let mut cfg = ServeConfig::new(0.0, 1.0, N_STEPS);
+    cfg.max_batch = 1024;
+    cfg.chunk = 64;
+    cfg.policy = policy;
+    cfg.shard_width = 512; // a draining mega-request leaves half the batch free
+    let engine =
+        ServeEngine::<BatchReversibleHeun, _>::new(TanhDiagonalBatch::new(DIM, 99), cfg);
+    let small_sessions: Vec<_> =
+        (0..N_SESSIONS).map(|s| engine.open_session(2000 + s as u64, SMALL_W)).collect();
+    let huge_session = engine.open_session(3000, huge_w);
+    let y0_small = vec![0.1f64; DIM * SMALL_W];
+    let y0_huge = vec![0.1f64; DIM * huge_w];
+
+    // Warm both classes off the clock (slots, grids, worker scratch).
+    for &sid in &small_sessions {
+        let t = engine.submit(sid, &y0_small);
+        engine.wait(t).expect("warmup request faulted");
+    }
+    let t = engine.submit(huge_session, &y0_huge);
+    engine.wait(t).expect("huge warmup request faulted");
+
+    // Merged schedule: small inter-arrivals are inverse-CDF exponential
+    // draws; huge requests land at even fractions of the nominal run. The
+    // schedule is policy-independent so the fifo/packed comparison sees
+    // the identical arrival stream.
+    let arrival_seed = 0x4D31_5Eu64;
+    let mut events: Vec<(f64, bool, usize)> = Vec::new(); // (time, is_huge, idx)
+    let mut t_acc = 0.0f64;
+    for r in 0..n_small {
+        t_acc += -uniform(arrival_seed, r as u64).ln() / small_rate;
+        events.push((t_acc, false, r));
+    }
+    let nominal = n_small as f64 / small_rate;
+    for h in 0..n_huge {
+        events.push((nominal * (h + 1) as f64 / (n_huge + 1) as f64, true, h));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    let (tx_s, rx_s) = std::sync::mpsc::channel::<(Ticket, Instant)>();
+    let (tx_h, rx_h) = std::sync::mpsc::channel::<(Ticket, Instant)>();
+    let mut small_lat: Vec<f64> = Vec::with_capacity(n_small);
+    let mut huge_lat: Vec<f64> = Vec::with_capacity(n_huge);
+    let wall = Instant::now();
+    std::thread::scope(|sc| {
+        let eng = &engine;
+        let sl = &mut small_lat;
+        let hl = &mut huge_lat;
+        sc.spawn(move || {
+            let mut out = Vec::new();
+            for (ticket, submitted) in rx_s {
+                eng.wait_into(ticket, &mut out).expect("small request faulted under load");
+                sl.push(submitted.elapsed().as_secs_f64());
+            }
+        });
+        sc.spawn(move || {
+            let mut out = Vec::new();
+            for (ticket, submitted) in rx_h {
+                eng.wait_into(ticket, &mut out).expect("huge request faulted under load");
+                hl.push(submitted.elapsed().as_secs_f64());
+            }
+        });
+        let start = Instant::now();
+        for &(at, is_huge, idx) in &events {
+            let due = start + Duration::from_secs_f64(at);
+            while Instant::now() < due {
+                std::hint::spin_loop();
+            }
+            if is_huge {
+                let t = engine.submit(huge_session, &y0_huge);
+                tx_h.send((t, Instant::now())).expect("huge collector died");
+            } else {
+                let sid = small_sessions[idx % small_sessions.len()];
+                let t = engine.submit(sid, &y0_small);
+                tx_s.send((t, Instant::now())).expect("small collector died");
+            }
+        }
+        drop(tx_s);
+        drop(tx_h);
+    });
+    let wall_s = wall.elapsed().as_secs_f64();
+    small_lat.sort_by(f64::total_cmp);
+    huge_lat.sort_by(f64::total_cmp);
+    let total_paths = n_small * SMALL_W + n_huge * huge_w;
+    MixedStats {
+        paths_per_sec: total_paths as f64 / wall_s,
+        small_p50_ms: percentile_ms(&small_lat, 0.50),
+        small_p99_ms: percentile_ms(&small_lat, 0.99),
+        huge_p50_ms: percentile_ms(&huge_lat, 0.50),
+        huge_p99_ms: percentile_ms(&huge_lat, 0.99),
+    }
+}
+
+/// Monte-Carlo serving throughput of the f32 market model at `n_paths`
+/// per request: the diagonal-noise fast path (`dense: false`) against the
+/// dense-control twin (`dense: true` — same fields through the full `e×d`
+/// mat-vec). Returns sustained paths/sec over `reps` back-to-back
+/// mega-requests on a warm engine.
+fn run_diag(dense: bool, n_paths: usize, reps: usize) -> f64 {
+    let model = if dense {
+        MarketModel::new(DIM, 7).martingale().dense_control()
+    } else {
+        MarketModel::new(DIM, 7).martingale()
+    };
+    let mut cfg = ServeConfig::new(0.0, 1.0, N_STEPS);
+    cfg.max_batch = 8192;
+    cfg.chunk = 256;
+    let engine = ServeEngine::<BatchReversibleHeun<f32>, _>::new(model, cfg);
+    let sid = engine.open_session(4000, n_paths);
+    let y0 = vec![1.0f32; DIM * n_paths];
+    let mut out = Vec::new();
+    let t = engine.submit(sid, &y0);
+    engine.wait_into(t, &mut out).expect("warmup request faulted");
+    let wall = Instant::now();
+    for _ in 0..reps {
+        let t = engine.submit(sid, &y0);
+        engine.wait_into(t, &mut out).expect("pricing request faulted");
+    }
+    (reps * n_paths) as f64 / wall.elapsed().as_secs_f64()
+}
+
 fn main() {
     let quick = std::env::var("QUICK").is_ok() || std::env::args().any(|a| a == "--smoke");
     let rates: &[f64] = if quick { &[500.0] } else { &[250.0, 1000.0, 4000.0] };
@@ -131,18 +285,87 @@ fn main() {
             ("p99_ms", Json::Num(s.p99_ms)),
         ]));
     }
+    // --- packed_vs_fifo: the mixed-size workload, one schedule, both
+    // admission policies. The headline is the interactive-class p99 ratio.
+    let (small_rate, n_small, n_huge, huge_w) =
+        if quick { (500.0, 60, 2, 4096) } else { (2000.0, 600, 6, 16384) };
+    let mut mixed = Vec::new();
+    for policy in [AdmitPolicy::Fifo, AdmitPolicy::Packed] {
+        let mut stats = None;
+        table.bench_n(
+            &format!("packed_vs_fifo/{}/small={n_small}/huge={n_huge}x{huge_w}", policy.as_str()),
+            1,
+            |_| {
+                stats = Some(run_mixed(policy, small_rate, n_small, n_huge, huge_w));
+            },
+        );
+        let s = stats.expect("mixed load run did not execute");
+        println!(
+            "  {:>6}  {:>10.0} paths/s  small p50 {:>7.3} / p99 {:>8.3} ms  \
+             huge p50 {:>8.1} / p99 {:>8.1} ms",
+            policy.as_str(), s.paths_per_sec, s.small_p50_ms, s.small_p99_ms, s.huge_p50_ms,
+            s.huge_p99_ms
+        );
+        rows.push(obj(vec![
+            ("workload", Json::Str("mixed_size".into())),
+            ("policy", Json::Str(policy.as_str().into())),
+            ("small_rate_hz", Json::Num(small_rate)),
+            ("small_requests", Json::Num(n_small as f64)),
+            ("huge_requests", Json::Num(n_huge as f64)),
+            ("huge_paths", Json::Num(huge_w as f64)),
+            ("paths_per_sec", Json::Num(s.paths_per_sec)),
+            ("small_p50_ms", Json::Num(s.small_p50_ms)),
+            ("small_p99_ms", Json::Num(s.small_p99_ms)),
+            ("huge_p50_ms", Json::Num(s.huge_p50_ms)),
+            ("huge_p99_ms", Json::Num(s.huge_p99_ms)),
+        ]));
+        mixed.push(s);
+    }
+    let p99_ratio = mixed[0].small_p99_ms / mixed[1].small_p99_ms;
+    println!("  packed_vs_fifo: interactive p99 fifo/packed = {p99_ratio:.2}x");
+    rows.push(obj(vec![
+        ("workload", Json::Str("mixed_size".into())),
+        ("interactive_p99_fifo_over_packed", Json::Num(p99_ratio)),
+    ]));
+
+    // --- diag_fast_path: f32 market-model Monte-Carlo serving, diagonal
+    // fast path vs the dense-control twin.
+    let (mc_paths, mc_reps) = if quick { (16_384, 1) } else { (262_144, 3) };
+    let mut rates_ps = [0.0f64; 2];
+    for (i, dense) in [false, true].into_iter().enumerate() {
+        let label = if dense { "dense_control" } else { "diagonal" };
+        let mut pps = 0.0;
+        table.bench_n(&format!("diag_fast_path/{label}/paths={mc_paths}"), 1, |_| {
+            pps = run_diag(dense, mc_paths, mc_reps);
+        });
+        println!("  diag_fast_path/{label:>13}: {pps:>12.0} paths/s");
+        rows.push(obj(vec![
+            ("workload", Json::Str("diag_fast_path".into())),
+            ("variant", Json::Str(label.into())),
+            ("paths", Json::Num(mc_paths as f64)),
+            ("paths_per_sec", Json::Num(pps)),
+        ]));
+        rates_ps[i] = pps;
+    }
+    let diag_ratio = rates_ps[0] / rates_ps[1];
+    println!("  diag_fast_path: diagonal/dense throughput = {diag_ratio:.2}x");
+    rows.push(obj(vec![
+        ("workload", Json::Str("diag_fast_path".into())),
+        ("diag_over_dense_paths_per_sec", Json::Num(diag_ratio)),
+    ]));
+
     println!("{}", table.render());
 
     std::fs::create_dir_all("results").ok();
     table.write_json("results/bench_serve_throughput.json").ok();
     if quick {
         // Trimmed workloads are not comparable to the tracked trajectory —
-        // never let a smoke run overwrite BENCH_pr7.json.
-        println!("smoke/QUICK run: skipping BENCH_pr7.json (full run required)");
+        // never let a smoke run overwrite BENCH_pr9.json.
+        println!("smoke/QUICK run: skipping BENCH_pr9.json (full run required)");
         return;
     }
     let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
-    match write_bench_json(&bench_dir, "pr7", &[&table], vec![("poisson_load", Json::Arr(rows))])
+    match write_bench_json(&bench_dir, "pr9", &[&table], vec![("poisson_load", Json::Arr(rows))])
     {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write BENCH json: {e}"),

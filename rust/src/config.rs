@@ -5,6 +5,7 @@
 //! shipped presets matching the paper's experiments. Every trainer in
 //! [`crate::coordinator`] is driven by one of these structs.
 
+use crate::solvers::{AdmitPolicy, ServeConfig};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -269,6 +270,78 @@ impl TrainConfig {
     }
 }
 
+/// Serving-engine tuning knobs shared by the benches, the Monte-Carlo
+/// pricing example and serving binaries — the CLI-facing subset of
+/// [`ServeConfig`] (the solve grid stays with the caller, it is the
+/// model's horizon, not a tuning knob).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeTuning {
+    /// Mega-batch capacity in lanes per admission round.
+    pub max_batch: usize,
+    /// Worker threads; `0` means one per core.
+    pub threads: usize,
+    /// Lanes per work unit.
+    pub chunk: usize,
+    /// Admission-packing policy.
+    pub policy: AdmitPolicy,
+    /// Per-round lane cap of one request (`0` = `max_batch`).
+    pub shard_width: usize,
+    /// Priority-lane width.
+    pub priority_width: usize,
+    /// Resident-session cap (`0` = unlimited).
+    pub max_sessions: usize,
+}
+
+impl Default for ServeTuning {
+    fn default() -> Self {
+        Self {
+            max_batch: 256,
+            threads: 0,
+            chunk: 64,
+            policy: AdmitPolicy::Packed,
+            shard_width: 0,
+            priority_width: 8,
+            max_sessions: 0,
+        }
+    }
+}
+
+impl ServeTuning {
+    /// Apply CLI overrides (`--max-batch`, `--serve-threads`, `--chunk`,
+    /// `--policy`, `--shard-width`, `--priority-width`, `--max-sessions`).
+    pub fn apply_args(&mut self, args: &mut Args) -> anyhow::Result<()> {
+        self.max_batch = args.get_parse_or("max-batch", self.max_batch);
+        self.threads = args.get_parse_or("serve-threads", self.threads);
+        self.chunk = args.get_parse_or("chunk", self.chunk);
+        self.shard_width = args.get_parse_or("shard-width", self.shard_width);
+        self.priority_width = args.get_parse_or("priority-width", self.priority_width);
+        self.max_sessions = args.get_parse_or("max-sessions", self.max_sessions);
+        if let Some(s) = args.get("policy") {
+            self.policy = match AdmitPolicy::parse(&s) {
+                Some(p) => p,
+                None => anyhow::bail!("unknown admission policy '{s}'"),
+            };
+        }
+        Ok(())
+    }
+
+    /// Build a [`ServeConfig`] over the caller's solve grid with these
+    /// knobs applied (`threads == 0` keeps the one-per-core default).
+    pub fn build(&self, t0: f64, t1: f64, n_steps: usize) -> ServeConfig {
+        let mut cfg = ServeConfig::new(t0, t1, n_steps);
+        cfg.max_batch = self.max_batch;
+        if self.threads > 0 {
+            cfg.threads = self.threads;
+        }
+        cfg.chunk = self.chunk;
+        cfg.policy = self.policy;
+        cfg.shard_width = self.shard_width;
+        cfg.priority_width = self.priority_width;
+        cfg.max_sessions = self.max_sessions;
+        cfg
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -335,6 +408,38 @@ mod tests {
             assert_eq!(SolverKind::parse(s.as_str()).unwrap(), s);
         }
         assert!(SolverKind::parse("rk4").is_err());
+    }
+
+    #[test]
+    fn serve_tuning_cli_and_build() {
+        let mut args = Args::parse(
+            "serve --max-batch 128 --policy fifo --shard-width 32 --max-sessions 4"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut t = ServeTuning::default();
+        assert_eq!(t.policy, AdmitPolicy::Packed);
+        t.apply_args(&mut args).unwrap();
+        assert!(args.finish().is_ok());
+        assert_eq!(t.max_batch, 128);
+        assert_eq!(t.policy, AdmitPolicy::Fifo);
+        assert_eq!(t.shard_width, 32);
+        assert_eq!(t.max_sessions, 4);
+        let cfg = t.build(0.0, 2.0, 16);
+        assert_eq!(cfg.max_batch, 128);
+        assert_eq!(cfg.policy, AdmitPolicy::Fifo);
+        assert_eq!(cfg.shard_width, 32);
+        assert_eq!(cfg.max_sessions, 4);
+        assert_eq!(cfg.n_steps, 16);
+        assert!(cfg.threads >= 1, "threads 0 keeps the per-core default");
+        // Unknown policies are a structured error, not a silent default.
+        let mut bad = Args::parse(
+            "serve --policy lifo".split_whitespace().map(String::from),
+        );
+        assert!(ServeTuning::default().apply_args(&mut bad).is_err());
+        for p in [AdmitPolicy::Fifo, AdmitPolicy::Packed] {
+            assert_eq!(AdmitPolicy::parse(p.as_str()), Some(p));
+        }
     }
 
     #[test]

@@ -206,19 +206,43 @@
 //!   per-request thread spawning, no per-chunk stepper construction
 //!   ([`solvers::BatchStepper::reinit`] re-initialises each worker's one
 //!   stepper in place).
-//! * **Request coalescing** — a request is a set of rows in the
+//! * **Size-aware admission packing** — a request is a set of rows in the
 //!   `[component × batch]` SoA state, so admission is *lane assignment*:
-//!   queued requests pack FIFO into one mega-batch of up to
-//!   [`solvers::ServeConfig::max_batch`] lanes. Because SIMD vectorises
-//!   across paths and never inside one path's arithmetic, the coalesced
-//!   solve is **bit-identical** to solving each request alone
-//!   (`tests/serve_engine.rs` pins widths 1/3/7/33 across thread/chunk
-//!   fan-outs).
+//!   queued requests pack into one mega-batch of up to
+//!   [`solvers::ServeConfig::max_batch`] lanes under an
+//!   [`solvers::AdmitPolicy`]. The default `Packed` policy first-fits
+//!   smaller requests into capacity a blocked head cannot use (the head
+//!   keeps its queue position — deadline-preserving, no starvation) and
+//!   drains a **priority lane** of interactive-width requests
+//!   ([`solvers::ServeConfig::priority_width`]) before bulk traffic.
+//!   Because SIMD vectorises across paths and never inside one path's
+//!   arithmetic, and each request's Brownian sample is fixed by its
+//!   submit-time counter, packing order can never change results: the
+//!   coalesced solve is **bit-identical** to solving each request alone
+//!   (`tests/serve_engine.rs` pins widths 1/3/7/33 across policies and
+//!   thread/chunk fan-outs).
+//! * **Sharded mega-requests** — a request wider than
+//!   [`solvers::ServeConfig::shard_width`] splits into per-shard lane
+//!   ranges admitted across consecutive rounds, so a 10⁶-path batch
+//!   coexists with width-1 interactive traffic instead of monopolising
+//!   the pool (`examples/mc_pricing.rs` prices a basket option this way).
+//!   Shard faults quarantine to the owning request with request-relative
+//!   coordinates; sibling shards and bystander requests keep their bits.
 //! * **Sessions own their noise** — each session holds a persistent
 //!   [`brownian::BrownianInterval`] (arenas survive across requests via
-//!   `reseed`), with per-request seeds derived by [`solvers::request_seed`]
-//!   from the session seed and request counter alone — results never
-//!   depend on lane placement or unrelated traffic.
+//!   `reseed`; sessions wider than a fixed block derive per-block seeds so
+//!   arena memory stays bounded at 10⁶ paths), with per-request seeds
+//!   derived by [`solvers::request_seed`] from the session seed and
+//!   request counter alone — results never depend on lane placement or
+//!   unrelated traffic. Above [`solvers::ServeConfig::max_sessions`]
+//!   resident sessions, the least-recently-used one's heavy state is
+//!   evicted and rebuilt **bit-identically** on its next admission by
+//!   replaying the same seed derivations.
+//! * **Diagonal-noise fast path at f32** — the engine is generic over the
+//!   [`solvers::Lane`] element: instantiated at `f32` (8-wide kernels,
+//!   half the memory traffic) a diagonal-noise system like
+//!   [`solvers::systems::MarketModel`] serves Monte-Carlo pricing loads at
+//!   million-path scale, bit-identical to the single-request f32 solve.
 //! * **Zero-allocation steady state** — slots, mega-batch arena, session
 //!   grids and worker scratch are preallocated and recycled;
 //!   [`solvers::ServeEngine::wait_into`] swaps results into caller-owned
@@ -231,7 +255,10 @@
 //!   coordinates; the faulted request's slot returns to the admission
 //!   pool and every other in-flight request keeps its exact bits.
 //! * `benches/serve_throughput.rs` drives Poisson open-loop load through
-//!   the engine and reports sustained `paths/sec` with p50/p99 latency.
+//!   the engine and reports sustained `paths/sec` with p50/p99 latency —
+//!   including mixed-size workloads (interactive p50/p99 per size class
+//!   under `packed_vs_fifo/*`) and the million-path Monte-Carlo fast path
+//!   (`diag_fast_path/*`).
 
 pub mod brownian;
 pub mod config;

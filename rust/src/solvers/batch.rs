@@ -1445,6 +1445,23 @@ pub fn aos_to_soa<T: Lane>(aos: &[T], dim: usize, batch: usize) -> Vec<T> {
     soa
 }
 
+/// The final grid point of a batched trajectory — the SoA `[dim * batch]`
+/// slice at `t1` of the `[(n_steps + 1) * dim * batch]` buffer
+/// [`integrate_batched`] (and the serving engine) returns. Borrowed, not
+/// copied: the Monte-Carlo pricing path reads 10⁶ terminal states through
+/// this without an allocation.
+pub fn terminal_states<T: Lane>(traj: &[T], dim: usize, batch: usize) -> &[T] {
+    let frame = dim * batch;
+    assert!(frame > 0, "need dim >= 1 and batch >= 1");
+    assert!(
+        !traj.is_empty() && traj.len() % frame == 0,
+        "trajectory length {} is not a multiple of dim * batch = {}",
+        traj.len(),
+        frame
+    );
+    &traj[traj.len() - frame..]
+}
+
 /// Inverse of [`aos_to_soa`].
 pub fn soa_to_aos<T: Lane>(soa: &[T], dim: usize, batch: usize) -> Vec<T> {
     assert_eq!(soa.len(), dim * batch);

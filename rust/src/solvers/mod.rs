@@ -57,16 +57,19 @@ pub use adjoint::{
 };
 pub use batch::{
     aos_to_soa, integrate_batched, integrate_batched_guarded, map_chunks, map_chunks_isolated,
-    soa_to_aos, BatchEulerMaruyama, BatchHeun, BatchMidpoint, BatchNoise, BatchOptions,
-    BatchReversibleHeun, BatchSde, BatchStepper, ChunkPanic, CounterGridNoise, PathNoiseF64,
-    StoredBatchNoise, StoredPathNoise,
+    soa_to_aos, terminal_states, BatchEulerMaruyama, BatchHeun, BatchMidpoint, BatchNoise,
+    BatchOptions, BatchReversibleHeun, BatchSde, BatchStepper, ChunkPanic, CounterGridNoise,
+    PathNoiseF64, StoredBatchNoise, StoredPathNoise,
 };
 pub use guard::{
     FaultCause, FaultPlan, FaultyBatchNoise, GuardConfig, GuardedSolve, PanicOnSentinel,
     SolveError, SolveFault,
 };
 pub use classic::{EulerMaruyama, Heun, Midpoint};
-pub use serve::{request_seed, ServeConfig, ServeEngine, SessionId, SessionNoise, Ticket};
+pub use serve::{
+    request_seed, AdmitPolicy, ServeConfig, ServeEngine, SessionId, SessionNoise, Ticket,
+    NOISE_BLOCK,
+};
 pub use simd::Lane;
 pub use convergence::{
     estimate_orders, strong_weak_errors, ConvergenceReport, FineBrownianGrid,

@@ -29,6 +29,13 @@
 //! Time enters every field as the JAX models pass it: prepended to the state
 //! (`input = [t, y…]`), and its input-gradient slot is discarded.
 //!
+//! Serving a trained generator (many concurrent sampling requests rather
+//! than one training batch) goes through the persistent [`super::serve`]
+//! engine, which coalesces requests into mega-batches — bit-identical to
+//! solo solves — and shards million-path Monte-Carlo requests across
+//! admission rounds; diagonal-noise systems can ride its 8-wide `f32`
+//! fast path.
+//!
 //! [`AdjointGrad::ddw`]: super::AdjointGrad::ddw
 
 use super::adjoint::{BatchSdeVjp, SdeVjp};

@@ -10,15 +10,41 @@
 //! * **Persistent worker pool** — [`ServeEngine::new`] spawns its workers
 //!   once; they park on a condvar between batches (no per-call
 //!   `std::thread::scope`), and are joined on drop.
-//! * **Request coalescing** — a request is just a set of rows in the
-//!   `[component × batch]` SoA state, so admission is *lane assignment*:
-//!   the front door drains queued requests FIFO into one SoA mega-batch of
-//!   up to [`ServeConfig::max_batch`] lanes, which the pool solves as a
-//!   single chunked solve. Because the engine's SIMD kernels vectorise
-//!   *across paths and never within one path's arithmetic*, the coalesced
+//! * **Size-aware admission packing** — a request is just a set of rows in
+//!   the `[component × batch]` SoA state, so admission is *lane
+//!   assignment*: the front door packs queued requests into one SoA
+//!   mega-batch of up to [`ServeConfig::max_batch`] lanes, which the pool
+//!   solves as a single chunked solve. Under [`AdmitPolicy::Packed`] (the
+//!   default) admission is deadline-preserving first-fit: a request that
+//!   does not fit the remaining lanes keeps its queue position (the head
+//!   of each queue is always admitted first into the next empty batch, so
+//!   nothing starves) while smaller requests behind it bin-pack into the
+//!   leftover capacity; [`AdmitPolicy::Fifo`] keeps the strict PR-7 order
+//!   as a measurable baseline. Because the engine's SIMD kernels vectorise
+//!   *across paths and never within one path's arithmetic*, the packed
 //!   solve is **bit-for-bit identical** to solving each request as its own
-//!   batch — for every lane assignment, chunk size and thread count
-//!   (pinned by `tests/serve_engine.rs`).
+//!   batch — for every lane assignment, packing order, chunk size and
+//!   thread count (pinned by `tests/serve_engine.rs`).
+//! * **Priority lane** — requests no wider than
+//!   [`ServeConfig::priority_width`] queue separately and are admitted
+//!   first every round, so an interactive request is never stuck behind a
+//!   mega-request: its worst case is one bounded mega-batch round, not a
+//!   10⁶-path drain.
+//! * **Sharded mega-requests** — a request wider than
+//!   [`ServeConfig::shard_width`] is split into per-shard lane ranges
+//!   admitted across consecutive mega-batch rounds, each shard chunked
+//!   across the persistent pool exactly like any other lanes (the same
+//!   work-stealing/chunk discipline as `map_chunks`, the same per-worker
+//!   `Scratch`/`reinit` zero-alloc contract). Shard faults are charged
+//!   back to the owning request; sibling shards and co-packed bystanders
+//!   keep their exact bits. A session may therefore be arbitrarily wider
+//!   than `max_batch` — the 10⁶-path Monte-Carlo shape.
+//! * **Session eviction** — above [`ServeConfig::max_sessions`] resident
+//!   sessions, the least-recently-used session's heavy state (Brownian
+//!   tree, staging buffers) is dropped. Request noise is a pure function
+//!   of `(session seed, request counter, path)` ([`request_seed`]), so an
+//!   evicted session is rebuilt **bit-identically** on its next admission
+//!   by replaying the counter — eviction is invisible in the bits.
 //! * **Per-session persistent Brownian state** — each session owns a
 //!   [`SessionNoise`]: one [`BrownianInterval`] whose node arena, LRU slot
 //!   arena and recycled buffers survive across requests
@@ -68,12 +94,31 @@ pub fn request_seed(base: u64, counter: u64) -> u64 {
     splitmix64(base ^ counter.wrapping_mul(0x9E37_79B9))
 }
 
+/// Paths per Brownian block of a wide session: sessions up to this many
+/// paths draw all channels from one [`BrownianInterval`] (the historical
+/// PR-7 derivation, bits unchanged); wider sessions derive their noise in
+/// independent `NOISE_BLOCK`-path blocks, each from the same bounded-size
+/// interval reseeded with a block-keyed splitmix of the request seed. This
+/// keeps the Brownian tree's node arena (whose per-node payload scales with
+/// channel count) bounded no matter how wide the session is — the property
+/// that makes 10⁶-path sessions serveable. Either way a request's noise is
+/// a pure function of `(session seed, request counter, path index)`.
+pub const NOISE_BLOCK: usize = 1024;
+
+/// The block-`b` reseed of a wide session's request: splitmix of the
+/// request seed and the block index.
+fn block_seed(rseed: u64, b: u64) -> u64 {
+    splitmix64(rseed ^ (b + 1).wrapping_mul(0xD1B5_4A32_D192_ED03))
+}
+
 /// A session's persistent Brownian state: one [`BrownianInterval`] (node
 /// arena, LRU arena and recycled buffers survive across requests via
 /// [`BrownianInterval::reseed`]), the fixed solve grid, and the request
 /// counter. Each request draws a fresh, deterministic sample keyed by
 /// [`request_seed`] — so a request's noise is a pure function of
-/// `(session seed, request index, path index)`, independent of coalescing.
+/// `(session seed, request index, path index)`, independent of coalescing,
+/// packing order and sharding. Sessions wider than [`NOISE_BLOCK`] draw in
+/// independent path blocks (see [`NOISE_BLOCK`]) so the tree stays small.
 ///
 /// The grid layout is `[k][p][j]` (step-major, then path, then channel) —
 /// exactly what [`super::StoredBatchNoise::from_f32_grid`] consumes, which
@@ -81,11 +126,15 @@ pub fn request_seed(base: u64, counter: u64) -> u64 {
 /// solve.
 pub struct SessionNoise {
     bi: BrownianInterval,
+    /// Staging for one `NOISE_BLOCK`-path block (empty when the session
+    /// fits a single block).
+    block: Vec<f32>,
     grid: Vec<f32>,
     ts: Vec<f64>,
     base: u64,
     counter: u64,
     n_paths: usize,
+    nd: usize,
 }
 
 impl SessionNoise {
@@ -101,15 +150,21 @@ impl SessionNoise {
         n_steps: usize,
     ) -> Self {
         assert!(noise_dim >= 1 && n_paths >= 1 && n_steps >= 1 && t1 > t0);
-        let size = noise_dim * n_paths;
+        let size = noise_dim * n_paths.min(NOISE_BLOCK);
         let dt = (t1 - t0) / n_steps as f64;
         Self {
             bi: BrownianInterval::new(t0, t1, size, seed),
-            grid: vec![0.0f32; n_steps * size],
+            block: if n_paths > NOISE_BLOCK {
+                vec![0.0f32; n_steps * noise_dim * NOISE_BLOCK]
+            } else {
+                Vec::new()
+            },
+            grid: vec![0.0f32; n_steps * noise_dim * n_paths],
             ts: (0..=n_steps).map(|k| t0 + k as f64 * dt).collect(),
             base: seed,
             counter: 0,
             n_paths,
+            nd: noise_dim,
         }
     }
 
@@ -123,16 +178,88 @@ impl SessionNoise {
         self.counter
     }
 
+    /// Fill `out` with request `counter`'s noise grid
+    /// (`[n_steps][n_paths][noise_dim]`) without touching this session's
+    /// own request counter. The engine assigns counters at *submit* time
+    /// and draws at admission time through this method, so neither packing
+    /// order nor sharding can ever change which sample a request gets.
+    /// Steady state (an `out` that has reached capacity) allocates nothing.
+    pub fn fill_request(&mut self, counter: u64, out: &mut Vec<f32>) {
+        let n_steps = self.ts.len() - 1;
+        let (m, nd) = (self.n_paths, self.nd);
+        out.clear();
+        out.resize(n_steps * m * nd, 0.0);
+        let rseed = request_seed(self.base, counter);
+        if m <= NOISE_BLOCK {
+            self.bi.reseed(rseed);
+            self.bi.fill_grid(&self.ts, out);
+            return;
+        }
+        // Wide session: independent NOISE_BLOCK-path blocks, each one
+        // bulk-fill descent of the same bounded tree, copied row-contiguous
+        // into the request grid. The last partial block draws a full block
+        // and uses its leading paths (deterministic, width-independent of
+        // the solve's shard layout).
+        let bw = NOISE_BLOCK;
+        for b in 0..(m + bw - 1) / bw {
+            self.bi.reseed(block_seed(rseed, b as u64));
+            self.bi.fill_grid(&self.ts, &mut self.block);
+            let p0 = b * bw;
+            let mb = bw.min(m - p0);
+            for k in 0..n_steps {
+                let src = &self.block[k * bw * nd..k * bw * nd + mb * nd];
+                out[(k * m + p0) * nd..(k * m + p0) * nd + mb * nd].copy_from_slice(src);
+            }
+        }
+    }
+
     /// Draw the next request's noise grid (`[n_steps][n_paths][noise_dim]`)
     /// — reseed the persistent tree with [`request_seed`] and bulk-fill the
-    /// grid in one descent. Steady state (same grid every request, the
-    /// serving case) reuses the node arena and every buffer: no allocation.
+    /// grid. Steady state (same grid every request, the serving case)
+    /// reuses the node arena and every buffer: no allocation.
     pub fn next_request(&mut self) -> &[f32] {
-        let seed = request_seed(self.base, self.counter);
+        let c = self.counter;
         self.counter += 1;
-        self.bi.reseed(seed);
-        self.bi.fill_grid(&self.ts, &mut self.grid);
+        let mut g = std::mem::take(&mut self.grid);
+        self.fill_request(c, &mut g);
+        self.grid = g;
         &self.grid
+    }
+}
+
+/// Admission-packing policy of the serving front door. Never affects bits
+/// — a request's noise is keyed by its session and submit-time counter —
+/// only which requests share a mega-batch round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitPolicy {
+    /// Strict arrival order (the PR-7 behaviour): the queue head blocks
+    /// admission when it does not fit the remaining lanes. Kept as the
+    /// measurable baseline for the `packed_vs_fifo` bench rows.
+    Fifo,
+    /// Deadline-preserving size-aware packing (the default): the priority
+    /// queue drains before the bulk queue each round, and within a queue a
+    /// head that does not fit keeps its position (it is admitted first
+    /// into the next empty batch — no starvation) while smaller requests
+    /// behind it first-fit into the leftover capacity.
+    Packed,
+}
+
+impl AdmitPolicy {
+    /// Parse from the CLI/manifest string form.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(Self::Fifo),
+            "packed" => Some(Self::Packed),
+            _ => None,
+        }
+    }
+
+    /// String form used in bench rows and artifact names.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Fifo => "fifo",
+            Self::Packed => "packed",
+        }
     }
 }
 
@@ -147,8 +274,8 @@ pub struct ServeConfig {
     pub t1: f64,
     /// Fixed solver steps per request.
     pub n_steps: usize,
-    /// Mega-batch capacity in lanes (paths). Admission packs queued
-    /// requests FIFO until the next one would not fit.
+    /// Mega-batch capacity in lanes (paths) per admission round. Requests
+    /// wider than [`shard_width`](Self::shard_width) span several rounds.
     pub max_batch: usize,
     /// Persistent worker threads (min 1).
     pub threads: usize,
@@ -161,13 +288,33 @@ pub struct ServeConfig {
     /// When true (the default), workers admit queued requests as soon as
     /// the pool is free — lowest latency. When false, requests only queue
     /// until [`ServeEngine::flush`] opens the gate for one admission round
-    /// — the deterministic-coalescing mode the bitwise tests use.
+    /// — the deterministic-coalescing mode the bitwise tests use. (A
+    /// sharded mega-request needs one flush per shard round in this mode.)
     pub auto_admit: bool,
+    /// Admission-packing policy (default [`AdmitPolicy::Packed`]).
+    pub policy: AdmitPolicy,
+    /// Maximum lanes one request may occupy in a single mega-batch round;
+    /// wider requests are sharded across consecutive rounds. `0` (the
+    /// default) means `max_batch`. Setting it *below* `max_batch` reserves
+    /// `max_batch - shard_width` lanes per round for other traffic while a
+    /// mega-request drains. Never affects bits.
+    pub shard_width: usize,
+    /// Requests at most this wide ride the priority admission lane under
+    /// [`AdmitPolicy::Packed`] (default 8 — the interactive shape).
+    pub priority_width: usize,
+    /// Resident-session cap for LRU eviction: above this many sessions
+    /// with live Brownian state, the least-recently-used one's heavy state
+    /// is dropped and rebuilt bit-identically on its next admission. `0`
+    /// (the default) disables eviction. Re-admission of an evicted session
+    /// allocates (the rebuild), so the steady-state zero-allocation pin
+    /// assumes the working set fits the cap.
+    pub max_sessions: usize,
 }
 
 impl ServeConfig {
     /// Defaults for a grid: 256-lane mega-batches, one worker per core,
-    /// 64-lane chunks, default guards, immediate admission.
+    /// 64-lane chunks, default guards, immediate admission, size-aware
+    /// packing, no sharding below `max_batch`, no session cap.
     pub fn new(t0: f64, t1: f64, n_steps: usize) -> Self {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         Self {
@@ -179,7 +326,18 @@ impl ServeConfig {
             chunk: 64,
             guard: GuardConfig::default(),
             auto_admit: true,
+            policy: AdmitPolicy::Packed,
+            shard_width: 0,
+            priority_width: 8,
+            max_sessions: 0,
         }
+    }
+
+    /// Effective per-round lane cap of a single request: `shard_width`
+    /// clamped into `[1, max_batch]`, with `0` meaning `max_batch`.
+    fn shard_lanes(&self) -> usize {
+        let s = if self.shard_width == 0 { self.max_batch } else { self.shard_width };
+        s.clamp(1, self.max_batch)
     }
 }
 
@@ -211,8 +369,19 @@ struct Slot<T> {
     gen: u64,
     session: usize,
     n_paths: usize,
+    /// Noise counter assigned at submit time — packing order and sharding
+    /// can never change which sample this request draws.
+    counter: u64,
     /// Request initial state, SoA `[dim * n_paths]`.
     y0: Vec<T>,
+    /// The request's noise grid (`[k][p][j]`), drawn once when its first
+    /// shard is admitted and read by every later shard round. Lives in the
+    /// slot (not the session) so wide requests survive session eviction
+    /// and interleaved same-session traffic.
+    grid: Vec<f32>,
+    grid_ready: bool,
+    /// Paths admitted so far — the shard cursor of a wide request.
+    admitted: usize,
     /// Result trajectory, SoA `[(n_steps + 1) * dim * n_paths]` — exactly
     /// what [`super::integrate_batched`] returns for `batch = n_paths`.
     out: Vec<T>,
@@ -227,11 +396,27 @@ impl<T> Slot<T> {
             gen: 0,
             session: 0,
             n_paths: 0,
+            counter: 0,
             y0: Vec::new(),
+            grid: Vec::new(),
+            grid_ready: false,
+            admitted: 0,
             out: Vec::new(),
             faults: Vec::new(),
         }
     }
+}
+
+/// One session at the front door: the evictable Brownian state plus the
+/// replay metadata (`seed`, `counter_next`) that rebuilds it bit-for-bit.
+struct Session {
+    noise: Option<SessionNoise>,
+    seed: u64,
+    n_paths: usize,
+    /// Next request counter, assigned at submit time.
+    counter_next: u64,
+    /// LRU tick of the last submit on this session.
+    last_used: u64,
 }
 
 /// The in-flight mega-batch: chunk cursor plus completion count.
@@ -242,18 +427,52 @@ struct Active {
     remaining: usize,
 }
 
-/// Front-door state, under one mutex: the admission queue, the slot pool,
+/// Front-door state, under one mutex: the admission queues, the slot pool,
 /// the sessions, and the lane map of the active batch.
 struct Door<T> {
-    pending: VecDeque<usize>,
+    /// Priority admission lane (requests ≤ `priority_width` under
+    /// [`AdmitPolicy::Packed`]): drained before `pending_lo` every round.
+    pending_hi: VecDeque<usize>,
+    /// Bulk admission lane.
+    pending_lo: VecDeque<usize>,
     free_slots: Vec<usize>,
     slots: Vec<Slot<T>>,
-    sessions: Vec<SessionNoise>,
+    sessions: Vec<Session>,
+    /// Sessions with live Brownian state (`noise.is_some()`).
+    resident: usize,
+    /// Monotone LRU clock, bumped per submit.
+    tick: u64,
     /// Mega lane → `(slot, request-relative path)` for the active batch.
     lane_map: Vec<(usize, usize)>,
     active: Option<Active>,
     gate_open: bool,
     shutdown: bool,
+}
+
+/// Drop the least-recently-used resident sessions until the cap holds
+/// (`keep` — the session just touched — is never the victim). Eviction
+/// only drops rebuildable state, so it is always safe: a victim with
+/// queued requests just pays the rebuild at its next admission.
+fn evict_over_cap<T>(door: &mut Door<T>, cap: usize, keep: usize) {
+    if cap == 0 {
+        return;
+    }
+    while door.resident > cap {
+        let victim = door
+            .sessions
+            .iter()
+            .enumerate()
+            .filter(|(s, sess)| *s != keep && sess.noise.is_some())
+            .min_by_key(|(_, sess)| sess.last_used)
+            .map(|(s, _)| s);
+        match victim {
+            Some(s) => {
+                door.sessions[s].noise = None;
+                door.resident -= 1;
+            }
+            None => break,
+        }
+    }
 }
 
 /// The solve inputs of the active batch, preallocated at `max_batch`
@@ -380,10 +599,13 @@ where
             dim,
             nd,
             door: Mutex::new(Door {
-                pending: VecDeque::with_capacity(cap),
+                pending_hi: VecDeque::with_capacity(cap),
+                pending_lo: VecDeque::with_capacity(cap),
                 free_slots: Vec::with_capacity(cap),
                 slots: Vec::new(),
                 sessions: Vec::new(),
+                resident: 0,
+                tick: 0,
                 lane_map: Vec::with_capacity(cap),
                 active: None,
                 gate_open: cfg.auto_admit,
@@ -411,30 +633,54 @@ where
     }
 
     /// Open a session: persistent Brownian state for requests of `n_paths`
-    /// paths each, keyed by `seed`. Sessions live as long as the engine.
+    /// paths each, keyed by `seed`. Sessions live as long as the engine
+    /// (above [`ServeConfig::max_sessions`] only replay metadata survives
+    /// eviction — the bits never change). A session may be wider than
+    /// `max_batch`: its requests are sharded across admission rounds.
     pub fn open_session(&self, seed: u64, n_paths: usize) -> SessionId {
         assert!(n_paths >= 1, "need at least one path per request");
-        assert!(
-            n_paths <= self.shared.cfg.max_batch,
-            "session width {n_paths} exceeds max_batch {}",
-            self.shared.cfg.max_batch
-        );
         let cfg = &self.shared.cfg;
-        let sess = SessionNoise::new(seed, self.shared.nd, n_paths, cfg.t0, cfg.t1, cfg.n_steps);
+        let noise = SessionNoise::new(seed, self.shared.nd, n_paths, cfg.t0, cfg.t1, cfg.n_steps);
         let mut door = lock(&self.shared.door);
+        door.tick += 1;
+        let sess = Session {
+            noise: Some(noise),
+            seed,
+            n_paths,
+            counter_next: 0,
+            last_used: door.tick,
+        };
         door.sessions.push(sess);
-        SessionId(door.sessions.len() - 1)
+        door.resident += 1;
+        let id = door.sessions.len() - 1;
+        evict_over_cap(&mut door, cfg.max_sessions, id);
+        SessionId(id)
+    }
+
+    /// Resident sessions with live Brownian state (evicted sessions keep
+    /// only replay metadata). Introspection for tests and capacity tuning.
+    pub fn resident_sessions(&self) -> usize {
+        lock(&self.shared.door).resident
     }
 
     /// Queue one sampling request: solve the session's `n_paths` paths from
     /// the SoA initial state `y0` (`[dim * n_paths]`) with the session's
-    /// next Brownian sample. Returns immediately; redeem the ticket with
-    /// [`wait`](Self::wait) / [`wait_into`](Self::wait_into).
+    /// next Brownian sample (counter assigned here, so admission order
+    /// never changes the sample). Returns immediately; redeem the ticket
+    /// with [`wait`](Self::wait) / [`wait_into`](Self::wait_into).
     pub fn submit(&self, session: SessionId, y0: &[M::Elem]) -> Ticket {
         let sh = &*self.shared;
         let mut door = lock(&sh.door);
         assert!(!door.shutdown, "serve: engine is shutting down");
-        let m = door.sessions[session.0].n_paths();
+        door.tick += 1;
+        let tick = door.tick;
+        let (m, counter) = {
+            let sess = &mut door.sessions[session.0];
+            sess.last_used = tick;
+            let c = sess.counter_next;
+            sess.counter_next += 1;
+            (sess.n_paths, c)
+        };
         assert_eq!(y0.len(), sh.dim * m, "y0 must be SoA [dim * n_paths] at the session width");
         let si = match door.free_slots.pop() {
             Some(si) => si,
@@ -448,21 +694,30 @@ where
             slot.state = SlotState::Queued;
             slot.session = session.0;
             slot.n_paths = m;
+            slot.counter = counter;
+            slot.grid_ready = false;
+            slot.admitted = 0;
             slot.y0.clear();
             slot.y0.extend_from_slice(y0);
             slot.faults.clear();
             slot.gen
         };
-        door.pending.push_back(si);
+        let hi = sh.cfg.policy == AdmitPolicy::Packed && m <= sh.cfg.priority_width;
+        if hi {
+            door.pending_hi.push_back(si);
+        } else {
+            door.pending_lo.push_back(si);
+        }
+        evict_over_cap(&mut door, sh.cfg.max_sessions, session.0);
         drop(door);
         sh.work_cv.notify_all();
         Ticket { slot: si, gen }
     }
 
     /// Open the admission gate for one round (the `auto_admit: false`
-    /// coalescing mode): everything queued is packed FIFO into mega-batches
-    /// until the queue drains or a request doesn't fit. No-op when
-    /// `auto_admit` is on.
+    /// coalescing mode): queued requests are packed into one mega-batch
+    /// round under the configured [`AdmitPolicy`]. A sharded mega-request
+    /// consumes one flush per shard round. No-op when `auto_admit` is on.
     pub fn flush(&self) {
         let mut door = lock(&self.shared.door);
         door.gate_open = true;
@@ -485,35 +740,31 @@ where
         let sh = &*self.shared;
         let mut door = lock(&sh.door);
         loop {
-            let slot = &mut door.slots[ticket.slot];
-            assert_eq!(slot.gen, ticket.gen, "serve: stale ticket (already collected?)");
-            match slot.state {
-                SlotState::Done => {
-                    out.clear();
-                    std::mem::swap(&mut slot.out, out);
-                    slot.state = SlotState::Free;
-                    slot.gen += 1;
-                    door.free_slots.push(ticket.slot);
-                    return Ok(());
-                }
-                SlotState::Faulted => {
-                    let faults = std::mem::take(&mut slot.faults);
-                    slot.state = SlotState::Free;
-                    slot.gen += 1;
-                    door.free_slots.push(ticket.slot);
-                    return Err(SolveError::new("serve: request faulted", faults));
-                }
-                _ => {
-                    if door.shutdown {
-                        return Err(SolveError::new(
-                            "serve: engine shut down before the request completed",
-                            Vec::new(),
-                        ));
-                    }
-                    door = sh.done_cv.wait(door).unwrap_or_else(|e| e.into_inner());
-                }
+            if let Some(res) = collect_slot(&mut door, ticket, out) {
+                return res;
             }
+            if door.shutdown {
+                return Err(SolveError::new(
+                    "serve: engine shut down before the request completed",
+                    Vec::new(),
+                ));
+            }
+            door = sh.done_cv.wait(door).unwrap_or_else(|e| e.into_inner());
         }
+    }
+
+    /// Non-blocking poll of a ticket: `None` while the request is still
+    /// queued or in flight (the ticket stays redeemable), `Some` once it
+    /// completed — with exactly [`wait_into`](Self::wait_into)'s collect
+    /// semantics (trajectory swapped into `out`, slot released). Lets a
+    /// caller interleave interactive traffic while a sharded mega-request
+    /// drains.
+    pub fn try_wait_into(
+        &self,
+        ticket: Ticket,
+        out: &mut Vec<M::Elem>,
+    ) -> Option<Result<(), SolveError>> {
+        collect_slot(&mut lock(&self.shared.door), ticket, out)
     }
 
     /// Allocating convenience over [`wait_into`](Self::wait_into).
@@ -542,9 +793,113 @@ where
     }
 }
 
-/// Pack queued requests FIFO into the arena as one mega-batch. Caller
-/// holds the door mutex and the arena write lock (lock order: door →
-/// arena, always). Returns false when nothing was admitted.
+/// Collect a completed ticket's result out of its slot, releasing the slot
+/// back to the pool. `None` while the request is queued or in flight.
+/// Caller holds the door mutex.
+fn collect_slot<T>(
+    door: &mut Door<T>,
+    ticket: Ticket,
+    out: &mut Vec<T>,
+) -> Option<Result<(), SolveError>> {
+    let slot = &mut door.slots[ticket.slot];
+    assert_eq!(slot.gen, ticket.gen, "serve: stale ticket (already collected?)");
+    match slot.state {
+        SlotState::Done => {
+            out.clear();
+            std::mem::swap(&mut slot.out, out);
+            slot.state = SlotState::Free;
+            slot.gen += 1;
+            door.free_slots.push(ticket.slot);
+            Some(Ok(()))
+        }
+        SlotState::Faulted => {
+            let faults = std::mem::take(&mut slot.faults);
+            slot.state = SlotState::Free;
+            slot.gen += 1;
+            door.free_slots.push(ticket.slot);
+            Some(Err(SolveError::new("serve: request faulted", faults)))
+        }
+        _ => None,
+    }
+}
+
+/// Admit `take` lanes of request `si` (request paths `p0 .. p0 + take`)
+/// into the arena at mega-lane `base`: draw the request's noise grid on
+/// first admission (rebuilding an evicted session bit-identically from its
+/// replay metadata), transpose the shard's noise and initial state into
+/// the SoA arena, and extend the lane map. Returns 1 when a session
+/// rebuild made it resident again. Caller holds the door mutex (fields
+/// split-borrowed) and the arena write lock.
+#[allow(clippy::too_many_arguments)]
+fn admit_range<T: Lane>(
+    cfg: &ServeConfig,
+    dim: usize,
+    nd: usize,
+    slots: &mut [Slot<T>],
+    sessions: &mut [Session],
+    lane_map: &mut Vec<(usize, usize)>,
+    arena: &mut Arena<T>,
+    si: usize,
+    p0: usize,
+    take: usize,
+    base: usize,
+) -> usize {
+    let n_steps = cfg.n_steps;
+    let cap = cfg.max_batch;
+    let slot = &mut slots[si];
+    let m = slot.n_paths;
+    let mut rebuilt = 0usize;
+    if !slot.grid_ready {
+        // First shard of this request: draw the whole request's sample
+        // once. The noise is keyed by (session seed, submit-time counter)
+        // alone — lane placement, co-packed neighbours and the shard
+        // layout cannot affect it.
+        let sess = &mut sessions[slot.session];
+        if sess.noise.is_none() {
+            sess.noise =
+                Some(SessionNoise::new(sess.seed, nd, m, cfg.t0, cfg.t1, cfg.n_steps));
+            rebuilt = 1;
+        }
+        let noise = sess.noise.as_mut().expect("serve: session noise just rebuilt");
+        let mut grid = std::mem::take(&mut slot.grid);
+        noise.fill_request(slot.counter, &mut grid);
+        slot.grid = grid;
+        slot.grid_ready = true;
+        slot.out.clear();
+        slot.out.resize((n_steps + 1) * dim * m, T::ZERO);
+        slot.faults.clear();
+        slot.state = SlotState::InFlight;
+    }
+    // The transpose writes exactly `StoredBatchNoise::from_f32_grid`'s
+    // lanes at batch = max_batch, shifted to this shard's lane range.
+    for k in 0..n_steps {
+        for t in 0..take {
+            let row = (k * m + p0 + t) * nd;
+            for j in 0..nd {
+                arena.noise[(k * nd + j) * cap + base + t] = T::from_f32(slot.grid[row + j]);
+            }
+        }
+    }
+    for i in 0..dim {
+        for t in 0..take {
+            arena.y0[i * cap + base + t] = slot.y0[i * m + p0 + t];
+        }
+    }
+    for t in 0..take {
+        lane_map.push((si, p0 + t));
+    }
+    slot.admitted += take;
+    rebuilt
+}
+
+/// Pack queued requests into the arena as one mega-batch round. Priority
+/// lane first, then bulk; within a queue, [`AdmitPolicy::Packed`] first-fits
+/// past a head that does not fit (deadline-preserving: the head is always
+/// admitted first into the next empty batch) while [`AdmitPolicy::Fifo`]
+/// stops at it. Requests wider than the shard width contribute one lane
+/// range per round and keep their queue position until fully admitted.
+/// Caller holds the door mutex and the arena write lock (lock order: door
+/// → arena, always). Returns false when nothing was admitted.
 fn try_admit<T: Lane>(
     cfg: &ServeConfig,
     dim: usize,
@@ -552,52 +907,61 @@ fn try_admit<T: Lane>(
     door: &mut Door<T>,
     arena: &mut Arena<T>,
 ) -> bool {
-    if door.active.is_some() || !door.gate_open || door.pending.is_empty() {
+    if door.active.is_some() || !door.gate_open {
+        return false;
+    }
+    if door.pending_hi.is_empty() && door.pending_lo.is_empty() {
         return false;
     }
     let cap = cfg.max_batch;
-    let n_steps = cfg.n_steps;
-    let Door { pending, slots, sessions, lane_map, .. } = door;
+    let shard = cfg.shard_lanes();
+    let fifo = cfg.policy == AdmitPolicy::Fifo;
+    let Door { pending_hi, pending_lo, slots, sessions, lane_map, resident, .. } = door;
     lane_map.clear();
     let mut lanes = 0usize;
-    while let Some(&si) = pending.front() {
-        let m = slots[si].n_paths;
-        if lanes + m > cap {
-            break; // FIFO: never skip ahead of a request that doesn't fit
-        }
-        pending.pop_front();
-        let base = lanes;
-        lanes += m;
-        // The request's noise is keyed by its session alone — lane
-        // placement cannot affect it. The transpose below writes exactly
-        // `StoredBatchNoise::from_f32_grid`'s lanes at batch = max_batch.
-        let sess_idx = slots[si].session;
-        let grid = sessions[sess_idx].next_request();
-        for k in 0..n_steps {
-            for p in 0..m {
-                let row = (k * m + p) * nd;
-                for j in 0..nd {
-                    arena.noise[(k * nd + j) * cap + base + p] = T::from_f32(grid[row + j]);
+    for queue in [pending_hi, pending_lo] {
+        let mut i = 0usize;
+        while lanes < cap {
+            let Some(&si) = queue.get(i) else { break };
+            let m = slots[si].n_paths;
+            let done = slots[si].admitted;
+            let rem = m - done;
+            let take = if m <= shard {
+                // Atomic request: all lanes in one round or none.
+                if rem <= cap - lanes {
+                    rem
+                } else {
+                    0
                 }
+            } else {
+                // Sharded mega-request: one lane range per round, capped
+                // at the shard width so co-packed traffic keeps flowing.
+                rem.min(shard).min(cap - lanes)
+            };
+            if take == 0 {
+                if fifo {
+                    break; // strict FIFO: never skip ahead of the head
+                }
+                i += 1; // packed: bin-pack smaller requests behind it
+                continue;
             }
-        }
-        let slot = &mut slots[si];
-        for i in 0..dim {
-            for p in 0..m {
-                arena.y0[i * cap + base + p] = slot.y0[i * m + p];
+            *resident +=
+                admit_range(cfg, dim, nd, slots, sessions, lane_map, arena, si, done, take, lanes);
+            lanes += take;
+            if slots[si].admitted == m {
+                queue.remove(i);
+            } else {
+                i += 1; // partial shard: keeps its place for the next round
             }
-        }
-        slot.out.clear();
-        slot.out.resize((n_steps + 1) * dim * m, T::ZERO);
-        slot.faults.clear();
-        slot.state = SlotState::InFlight;
-        for p in 0..m {
-            lane_map.push((si, p));
         }
     }
     if lanes == 0 {
         return false;
     }
+    // Admission-time rebuilds may push the resident count back over the
+    // cap; re-evict immediately (the drawn grids live in the slots, so even
+    // a just-rebuilt session is safe to drop again).
+    evict_over_cap(door, cfg.max_sessions, usize::MAX);
     if !cfg.auto_admit {
         door.gate_open = false; // one flush = one admission round
     }
@@ -607,13 +971,15 @@ fn try_admit<T: Lane>(
     true
 }
 
-/// Mark every slot of the finished batch Done or Faulted. Caller holds the
-/// door mutex; `wait_into` picks the slots up via `done_cv`.
+/// Mark every fully-admitted slot of the finished round Done or Faulted —
+/// a sharded request only completes with its final shard's round (rounds
+/// are sequential, so all earlier shards are already recorded). Caller
+/// holds the door mutex; `wait_into` picks the slots up via `done_cv`.
 fn finalize<T>(door: &mut Door<T>, lanes: usize) {
     for l in 0..lanes {
         let (si, _) = door.lane_map[l];
         let slot = &mut door.slots[si];
-        if slot.state == SlotState::InFlight {
+        if slot.state == SlotState::InFlight && slot.admitted == slot.n_paths {
             slot.state =
                 if slot.faults.is_empty() { SlotState::Done } else { SlotState::Faulted };
         }

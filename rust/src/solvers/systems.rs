@@ -775,6 +775,214 @@ impl SdeVjp for TimeDependentOu {
     }
 }
 
+/// One asset row of the market model's fields, over all path lanes.
+/// Diagonal drift: `out[p] = κ (μ − y[p])`; sigmoid local volatility:
+/// `out[p] = ν σ(a + b y[p])` — smooth, bounded and strictly positive.
+/// Generic over the lane element type so both precisions run the same
+/// token stream (the bit-identity-sensitive part, as for
+/// [`tanh_matvec_row`]).
+fn ou_drift_row<T: Lane>(kappa: T, mu: T, y: &[T], out: &mut [T]) {
+    for (o, &yv) in out.iter_mut().zip(y.iter()) {
+        *o = kappa * (mu - yv);
+    }
+}
+
+fn sigmoid_vol_row<T: Lane>(nu: T, a: T, b: T, y: &[T], out: &mut [T]) {
+    for (o, &yv) in out.iter_mut().zip(y.iter()) {
+        *o = nu * (a + b * yv).lane_sigmoid();
+    }
+}
+
+/// The diagonal-noise Monte-Carlo market model of the serving workload
+/// (the *Neural SDEs as Infinite-Dimensional GANs* production shape:
+/// diagonal σ, huge path counts): `d` assets, each
+///
+/// `dX_i = κ_i (μ_i − X_i) dt + ν_i σ(a_i + b_i X_i) dW_i`
+///
+/// with σ the logistic sigmoid — a mean-reverting OU backbone under a
+/// smooth, bounded, strictly positive state-dependent local volatility.
+/// Parameters are drawn deterministically from `seed`.
+///
+/// A **native hand-batched** [`BatchSde`] at both precisions (`f32` runs
+/// the 8-wide lanes over single-precision parameter copies rounded once at
+/// construction). Reports [`diagonal_noise`](BatchSde::diagonal_noise) so
+/// batched solves take the PR-1 elementwise fast path; the
+/// [`dense_control`](Self::dense_control) toggle opts a copy back into the
+/// dense `e×d` mat-vec as the measurable baseline for the
+/// `diag_fast_path` bench rows.
+///
+/// Deliberately *not* a per-path [`Sde`] (that would shadow this native
+/// impl through the blanket batch adapter); the per-path reference for
+/// bitwise pins is a width-1 batched solve.
+pub struct MarketModel {
+    d: usize,
+    kappa: Vec<f64>,
+    mu: Vec<f64>,
+    nu: Vec<f64>,
+    va: Vec<f64>,
+    vb: Vec<f64>,
+    kappa32: Vec<f32>,
+    mu32: Vec<f32>,
+    nu32: Vec<f32>,
+    va32: Vec<f32>,
+    vb32: Vec<f32>,
+    martingale: bool,
+    dense_control: bool,
+}
+
+impl MarketModel {
+    /// Random `d`-asset market with seed-derived parameters:
+    /// κ ∈ [0.5, 1.5], μ ∈ [0.9, 1.1], ν ∈ [0.1, 0.4], and vol shape
+    /// a ∈ [−0.5, 0.5], b ∈ [0.5, 1.5].
+    pub fn new(d: usize, seed: u64) -> Self {
+        assert!(d >= 1);
+        let mut rng = SplitPrng::new(seed);
+        let mut draw = |lo: f64, hi: f64| -> Vec<f64> {
+            (0..d).map(|_| lo + (hi - lo) * rng.next_uniform()).collect()
+        };
+        let kappa = draw(0.5, 1.5);
+        let mu = draw(0.9, 1.1);
+        let nu = draw(0.1, 0.4);
+        let va = draw(-0.5, 0.5);
+        let vb = draw(0.5, 1.5);
+        let f32s = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+        Self {
+            d,
+            kappa32: f32s(&kappa),
+            mu32: f32s(&mu),
+            nu32: f32s(&nu),
+            va32: f32s(&va),
+            vb32: f32s(&vb),
+            kappa,
+            mu,
+            nu,
+            va,
+            vb,
+            martingale: false,
+            dense_control: false,
+        }
+    }
+
+    /// Zero-drift (martingale) variant: prices discount to expectations of
+    /// the terminal payoff, the Monte-Carlo pricing shape. The volatility
+    /// surface is unchanged.
+    pub fn martingale(mut self) -> Self {
+        self.martingale = true;
+        self
+    }
+
+    /// Report dense (non-diagonal) noise so the batch engine runs the full
+    /// `e×d` mat-vec over the same fields — the measured baseline the
+    /// `diag_fast_path/*` bench rows divide by. Bits aside (zero
+    /// off-diagonal terms still enter the mat-vec sum), the dynamics are
+    /// identical.
+    pub fn dense_control(mut self) -> Self {
+        self.dense_control = true;
+        self
+    }
+
+    /// Number of assets (state dimension = Brownian dimension).
+    pub fn assets(&self) -> usize {
+        self.d
+    }
+}
+
+impl BatchSde for MarketModel {
+    fn state_dim(&self) -> usize {
+        self.d
+    }
+
+    fn brownian_dim(&self) -> usize {
+        self.d
+    }
+
+    fn diagonal_noise(&self) -> bool {
+        !self.dense_control
+    }
+
+    fn drift_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        if self.martingale {
+            out[..self.d * batch].fill(0.0);
+            return;
+        }
+        for i in 0..self.d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            ou_drift_row(self.kappa[i], self.mu[i], &y[i * batch..(i + 1) * batch], row);
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        let d = self.d;
+        out[..d * d * batch].fill(0.0);
+        for i in 0..d {
+            let row = &mut out[(i * d + i) * batch..(i * d + i + 1) * batch];
+            sigmoid_vol_row(self.nu[i], self.va[i], self.vb[i], &y[i * batch..(i + 1) * batch], row);
+        }
+    }
+
+    fn diffusion_diag_batch(&self, _t: f64, y: &[f64], out: &mut [f64], batch: usize) {
+        for i in 0..self.d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            sigmoid_vol_row(self.nu[i], self.va[i], self.vb[i], &y[i * batch..(i + 1) * batch], row);
+        }
+    }
+}
+
+/// The 8-wide `f32` instantiation over the construction-time parameter
+/// copies — the serving fast path's element type.
+impl BatchSde<f32> for MarketModel {
+    fn state_dim(&self) -> usize {
+        self.d
+    }
+
+    fn brownian_dim(&self) -> usize {
+        self.d
+    }
+
+    fn diagonal_noise(&self) -> bool {
+        !self.dense_control
+    }
+
+    fn drift_batch(&self, _t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        if self.martingale {
+            out[..self.d * batch].fill(0.0);
+            return;
+        }
+        for i in 0..self.d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            ou_drift_row(self.kappa32[i], self.mu32[i], &y[i * batch..(i + 1) * batch], row);
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        let d = self.d;
+        out[..d * d * batch].fill(0.0);
+        for i in 0..d {
+            let row = &mut out[(i * d + i) * batch..(i * d + i + 1) * batch];
+            sigmoid_vol_row(
+                self.nu32[i],
+                self.va32[i],
+                self.vb32[i],
+                &y[i * batch..(i + 1) * batch],
+                row,
+            );
+        }
+    }
+
+    fn diffusion_diag_batch(&self, _t: f64, y: &[f32], out: &mut [f32], batch: usize) {
+        for i in 0..self.d {
+            let row = &mut out[i * batch..(i + 1) * batch];
+            sigmoid_vol_row(
+                self.nu32[i],
+                self.va32[i],
+                self.vb32[i],
+                &y[i * batch..(i + 1) * batch],
+                row,
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -832,6 +1040,54 @@ mod tests {
         let mut f = [0.0];
         sde.drift(10.0, &[0.0], &mut f);
         assert!((f[0] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn market_model_field_contracts() {
+        let d = 3;
+        let batch = 5;
+        let y: Vec<f64> = (0..d * batch).map(|i| 0.8 + 0.05 * i as f64).collect();
+        let mm = MarketModel::new(d, 2024);
+        assert!(BatchSde::<f64>::diagonal_noise(&mm));
+        // Dense diffusion: the diagonal matches the fast path, off-diagonal
+        // entries are exactly zero.
+        let mut dense = vec![1.0; d * d * batch];
+        let mut diag = vec![0.0; d * batch];
+        BatchSde::<f64>::diffusion_batch(&mm, 0.0, &y, &mut dense, batch);
+        BatchSde::<f64>::diffusion_diag_batch(&mm, 0.0, &y, &mut diag, batch);
+        for i in 0..d {
+            for j in 0..d {
+                for p in 0..batch {
+                    let got = dense[(i * d + j) * batch + p];
+                    let want = if i == j { diag[i * batch + p] } else { 0.0 };
+                    assert_eq!(got, want, "entry ({i},{j}) path {p}");
+                }
+            }
+        }
+        // Volatility is strictly positive; the drift mean-reverts.
+        assert!(diag.iter().all(|&v| v > 0.0));
+        let mut f = vec![0.0; d * batch];
+        BatchSde::<f64>::drift_batch(&mm, 0.0, &y, &mut f, batch);
+        assert!(f.iter().any(|&v| v != 0.0));
+        // The martingale toggle zeroes the drift without touching the vol.
+        let mart = MarketModel::new(d, 2024).martingale();
+        let mut f0 = vec![1.0; d * batch];
+        BatchSde::<f64>::drift_batch(&mart, 0.0, &y, &mut f0, batch);
+        assert!(f0.iter().all(|&v| v == 0.0));
+        let mut diag2 = vec![0.0; d * batch];
+        BatchSde::<f64>::diffusion_diag_batch(&mart, 0.0, &y, &mut diag2, batch);
+        assert_eq!(diag, diag2);
+        // The dense-control copy reports dense noise with the same surface.
+        let ctl = MarketModel::new(d, 2024).dense_control();
+        assert!(!BatchSde::<f64>::diagonal_noise(&ctl));
+        assert!(!BatchSde::<f32>::diagonal_noise(&ctl));
+        // f32 parameters are the rounded f64 ones: same fields to ~1e-6.
+        let y32: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let mut diag32 = vec![0.0f32; d * batch];
+        BatchSde::<f32>::diffusion_diag_batch(&mm, 0.0, &y32, &mut diag32, batch);
+        for (a, &b) in diag.iter().zip(diag32.iter()) {
+            assert!((a - b as f64).abs() < 1e-5);
+        }
     }
 
     #[test]

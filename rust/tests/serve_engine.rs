@@ -3,7 +3,10 @@
 //! * **Coalescing is invisible in the bits** — requests of widths 1/3/7/33
 //!   packed into one SoA mega-batch are each bit-identical to solving that
 //!   request as its own batch over the same session noise, across engine
-//!   thread/chunk settings.
+//!   thread/chunk settings — and the same holds for size-aware packing
+//!   (skipped heads keep their bits AND their deadline), for sharded
+//!   10⁵-lane mega-requests, for the priority lane, for LRU-evicted and
+//!   rebuilt sessions, and for the f32 diagonal-noise market model.
 //! * **Sessions are isolated** — a session's request stream depends only on
 //!   its own seed and request counter, never on which other sessions share
 //!   the engine or how requests interleave.
@@ -18,9 +21,9 @@
 //! (The steady-state zero-allocation pin lives in `serve_zero_alloc.rs` —
 //! its counting global allocator needs a binary to itself.)
 
-use neuralsde::solvers::systems::TanhDiagonalBatch;
+use neuralsde::solvers::systems::{MarketModel, TanhDiagonalBatch};
 use neuralsde::solvers::{
-    integrate_batched, BatchEulerMaruyama, BatchHeun, BatchMidpoint, BatchOptions,
+    integrate_batched, AdmitPolicy, BatchEulerMaruyama, BatchHeun, BatchMidpoint, BatchOptions,
     BatchReversibleHeun, BatchSde, BatchStepper, FaultCause, ServeConfig, ServeEngine,
     SessionNoise, StoredBatchNoise,
 };
@@ -144,6 +147,198 @@ fn session_noise_is_isolated_from_interleaving() {
     }
 }
 
+#[test]
+fn packed_admission_skips_blocked_head_and_preserves_bits() {
+    // Three requests of widths 33 / 20 / 7 against a 40-lane batch. Under
+    // Packed, round one holds the width-7 request (priority lane) plus the
+    // width-33 head; the width-20 request does not fit, is skipped, and is
+    // admitted first into round two — deadline preserved, bits identical.
+    // Under Fifo the width-20 head blocks everything behind it (the
+    // measurable baseline the packing policy beats).
+    let widths = [33usize, 20, 7];
+    let seeds = [300u64, 301, 302];
+    let refs: Vec<Vec<f64>> = widths
+        .iter()
+        .enumerate()
+        .map(|(s, &w)| reference_request(seeds[s], 0, w, &y0_for(w, s)))
+        .collect();
+    for policy in [AdmitPolicy::Packed, AdmitPolicy::Fifo] {
+        let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+        cfg.max_batch = 40;
+        cfg.threads = 2;
+        cfg.chunk = 6;
+        cfg.auto_admit = false;
+        cfg.policy = policy;
+        let engine = ServeEngine::<BatchReversibleHeun, _>::new(sde(), cfg);
+        let tickets: Vec<_> = widths
+            .iter()
+            .enumerate()
+            .map(|(s, &w)| {
+                let sid = engine.open_session(seeds[s], w);
+                engine.submit(sid, &y0_for(w, s))
+            })
+            .collect();
+        engine.flush(); // round one
+        let got33 = engine.wait(tickets[0]).expect("width-33 request faulted");
+        assert_eq!(got33, refs[0], "width-33 bits ({policy:?})");
+        let mut out = Vec::new();
+        assert!(
+            engine.try_wait_into(tickets[1], &mut out).is_none(),
+            "width-20 cannot fit round one ({policy:?})"
+        );
+        match policy {
+            AdmitPolicy::Packed => {
+                // The width-7 request bin-packed into round one.
+                let got7 = engine.wait(tickets[2]).expect("width-7 request faulted");
+                assert_eq!(got7, refs[2], "width-7 bits (packed)");
+                engine.flush(); // round two: the skipped head goes first
+                let got20 = engine.wait(tickets[1]).expect("width-20 request faulted");
+                assert_eq!(got20, refs[1], "width-20 bits (packed)");
+            }
+            AdmitPolicy::Fifo => {
+                // Strict order: width-7 is stuck behind the blocked head.
+                assert!(
+                    engine.try_wait_into(tickets[2], &mut out).is_none(),
+                    "fifo must not skip ahead of the width-20 head"
+                );
+                engine.flush(); // round two: 20 + 7 together
+                let got20 = engine.wait(tickets[1]).expect("width-20 request faulted");
+                assert_eq!(got20, refs[1], "width-20 bits (fifo)");
+                let got7 = engine.wait(tickets[2]).expect("width-7 request faulted");
+                assert_eq!(got7, refs[2], "width-7 bits (fifo)");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_mega_request_matches_unsharded_bitwise() {
+    // A 10⁵-path request — far wider than the 4096-lane mega-batch — is
+    // sharded across ~98 admission rounds of 1024 lanes and must reproduce
+    // the unsharded single-batch solve exactly, across thread/chunk
+    // fan-outs. (Wide sessions also exercise the blocked noise derivation:
+    // NOISE_BLOCK-path Brownian blocks, bounded tree memory.)
+    let dim = 2usize;
+    let n_paths = 100_000usize;
+    let n_steps = 6usize;
+    let y0: Vec<f64> = (0..dim * n_paths).map(|i| 0.1 + ((i % 13) as f64) * 0.01).collect();
+    let mut sess = SessionNoise::new(4242, dim, n_paths, T0, T1, n_steps);
+    let grid = sess.next_request();
+    let noise = StoredBatchNoise::<f64>::from_f32_grid(T0, T1, n_steps, dim, n_paths, grid);
+    let opts = BatchOptions { threads: 4, chunk: 1024, ..Default::default() };
+    let expect = integrate_batched::<BatchReversibleHeun, _, _>(
+        &TanhDiagonalBatch::new(dim, 77),
+        &noise,
+        &y0,
+        n_paths,
+        T0,
+        T1,
+        n_steps,
+        &opts,
+    )
+    .expect("unsharded reference faulted");
+    for &(threads, chunk) in &[(2usize, 64usize), (4, 37)] {
+        let mut cfg = ServeConfig::new(T0, T1, n_steps);
+        cfg.max_batch = 4096;
+        cfg.shard_width = 1024;
+        cfg.threads = threads;
+        cfg.chunk = chunk;
+        let engine =
+            ServeEngine::<BatchReversibleHeun, _>::new(TanhDiagonalBatch::new(dim, 77), cfg);
+        let sid = engine.open_session(4242, n_paths);
+        let t = engine.submit(sid, &y0);
+        let got = engine.wait(t).expect("sharded mega-request faulted");
+        assert_eq!(
+            got, expect,
+            "sharded solve differs from unsharded (threads={threads}, chunk={chunk})"
+        );
+    }
+}
+
+#[test]
+fn priority_lane_completes_during_sharded_mega_request() {
+    // A width-2 interactive request submitted AFTER a 200-path mega-request
+    // completes in the mega's FIRST shard round (priority lane), while the
+    // mega needs its full shard sequence — and both keep their exact bits.
+    let mega_w = 200usize;
+    let small_w = 2usize;
+    let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+    cfg.max_batch = 64;
+    cfg.shard_width = 16;
+    cfg.threads = 2;
+    cfg.chunk = 8;
+    cfg.auto_admit = false;
+    let engine = ServeEngine::<BatchReversibleHeun, _>::new(sde(), cfg);
+    let mega = engine.open_session(11, mega_w);
+    let small = engine.open_session(22, small_w);
+    let y0_mega = y0_for(mega_w, 1);
+    let y0_small = y0_for(small_w, 2);
+    let tm = engine.submit(mega, &y0_mega);
+    let ts = engine.submit(small, &y0_small);
+    engine.flush(); // one round: the small request + the mega's first shard
+    let got_small = engine.wait(ts).expect("interactive request faulted");
+    assert_eq!(
+        got_small,
+        reference_request(22, 0, small_w, &y0_small),
+        "interactive bits under priority admission"
+    );
+    let mut out = Vec::new();
+    assert!(
+        engine.try_wait_into(tm, &mut out).is_none(),
+        "the mega-request cannot be done after one 16-lane shard round"
+    );
+    // Drain the remaining shard rounds (gated mode: one flush per round;
+    // extra flushes while a round is active are harmless).
+    let mut done = None;
+    for _ in 0..10_000 {
+        engine.flush();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        if let Some(res) = engine.try_wait_into(tm, &mut out) {
+            done = Some(res);
+            break;
+        }
+    }
+    done.expect("mega-request never completed").expect("mega-request faulted");
+    assert_eq!(
+        out,
+        reference_request(11, 0, mega_w, &y0_mega),
+        "sharded mega-request bits under priority interleaving"
+    );
+}
+
+#[test]
+fn session_eviction_rebuilds_bit_identically() {
+    // Three sessions against a resident cap of two: every round evicts and
+    // rebuilds somebody. The bits must be exactly the no-eviction reference
+    // for every session and round, and the cap must hold.
+    let width = 4usize;
+    let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+    cfg.max_batch = 16;
+    cfg.threads = 2;
+    cfg.chunk = 4;
+    cfg.max_sessions = 2;
+    let engine = ServeEngine::<BatchReversibleHeun, _>::new(sde(), cfg);
+    let seeds = [800u64, 801, 802];
+    let ids: Vec<_> = seeds.iter().map(|&s| engine.open_session(s, width)).collect();
+    assert!(engine.resident_sessions() <= 2, "cap must hold after opens");
+    for round in 0..3u64 {
+        for (s, &sid) in ids.iter().enumerate() {
+            let y0 = y0_for(width, s);
+            let t = engine.submit(sid, &y0);
+            let got = engine.wait(t).expect("request on an evicted session faulted");
+            assert_eq!(
+                got,
+                reference_request(seeds[s], round, width, &y0),
+                "session {s} round {round}: eviction changed the bits"
+            );
+            assert!(
+                engine.resident_sessions() <= 2,
+                "resident sessions exceeded the cap mid-traffic"
+            );
+        }
+    }
+}
+
 /// Owned fault-injection wrapper (the engine takes its SDE by value, so the
 /// borrowing `guard::PanicOnSentinel` doesn't fit): panics in `drift_batch`
 /// whenever any state component equals the sentinel, exactly like its
@@ -263,6 +458,100 @@ fn faulted_request_is_quarantined_without_touching_others() {
         let t = engine.submit(sid, &y0_for(2, 7));
         engine.flush();
         engine.wait(t).expect("engine wedged after a quarantined request");
+    }
+}
+
+#[test]
+fn shard_fault_is_quarantined_to_the_owning_mega_request() {
+    // A 150-path mega-request sharded into 64-lane rounds carries a
+    // panicking sentinel at path 100 (inside its SECOND shard). The fault
+    // must surface on the mega-request alone, with the request-relative
+    // path coordinate, while a co-served bystander request and the engine
+    // itself stay untouched.
+    const SENTINEL: f64 = 1e30;
+    let mega_w = 150usize;
+    let by_w = 3usize;
+    let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+    cfg.max_batch = 64;
+    cfg.shard_width = 64;
+    cfg.threads = 2;
+    cfg.chunk = 16;
+    let engine = ServeEngine::<BatchReversibleHeun, _>::new(
+        PanickingTanh { inner: sde(), sentinel: SENTINEL },
+        cfg,
+    );
+    let mega = engine.open_session(600, mega_w);
+    let by = engine.open_session(601, by_w);
+    let mut y0m = y0_for(mega_w, 4);
+    y0m[100] = SENTINEL; // component 0 of path 100
+    let y0b = y0_for(by_w, 5);
+    let tm = engine.submit(mega, &y0m);
+    let tb = engine.submit(by, &y0b);
+    let err = engine.wait(tm).expect_err("the injected shard must fault the mega-request");
+    assert!(
+        err.faults.iter().all(|f| f.path == 100),
+        "faults must carry the request-relative path (100), got: {err}"
+    );
+    assert!(
+        err.faults.iter().any(|f| matches!(&f.cause, FaultCause::VectorFieldPanic { payload }
+            if payload.contains("sentinel"))),
+        "sentinel must localise as VectorFieldPanic: {err}"
+    );
+    let got = engine.wait(tb).expect("bystander request faulted");
+    assert_eq!(
+        got,
+        reference_request(601, 0, by_w, &y0b),
+        "bystander bits changed by a sibling shard's quarantine"
+    );
+    // The engine stays serviceable after a quarantined shard.
+    let t2 = engine.submit(by, &y0b);
+    let got2 = engine.wait(t2).expect("engine wedged after a quarantined shard");
+    assert_eq!(got2, reference_request(601, 1, by_w, &y0b));
+}
+
+#[test]
+fn f32_market_model_diag_fast_path_matches_reference_bitwise() {
+    // The serving fast path of the tentpole: the diagonal-noise market
+    // model on the 8-wide f32 lanes, packed 1/3/7/33 into one mega-batch,
+    // bit-identical per request to the solo f32 solve over the same noise.
+    let d = 4usize;
+    let widths = [1usize, 3, 7, 33];
+    let mut cfg = ServeConfig::new(T0, T1, N_STEPS);
+    cfg.max_batch = 64;
+    cfg.threads = 2;
+    cfg.chunk = 5;
+    cfg.auto_admit = false;
+    let engine =
+        ServeEngine::<BatchReversibleHeun<f32>, _>::new(MarketModel::new(d, 31), cfg);
+    let tickets: Vec<(neuralsde::solvers::Ticket, usize, u64, Vec<f32>)> = widths
+        .iter()
+        .enumerate()
+        .map(|(s, &w)| {
+            let seed = 900 + s as u64;
+            let y0: Vec<f32> = (0..d * w).map(|i| 1.0 + 0.01 * ((i + s) % 7) as f32).collect();
+            let sid = engine.open_session(seed, w);
+            (engine.submit(sid, &y0), w, seed, y0)
+        })
+        .collect();
+    engine.flush();
+    for (t, w, seed, y0) in tickets {
+        let got = engine.wait(t).expect("market-model request faulted");
+        let mut sess = SessionNoise::new(seed, d, w, T0, T1, N_STEPS);
+        let grid = sess.next_request();
+        let noise = StoredBatchNoise::<f32>::from_f32_grid(T0, T1, N_STEPS, d, w, grid);
+        let opts = BatchOptions { threads: 1, chunk: 7, ..Default::default() };
+        let expect = integrate_batched::<BatchReversibleHeun<f32>, _, _>(
+            &MarketModel::new(d, 31),
+            &noise,
+            &y0,
+            w,
+            T0,
+            T1,
+            N_STEPS,
+            &opts,
+        )
+        .expect("f32 reference solve faulted");
+        assert_eq!(got, expect, "width-{w} f32 market-model request differs from solo");
     }
 }
 

@@ -76,4 +76,38 @@ fn steady_state_round_trip_allocates_nothing() {
         after - before
     );
     assert_eq!(out.len(), (24 + 1) * dim * n_paths);
+
+    // Phase two — the steady-state SUBMIT path: several outstanding
+    // requests at once exercise the packing queue, the slot pool's reuse
+    // (three live slots, LIFO free list) and the multi-round admission of
+    // a backlog wider than `max_batch` (24 queued lanes against a 16-lane
+    // mega-batch), rather than phase one's single-slot ping-pong. Same
+    // contract: zero allocations once warm.
+    let mut outs = [Vec::new(), Vec::new(), Vec::new()];
+    for _ in 0..3 {
+        let ts =
+            [engine.submit(sess, &y0), engine.submit(sess, &y0), engine.submit(sess, &y0)];
+        for (t, o) in ts.into_iter().zip(outs.iter_mut()) {
+            o.clear();
+            engine.wait_into(t, o).expect("warmup request faulted");
+        }
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        let ts =
+            [engine.submit(sess, &y0), engine.submit(sess, &y0), engine.submit(sess, &y0)];
+        for (t, o) in ts.into_iter().zip(outs.iter_mut()) {
+            engine.wait_into(t, o).expect("steady-state request faulted");
+        }
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state submit backlog must not allocate (saw {} allocations)",
+        after - before
+    );
+    for o in &outs {
+        assert_eq!(o.len(), (24 + 1) * dim * n_paths);
+    }
 }

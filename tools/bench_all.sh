@@ -19,6 +19,10 @@ BENCHES=(
   tab2_brownian_access
   tab3_clipping
   tab10_sde_solve
+  # serve_throughput owns BENCH_pr9.json: uniform open-loop rows plus the
+  # mixed-size packed-vs-fifo rows (per-class p50/p99 and the
+  # interactive_p99_fifo_over_packed headline ratio) and the
+  # diagonal-noise f32 fast-path rows (diag_over_dense_paths_per_sec).
   serve_throughput
 )
 
