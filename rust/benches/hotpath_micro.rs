@@ -53,6 +53,44 @@ fn main() {
         });
     }
 
+    // Executor dispatch: the persistent work-stealing pool vs the pre-PR-10
+    // per-call scoped-spawn baseline, across fan-out widths. At width 1 the
+    // pool runs inline (pure function-call cost); the spawn baseline pays a
+    // thread spawn/join either way — the gap is the dispatch overhead every
+    // `map_chunks` call used to pay.
+    {
+        use neuralsde::solvers::pool;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let threads = 4usize;
+        for &width in &[1usize, 8, 64, 512] {
+            let sink = AtomicUsize::new(0);
+            table.bench(&format!("pool/persistent/threads=4/width={width}"), |_| {
+                pool::run_tasks(threads, width, &|i| {
+                    sink.fetch_add(i + 1, Ordering::Relaxed);
+                });
+                black_box(sink.load(Ordering::Relaxed));
+            });
+            table.bench(&format!("pool/scoped_spawn/threads=4/width={width}"), |_| {
+                // The historical dispatch: spawn/join a scoped worker set
+                // with a shared claim counter, on every call.
+                let next = AtomicUsize::new(0);
+                let workers = threads.min(width);
+                std::thread::scope(|s| {
+                    for _ in 0..workers {
+                        s.spawn(|| loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= width {
+                                break;
+                            }
+                            sink.fetch_add(i + 1, Ordering::Relaxed);
+                        });
+                    }
+                });
+                black_box(sink.load(Ordering::Relaxed));
+            });
+        }
+    }
+
     // Batched reversible Heun over SoA state (diagonal fast path), through
     // the blanket per-path adapter and through the native hand-batched
     // system — the adapter/native gap is the gather/scatter cost.

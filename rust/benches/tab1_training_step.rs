@@ -14,6 +14,7 @@ use neuralsde::brownian::SplitPrng;
 use neuralsde::config::{DatasetKind, TrainConfig, TrainPrecision};
 use neuralsde::coordinator::GanTrainer;
 use neuralsde::data::{ou, weights};
+use neuralsde::solvers::BatchOptions;
 use neuralsde::util::bench::{write_bench_json, BenchTable};
 use neuralsde::util::json::Json;
 
@@ -60,6 +61,27 @@ fn main() {
         }
     }
 
+    // PR-10 overlap rows: the same step with `chunk >= batch`, so every
+    // solve is a single chunk and the ONLY available parallelism is the
+    // real/fake discriminator-adjoint overlap (`pool::join2`). threads=1 is
+    // the sequential reference; threads=2 runs the two CDE adjoint sweeps
+    // concurrently on the persistent executor.
+    {
+        let data = dataset(DatasetKind::Ou);
+        for (label, threads) in
+            [("overlap/disc_serial/gan_ou", 1usize), ("overlap/disc_overlapped/gan_ou", 2)]
+        {
+            let cfg = TrainConfig::default();
+            let opts = BatchOptions { threads, chunk: cfg.batch.max(1), ..Default::default() };
+            let mut trainer =
+                GanTrainer::new(&cfg, 1000).expect("native trainer").with_batch_options(opts);
+            let mut rng = SplitPrng::new(7);
+            table.bench(label, |_| {
+                trainer.train_step(&data, &mut rng).expect("step");
+            });
+        }
+    }
+
     // The tentpole headline: full f64 training step over the mixed step.
     let mut headline: Vec<(&str, Json)> = Vec::new();
     let mut ratios = Vec::new();
@@ -70,6 +92,14 @@ fn main() {
         let ratio = f64t / f32t;
         println!("  gan_{name:<10} f64/mixed training step: {ratio:.2}x");
         ratios.push((format!("f32_vs_f64/gan_{name}"), ratio));
+    }
+    {
+        // PR-10 headline: serial vs overlapped discriminator adjoints.
+        let serial = table.min_of("overlap/disc_serial/gan_ou");
+        let overlapped = table.min_of("overlap/disc_overlapped/gan_ou");
+        let ratio = serial / overlapped;
+        println!("  disc_adjoint_overlap  serial/overlapped step: {ratio:.2}x");
+        ratios.push(("disc_adjoint_overlap/gan_ou".to_string(), ratio));
     }
     let extras: Vec<Json> = ratios
         .iter()
@@ -89,12 +119,12 @@ fn main() {
     table.write_json("results/bench_tab1_training_step.json").ok();
     if quick {
         // Trimmed workloads are not comparable to the tracked trajectory —
-        // never let a smoke run overwrite BENCH_pr8.json.
-        println!("smoke/QUICK run: skipping BENCH_pr8.json (full run required)");
+        // never let a smoke run overwrite BENCH_pr10.json.
+        println!("smoke/QUICK run: skipping BENCH_pr10.json (full run required)");
         return;
     }
     let bench_dir = std::env::var("BENCH_DIR").unwrap_or_else(|_| "..".to_string());
-    match write_bench_json(&bench_dir, "pr8", &[&table], headline) {
+    match write_bench_json(&bench_dir, "pr10", &[&table], headline) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write BENCH json: {e}"),
     }

@@ -290,6 +290,9 @@ pub struct ServeTuning {
     pub priority_width: usize,
     /// Resident-session cap (`0` = unlimited).
     pub max_sessions: usize,
+    /// Wall-clock idle TTL for session Brownian state, in milliseconds
+    /// (`0` = never expire). Expired sessions rebuild bit-identically.
+    pub session_ttl_ms: u64,
 }
 
 impl Default for ServeTuning {
@@ -302,13 +305,15 @@ impl Default for ServeTuning {
             shard_width: 0,
             priority_width: 8,
             max_sessions: 0,
+            session_ttl_ms: 0,
         }
     }
 }
 
 impl ServeTuning {
     /// Apply CLI overrides (`--max-batch`, `--serve-threads`, `--chunk`,
-    /// `--policy`, `--shard-width`, `--priority-width`, `--max-sessions`).
+    /// `--policy`, `--shard-width`, `--priority-width`, `--max-sessions`,
+    /// `--session-ttl-ms`).
     pub fn apply_args(&mut self, args: &mut Args) -> anyhow::Result<()> {
         self.max_batch = args.get_parse_or("max-batch", self.max_batch);
         self.threads = args.get_parse_or("serve-threads", self.threads);
@@ -316,6 +321,7 @@ impl ServeTuning {
         self.shard_width = args.get_parse_or("shard-width", self.shard_width);
         self.priority_width = args.get_parse_or("priority-width", self.priority_width);
         self.max_sessions = args.get_parse_or("max-sessions", self.max_sessions);
+        self.session_ttl_ms = args.get_parse_or("session-ttl-ms", self.session_ttl_ms);
         if let Some(s) = args.get("policy") {
             self.policy = match AdmitPolicy::parse(&s) {
                 Some(p) => p,
@@ -338,6 +344,7 @@ impl ServeTuning {
         cfg.shard_width = self.shard_width;
         cfg.priority_width = self.priority_width;
         cfg.max_sessions = self.max_sessions;
+        cfg.session_ttl_ms = self.session_ttl_ms;
         cfg
     }
 }
@@ -413,23 +420,27 @@ mod tests {
     #[test]
     fn serve_tuning_cli_and_build() {
         let mut args = Args::parse(
-            "serve --max-batch 128 --policy fifo --shard-width 32 --max-sessions 4"
+            "serve --max-batch 128 --policy fifo --shard-width 32 --max-sessions 4 \
+             --session-ttl-ms 5000"
                 .split_whitespace()
                 .map(String::from),
         );
         let mut t = ServeTuning::default();
         assert_eq!(t.policy, AdmitPolicy::Packed);
+        assert_eq!(t.session_ttl_ms, 0, "TTL is off by default");
         t.apply_args(&mut args).unwrap();
         assert!(args.finish().is_ok());
         assert_eq!(t.max_batch, 128);
         assert_eq!(t.policy, AdmitPolicy::Fifo);
         assert_eq!(t.shard_width, 32);
         assert_eq!(t.max_sessions, 4);
+        assert_eq!(t.session_ttl_ms, 5000);
         let cfg = t.build(0.0, 2.0, 16);
         assert_eq!(cfg.max_batch, 128);
         assert_eq!(cfg.policy, AdmitPolicy::Fifo);
         assert_eq!(cfg.shard_width, 32);
         assert_eq!(cfg.max_sessions, 4);
+        assert_eq!(cfg.session_ttl_ms, 5000);
         assert_eq!(cfg.n_steps, 16);
         assert!(cfg.threads >= 1, "threads 0 keeps the per-core default");
         // Unknown policies are a structured error, not a silent default.

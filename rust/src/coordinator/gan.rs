@@ -686,8 +686,19 @@ impl GanTrainer {
                 )
             }
         };
-        let gf = run(&y_fake, -1.0)?;
-        let gr = run(&y_real_lanes, 1.0)?;
+        // The real-path and fake-path CDE adjoints are data-independent —
+        // they share only `&self` (immutably) and write disjoint results —
+        // so they overlap on the persistent executor. Bits are unchanged by
+        // construction: each solve is internally schedule-invariant, and
+        // every cross-solve reduction below keeps the fixed fake-then-real
+        // f64 accumulation order (pinned by the fan-out determinism tests
+        // in `tests/neural_gan.rs`).
+        let (gf, gr) = crate::solvers::pool::join2(
+            self.opts.threads,
+            || run(&y_fake, -1.0),
+            || run(&y_real_lanes, 1.0),
+        );
+        let (gf, gr) = (gf?, gr?);
         let loss_d = self.mean_score(&m64, &gr, b) - self.mean_score(&m64, &gf, b);
 
         // φ-gradient: CDE solves (fake then real, matching the reference

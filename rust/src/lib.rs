@@ -60,12 +60,20 @@
 //!   the element type, the association rule does not. That is the SoA-lane
 //!   invariant the whole stack rests on (the `f64` instantiation's bits are
 //!   the historical ones).
-//! * **Work-stealing fan-out** — [`solvers::integrate_batched`] spreads
-//!   path chunks over a `std::thread` pool with per-worker deques (steal
-//!   from the most-loaded peer when idle). Per-path noise comes from
+//! * **Work-stealing fan-out on a persistent executor** —
+//!   [`solvers::integrate_batched`] spreads path chunks over the
+//!   **process-wide, spawn-once executor** ([`solvers::pool`]): workers are
+//!   created lazily on the first dispatch, park on a condvar between jobs,
+//!   and are never spawned or joined per call. Each participant owns a
+//!   contiguous task range and pops its front; idle participants steal from
+//!   the back of the most-loaded range. Per-path noise comes from
 //!   counter-based streams ([`solvers::CounterGridNoise`]) keyed by path
 //!   index alone, so results are bit-identical for every thread count,
-//!   chunk size and steal schedule.
+//!   chunk size and steal schedule — the schedule is unobservable. A warm
+//!   dispatch performs zero executor allocations and zero thread spawns
+//!   (pinned by `tests/pool_zero_alloc.rs`), and independent task sets
+//!   ([`solvers::pool::join2`]) overlap the GAN trainer's real/fake
+//!   discriminator adjoint sweeps on the same workers.
 //!
 //! The same discipline applies to noise: the Brownian Interval partitions a
 //! whole training grid in one tree descent
@@ -128,8 +136,12 @@
 //! LipSwish-MLP kernels ([`nn::mlp`]), preserving batched ≡ per-path
 //! bit-identity through the whole GAN training step. Both chunk fan-outs —
 //! forward and adjoint — share one work-stealing scheduler
-//! ([`solvers::map_chunks`]), whose results are keyed by chunk index so
-//! schedules can never affect bits.
+//! ([`solvers::map_chunks`], dispatching on the persistent
+//! [`solvers::pool`]), whose results are keyed by chunk index so schedules
+//! can never affect bits; the trainer additionally overlaps its two
+//! data-independent discriminator adjoint solves (real and fake paths)
+//! through [`solvers::pool::join2`], with the f64 gradient reduction kept
+//! in a fixed fake-then-real order so the overlap is bit-neutral.
 //!
 //! ## Quickstart
 //!
@@ -201,11 +213,14 @@
 //! small, concurrent sampling requests. [`solvers::serve`] covers that
 //! shape with a persistent engine instead of per-call machinery:
 //!
-//! * **Spawn once, park between batches** — [`solvers::ServeEngine::new`]
-//!   starts a fixed worker pool that sleeps on a condvar when idle; no
-//!   per-request thread spawning, no per-chunk stepper construction
-//!   ([`solvers::BatchStepper::reinit`] re-initialises each worker's one
-//!   stepper in place).
+//! * **One executor for the whole process** — the engine owns no threads:
+//!   admission rounds are driven by whichever caller blocks in
+//!   [`solvers::ServeEngine::wait_into`] (or calls `flush`), and their
+//!   chunk fan-out runs on the same persistent pool ([`solvers::pool`]) as
+//!   every training solve — no serve-private worker set, no per-request
+//!   thread spawning, no per-chunk stepper construction
+//!   ([`solvers::BatchStepper::reinit`] re-initialises each participant's
+//!   checked-out stepper in place).
 //! * **Size-aware admission packing** — a request is a set of rows in the
 //!   `[component × batch]` SoA state, so admission is *lane assignment*:
 //!   queued requests pack into one mega-batch of up to
@@ -236,8 +251,10 @@
 //!   request counter alone — results never depend on lane placement or
 //!   unrelated traffic. Above [`solvers::ServeConfig::max_sessions`]
 //!   resident sessions, the least-recently-used one's heavy state is
-//!   evicted and rebuilt **bit-identically** on its next admission by
-//!   replaying the same seed derivations.
+//!   evicted — and sessions idle past the wall-clock
+//!   [`solvers::ServeConfig::session_ttl_ms`] expire the same way — then
+//!   rebuilt **bit-identically** on the next admission by replaying the
+//!   same seed derivations.
 //! * **Diagonal-noise fast path at f32** — the engine is generic over the
 //!   [`solvers::Lane`] element: instantiated at `f32` (8-wide kernels,
 //!   half the memory traffic) a diagonal-noise system like

@@ -655,9 +655,10 @@ where
 }
 
 /// Batched-SoA adjoint over `[dim × batch]` lanes: forward + backward per
-/// fixed-size path chunk, fanned across `opts.threads` workers on the same
-/// work-stealing chunk scheduler as the forward engine
-/// ([`super::map_chunks`]).
+/// fixed-size path chunk, fanned across `opts.threads` participants of the
+/// same work-stealing chunk scheduler as the forward engine
+/// ([`super::map_chunks`], dispatching on the persistent process-wide
+/// executor [`super::pool`] — no per-call thread spawn/join).
 ///
 /// `grad_terminal` is called once per chunk with
 /// `(path_offset, chunk_len, terminal_z_lanes, out_lanes)` and must fill the
@@ -748,7 +749,7 @@ where
     assert_eq!(y0.len(), e * batch, "y0 must be SoA [dim * batch]");
     assert_eq!(noise.brownian_dim(), nd, "noise/sde Brownian dimension mismatch");
     assert!(n_steps >= 1 && batch >= 1);
-    let chunk = opts.chunk.max(1);
+    let chunk = opts.chunk_for(batch);
     let n_chunks = (batch + chunk - 1) / chunk;
     let dtg = (t1 - t0) / n_steps as f64;
     let tape_on = matches!(mode, BackwardMode::Tape);
@@ -1188,7 +1189,7 @@ where
     assert_eq!(y0.len(), e * batch, "y0 must be SoA [dim * batch]");
     assert_eq!(noise32.brownian_dim(), nd, "noise/sde Brownian dimension mismatch");
     assert!(n_steps >= 1 && batch >= 1);
-    let chunk = opts.chunk.max(1);
+    let chunk = opts.chunk_for(batch);
     let n_chunks = (batch + chunk - 1) / chunk;
     let dtg = (t1 - t0) / n_steps as f64;
     let tape_on = matches!(mode, BackwardMode::Tape);

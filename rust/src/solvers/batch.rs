@@ -45,13 +45,12 @@
 //! the exact invariants).
 
 use super::guard::{self, FaultCause, GuardConfig, GuardedSolve, SolveError, SolveFault};
+use super::pool;
 use super::simd::{self, Lane};
 use super::{NoiseF64, Sde};
 use crate::brownian::{normal_at, splitmix64, BrownianSource};
 use std::cell::Cell;
-use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::Mutex;
 
 /// A batched SDE over structure-of-arrays state of element type `T` (see
 /// module docs for the layout conventions). `Sync` so chunks can be solved
@@ -959,10 +958,11 @@ impl<T: Lane> BatchStepper for BatchReversibleHeun<T> {
 /// Work-partitioning knobs for [`integrate_batched`]. Neither affects
 /// results — only wall-clock time.
 ///
-/// Scheduling is work-stealing: each worker starts with a contiguous run of
-/// chunks in its own deque, pops from the front, and — when its deque runs
-/// dry — steals from the back of the most-loaded peer. Skewed per-chunk
-/// costs (state-dependent vector fields, uneven tail chunks, a worker
+/// Scheduling is work-stealing on the process-wide persistent executor
+/// ([`super::pool`]): each participant starts with a contiguous run of
+/// chunks, pops from the front, and — when its run goes dry — steals from
+/// the back of the most-loaded peer. Skewed per-chunk costs
+/// (state-dependent vector fields, uneven tail chunks, a worker
 /// descheduled by the OS) therefore rebalance instead of serialising the
 /// pool, and because every chunk's noise and arithmetic depend only on its
 /// path indices, results are identical for every schedule the stealing
@@ -972,7 +972,10 @@ pub struct BatchOptions {
     /// Worker threads (1 = run on the caller's thread).
     pub threads: usize,
     /// Paths per chunk; chunks are the unit of work distribution (and of
-    /// stealing).
+    /// stealing). `0` means "derive from the batch width and `threads` at
+    /// solve time" (see [`BatchOptions::chunk_for`]) — the [`Self::auto`]
+    /// default, so small batches don't underfill the pool with one
+    /// oversized chunk. Chunking never affects results, only wall-clock.
     pub chunk: usize,
     /// Fault-tolerance knobs for the fallible entry points: non-finite
     /// sweep cadence and the adjoint's reconstruction-drift watchdog. The
@@ -988,27 +991,47 @@ impl Default for BatchOptions {
 }
 
 impl BatchOptions {
-    /// Use every available core (results are identical regardless).
+    /// Use every available core (results are identical regardless), with
+    /// the chunk size derived per solve from the batch width
+    /// ([`Self::chunk_for`]) instead of the historical hardcoded 64 —
+    /// a 128-path training batch on 8 workers now splits into 4-chunk
+    /// work units instead of two 64-path slabs that idle most of the pool.
     pub fn auto() -> Self {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Self { threads, chunk: 64, guard: GuardConfig::default() }
+        Self { threads, chunk: 0, guard: GuardConfig::default() }
+    }
+
+    /// The effective chunk size for a `batch`-path solve: the explicit
+    /// `chunk` when nonzero, otherwise roughly four chunks per worker
+    /// (stealing slack for skewed chunk costs) capped at the historical 64
+    /// and floored at 1. Every solve entry point routes through this, so
+    /// the `chunk: 0` sentinel never reaches the chunking arithmetic.
+    pub fn chunk_for(&self, batch: usize) -> usize {
+        if self.chunk > 0 {
+            return self.chunk;
+        }
+        let parts = self.threads.max(1) * 4;
+        ((batch + parts - 1) / parts).clamp(1, 64)
     }
 }
 
 /// Map `run` over the chunk indices `0..n_chunks` on up to `threads`
-/// work-stealing workers, returning the results **keyed by chunk index** —
-/// the shared scheduler behind [`integrate_batched`] and
+/// work-stealing participants of the process-wide persistent executor
+/// ([`super::pool`]), returning the results **keyed by chunk index** — the
+/// shared scheduler behind [`integrate_batched`] and
 /// [`super::adjoint_solve_batched`]. Already element-type agnostic: the
 /// chunk payload is whatever `run` returns, so the same pool fans out `f64`
 /// and `f32` solves.
 ///
-/// Each worker starts with a contiguous run of chunks in its own deque
-/// (cache-friendly starts), pops from the front, and — when its deque runs
-/// dry — steals from the back of the most-loaded peer, so skewed per-chunk
-/// costs rebalance instead of serialising the pool. Because the output is
-/// keyed by chunk index, the (nondeterministic) schedule cannot affect a
-/// deterministic `run`'s results: callers whose chunks depend only on their
-/// own index get bit-identical output for every `threads` value.
+/// Each participant starts with a contiguous run of chunks (cache-friendly
+/// starts), pops from the front, and — when its run goes dry — steals from
+/// the back of the most-loaded peer, so skewed per-chunk costs rebalance
+/// instead of serialising the pool. Because the output is keyed by chunk
+/// index, the (nondeterministic) schedule cannot affect a deterministic
+/// `run`'s results: callers whose chunks depend only on their own index get
+/// bit-identical output for every `threads` value. Unlike the pre-PR-10
+/// scheduler there is no per-call thread spawn/join: workers are spawned
+/// once per process and parked between dispatches.
 pub fn map_chunks<R, F>(n_chunks: usize, threads: usize, run: F) -> Vec<R>
 where
     R: Send,
@@ -1018,55 +1041,29 @@ where
     if threads <= 1 {
         return (0..n_chunks).map(run).collect();
     }
-    let per = n_chunks / threads;
-    let extra = n_chunks % threads;
-    let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
-        .map(|w| {
-            let start = w * per + w.min(extra);
-            let count = per + usize::from(w < extra);
-            Mutex::new((start..start + count).collect())
-        })
-        .collect();
     let mut slots: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for w in 0..threads {
-            let run = &run;
-            let deques = &deques;
-            handles.push(scope.spawn(move || {
-                let mut mine = Vec::new();
-                loop {
-                    // The deque locks are never held across `run`, so a
-                    // poisoned mutex only means a sibling worker panicked
-                    // between pops — the deque itself is still consistent.
-                    let own = deques[w]
-                        .lock()
-                        .unwrap_or_else(|e| e.into_inner())
-                        .pop_front();
-                    let c = match own {
-                        Some(c) => c,
-                        None => match steal(deques, w) {
-                            Some(c) => c,
-                            None => break,
-                        },
-                    };
-                    mine.push((c, run(c)));
-                }
-                mine
-            }));
-        }
-        for h in handles {
-            // Propagates a panicking `run` to the caller — raw `map_chunks`
-            // keeps the historical panic semantics. The fallible engines
-            // route through `map_chunks_isolated`, whose `run` never
-            // panics, so this is unreachable from the guarded hot path.
-            for (c, r) in h.join().expect("chunk worker panicked") {
-                slots[c] = Some(r);
-            }
-        }
-    });
-    // Unreachable by construction: every index 0..n_chunks is queued in
-    // exactly one deque and every popped chunk lands in `slots`.
+    {
+        // Shared-pointer shim so concurrent tasks can each fill their own
+        // slot. Safety: task `c` writes only `slots[c]`, every index in
+        // `0..n_chunks` runs exactly once (the pool's contract), and
+        // `run_tasks` returns only after all tasks completed — with the
+        // pool mutex providing the happens-before edge for the writes.
+        struct SlotsPtr<R>(*mut Option<R>);
+        unsafe impl<R: Send> Send for SlotsPtr<R> {}
+        unsafe impl<R: Send> Sync for SlotsPtr<R> {}
+        let out = SlotsPtr(slots.as_mut_ptr());
+        // Propagates a panicking `run` to the caller (after the sibling
+        // chunks finish) — raw `map_chunks` keeps the historical panic
+        // semantics. The fallible engines route through
+        // `map_chunks_isolated`, whose `run` never panics, so this is
+        // unreachable from the guarded hot path.
+        pool::run_tasks(threads, n_chunks, &|c| {
+            let r = run(c);
+            unsafe { *out.0.add(c) = Some(r) };
+        });
+    }
+    // Unreachable by construction: every index 0..n_chunks is dispatched
+    // exactly once and writes its own slot.
     slots.into_iter().map(|o| o.expect("chunk result missing")).collect()
 }
 
@@ -1102,37 +1099,6 @@ where
         catch_unwind(AssertUnwindSafe(|| run(c)))
             .map_err(|e| ChunkPanic { chunk: c, payload: guard::panic_message(e) })
     })
-}
-
-/// Steal one chunk for worker `me`: scan for the peer with the most queued
-/// work and take from the *back* of its deque (the owner pops the front, so
-/// contention only happens on the last item). Returns `None` when every
-/// deque is empty — the termination condition, since chunks are never
-/// re-queued.
-fn steal(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
-    loop {
-        let mut victim: Option<(usize, usize)> = None;
-        for (v, q) in deques.iter().enumerate() {
-            if v == me {
-                continue;
-            }
-            // As in the worker loop: poisoning cannot corrupt the deque
-            // (locks are never held across user code), so recover the guard.
-            let len = q.lock().unwrap_or_else(|e| e.into_inner()).len();
-            let better = match victim {
-                None => len > 0,
-                Some((_, best)) => len > best,
-            };
-            if better {
-                victim = Some((v, len));
-            }
-        }
-        let (v, _) = victim?;
-        if let Some(c) = deques[v].lock().unwrap_or_else(|e| e.into_inner()).pop_back() {
-            return Some(c);
-        }
-        // Raced with the owner draining its deque — rescan.
-    }
 }
 
 /// Integrate `batch` paths of `sde` from the SoA state `y0` over
@@ -1228,7 +1194,7 @@ where
     assert_eq!(y0.len(), dim * batch, "y0 must be SoA [dim * batch]");
     assert_eq!(noise.brownian_dim(), nd, "noise/sde Brownian dimension mismatch");
     assert!(n_steps >= 1 && batch >= 1);
-    let chunk = opts.chunk.max(1);
+    let chunk = opts.chunk_for(batch);
     let n_chunks = (batch + chunk - 1) / chunk;
     let dt = (t1 - t0) / n_steps as f64;
     // One canonical copy of the guard knobs; all cadence decisions go
@@ -1564,6 +1530,51 @@ mod tests {
                     assert!(p.payload.contains("poisoned"), "{}", p.payload);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn map_chunks_supports_nested_submission() {
+        // A chunk's `run` may itself fan out (a solve inside a solve);
+        // the persistent executor must complete both levels without
+        // deadlocking its fixed-size worker set.
+        let out = map_chunks(6, 4, |outer| map_chunks(5, 4, move |inner| outer * 100 + inner));
+        for (o, row) in out.iter().enumerate() {
+            let want: Vec<usize> = (0..5).map(|i| o * 100 + i).collect();
+            assert_eq!(*row, want, "outer chunk {o}");
+        }
+    }
+
+    #[test]
+    fn auto_chunk_derivation_is_bounded_and_bit_neutral() {
+        // `chunk: 0` derives from batch width and worker count: never 0,
+        // never above the historical 64, explicit values untouched.
+        let auto = BatchOptions { threads: 4, chunk: 0, ..Default::default() };
+        assert_eq!(auto.chunk_for(1), 1);
+        assert_eq!(auto.chunk_for(16), 1);
+        assert_eq!(auto.chunk_for(128), 8);
+        assert_eq!(auto.chunk_for(1 << 20), 64);
+        let explicit = BatchOptions { threads: 4, chunk: 7, ..Default::default() };
+        assert_eq!(explicit.chunk_for(1 << 20), 7);
+        assert_eq!(BatchOptions::auto().chunk, 0, "auto() opts into derivation");
+
+        // Chunking is bit-invariant, so the derived chunk must reproduce
+        // the explicit-chunk solve exactly.
+        let sde = TanhDiagonal::new(3, 11);
+        let batch = 23;
+        let n = 10;
+        let y0: Vec<f64> = (0..3 * batch).map(|x| 0.01 * x as f64 - 0.2).collect();
+        let noise = CounterGridNoise::new(5, 3, 0.0, 1.0, n);
+        let solve = |opts: &BatchOptions| {
+            integrate_batched::<BatchEulerMaruyama, _, _>(
+                &sde, &noise, &y0, batch, 0.0, 1.0, n, opts,
+            )
+            .expect("fault-free by construction")
+        };
+        let reference = solve(&BatchOptions { threads: 1, chunk: 64, ..Default::default() });
+        for (threads, chunk) in [(2usize, 0usize), (4, 0), (3, 5)] {
+            let opts = BatchOptions { threads, chunk, ..Default::default() };
+            assert_eq!(solve(&opts), reference, "threads={threads} chunk={chunk}");
         }
     }
 

@@ -16,8 +16,10 @@
 //! * [`integrate`] — one path at a time over `Vec<f64>` state;
 //! * [`integrate_batched`] (the batch engine) — a structure-of-arrays
 //!   `[dim × batch]` solve with a diagonal-noise fast path, SIMD inner
-//!   loops ([`simd`]) and a work-stealing chunked worker pool, bit-for-bit
-//!   equal to per-path integration for every solver, thread count and
+//!   loops ([`simd`]) and work-stealing chunk dispatch on the process-wide
+//!   persistent executor ([`pool`] — spawn-once parked workers, no per-call
+//!   thread spawn/join), bit-for-bit equal to per-path integration for
+//!   every solver, thread count and
 //!   steal schedule. The batch engine is **precision-generic** over the
 //!   sealed [`simd::Lane`] element type: `f64` runs the historical 4-wide
 //!   kernels, `f32` runs 8-wide lanes end to end (systems, steppers, noise
@@ -43,6 +45,7 @@ mod classic;
 mod convergence;
 pub mod guard;
 pub mod neural;
+pub mod pool;
 mod reversible_heun;
 pub mod serve;
 pub mod simd;

@@ -3,13 +3,18 @@
 //! The ROADMAP's north star is serving trained SDE-GANs at scale, and the
 //! production workload of a trained model is **sampling** — many concurrent,
 //! small requests, not one big offline batch. [`super::integrate_batched`]
-//! is built for the offline-training shape: every call spawns scoped
-//! threads, and a 7-path request wastes the 8-wide `f32` SIMD lanes. This
-//! module serves the same solves through a long-lived engine instead:
+//! is built for the offline-training shape, and a 7-path request wastes
+//! the 8-wide `f32` SIMD lanes. This module serves the same solves through
+//! a long-lived engine instead:
 //!
-//! * **Persistent worker pool** — [`ServeEngine::new`] spawns its workers
-//!   once; they park on a condvar between batches (no per-call
-//!   `std::thread::scope`), and are joined on drop.
+//! * **One process-wide executor** — admission rounds dispatch their chunks
+//!   on the same persistent work-stealing pool ([`super::pool`]) that runs
+//!   every training and offline solve: spawn-once parked workers, no
+//!   per-call thread spawn/join, and no second serve-private pool (the
+//!   pre-PR-10 split). The engine itself owns no threads; whichever caller
+//!   blocks in [`ServeEngine::wait_into`] (or calls
+//!   [`ServeEngine::flush`]) *drives* the next admission round through the
+//!   pool, and concurrent waiters park until the driver's round completes.
 //! * **Size-aware admission packing** — a request is just a set of rows in
 //!   the `[component × batch]` SoA state, so admission is *lane
 //!   assignment*: the front door packs queued requests into one SoA
@@ -41,10 +46,14 @@
 //!   than `max_batch` — the 10⁶-path Monte-Carlo shape.
 //! * **Session eviction** — above [`ServeConfig::max_sessions`] resident
 //!   sessions, the least-recently-used session's heavy state (Brownian
-//!   tree, staging buffers) is dropped. Request noise is a pure function
-//!   of `(session seed, request counter, path)` ([`request_seed`]), so an
-//!   evicted session is rebuilt **bit-identically** on its next admission
-//!   by replaying the counter — eviction is invisible in the bits.
+//!   tree, staging buffers) is dropped; with
+//!   [`ServeConfig::session_ttl_ms`] set, sessions untouched for that many
+//!   wall-clock milliseconds are dropped too, so an idle working set
+//!   shrinks without waiting for capacity pressure. Request noise is a
+//!   pure function of `(session seed, request counter, path)`
+//!   ([`request_seed`]), so an evicted or expired session is rebuilt
+//!   **bit-identically** on its next admission by replaying the counter —
+//!   eviction is invisible in the bits.
 //! * **Per-session persistent Brownian state** — each session owns a
 //!   [`SessionNoise`]: one [`BrownianInterval`] whose node arena, LRU slot
 //!   arena and recycled buffers survive across requests
@@ -76,14 +85,14 @@
 
 use super::batch::{BatchSde, BatchStepper};
 use super::guard::{self, FaultCause, GuardConfig, SolveError, SolveFault};
+use super::pool;
 use super::simd::Lane;
 use crate::brownian::{splitmix64, BrownianInterval, BrownianSource};
 use std::cell::Cell;
 use std::collections::VecDeque;
-use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
-use std::thread::JoinHandle;
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
 
 /// The deterministic per-request seed of a session: request `counter` of a
 /// session opened with `base` reseeds its Brownian tree with this value
@@ -309,6 +318,14 @@ pub struct ServeConfig {
     /// allocates (the rebuild), so the steady-state zero-allocation pin
     /// assumes the working set fits the cap.
     pub max_sessions: usize,
+    /// Wall-clock session TTL in milliseconds: a session whose last submit
+    /// is older than this has its heavy Brownian state dropped on the next
+    /// door sweep (any `open_session`/`submit`), independent of the
+    /// capacity-LRU cap. `0` (the default) disables the TTL. Exactly like
+    /// capacity eviction, an expired session is rebuilt **bit-identically**
+    /// on its next admission by seed-and-counter replay — the TTL changes
+    /// memory residency, never bits.
+    pub session_ttl_ms: u64,
 }
 
 impl ServeConfig {
@@ -330,6 +347,7 @@ impl ServeConfig {
             shard_width: 0,
             priority_width: 8,
             max_sessions: 0,
+            session_ttl_ms: 0,
         }
     }
 
@@ -417,14 +435,17 @@ struct Session {
     counter_next: u64,
     /// LRU tick of the last submit on this session.
     last_used: u64,
+    /// Wall-clock time of the last submit, for
+    /// [`ServeConfig::session_ttl_ms`] expiry.
+    last_touch: Instant,
 }
 
-/// The in-flight mega-batch: chunk cursor plus completion count.
+/// The in-flight mega-batch round. Its chunks are dispatched as one
+/// [`pool::run_tasks`] job by the driving waiter, so no cursor/remaining
+/// bookkeeping lives here anymore.
 struct Active {
     lanes: usize,
     n_chunks: usize,
-    next_chunk: usize,
-    remaining: usize,
 }
 
 /// Front-door state, under one mutex: the admission queues, the slot pool,
@@ -446,7 +467,6 @@ struct Door<T> {
     lane_map: Vec<(usize, usize)>,
     active: Option<Active>,
     gate_open: bool,
-    shutdown: bool,
 }
 
 /// Drop the least-recently-used resident sessions until the cap holds
@@ -475,6 +495,27 @@ fn evict_over_cap<T>(door: &mut Door<T>, cap: usize, keep: usize) {
     }
 }
 
+/// Drop the heavy state of every resident session (except `keep`, the one
+/// being touched) whose last submit is older than the wall-clock TTL.
+/// Swept on every `open_session`/`submit`, so an idle working set shrinks
+/// without waiting for the capacity cap. Like capacity eviction this only
+/// drops rebuildable state: the next admission replays the seed and
+/// counter bit-identically.
+fn expire_sessions<T>(door: &mut Door<T>, cfg: &ServeConfig, keep: usize) {
+    if cfg.session_ttl_ms == 0 {
+        return;
+    }
+    let ttl = Duration::from_millis(cfg.session_ttl_ms);
+    let now = Instant::now();
+    let Door { sessions, resident, .. } = door;
+    for (s, sess) in sessions.iter_mut().enumerate() {
+        if s != keep && sess.noise.is_some() && now.duration_since(sess.last_touch) > ttl {
+            sess.noise = None;
+            *resident -= 1;
+        }
+    }
+}
+
 /// The solve inputs of the active batch, preallocated at `max_batch`
 /// capacity. Behind an `RwLock` so admission (one writer, under the door
 /// lock) and the solving workers (readers) don't serialise the solve on
@@ -493,7 +534,6 @@ struct Shared<T, S> {
     dim: usize,
     nd: usize,
     door: Mutex<Door<T>>,
-    work_cv: Condvar,
     done_cv: Condvar,
     arena: RwLock<Arena<T>>,
 }
@@ -562,6 +602,16 @@ impl<T: Lane> Scratch<T> {
     }
 }
 
+/// One participant's solve state: preallocated scratch plus a reusable
+/// stepper (`reinit`, never `for_chunk`, per chunk — zero steady-state
+/// stepper allocations). Checked out of the engine's fixed slot pool by
+/// the pool tasks of an admission round; the executor caps a round's
+/// concurrency at `threads`, so a free slot always exists.
+struct WorkerState<M: BatchStepper> {
+    scr: Scratch<M::Elem>,
+    stepper: M,
+}
+
 /// A long-lived sampling engine over one SDE and one solve grid.
 ///
 /// Generic exactly like [`super::integrate_batched`]: the stepper `M`
@@ -570,23 +620,35 @@ impl<T: Lane> Scratch<T> {
 /// is any [`BatchSde`] at that precision. See the module docs for the
 /// architecture; `tests/serve_engine.rs` pins the bitwise, isolation and
 /// zero-allocation contracts.
+///
+/// The engine owns no threads: admission rounds are *driven* by whichever
+/// caller blocks in [`wait_into`](Self::wait_into) (or calls
+/// [`flush`](Self::flush)), and their chunk fan-out runs on the
+/// process-wide persistent executor ([`super::pool`]).
 pub struct ServeEngine<M, S>
 where
     M: BatchStepper,
     S: BatchSde<M::Elem>,
 {
-    shared: Arc<Shared<M::Elem, S>>,
-    workers: Vec<JoinHandle<()>>,
-    _stepper: PhantomData<fn() -> M>,
+    shared: Shared<M::Elem, S>,
+    /// Fixed checkout pool of per-participant solve state, sized
+    /// `cfg.threads`.
+    workers: Vec<Mutex<Option<WorkerState<M>>>>,
+    /// Held by the caller currently driving an admission round; `try_lock`
+    /// only (never blocking while the door mutex is held), so the
+    /// door → drive order cannot deadlock against the driver's
+    /// drive → door order.
+    drive: Mutex<()>,
 }
 
 impl<M, S> ServeEngine<M, S>
 where
-    M: BatchStepper + 'static,
-    S: BatchSde<M::Elem> + Send + 'static,
+    M: BatchStepper + Send,
+    S: BatchSde<M::Elem>,
 {
-    /// Spawn the worker pool (once — workers park between batches) and
-    /// preallocate the mega-batch arena.
+    /// Preallocate the mega-batch arena and the per-participant
+    /// scratch/stepper pool (executor workers are process-wide and spawn
+    /// lazily on the first dispatched round).
     pub fn new(sde: S, cfg: ServeConfig) -> Self {
         assert!(cfg.t1 > cfg.t0, "need t1 > t0");
         assert!(cfg.n_steps >= 1 && cfg.max_batch >= 1);
@@ -594,7 +656,15 @@ where
         let nd = sde.brownian_dim();
         let cap = cfg.max_batch;
         let threads = cfg.threads.max(1);
-        let shared = Arc::new(Shared {
+        let chunk = cfg.chunk.max(1);
+        let workers = (0..threads)
+            .map(|_| {
+                let scr = Scratch::<M::Elem>::new(dim, nd, cfg.n_steps, chunk);
+                let stepper = M::for_chunk(&sde, cfg.t0, &scr.y, chunk);
+                Mutex::new(Some(WorkerState { scr, stepper }))
+            })
+            .collect();
+        let shared = Shared {
             sde,
             dim,
             nd,
@@ -609,27 +679,15 @@ where
                 lane_map: Vec::with_capacity(cap),
                 active: None,
                 gate_open: cfg.auto_admit,
-                shutdown: false,
             }),
-            work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             arena: RwLock::new(Arena {
                 noise: vec![<M::Elem as Lane>::ZERO; cfg.n_steps * nd * cap],
                 y0: vec![<M::Elem as Lane>::ZERO; dim * cap],
             }),
             cfg,
-        });
-        let mut workers = Vec::with_capacity(threads);
-        for w in 0..threads {
-            let sh = Arc::clone(&shared);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("sde-serve-{w}"))
-                    .spawn(move || worker_loop::<M, S>(&sh))
-                    .expect("serve: failed to spawn worker"),
-            );
-        }
-        Self { shared, workers, _stepper: PhantomData }
+        };
+        Self { shared, workers, drive: Mutex::new(()) }
     }
 
     /// Open a session: persistent Brownian state for requests of `n_paths`
@@ -649,10 +707,12 @@ where
             n_paths,
             counter_next: 0,
             last_used: door.tick,
+            last_touch: Instant::now(),
         };
         door.sessions.push(sess);
         door.resident += 1;
         let id = door.sessions.len() - 1;
+        expire_sessions(&mut door, cfg, id);
         evict_over_cap(&mut door, cfg.max_sessions, id);
         SessionId(id)
     }
@@ -669,14 +729,14 @@ where
     /// never changes the sample). Returns immediately; redeem the ticket
     /// with [`wait`](Self::wait) / [`wait_into`](Self::wait_into).
     pub fn submit(&self, session: SessionId, y0: &[M::Elem]) -> Ticket {
-        let sh = &*self.shared;
+        let sh = &self.shared;
         let mut door = lock(&sh.door);
-        assert!(!door.shutdown, "serve: engine is shutting down");
         door.tick += 1;
         let tick = door.tick;
         let (m, counter) = {
             let sess = &mut door.sessions[session.0];
             sess.last_used = tick;
+            sess.last_touch = Instant::now();
             let c = sess.counter_next;
             sess.counter_next += 1;
             (sess.n_paths, c)
@@ -708,21 +768,35 @@ where
         } else {
             door.pending_lo.push_back(si);
         }
+        expire_sessions(&mut door, &sh.cfg, session.0);
         evict_over_cap(&mut door, sh.cfg.max_sessions, session.0);
         drop(door);
-        sh.work_cv.notify_all();
         Ticket { slot: si, gen }
     }
 
     /// Open the admission gate for one round (the `auto_admit: false`
-    /// coalescing mode): queued requests are packed into one mega-batch
-    /// round under the configured [`AdmitPolicy`]. A sharded mega-request
-    /// consumes one flush per shard round. No-op when `auto_admit` is on.
+    /// coalescing mode) and synchronously drive it to completion: queued
+    /// requests are packed into one mega-batch round under the configured
+    /// [`AdmitPolicy`], solved across the persistent executor, and their
+    /// slots marked collectable before this returns. A sharded
+    /// mega-request consumes one flush per shard round in gated mode.
+    /// Extra flushes (nothing admissible, or another caller is already
+    /// driving a round) are harmless no-ops beyond opening the gate.
     pub fn flush(&self) {
-        let mut door = lock(&self.shared.door);
-        door.gate_open = true;
+        {
+            let mut door = lock(&self.shared.door);
+            door.gate_open = true;
+        }
+        // Block (don't try_lock) on the drive mutex: a waiter's futile
+        // drive attempt may be mid-flight with the gate still closed, and
+        // a try-lock flush racing it would return without driving — with
+        // every waiter parked and nobody left to run the now-open round.
+        // Blocking is safe here: no other engine lock is held.
+        let _driving = self.drive.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = self.drive_round();
+        let door = lock(&self.shared.door);
+        self.shared.done_cv.notify_all();
         drop(door);
-        self.shared.work_cv.notify_all();
     }
 
     /// Block until the request completes, swapping its trajectory into
@@ -732,24 +806,39 @@ where
     /// keep the steady-state round trip allocation-free. A faulted request
     /// returns the structured [`SolveError`] (request-relative path
     /// coordinates) — its quarantine never touches other requests' bits.
+    ///
+    /// The blocked waiter is the engine's motor: if no other caller is
+    /// driving, it admits and solves rounds itself (through the shared
+    /// executor) until its ticket completes; otherwise it parks on the
+    /// done condvar until the current driver's round finishes.
     pub fn wait_into(
         &self,
         ticket: Ticket,
         out: &mut Vec<M::Elem>,
     ) -> Result<(), SolveError> {
-        let sh = &*self.shared;
-        let mut door = lock(&sh.door);
+        let sh = &self.shared;
         loop {
+            {
+                let mut door = lock(&sh.door);
+                if let Some(res) = collect_slot(&mut door, ticket, out) {
+                    return res;
+                }
+            }
+            // Not ready: drive a round ourselves if nobody else is.
+            if self.drive_once() {
+                continue;
+            }
+            // Someone else is driving, or nothing is admissible yet (gated
+            // mode waiting on a flush): park until the next round
+            // completes. The driver notifies `done_cv` under the door
+            // lock (at finalize and at drive-lock release), and we
+            // re-check the slot under that same lock before waiting, so
+            // no wakeup is lost.
+            let mut door = lock(&sh.door);
             if let Some(res) = collect_slot(&mut door, ticket, out) {
                 return res;
             }
-            if door.shutdown {
-                return Err(SolveError::new(
-                    "serve: engine shut down before the request completed",
-                    Vec::new(),
-                ));
-            }
-            door = sh.done_cv.wait(door).unwrap_or_else(|e| e.into_inner());
+            drop(sh.done_cv.wait(door).unwrap_or_else(|e| e.into_inner()));
         }
     }
 
@@ -773,22 +862,102 @@ where
         self.wait_into(ticket, &mut out)?;
         Ok(out)
     }
-}
 
-impl<M, S> Drop for ServeEngine<M, S>
-where
-    M: BatchStepper,
-    S: BatchSde<M::Elem>,
-{
-    fn drop(&mut self) {
-        {
-            let mut door = lock(&self.shared.door);
-            door.shutdown = true;
-        }
-        self.shared.work_cv.notify_all();
+    /// Try to become the driver for one admission round. Returns true when
+    /// a round was admitted and solved to completion (its slots are now
+    /// collectable), false when another caller holds the drive lock or
+    /// nothing was admissible. Never blocks on the drive lock — a second
+    /// waiter parks on `done_cv` instead, which the winning driver
+    /// notifies under the door lock, so the try-lock race cannot strand
+    /// anyone.
+    fn drive_once(&self) -> bool {
+        let Ok(_driving) = self.drive.try_lock() else {
+            return false;
+        };
+        let progressed = self.drive_round();
+        // Wake parked waiters whether or not a round ran: one of them must
+        // re-evaluate now that the drive lock is free (their admissible
+        // work may have arrived while we held it).
+        let door = lock(&self.shared.door);
         self.shared.done_cv.notify_all();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
+        drop(door);
+        progressed
+    }
+
+    /// Admit one mega-batch round and solve it across the process-wide
+    /// executor ([`pool`]). Caller holds the drive lock. Lock order is
+    /// door → arena throughout; neither is held across the fan-out (each
+    /// chunk task re-acquires the arena read lock, matching the old worker
+    /// loop's locking exactly — so the solve-order bits are unchanged).
+    fn drive_round(&self) -> bool {
+        let sh = &self.shared;
+        let (lanes, n_chunks) = {
+            let mut door = lock(&sh.door);
+            let mut arena = wlock(&sh.arena);
+            if !try_admit(&sh.cfg, sh.dim, sh.nd, &mut door, &mut arena) {
+                return false;
+            }
+            let a = door.active.as_ref().expect("serve: admitted round has no active batch");
+            (a.lanes, a.n_chunks)
+        };
+        let gcfg = sh.cfg.guard.normalised();
+        let chunk = sh.cfg.chunk.max(1);
+        pool::run_tasks(sh.cfg.threads.max(1), n_chunks, &|c| {
+            let mut ws = self.checkout();
+            {
+                let arena = rlock(&sh.arena);
+                solve_chunk::<M, S>(
+                    &sh.cfg, &gcfg, &sh.sde, sh.dim, sh.nd, &arena, c, lanes, &mut ws.stepper,
+                    &mut ws.scr,
+                );
+            }
+            {
+                let mut door = lock(&sh.door);
+                record_chunk(
+                    &mut door, sh.dim, sh.cfg.n_steps, chunk, c, lanes, &ws.scr.traj,
+                    &mut ws.scr.faults,
+                );
+            }
+            self.checkin(ws);
+        });
+        let mut door = lock(&sh.door);
+        finalize(&mut door, lanes);
+        sh.done_cv.notify_all();
+        true
+    }
+
+    /// Check a per-participant solve state out of the fixed slot pool.
+    /// The executor caps a round's concurrency at `threads`, and the pool
+    /// holds exactly `threads` states, so a free slot always exists — the
+    /// sweep spins (with yields) only across transient try_lock contention
+    /// on the slot mutexes, never on a genuinely empty pool.
+    fn checkout(&self) -> WorkerState<M> {
+        loop {
+            for slot in &self.workers {
+                if let Ok(mut s) = slot.try_lock() {
+                    if let Some(ws) = s.take() {
+                        return ws;
+                    }
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Return a solve state to the first empty slot (one always exists:
+    /// states only leave slots via [`checkout`](Self::checkout)).
+    fn checkin(&self, ws: WorkerState<M>) {
+        let mut ws = Some(ws);
+        loop {
+            for slot in &self.workers {
+                if let Ok(mut s) = slot.try_lock() {
+                    if s.is_none() {
+                        *s = ws.take();
+                        return;
+                    }
+                }
+            }
+            std::thread::yield_now();
         }
     }
 }
@@ -967,7 +1136,7 @@ fn try_admit<T: Lane>(
     }
     let chunk = cfg.chunk.max(1);
     let n_chunks = (lanes + chunk - 1) / chunk;
-    door.active = Some(Active { lanes, n_chunks, next_chunk: 0, remaining: n_chunks });
+    door.active = Some(Active { lanes, n_chunks });
     true
 }
 
@@ -1229,70 +1398,6 @@ fn solve_chunk<M, S>(
     );
 }
 
-fn worker_loop<M, S>(sh: &Shared<M::Elem, S>)
-where
-    M: BatchStepper,
-    S: BatchSde<M::Elem>,
-{
-    let dim = sh.dim;
-    let nd = sh.nd;
-    let cfg = &sh.cfg;
-    let chunk = cfg.chunk.max(1);
-    let gcfg = cfg.guard.normalised();
-    let mut scr = Scratch::<M::Elem>::new(dim, nd, cfg.n_steps, chunk);
-    // One stepper per worker, forever: `reinit` (not `for_chunk`) per
-    // chunk, so the steady state pays zero stepper allocations.
-    let mut stepper = M::for_chunk(&sh.sde, cfg.t0, &scr.y, chunk);
-    let mut door = lock(&sh.door);
-    loop {
-        if door.shutdown {
-            return;
-        }
-        let job = match door.active.as_mut() {
-            Some(a) if a.next_chunk < a.n_chunks => {
-                let c = a.next_chunk;
-                a.next_chunk += 1;
-                Some((c, a.lanes))
-            }
-            _ => None,
-        };
-        let Some((c, lanes)) = job else {
-            if door.active.is_none() {
-                let mut arena = wlock(&sh.arena);
-                if try_admit(cfg, dim, nd, &mut door, &mut arena) {
-                    drop(arena);
-                    sh.work_cv.notify_all();
-                    continue;
-                }
-            }
-            door = sh.work_cv.wait(door).unwrap_or_else(|e| e.into_inner());
-            continue;
-        };
-        drop(door);
-        {
-            let arena = rlock(&sh.arena);
-            solve_chunk::<M, S>(
-                cfg, &gcfg, &sh.sde, dim, nd, &arena, c, lanes, &mut stepper, &mut scr,
-            );
-        }
-        door = lock(&sh.door);
-        record_chunk(&mut door, dim, cfg.n_steps, chunk, c, lanes, &scr.traj, &mut scr.faults);
-        let a = door.active.as_mut().expect("serve: active batch vanished mid-solve");
-        a.remaining -= 1;
-        if a.remaining == 0 {
-            finalize(&mut door, lanes);
-            sh.done_cv.notify_all();
-            // Quarantined or done, every admitted slot's lanes are free
-            // again: pack the next waiting requests immediately.
-            let mut arena = wlock(&sh.arena);
-            if try_admit(cfg, dim, nd, &mut door, &mut arena) {
-                drop(arena);
-                sh.work_cv.notify_all();
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::super::systems::TanhDiagonalBatch;
@@ -1365,5 +1470,44 @@ mod tests {
         assert_eq!(request_seed(42, 0), splitmix64(42));
         assert_ne!(request_seed(42, 1), request_seed(42, 0));
         assert_ne!(request_seed(43, 0), request_seed(42, 0));
+    }
+
+    #[test]
+    fn expired_sessions_rebuild_bit_identically() {
+        let sde = TanhDiagonalBatch::new(4, 99);
+        let n_paths = 5usize;
+        let y0 = vec![0.1f64; 4 * n_paths];
+        let mut cfg = ServeConfig::new(0.0, 1.0, 16);
+        cfg.max_batch = 32;
+        cfg.threads = 2;
+        cfg.chunk = 4;
+        cfg.session_ttl_ms = 1;
+        let engine = ServeEngine::<BatchReversibleHeun, _>::new(sde, cfg);
+        let a = engine.open_session(7, n_paths);
+        let sde_ref = TanhDiagonalBatch::new(4, 99);
+        let expect = reference_solve(7, 0, 2, n_paths, &sde_ref, &y0);
+
+        let t = engine.submit(a, &y0);
+        let got0 = engine.wait(t).expect("request faulted");
+        assert_eq!(engine.resident_sessions(), 1);
+
+        // Let `a` age past the TTL, then touch the door via a fresh
+        // session: the sweep drops `a`'s Brownian state (only the new
+        // session stays resident).
+        std::thread::sleep(Duration::from_millis(10));
+        let _b = engine.open_session(11, n_paths);
+        assert_eq!(
+            engine.resident_sessions(),
+            1,
+            "TTL sweep must expire the idle session"
+        );
+
+        // Submitting on the expired session replays (seed, counter) into a
+        // rebuilt Brownian tree: request 1's bits are exactly what an
+        // never-expired session would have produced.
+        let t = engine.submit(a, &y0);
+        let got1 = engine.wait(t).expect("request faulted");
+        assert_eq!(got0, expect[0]);
+        assert_eq!(got1, expect[1], "post-expiry rebuild must replay the counter bit-identically");
     }
 }

@@ -599,6 +599,11 @@ fn native_gan_training_is_bit_deterministic_across_fanout() {
     let c = run(BatchOptions { threads: 4, chunk: 5, ..Default::default() });
     assert_eq!(a, b, "fan-out changed the training bits");
     assert_eq!(a, c, "fan-out changed the training bits");
+    // chunk ≥ batch leaves each solve single-chunked, so the ONLY
+    // parallelism is the real/fake discriminator-adjoint overlap
+    // (pool::join2) — isolating the PR-10 overlap as bit-neutral.
+    let d = run(BatchOptions { threads: 2, chunk: 12, ..Default::default() });
+    assert_eq!(a, d, "real/fake adjoint overlap changed the training bits");
 }
 
 #[test]
@@ -807,6 +812,10 @@ fn mixed_gan_training_is_bit_deterministic_across_fanout() {
     let c = run(BatchOptions { threads: 4, chunk: 5, ..Default::default() });
     assert_eq!(a, b, "fan-out changed the mixed training bits");
     assert_eq!(a, c, "fan-out changed the mixed training bits");
+    // Single-chunk solves at threads 2: only the real/fake adjoint overlap
+    // runs concurrently (see the f64 twin of this test).
+    let d = run(BatchOptions { threads: 2, chunk: 12, ..Default::default() });
+    assert_eq!(a, d, "real/fake adjoint overlap changed the mixed training bits");
 }
 
 #[test]

@@ -1,0 +1,128 @@
+//! The persistent executor's zero-allocation / zero-spawn contract, pinned
+//! with a counting global allocator and the pool's spawn probe:
+//!
+//! * a warmed [`pool::run_tasks`] / [`pool::join2`] dispatch performs
+//!   **zero** heap allocations at every fan-out width — the job registry,
+//!   part queues and parking are all fixed-size or stack-resident;
+//! * workers are spawned **once per process**: repeated dispatch (including
+//!   full GAN training steps, whose solves and real/fake adjoint overlap
+//!   all ride the same pool) never creates another thread;
+//! * a warm training step's allocation count is *flat* step over step —
+//!   the remaining per-step allocations are the caller-facing result
+//!   buffers (`map_chunks`' result vector, trajectory outputs), not
+//!   executor state, and their count must not drift.
+//!
+//! Everything lives in ONE `#[test]` because the global allocator and the
+//! process-wide pool are shared: a concurrently running test in the same
+//! binary would pollute both counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use neuralsde::brownian::SplitPrng;
+use neuralsde::config::TrainConfig;
+use neuralsde::coordinator::GanTrainer;
+use neuralsde::data::ou;
+use neuralsde::solvers::{pool, BatchOptions};
+
+/// Counts every allocation and reallocation in the process.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warm_executor_never_allocates_and_never_respawns() {
+    // ---- Phase 1: the bare executor ------------------------------------
+    // Warm every shape we are about to measure (first dispatch spawns the
+    // workers; spawning allocates stacks, names, handles).
+    let sink = AtomicUsize::new(0);
+    let touch = |i: usize| {
+        sink.fetch_add(i + 1, Ordering::Relaxed);
+    };
+    for &(threads, n) in &[(4usize, 1usize), (4, 8), (4, 64), (8, 512)] {
+        pool::run_tasks(threads, n, &touch);
+    }
+    let _ = pool::join2(4, || 1usize, || 2usize);
+    let spawned = pool::spawn_count();
+    assert!(spawned >= 1, "warmup must have spawned pool workers");
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        for &(threads, n) in &[(4usize, 1usize), (4, 8), (4, 64), (8, 512)] {
+            pool::run_tasks(threads, n, &touch);
+        }
+        let (a, b) = pool::join2(4, || 3usize, || 4usize);
+        assert_eq!((a, b), (3, 4));
+    }
+    let executor_allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        executor_allocs, 0,
+        "warm pool dispatch must not allocate (saw {executor_allocs} over 10 rounds)"
+    );
+    assert_eq!(
+        pool::spawn_count(),
+        spawned,
+        "repeated dispatch must reuse the spawned workers"
+    );
+
+    // ---- Phase 2: full GAN training steps on the same pool -------------
+    let mut cfg = TrainConfig::default();
+    cfg.steps = 6;
+    cfg.batch = 12;
+    cfg.data_size = 64;
+    let mut data = ou::generate(cfg.data_size, 3, ou::OuParams::default());
+    data.normalise_initial();
+    let opts = BatchOptions { threads: 4, chunk: 3, ..Default::default() };
+    let mut trainer = GanTrainer::new(&cfg, cfg.steps).expect("trainer").with_batch_options(opts);
+    let mut rng = SplitPrng::new(5);
+
+    // Two warmup steps: internal scratch, Adadelta state and the Brownian
+    // caches reach steady capacity.
+    for _ in 0..2 {
+        trainer.train_step(&data, &mut rng).expect("warmup step");
+    }
+    let spawned_after_warm = pool::spawn_count();
+
+    let mut per_step = Vec::with_capacity(4);
+    for _ in 0..4 {
+        let s0 = ALLOCS.load(Ordering::SeqCst);
+        trainer.train_step(&data, &mut rng).expect("steady step");
+        per_step.push(ALLOCS.load(Ordering::SeqCst) - s0);
+    }
+    assert_eq!(
+        pool::spawn_count(),
+        spawned_after_warm,
+        "training steps must never spawn threads (per-call spawn/join is dead)"
+    );
+    // The executor contributes zero of these allocations (phase 1); what
+    // remains is the caller-facing per-step result buffers, whose count is
+    // shape-determined and must be flat — any drift would be a leak or a
+    // regression toward per-call executor state.
+    for (i, &n) in per_step.iter().enumerate() {
+        assert_eq!(
+            n, per_step[0],
+            "warm train_step allocation count drifted at step {i}: {per_step:?}"
+        );
+    }
+}

@@ -15,6 +15,13 @@ set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 BENCHES=(
+  # hotpath_micro carries the pool/* executor-dispatch rows (persistent
+  # pool vs per-call scoped spawn/join) introduced with BENCH_pr10.json.
+  hotpath_micro
+  # tab1_training_step owns BENCH_pr10.json: the overlap/* rows time the
+  # real/fake discriminator-adjoint overlap (pool::join2) on single-chunk
+  # solves — disc_adjoint_overlap is the headline ratio — alongside the
+  # carried native/mixed f32_vs_f64 rows.
   tab1_training_step
   tab2_brownian_access
   tab3_clipping
